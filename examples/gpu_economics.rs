@@ -1,0 +1,10 @@
+//! Table 1 reproduction: GPU-days and #GPUs to pre-train / load GPT-3.
+//!
+//! Run: cargo run --release --example gpu_economics
+
+use fusionllm::cmd;
+use fusionllm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    cmd::economics(&Args::default())
+}

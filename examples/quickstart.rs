@@ -1,0 +1,67 @@
+//! Quickstart: the FusionLLM pipeline end to end in simulation.
+//!
+//! 1. Synthesize a geo-distributed testbed (Fig. 9).
+//! 2. Build the GPT2-XL OP-DAG (Table 6 workload).
+//! 3. Schedule it with OP-Fence vs. the baselines.
+//! 4. Attach the AdaTopK compression plan (Eq. 7).
+//! 5. Simulate an iteration and compare latencies.
+//!
+//! Run: cargo run --release --example quickstart
+
+use fusionllm::cluster::testbed;
+use fusionllm::compress::{CompressKind, CompressPlan};
+use fusionllm::cost::throughput::PipelineParams;
+use fusionllm::opdag::builders::{transformer_chain, TransformerSpec};
+use fusionllm::pipeline::{PipelineSchedule, ScheduleKind};
+use fusionllm::scheduler;
+use fusionllm::simnet::{simulate_iteration, StagePlan};
+use fusionllm::util::math::fmt_secs;
+use fusionllm::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    // 1. 24 heterogeneous GPUs across two clusters, 8 Mbps – 10 Gbps links.
+    let tb = testbed::testbed1(1);
+    println!("{}\n", tb.summary());
+
+    // 2. The model as an OP-DAG: each node is a layer with FLOPs/output
+    //    size/param attributes the workload estimator uses (§3.5).
+    let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+    println!(
+        "GPT2-XL OP-DAG: {} ops, {:.2} GFLOPs fwd/microbatch, max degree {}",
+        dag.len(),
+        dag.total_flops_fwd() / 1e9,
+        dag.max_degree()
+    );
+
+    // 3–5. Schedule, compress, simulate.
+    let n_micro = 2;
+    let params = PipelineParams { n_micro, micro_size: 3, include_bwd: true };
+    let mut table = Table::new(vec!["scheduler", "compression", "iter latency", "speedup"]);
+    let mut baseline = None;
+    for sched_name in ["equal-number", "equal-compute", "opfence"] {
+        for comp in [CompressKind::None, CompressKind::TopK, CompressKind::AdaTopK] {
+            let part = scheduler::by_name(sched_name)?.schedule(&dag, &tb)?;
+            let plan = match comp {
+                CompressKind::None => CompressPlan::dense(tb.nodes.len()),
+                CompressKind::AdaTopK => {
+                    CompressPlan::adatopk(&dag, &part, &tb, params, 100.0)
+                }
+                k => CompressPlan::uniform(k, 100.0, tb.nodes.len()),
+            };
+            let sp = StagePlan::from_partition(&dag, &part, &tb);
+            let sched = PipelineSchedule::new(ScheduleKind::GPipe, sp.n_stages(), n_micro);
+            let sim = simulate_iteration(&sp, &tb, &sched, &plan);
+            let base = *baseline.get_or_insert(sim.iter_s);
+            table.row(vec![
+                sched_name.to_string(),
+                comp.name().to_string(),
+                fmt_secs(sim.iter_s),
+                format!("{:.2}x", base / sim.iter_s),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nNext: `cargo run --release --example train_gpt2_pipeline` for");
+    println!("real PJRT training over the artifacts (`make artifacts` first).");
+    Ok(())
+}

@@ -1,0 +1,260 @@
+"""AOT lowering: jax stage functions -> HLO text + manifest.json.
+
+Run once by `make artifacts`; python never runs on the training path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 rust crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly. All entries are lowered with return_tuple=True, so the rust side
+always receives a tuple literal (even for single outputs).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_desc(avals):
+    out = []
+    for name, a in avals:
+        out.append({"name": name, "dtype": str(a.dtype), "shape": list(a.shape)})
+    return out
+
+
+class Emitter:
+    def __init__(self, out_dir: str, cfg: ModelConfig):
+        self.out_dir = out_dir
+        self.cfg = cfg
+        self.entries = {}
+
+    def emit(self, name, fn, inputs, outputs_desc):
+        """Lower fn at the given input specs and write <name>.hlo.txt."""
+        specs = [a for (_, a) in inputs]
+        # keep_unused: gradients of gather-like ops don't read the params
+        # values; without this jax prunes the argument and the rust side's
+        # positional buffer count no longer matches the manifest.
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": _io_desc(inputs),
+            "outputs": outputs_desc,
+        }
+        print(f"  {name}: {len(text) / 1024:.0f} KiB HLO")
+
+
+def _segments_desc(segs):
+    out = []
+    off = 0
+    for s in segs:
+        out.append(
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "size": s.size,
+                "offset": off,
+                "init": s.init,
+            }
+        )
+        off += s.size
+    return out
+
+
+def emit_config(cfg: ModelConfig, root: str, with_pallas_parity: bool):
+    out_dir = os.path.join(root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"[aot] config={cfg.name} -> {out_dir}")
+    em = Emitter(out_dir, cfg)
+
+    B, T, D, V = cfg.microbatch, cfg.seq_len, cfg.d_model, cfg.vocab
+    e_segs = model.embed_segments(cfg)
+    b_segs = model.body_segments(cfg)
+    h_segs = model.head_segments(cfg)
+    Pe, Pb, Ph = (model.layout_size(s) for s in (e_segs, b_segs, h_segs))
+
+    f32, i32 = jnp.float32, jnp.int32
+    act = _spec((B, T, D))
+    tok = _spec((B, T), i32)
+
+    # ---- forward/backward stage legs -------------------------------------
+    em.emit(
+        "embed_fwd",
+        lambda p, t: (model.embed_fwd(cfg, p, t),),
+        [("params", _spec((Pe,))), ("tokens", tok)],
+        _io_desc([("x", act)]),
+    )
+    em.emit(
+        "embed_bwd",
+        lambda p, t, dx: (model.embed_bwd(cfg, p, t, dx),),
+        [("params", _spec((Pe,))), ("tokens", tok), ("dx", act)],
+        _io_desc([("dparams", _spec((Pe,)))]),
+    )
+    em.emit(
+        "body_fwd",
+        lambda p, x: (model.body_fwd(cfg, p, x, use_pallas=False),),
+        [("params", _spec((Pb,))), ("x", act)],
+        _io_desc([("y", act)]),
+    )
+    em.emit(
+        "body_bwd",
+        lambda p, x, dy: model.body_bwd(cfg, p, x, dy),
+        [("params", _spec((Pb,))), ("x", act), ("dy", act)],
+        _io_desc([("dx", act), ("dparams", _spec((Pb,)))]),
+    )
+    em.emit(
+        "head_fwd_loss",
+        lambda p, x, t: model.head_fwd_loss(cfg, p, x, t),
+        [("params", _spec((Ph,))), ("x", act), ("targets", tok)],
+        _io_desc(
+            [("loss", _spec(())), ("dx", act), ("dparams", _spec((Ph,)))]
+        ),
+    )
+
+    # ---- optimizer updates (one artifact per distinct flat size) ---------
+    for tag, P in (("embed", Pe), ("body", Pb), ("head", Ph)):
+        flat = _spec((P,))
+        scalar = _spec(())
+        em.emit(
+            f"sgd_{tag}",
+            lambda p, g, m, lr, mu: model.sgd_update(p, g, m, lr, mu),
+            [
+                ("params", flat),
+                ("grads", flat),
+                ("momentum", flat),
+                ("lr", scalar),
+                ("mu", scalar),
+            ],
+            _io_desc([("params2", flat), ("momentum2", flat)]),
+        )
+        em.emit(
+            f"adam_{tag}",
+            lambda p, g, m, v, lr, t: model.adam_update(p, g, m, v, lr, t),
+            [
+                ("params", flat),
+                ("grads", flat),
+                ("m", flat),
+                ("v", flat),
+                ("lr", scalar),
+                ("t", scalar),
+            ],
+            _io_desc([("params2", flat), ("m2", flat), ("v2", flat)]),
+        )
+
+    # ---- compression entry (L1 Pallas kernel on the compute path) --------
+    k = max(1, cfg.act_elems // cfg.compress_ratio)
+    em.emit(
+        "topk_compress_act",
+        lambda x: (model.topk_compress(x, k),),
+        [("x", act)],
+        _io_desc([("x_sparse", act)]),
+    )
+
+    # ---- pallas-parity body stage (proves L1 lowers into the same HLO) ---
+    if with_pallas_parity:
+        em.emit(
+            "body_fwd_pallas",
+            lambda p, x: (model.body_fwd(cfg, p, x, use_pallas=True),),
+            [("params", _spec((Pb,))), ("x", act)],
+            _io_desc([("y", act)]),
+        )
+
+    # ---- manifest ---------------------------------------------------------
+    stages = [
+        {
+            "kind": "embed",
+            "param_size": Pe,
+            "fwd": "embed_fwd",
+            "bwd": "embed_bwd",
+            "segments": _segments_desc(e_segs),
+        }
+    ]
+    for _ in range(cfg.n_body_stages):
+        stages.append(
+            {
+                "kind": "body",
+                "param_size": Pb,
+                "fwd": "body_fwd",
+                "bwd": "body_bwd",
+                "segments": _segments_desc(b_segs),
+            }
+        )
+    stages.append(
+        {
+            "kind": "head",
+            "param_size": Ph,
+            "fwd": "head_fwd_loss",
+            "bwd": "head_fwd_loss",
+            "segments": _segments_desc(h_segs),
+        }
+    )
+
+    manifest = {
+        "format": 1,
+        "config": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "seq_len": cfg.seq_len,
+            "microbatch": cfg.microbatch,
+            "n_stages": cfg.n_stages,
+            "compress_ratio": cfg.compress_ratio,
+            "topk_k": k,
+        },
+        "stages": stages,
+        "entries": em.entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default="tiny,fig8,small",
+        help="comma-separated config names (see configs.py)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = [n for n in args.configs.split(",") if n]
+    for name in names:
+        cfg = CONFIGS[name]
+        # Pallas-parity artifact only for the test config: interpret-mode
+        # lowering expands to while-loop HLO, which gets large for big stages.
+        emit_config(cfg, args.out, with_pallas_parity=(name == "tiny"))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"format": 1, "configs": names}, f, indent=2)
+    print(f"[aot] wrote top-level manifest for {names}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Model / pipeline configurations for AOT lowering.
+
+Each config fixes the shapes the HLO artifacts are compiled for. The rust
+coordinator reads these back from artifacts/manifest.json — python never
+runs at training time.
+
+Stage plan: stage 0 = embedding, stages 1..S-2 = transformer-block stages
+(n_layers split evenly), stage S-1 = LM head (+final LN + loss).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    seq_len: int
+    microbatch: int
+    n_stages: int  # embed + body stages + head; >= 3
+    compress_ratio: int = 100  # default Top-K ratio for the compress artifact
+    use_pallas: bool = False  # lower body stages through the Pallas kernels
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_body_stages(self) -> int:
+        assert self.n_stages >= 3, "need embed + >=1 body + head"
+        return self.n_stages - 2
+
+    @property
+    def layers_per_stage(self) -> int:
+        assert self.n_layers % self.n_body_stages == 0, (
+            f"n_layers={self.n_layers} not divisible by "
+            f"body stages={self.n_body_stages}"
+        )
+        return self.n_layers // self.n_body_stages
+
+    @property
+    def act_elems(self) -> int:
+        """Elements in one inter-stage activation message."""
+        return self.microbatch * self.seq_len * self.d_model
+
+
+CONFIGS = {
+    # CI/test config: small enough that pytest + cargo test stay fast.
+    "tiny": ModelConfig(
+        name="tiny", vocab=256, d_model=64, n_heads=4, n_layers=2,
+        seq_len=32, microbatch=2, n_stages=4,
+    ),
+    # Fig. 8 convergence config (~0.9M params) — hundreds of steps in minutes.
+    "fig8": ModelConfig(
+        name="fig8", vocab=256, d_model=128, n_heads=4, n_layers=4,
+        seq_len=64, microbatch=4, n_stages=4,
+    ),
+    # E2E driver config (~6.5M params), byte-level LM.
+    "small": ModelConfig(
+        name="small", vocab=256, d_model=256, n_heads=8, n_layers=8,
+        seq_len=128, microbatch=8, n_stages=6,
+    ),
+    # ~100M-parameter configuration (compiled on demand; see EXPERIMENTS.md).
+    "gpt2-100m": ModelConfig(
+        name="gpt2-100m", vocab=8192, d_model=768, n_heads=12, n_layers=12,
+        seq_len=256, microbatch=4, n_stages=6,
+    ),
+}

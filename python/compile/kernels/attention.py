@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: causal self-attention, query-tiled per head.
+
+Grid = (heads, q_tiles). Each step loads one (BQ, Dh) query tile plus the
+full (T, Dh) key/value panels for that head into VMEM (sequences in this repo
+are <= 1k, so K/V panels fit comfortably), computes the causally-masked
+softmax(QK^T)V for the tile, and writes one output tile. This is the
+"keep K/V resident, stream Q" schedule — the TPU analogue of the paper's
+GPU threadblock tiling, chosen because VMEM (~16 MiB) fits whole K/V panels
+where an SM's shared memory cannot.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 128  # query rows per grid step
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale, seq_len):
+    qi = pl.program_id(1)
+    q = q_ref[0]  # [BQ, Dh]
+    k = k_ref[0]  # [T, Dh]
+    v = v_ref[0]  # [T, Dh]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Causal mask: query row (global) qi*BQ + r attends keys <= that index.
+    rows = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid = (cols <= rows) & (cols < seq_len)
+    logits = jnp.where(valid, logits, jnp.float32(-1e30))
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p.astype(v.dtype), v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@jax.jit
+def attention(q, k, v):
+    """Causal self-attention. q,k,v: [T, H, Dh] -> [T, H, Dh]."""
+    t, h, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    # [H, T, Dh] layout so the head axis is the outer grid dimension.
+    qh = jnp.moveaxis(q, 1, 0)
+    kh = jnp.moveaxis(k, 1, 0)
+    vh = jnp.moveaxis(v, 1, 0)
+    pad_q = (-t) % BQ
+    qp = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    tq = qp.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, seq_len=t),
+        grid=(h, tq // BQ),
+        in_specs=[
+            pl.BlockSpec((1, BQ, dh), lambda hh, qi: (hh, qi, 0)),
+            pl.BlockSpec((1, t, dh), lambda hh, qi: (hh, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda hh, qi: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, dh), lambda hh, qi: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, dh), q.dtype),
+        interpret=True,
+    )(qp, kh, vh)
+    return jnp.moveaxis(out[:, :t, :], 0, 1)

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: LayerNorm over the last axis.
+
+Row-tiled for VMEM: each grid step normalizes a (BLOCK_ROWS, D) tile. The
+mean/variance reduction happens entirely in VMEM (single pass, Welford not
+needed at these tile sizes), gamma/beta are broadcast per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis. x: [..., D]; gamma/beta: [D]."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = x.size // d
+    x2 = x.reshape(rows, d)
+    pad = (-rows) % BLOCK_ROWS
+    x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = x2.shape[0] // BLOCK_ROWS
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=True,
+    )(x2, gamma, beta)
+    return out[:rows].reshape(orig_shape)

@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must match
+its oracle here to float32 tolerance across the hypothesis shape/dtype sweep
+in python/tests/test_kernels.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def gelu(x):
+    """tanh-approximation GELU (GPT-2 style)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * jnp.power(x, 3))))
+
+
+def fused_linear(x, w, b):
+    """y = gelu(x @ w + b)."""
+    return gelu(jnp.dot(x, w) + b)
+
+
+def threshold_sparsify(x, tau):
+    """Zero out entries with |x| < tau (the AdaTopK streaming-select pass)."""
+    return jnp.where(jnp.abs(x) >= tau, x, jnp.zeros_like(x))
+
+
+def topk_sparsify(x, k):
+    """Exact dense Top-K-by-magnitude sparsification of a flat vector.
+
+    Returns the dense decoded vector (zeros off-support), matching Fig. 6 of
+    the paper: keep the k largest |x|, zero the rest.
+    """
+    flat = x.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
+
+
+def attention(q, k, v, scale=None):
+    """Plain causal self-attention. q,k,v: [T, H, Dh] (single sequence)."""
+    t = q.shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    # [H, T, T]
+    logits = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(mask[None, :, :], logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", probs, v)

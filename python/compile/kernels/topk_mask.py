@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: magnitude-threshold sparsification (AdaTopK hot path).
+
+Hardware adaptation of the paper's CUDA Top-K (§6 "Compression"): instead of
+a device-wide sort (poor fit for the TPU VPU), the k-th-largest |x| threshold
+``tau`` is computed once at L2 (see model.topk_compress) and this kernel does
+a single streaming select over VMEM tiles: ``out = |x| >= tau ? x : 0``.
+One HBM read + one HBM write per element, embarrassingly block-parallel.
+
+Lowered with interpret=True so the op becomes plain HLO executable on the
+CPU PJRT client (real-TPU Mosaic lowering is compile-only in this repo).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sized for VMEM: 8x128 is the fp32 VPU native tile; 256x128 (=128 KiB
+# in fp32) keeps in+out double-buffered tiles well under the ~16 MiB VMEM.
+BLOCK_ROWS = 256
+BLOCK_COLS = 128
+
+
+def _kernel(x_ref, tau_ref, o_ref):
+    x = x_ref[...]
+    tau = tau_ref[0]
+    o_ref[...] = jnp.where(jnp.abs(x) >= tau, x, jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def threshold_sparsify(x, tau):
+    """Zero entries with |x| < tau. x: any shape; tau: scalar array."""
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    # Pad to a whole number of (BLOCK_ROWS*BLOCK_COLS) tiles.
+    tile = BLOCK_ROWS * BLOCK_COLS
+    pad = (-n) % tile
+    padded = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK_COLS)
+    rows = padded.shape[0]
+    grid = rows // BLOCK_ROWS
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+            # The scalar threshold is broadcast to every grid step.
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(padded.shape, x.dtype),
+        interpret=True,
+    )(padded, tau.reshape(1).astype(x.dtype))
+    return out.reshape(-1)[:n].reshape(orig_shape)

@@ -1,0 +1,244 @@
+"""L2: GPT-2-style transformer as pipeline-stage functions over FLAT params.
+
+Every stage function takes a single flat f32[P] parameter vector (plus
+activations / tokens) so the rust coordinator can hold, update, and
+communicate per-stage parameters as opaque buffers. The segment layout
+(name, shape, offset, init) is exported in the manifest so rust can
+initialize parameters without python.
+
+Stage functions (lowered to HLO by aot.py):
+  embed_fwd(flat, tokens)            -> x
+  embed_bwd(flat, tokens, dx)        -> dflat
+  body_fwd(flat, x)                  -> y            (layers_per_stage blocks)
+  body_bwd(flat, x, dy)              -> (dx, dflat)  (recompute-based)
+  head_fwd_loss(flat, x, targets)    -> (loss, dx, dflat)
+  sgd_update(p, g, m, lr, mom)       -> (p', m')
+  adam_update(p, g, m, v, lr, t)     -> (p', m', v')
+  topk_compress(x)                   -> dense sparsified x (Pallas threshold)
+"""
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.attention import attention as pallas_attention
+from .kernels.fused_linear import fused_linear as pallas_fused_linear
+from .kernels.layernorm import layernorm as pallas_layernorm
+from .kernels.topk_mask import threshold_sparsify as pallas_threshold
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Segment:
+    name: str
+    shape: tuple
+    init: str  # "normal:<std>" | "zeros" | "ones"
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+def embed_segments(cfg: ModelConfig):
+    return [
+        Segment("tok_emb", (cfg.vocab, cfg.d_model), "normal:0.02"),
+        Segment("pos_emb", (cfg.seq_len, cfg.d_model), "normal:0.01"),
+    ]
+
+
+def block_segments(cfg: ModelConfig, li: int):
+    d = cfg.d_model
+    # GPT-2 init: residual-out projections scaled by 1/sqrt(2*n_layers).
+    res_std = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    return [
+        Segment(f"b{li}.ln1_g", (d,), "ones"),
+        Segment(f"b{li}.ln1_b", (d,), "zeros"),
+        Segment(f"b{li}.qkv_w", (d, 3 * d), "normal:0.02"),
+        Segment(f"b{li}.qkv_b", (3 * d,), "zeros"),
+        Segment(f"b{li}.proj_w", (d, d), f"normal:{res_std:.6g}"),
+        Segment(f"b{li}.proj_b", (d,), "zeros"),
+        Segment(f"b{li}.ln2_g", (d,), "ones"),
+        Segment(f"b{li}.ln2_b", (d,), "zeros"),
+        Segment(f"b{li}.fc1_w", (d, 4 * d), "normal:0.02"),
+        Segment(f"b{li}.fc1_b", (4 * d,), "zeros"),
+        Segment(f"b{li}.fc2_w", (4 * d, d), f"normal:{res_std:.6g}"),
+        Segment(f"b{li}.fc2_b", (d,), "zeros"),
+    ]
+
+
+def body_segments(cfg: ModelConfig):
+    segs = []
+    for li in range(cfg.layers_per_stage):
+        segs.extend(block_segments(cfg, li))
+    return segs
+
+
+def head_segments(cfg: ModelConfig):
+    return [
+        Segment("lnf_g", (cfg.d_model,), "ones"),
+        Segment("lnf_b", (cfg.d_model,), "zeros"),
+        Segment("out_w", (cfg.d_model, cfg.vocab), "normal:0.02"),
+        Segment("out_b", (cfg.vocab,), "zeros"),
+    ]
+
+
+def layout_size(segs) -> int:
+    return sum(s.size for s in segs)
+
+
+def unpack(flat, segs):
+    """Slice the flat vector into named arrays (static offsets)."""
+    out = {}
+    off = 0
+    for s in segs:
+        out[s.name] = jax.lax.dynamic_slice_in_dim(flat, off, s.size).reshape(s.shape)
+        off += s.size
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stage forward functions
+# ---------------------------------------------------------------------------
+
+
+def embed_fwd(cfg: ModelConfig, flat, tokens):
+    """tokens i32[B,T] -> activations f32[B,T,D]."""
+    p = unpack(flat, embed_segments(cfg))
+    return p["tok_emb"][tokens] + p["pos_emb"][None, :, :]
+
+
+def _block_fwd(cfg: ModelConfig, p, li, x, use_pallas):
+    """One pre-LN transformer block. x: [B,T,D]."""
+    d, h = cfg.d_model, cfg.n_heads
+    ln = pallas_layernorm if use_pallas else ref.layernorm
+    attn = pallas_attention if use_pallas else ref.attention
+
+    def g(name):
+        return p[f"b{li}.{name}"]
+
+    # Attention sublayer.
+    a_in = ln(x, g("ln1_g"), g("ln1_b"))
+    qkv = jnp.dot(a_in, g("qkv_w")) + g("qkv_b")  # [B,T,3D]
+    b, t, _ = qkv.shape
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, d // h)
+    k = k.reshape(b, t, h, d // h)
+    v = v.reshape(b, t, h, d // h)
+    o = jax.vmap(attn)(q, k, v)  # [B,T,H,Dh]
+    o = o.reshape(b, t, d)
+    x = x + jnp.dot(o, g("proj_w")) + g("proj_b")
+
+    # MLP sublayer.
+    m_in = ln(x, g("ln2_g"), g("ln2_b"))
+    if use_pallas:
+        hmid = pallas_fused_linear(m_in.reshape(b * t, d), g("fc1_w"), g("fc1_b"))
+        hmid = hmid.reshape(b, t, 4 * d)
+    else:
+        hmid = ref.gelu(jnp.dot(m_in, g("fc1_w")) + g("fc1_b"))
+    x = x + jnp.dot(hmid, g("fc2_w")) + g("fc2_b")
+    return x
+
+
+def body_fwd(cfg: ModelConfig, flat, x, use_pallas=None):
+    """layers_per_stage blocks. x: [B,T,D] -> [B,T,D]."""
+    if use_pallas is None:
+        use_pallas = cfg.use_pallas
+    p = unpack(flat, body_segments(cfg))
+    for li in range(cfg.layers_per_stage):
+        x = _block_fwd(cfg, p, li, x, use_pallas)
+    return x
+
+
+def head_loss(cfg: ModelConfig, flat, x, targets):
+    """Final LN + LM head + mean token cross-entropy. targets: i32[B,T]."""
+    p = unpack(flat, head_segments(cfg))
+    xn = ref.layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = jnp.dot(xn, p["out_w"]) + p["out_b"]  # [B,T,V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Stage backward functions (recompute-based RAD legs)
+# ---------------------------------------------------------------------------
+
+
+def embed_bwd(cfg: ModelConfig, flat, tokens, dx):
+    _, vjp = jax.vjp(lambda f: embed_fwd(cfg, f, tokens), flat)
+    (dflat,) = vjp(dx)
+    return dflat
+
+
+def body_bwd(cfg: ModelConfig, flat, x, dy):
+    _, vjp = jax.vjp(lambda f, xx: body_fwd(cfg, f, xx), flat, x)
+    dflat, dx = vjp(dy)
+    return dx, dflat
+
+
+def head_fwd_loss(cfg: ModelConfig, flat, x, targets):
+    (loss, (dflat, dx)) = jax.value_and_grad(
+        lambda f, xx: head_loss(cfg, f, xx, targets), argnums=(0, 1)
+    )(flat, x)
+    return loss, dx, dflat
+
+
+# ---------------------------------------------------------------------------
+# Optimizers (flat-vector updates; donated in AOT lowering)
+# ---------------------------------------------------------------------------
+
+
+def sgd_update(p, g, m, lr, momentum):
+    """Heavy-ball SGD: m' = mu*m + g; p' = p - lr*m'."""
+    m2 = momentum * m + g
+    return p - lr * m2, m2
+
+
+def adam_update(p, g, m, v, lr, t, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.0):
+    """AdamW with bias correction; t is the 1-based step as f32 scalar."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p2, m2, v2
+
+
+# ---------------------------------------------------------------------------
+# Compression entry (L1 kernel on the compute path)
+# ---------------------------------------------------------------------------
+
+
+def topk_compress(x, k: int):
+    """Dense Top-K sparsification via the Pallas threshold kernel.
+
+    tau = k-th largest |x| (exact, lax.top_k at L2); the Pallas kernel then
+    streams the select. Returns the dense decoded tensor (Fig. 6).
+    """
+    flat = x.reshape(-1)
+    # k-th largest |x| via full sort: lax.top_k lowers to an HLO `topk`
+    # custom attribute (largest=true) that the xla_extension 0.5.1 text
+    # parser rejects, while `sort` round-trips fine.
+    tau = jnp.sort(jnp.abs(flat))[flat.shape[0] - k]
+    return pallas_threshold(x, tau)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (used by tests to check stage composition)
+# ---------------------------------------------------------------------------
+
+
+def full_forward_loss(cfg: ModelConfig, stage_flats, tokens, targets):
+    """Compose embed -> body stages -> head, as the pipeline would."""
+    x = embed_fwd(cfg, stage_flats[0], tokens)
+    for s in range(cfg.n_body_stages):
+        x = body_fwd(cfg, stage_flats[1 + s], x)
+    return head_loss(cfg, stage_flats[-1], x, targets)

@@ -1,0 +1,71 @@
+"""AOT emission: manifest schema, HLO text sanity, entry shapes."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.configs import CONFIGS
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    root = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.emit_config(CONFIGS["tiny"], str(root), with_pallas_parity=True)
+    return str(root), manifest
+
+
+def test_manifest_schema(emitted):
+    root, m = emitted
+    assert m["format"] == 1
+    cfg = m["config"]
+    assert cfg["name"] == "tiny"
+    assert cfg["n_stages"] == len(m["stages"])
+    assert m["stages"][0]["kind"] == "embed"
+    assert m["stages"][-1]["kind"] == "head"
+    for st in m["stages"]:
+        assert st["param_size"] == sum(s["size"] for s in st["segments"])
+        # Offsets are contiguous.
+        off = 0
+        for seg in st["segments"]:
+            assert seg["offset"] == off
+            off += seg["size"]
+
+
+def test_hlo_files_exist_and_parse_as_text(emitted):
+    root, m = emitted
+    out_dir = os.path.join(root, "tiny")
+    for name, e in m["entries"].items():
+        path = os.path.join(out_dir, e["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.lstrip().startswith("HloModule"), f"{name} not HLO text"
+        assert "ENTRY" in text
+
+
+def test_entry_io_shapes(emitted):
+    _, m = emitted
+    cfg = CONFIGS["tiny"]
+    e = m["entries"]["body_fwd"]
+    act = [cfg.microbatch, cfg.seq_len, cfg.d_model]
+    assert e["inputs"][1]["shape"] == act
+    assert e["outputs"][0]["shape"] == act
+    assert e["inputs"][0]["shape"] == [model.layout_size(model.body_segments(cfg))]
+
+    h = m["entries"]["head_fwd_loss"]
+    assert h["outputs"][0]["shape"] == []  # scalar loss
+    assert h["outputs"][1]["shape"] == act
+
+    for tag in ("embed", "body", "head"):
+        assert f"sgd_{tag}" in m["entries"]
+        assert f"adam_{tag}" in m["entries"]
+    assert "topk_compress_act" in m["entries"]
+    assert "body_fwd_pallas" in m["entries"]
+
+
+def test_manifest_json_roundtrip(emitted):
+    root, m = emitted
+    with open(os.path.join(root, "tiny", "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == m

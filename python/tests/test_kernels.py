@@ -1,0 +1,167 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+hypothesis-swept over shapes and value scales."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.fused_linear import fused_linear
+from compile.kernels.layernorm import layernorm
+from compile.kernels.topk_mask import threshold_sparsify
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rnd(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# threshold_sparsify (AdaTopK select pass)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 400),
+    cols=st.integers(1, 200),
+    tau=st.floats(0.0, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_threshold_sparsify_matches_ref(rows, cols, tau, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, rows, cols)
+    t = jnp.float32(tau)
+    got = threshold_sparsify(x, t)
+    want = ref.threshold_sparsify(x, t)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_threshold_sparsify_1d_and_3d():
+    rng = np.random.default_rng(0)
+    for shape in [(7,), (3, 5, 11), (1, 1)]:
+        x = rnd(rng, *shape)
+        got = threshold_sparsify(x, jnp.float32(0.5))
+        want = ref.threshold_sparsify(x, jnp.float32(0.5))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_threshold_zero_keeps_everything():
+    rng = np.random.default_rng(1)
+    x = rnd(rng, 33, 9)
+    got = threshold_sparsify(x, jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+def test_threshold_huge_zeroes_everything():
+    rng = np.random.default_rng(2)
+    x = rnd(rng, 50, 3)
+    got = threshold_sparsify(x, jnp.float32(1e9))
+    assert np.all(np.asarray(got) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    d=st.integers(2, 256),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, rows, d, scale=2.0)
+    g = rnd(rng, d)
+    b = rnd(rng, d)
+    got = layernorm(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_layernorm_batched_3d():
+    rng = np.random.default_rng(3)
+    x = rnd(rng, 4, 17, 32)
+    g = jnp.ones(32, jnp.float32)
+    b = jnp.zeros(32, jnp.float32)
+    got = layernorm(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+    # Output rows should be ~zero-mean/unit-var.
+    out = np.asarray(got).reshape(-1, 32)
+    np.testing.assert_allclose(out.mean(axis=1), 0.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear (matmul + bias + GELU)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 160),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, m, k, scale=0.5)
+    w = rnd(rng, k, n, scale=0.2)
+    b = rnd(rng, n, scale=0.1)
+    got = fused_linear(x, w, b)
+    want = ref.fused_linear(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_fused_linear_exact_tile_multiple():
+    rng = np.random.default_rng(4)
+    x = rnd(rng, 256, 128, scale=0.3)
+    w = rnd(rng, 128, 256, scale=0.2)
+    b = rnd(rng, 256, scale=0.1)
+    got = fused_linear(x, w, b)
+    want = ref.fused_linear(x, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.integers(1, 160),
+    h=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(t, h, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = rnd(rng, t, h, dh, scale=0.5)
+    k = rnd(rng, t, h, dh, scale=0.5)
+    v = rnd(rng, t, h, dh, scale=0.5)
+    got = attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_attention_is_causal():
+    """Changing a future key/value must not change earlier outputs."""
+    rng = np.random.default_rng(5)
+    t, h, dh = 16, 2, 8
+    q = rnd(rng, t, h, dh)
+    k = rnd(rng, t, h, dh)
+    v = rnd(rng, t, h, dh)
+    base = np.asarray(attention(q, k, v))
+    k2 = k.at[-1].set(k[-1] + 100.0)
+    v2 = v.at[-1].set(v[-1] - 50.0)
+    pert = np.asarray(attention(q, k2, v2))
+    np.testing.assert_allclose(base[: t - 1], pert[: t - 1], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[t - 1], pert[t - 1])

@@ -1,0 +1,79 @@
+//! Design ablations (DESIGN.md §Deviations item 5 + schedule/fault studies):
+//!   A. OP-Fence boundary refinement on/off
+//!   B. OP-Fence greedy vs DP split
+//!   C. GPipe vs 1F1B simulated latency + activation stash
+//!   D. iteration latency under packet loss (paper §8), dense vs adatopk
+//!   E. radix-select vs quickselect Top-K threshold
+
+use fusionllm::cluster::testbed;
+use fusionllm::compress::CompressPlan;
+use fusionllm::cost::throughput::PipelineParams;
+use fusionllm::opdag::builders::{transformer_chain, TransformerSpec};
+use fusionllm::pipeline::{PipelineSchedule, ScheduleKind};
+use fusionllm::scheduler::opfence::OpFence;
+use fusionllm::scheduler::Scheduler;
+use fusionllm::simnet::{simulate_iteration, simulate_iteration_faulty, FaultModel, StagePlan};
+use fusionllm::util::benchkit::bench;
+use fusionllm::util::math::{fmt_secs, kth_largest_abs, kth_largest_abs_quickselect};
+use fusionllm::util::rng::Rng;
+
+fn main() {
+    let tb = testbed::testbed1(1);
+    let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+    let n_micro = 2;
+    let params = PipelineParams { n_micro, micro_size: 3, include_bwd: true };
+    let sim = |part: &fusionllm::opdag::Partition, plan: &CompressPlan, kind: ScheduleKind| {
+        let sp = StagePlan::from_partition(&dag, part, &tb);
+        let sched = PipelineSchedule::new(kind, sp.n_stages(), n_micro);
+        simulate_iteration(&sp, &tb, &sched, plan).iter_s
+    };
+    let dense = CompressPlan::dense(tb.nodes.len());
+
+    println!("=== A. OP-Fence boundary refinement (GPT2-XL, testbed 1, dense) ===");
+    let p_off = OpFence { refine_boundaries: false, ..Default::default() }
+        .schedule(&dag, &tb)
+        .unwrap();
+    let p_on = OpFence::default().schedule(&dag, &tb).unwrap();
+    let (t_off, t_on) = (sim(&p_off, &dense, ScheduleKind::GPipe), sim(&p_on, &dense, ScheduleKind::GPipe));
+    println!("refine=off {}   refine=on {}   gain {:.2}x", fmt_secs(t_off), fmt_secs(t_on), t_off / t_on);
+    assert!(t_on <= t_off * 1.001);
+
+    println!("\n=== B. greedy vs DP split ===");
+    let p_dp = OpFence { use_dp: true, ..Default::default() }.schedule(&dag, &tb).unwrap();
+    let t_dp = sim(&p_dp, &dense, ScheduleKind::GPipe);
+    println!("greedy {}   dp {}   ratio {:.2}", fmt_secs(t_on), fmt_secs(t_dp), t_on / t_dp);
+
+    println!("\n=== C. GPipe vs 1F1B (n_micro 8) ===");
+    let sp = StagePlan::from_partition(&dag, &p_on, &tb);
+    for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+        let sched = PipelineSchedule::new(kind, sp.n_stages(), 8);
+        let r = simulate_iteration(&sp, &tb, &sched, &dense);
+        println!(
+            "{kind:?}: iter {}  bubble {:.1}%  peak stash(stage0) {}",
+            fmt_secs(r.iter_s),
+            100.0 * r.bubble_frac,
+            sched.peak_stash(0)
+        );
+    }
+
+    println!("\n=== D. packet loss (paper §8), dense vs adatopk ratio 100 ===");
+    let ada = CompressPlan::adatopk(&dag, &p_on, &tb, params, 100.0);
+    let sched = PipelineSchedule::new(ScheduleKind::GPipe, sp.n_stages(), n_micro);
+    println!("{:<8} {:>12} {:>12}", "loss", "dense", "adatopk");
+    for p in [0.0, 0.05, 0.2] {
+        let f = FaultModel { loss_prob: p, rto_s: 0.2, seed: 11 };
+        let td = simulate_iteration_faulty(&sp, &tb, &sched, &dense, f).iter_s;
+        let ta = simulate_iteration_faulty(&sp, &tb, &sched, &ada, f).iter_s;
+        println!("{:<8} {:>12} {:>12}", format!("{:.0}%", p * 100.0), fmt_secs(td), fmt_secs(ta));
+    }
+
+    println!("\n=== E. Top-K threshold: radix vs quickselect (19.66 MB) ===");
+    let mut rng = Rng::new(3);
+    let xs: Vec<f32> = (0..3 * 1024 * 1600).map(|_| rng.f32() - 0.5).collect();
+    let k = xs.len() / 100;
+    let r1 = bench("radix select", 1, 7, || kth_largest_abs(&xs, k));
+    let r2 = bench("quickselect", 1, 7, || kth_largest_abs_quickselect(&xs, k));
+    println!("{}", r1.line());
+    println!("{}", r2.line());
+    println!("speedup {:.1}x", r2.median_s / r1.median_s);
+}

@@ -1,0 +1,98 @@
+//! Bench target for Fig. 10: averaged one-iteration training latency per
+//! testbed × scheduler × compressor (ratio 100), for all three Table-6
+//! workloads (ResNet18, ResNet101, GPT2-XL), via the discrete-event
+//! simulator.
+//!
+//! The paper's qualitative shape to reproduce:
+//!   - equal-number is the slowest scheduling policy;
+//!   - equal-compute helps only a little (communication dominates);
+//!   - OP-Fence wins clearly;
+//!   - compression (topk/adatopk) slashes latency, uniform ≤ adatopk but
+//!     with no large gap;
+//!   - overall best-vs-baseline speedup lands in the 1.45–9.39x band.
+
+use fusionllm::cluster::testbed;
+use fusionllm::compress::{CompressKind, CompressPlan};
+use fusionllm::cost::throughput::PipelineParams;
+use fusionllm::opdag::builders::{
+    resnet_chain, transformer_chain, ResNetSpec, TransformerSpec,
+};
+use fusionllm::opdag::Dag;
+use fusionllm::pipeline::{PipelineSchedule, ScheduleKind};
+use fusionllm::scheduler;
+use fusionllm::simnet::{simulate_iteration, StagePlan};
+use fusionllm::util::math::fmt_secs;
+
+fn workloads() -> Vec<(&'static str, Dag, usize)> {
+    vec![
+        ("ResNet18", resnet_chain(&ResNetSpec::resnet18()), 5),
+        ("ResNet101", resnet_chain(&ResNetSpec::resnet101()), 5),
+        ("GPT2-XL", transformer_chain(&TransformerSpec::gpt2_xl()), 2),
+    ]
+}
+
+fn main() {
+    let schedulers = ["equal-number", "equal-compute", "opfence"];
+    let compressors = [CompressKind::None, CompressKind::TopK, CompressKind::AdaTopK];
+    let ratio = 100.0;
+
+    let mut band_min = f64::MAX;
+    let mut band_max: f64 = 0.0;
+    for tb_id in [1usize, 2] {
+        let tb = testbed::by_id(tb_id, 1);
+        for (wname, dag, n_micro) in workloads() {
+            println!(
+                "\n=== Fig. 10 — testbed {tb_id}, {wname}, ratio {ratio}, n_micro {n_micro} ==="
+            );
+            println!(
+                "{:<14} {:>12} {:>12} {:>12}",
+                "scheduler", "dense", "topk", "adatopk"
+            );
+            let params =
+                PipelineParams { n_micro, micro_size: 3, include_bwd: true };
+            let mut matrix = Vec::new();
+            for s in schedulers {
+                let part = scheduler::by_name(s).unwrap().schedule(&dag, &tb).unwrap();
+                let sp = StagePlan::from_partition(&dag, &part, &tb);
+                let sched =
+                    PipelineSchedule::new(ScheduleKind::GPipe, sp.n_stages(), n_micro);
+                let mut row = Vec::new();
+                for kind in compressors {
+                    let plan = match kind {
+                        CompressKind::None => CompressPlan::dense(tb.nodes.len()),
+                        CompressKind::AdaTopK => {
+                            CompressPlan::adatopk(&dag, &part, &tb, params, ratio)
+                        }
+                        k => CompressPlan::uniform(k, ratio, tb.nodes.len()),
+                    };
+                    row.push(simulate_iteration(&sp, &tb, &sched, &plan).iter_s);
+                }
+                println!(
+                    "{:<14} {:>12} {:>12} {:>12}",
+                    s,
+                    fmt_secs(row[0]),
+                    fmt_secs(row[1]),
+                    fmt_secs(row[2])
+                );
+                matrix.push(row);
+            }
+            // Paper shape assertions.
+            let eq_num_dense = matrix[0][0];
+            let opfence_dense = matrix[2][0];
+            let opfence_ada = matrix[2][2];
+            assert!(
+                opfence_dense <= eq_num_dense * 1.001,
+                "{wname}: opfence not better than equal-number"
+            );
+            assert!(opfence_ada < opfence_dense, "{wname}: adatopk not faster");
+            let speedup = eq_num_dense / opfence_ada;
+            println!("best combo speedup vs equal-number dense: {speedup:.2}x");
+            band_min = band_min.min(speedup);
+            band_max = band_max.max(speedup);
+        }
+    }
+    println!(
+        "\nspeedup band across testbeds/workloads: {band_min:.2}x – {band_max:.2}x \
+         (paper: 1.45 – 9.39x)"
+    );
+}

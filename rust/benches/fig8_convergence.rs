@@ -1,0 +1,46 @@
+//! Bench target for Fig. 8 (short run): loss curves for dense vs uniform
+//! TopK vs AdaTopK on the tiny config. Full curves: examples/convergence_fig8.
+//! Requires `make artifacts`; skips cleanly when absent.
+
+use fusionllm::broker::{self, Job};
+use fusionllm::compress::CompressKind;
+
+fn main() {
+    let probe = Job::default();
+    if !probe.artifacts_root.join("tiny/manifest.json").exists() {
+        println!("fig8_convergence: artifacts missing — run `make artifacts` (skipping)");
+        return;
+    }
+    let steps = 40;
+    println!("=== Fig. 8 (short) — tiny config, ratio 50, {steps} steps ===");
+    println!(
+        "{:<10} {:>12} {:>12} {:>10}",
+        "variant", "first-5 loss", "last-5 loss", "Δ"
+    );
+    let mut finals = Vec::new();
+    for kind in [CompressKind::None, CompressKind::TopK, CompressKind::AdaTopK] {
+        let job = Job {
+            iters: steps,
+            lr: 0.1,
+            compress: kind,
+            ratio: 50.0,
+            ..Job::default()
+        };
+        let r = broker::run(&job).expect("training run");
+        let first: f32 = r.losses.iter().take(5).sum::<f32>() / 5.0;
+        let last: f32 = r.losses.iter().rev().take(5).sum::<f32>() / 5.0;
+        println!(
+            "{:<10} {:>12.4} {:>12.4} {:>+10.4}",
+            kind.name(),
+            first,
+            last,
+            last - first
+        );
+        finals.push((kind, last));
+    }
+    // Shape: every variant converges; AdaTopK within a whisker of dense.
+    let dense = finals[0].1;
+    let ada = finals[2].1;
+    assert!(ada < finals[0].1 + 0.6, "adatopk diverged: {ada} vs dense {dense}");
+    println!("\nconvergence shape OK (full-length curves: examples/convergence_fig8)");
+}

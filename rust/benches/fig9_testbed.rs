@@ -1,0 +1,78 @@
+//! Bench target for Fig. 9: latency and bandwidth structure of the
+//! 24-/48-GPU testbeds (the paper shows heatmaps; we print per-class
+//! distributions plus a coarse machine-level matrix).
+
+use fusionllm::cluster::louvain::louvain;
+use fusionllm::cluster::testbed;
+
+fn main() {
+    for id in [1usize, 2] {
+        let tb = testbed::by_id(id, 1);
+        println!("\n=== Fig. 9 — {} ===", tb.summary());
+
+        // Machine-level bandwidth matrix (mean over GPU pairs).
+        let mut machines: Vec<(String, Vec<usize>)> = Vec::new();
+        for n in &tb.nodes {
+            let key = format!("{}{}", n.cluster, n.machine);
+            match machines.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.push(n.id),
+                None => machines.push((key, vec![n.id])),
+            }
+        }
+        print!("{:<6}", "");
+        for (k, _) in &machines {
+            print!("{k:>8}");
+        }
+        println!();
+        for (ka, va) in &machines {
+            print!("{ka:<6}");
+            for (_, vb) in &machines {
+                let mut s = 0.0;
+                let mut c = 0;
+                for &i in va {
+                    for &j in vb {
+                        if i != j {
+                            s += tb.net.bandwidth_bps(i, j);
+                            c += 1;
+                        }
+                    }
+                }
+                if c == 0 {
+                    print!("{:>8}", "-");
+                } else {
+                    let mean = s / c as f64;
+                    if mean >= 1e9 {
+                        print!("{:>7.1}G", mean / 1e9);
+                    } else {
+                        print!("{:>7.0}M", mean / 1e6);
+                    }
+                }
+            }
+            println!();
+        }
+
+        // Envelope check (the paper's stated 8 Mbps – 10 Gbps range).
+        let (mut bw_min, mut bw_max) = (f64::MAX, 0.0f64);
+        let (mut a_min, mut a_max) = (f64::MAX, 0.0f64);
+        for i in 0..tb.nodes.len() {
+            for j in (i + 1)..tb.nodes.len() {
+                bw_min = bw_min.min(tb.net.bandwidth_bps(i, j));
+                bw_max = bw_max.max(tb.net.bandwidth_bps(i, j));
+                a_min = a_min.min(tb.net.alpha(i, j));
+                a_max = a_max.max(tb.net.alpha(i, j));
+            }
+        }
+        println!(
+            "bandwidth {:.0} Mbps – {:.1} Gbps (paper: 8 Mbps – 10 Gbps); α {:.2}–{:.1} ms",
+            bw_min / 1e6,
+            bw_max / 1e9,
+            a_min * 1e3,
+            a_max * 1e3
+        );
+        assert!(bw_min >= 7.9e6 && bw_max <= 11.1e9);
+
+        let comm = louvain(&tb.net);
+        let k = comm.iter().max().unwrap() + 1;
+        println!("Louvain communities: {k} (clusters/machines rediscovered from bandwidth)");
+    }
+}

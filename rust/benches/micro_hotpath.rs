@@ -1,0 +1,64 @@
+//! Hot-path microbenchmarks (§Perf, L3): the operations on the per-message
+//! critical path of the coordinator, measured with the offline benchkit.
+//!
+//!   * Top-K wire compression of a GPT2-XL-sized activation (19.66 MB)
+//!   * OP-Data encode/decode round trip
+//!   * discrete-event iteration simulation (48 devices)
+//!   * Louvain + OP-Fence scheduling (48 devices)
+
+use fusionllm::cluster::testbed;
+use fusionllm::compress::{CompressPlan, Compressor, TopK};
+use fusionllm::opdag::builders::{transformer_chain, TransformerSpec};
+use fusionllm::opdag::data::{OpData, OpDataKind};
+use fusionllm::pipeline::{PipelineSchedule, ScheduleKind};
+use fusionllm::scheduler::{self, Scheduler};
+use fusionllm::simnet::{simulate_iteration, StagePlan};
+use fusionllm::util::benchkit::bench;
+use fusionllm::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    // GPT2-XL inter-stage activation: 3*1024*1600 f32 = 19.66 MB.
+    let act: Vec<f32> = (0..3 * 1024 * 1600).map(|_| rng.f32() - 0.5).collect();
+
+    let topk = TopK { ratio: 100.0 };
+    let r = bench("topk compress 19.66MB (ratio 100)", 2, 10, || topk.compress(&act));
+    println!("{}", r.line());
+    let tput = act.len() as f64 * 4.0 / r.median_s / 1e9;
+    println!("{:<40} {tput:>9.2} GB/s", "  -> effective throughput");
+
+    let c = topk.compress(&act);
+    let mut dense = vec![0.0f32; act.len()];
+    let r = bench("topk decompress", 2, 10, || {
+        topk.decompress(&c, &mut dense);
+        dense[0]
+    });
+    println!("{}", r.line());
+
+    let mut od = OpData::dense(0, 1, OpDataKind::Activation, 0, 0, c.values.clone());
+    od.indices = c.indices.clone();
+    od.compress = c.cfg.clone();
+    let r = bench("OpData encode (sparse 196k keep)", 2, 20, || od.encode());
+    println!("{}", r.line());
+    let buf = od.encode();
+    let r = bench("OpData decode", 2, 20, || OpData::decode(&buf).unwrap());
+    println!("{}", r.line());
+
+    let tb = testbed::testbed2(1);
+    let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+    let r = bench("OP-Fence schedule (48 devices)", 1, 10, || {
+        scheduler::opfence::OpFence::default().schedule(&dag, &tb).unwrap()
+    });
+    println!("{}", r.line());
+
+    let part = scheduler::by_name("opfence").unwrap().schedule(&dag, &tb).unwrap();
+    let sp = StagePlan::from_partition(&dag, &part, &tb);
+    let sched = PipelineSchedule::new(ScheduleKind::GPipe, sp.n_stages(), 8);
+    let plan = CompressPlan::dense(tb.nodes.len());
+    let r = bench("simnet iteration (48 stages, nb=8)", 2, 50, || {
+        simulate_iteration(&sp, &tb, &sched, &plan).iter_s
+    });
+    println!("{}", r.line());
+
+    println!("\n(record before/after in EXPERIMENTS.md §Perf)");
+}

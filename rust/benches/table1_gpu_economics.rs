@@ -1,0 +1,43 @@
+//! Bench target for Table 1: GPU economics of pre-training GPT-3.
+//! Regenerates the table the paper prints (GPU days, #GPUs to load).
+
+use fusionllm::cluster::compnode::{gpu_days_for_gpt3, gpus_to_load_gpt3, GpuModel};
+
+fn main() {
+    println!("=== Table 1: pre-train GPT-3 (3.14e23 FLOPs, 175B params) ===");
+    println!(
+        "{:<10} {:>9} {:>8} {:>9} {:>8} {:>8}",
+        "GPU", "price $", "TFLOPS", "GPU days", "mem GB", "# GPUs"
+    );
+    let rows = [
+        (GpuModel::H100, 4807.0),
+        (GpuModel::A100, 11654.0),
+        (GpuModel::Rtx4090, 22004.0),
+        (GpuModel::Rtx4080, 37274.0),
+        (GpuModel::Rtx3080, 61079.0),
+    ];
+    for (gpu, paper_days) in rows {
+        let days = gpu_days_for_gpt3(gpu);
+        println!(
+            "{:<10} {:>9.0} {:>8.2} {:>9.0} {:>8} {:>8}",
+            gpu.name(),
+            gpu.price_usd(),
+            gpu.peak_tflops(),
+            days,
+            gpu.memory_bytes() >> 30,
+            gpus_to_load_gpt3(gpu),
+        );
+        let rel = (days - paper_days).abs() / paper_days;
+        assert!(
+            rel < 0.02 || gpu == GpuModel::A100,
+            "{}: {days:.0} vs paper {paper_days}",
+            gpu.name()
+        );
+        // Paper's A100 row (23308 days) is internally inconsistent with its
+        // own TFLOPS column (3.14e23 / 311.84e12 / 86400 = 11654); we print
+        // the formula-true value and note the discrepancy.
+    }
+    println!("\nnote: the paper's A100 'GPU days' entry (23308) does not match");
+    println!("its own TFLOPS column; we reproduce the formula (11654).");
+    println!("paper-vs-ours recorded in EXPERIMENTS.md §Table-1.");
+}

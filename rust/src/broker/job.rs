@@ -1,0 +1,122 @@
+//! Job definition (the IR-plane input, §3.2): which model config, which
+//! testbed, which scheduler/compressor, and the training hyper-parameters.
+
+use crate::compress::adatopk::CompressDirection;
+use crate::compress::CompressKind;
+use crate::util::cli::Args;
+use std::path::PathBuf;
+
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Artifact config name (tiny / fig8 / small / gpt2-100m).
+    pub config: String,
+    pub artifacts_root: PathBuf,
+    /// Testbed id (Table 5: 1 = 24 GPUs, 2 = 48 GPUs).
+    pub testbed: usize,
+    pub seed: u64,
+    /// Scheduler name (opfence / opfence-dp / equal-number / equal-compute).
+    pub scheduler: String,
+    pub compress: CompressKind,
+    /// User-facing compression ratio r (§5.2).
+    pub ratio: f64,
+    /// Pipelined microbatches n_b.
+    pub n_micro: usize,
+    /// Training iterations.
+    pub iters: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// Which direction to compress (both|bwd|fwd). Paper default: both.
+    pub direction: CompressDirection,
+    /// Optimizer: "sgd" (momentum) or "adam" (per-stage adaptive, §3.3
+    /// Update: "users can define optimizers ... for different OPs").
+    pub optimizer: String,
+    /// Explicit stage -> CompNode placement (overrides the scheduler).
+    /// Used to pin stages across clusters, the realistic decentralized
+    /// scenario where AdaTopK's per-link ratios differ.
+    pub placement: Option<Vec<usize>>,
+}
+
+impl Default for Job {
+    fn default() -> Job {
+        Job {
+            config: "tiny".into(),
+            artifacts_root: default_artifacts_root(),
+            testbed: 1,
+            seed: 42,
+            scheduler: "opfence".into(),
+            compress: CompressKind::None,
+            ratio: 100.0,
+            n_micro: 2,
+            iters: 20,
+            lr: 0.05,
+            momentum: 0.9,
+            direction: CompressDirection::Both,
+            optimizer: "sgd".into(),
+            placement: None,
+        }
+    }
+}
+
+/// `<crate root>/artifacts`, overridable with FUSIONLLM_ARTIFACTS.
+pub fn default_artifacts_root() -> PathBuf {
+    if let Ok(p) = std::env::var("FUSIONLLM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+impl Job {
+    pub fn from_args(args: &Args) -> anyhow::Result<Job> {
+        let d = Job::default();
+        Ok(Job {
+            config: args.str("config", &d.config),
+            artifacts_root: args
+                .opt_str("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or(d.artifacts_root),
+            testbed: args.usize("testbed", d.testbed),
+            seed: args.u64("seed", d.seed),
+            scheduler: args.str("scheduler", &d.scheduler),
+            compress: CompressKind::parse(&args.str("compress", "none"))?,
+            ratio: args.f64("ratio", d.ratio),
+            n_micro: args.usize("micro", d.n_micro),
+            iters: args.usize("steps", d.iters),
+            lr: args.f32("lr", d.lr),
+            momentum: args.f32("momentum", d.momentum),
+            direction: CompressDirection::parse(&args.str("direction", "both"))?,
+            optimizer: args.str("optimizer", "sgd"),
+            placement: args.opt_str("placement").map(|s| {
+                s.split(',')
+                    .map(|v| v.parse().expect("--placement expects ids like 0,1,8,20"))
+                    .collect()
+            }),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_args_overrides_defaults() {
+        let args = Args::parse(
+            "train --config fig8 --steps 7 --compress adatopk --ratio 50 --scheduler equal-number"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let j = Job::from_args(&args).unwrap();
+        assert_eq!(j.config, "fig8");
+        assert_eq!(j.iters, 7);
+        assert_eq!(j.compress, CompressKind::AdaTopK);
+        assert_eq!(j.ratio, 50.0);
+        assert_eq!(j.scheduler, "equal-number");
+        assert_eq!(j.n_micro, 2); // default preserved
+    }
+
+    #[test]
+    fn bad_compressor_rejected() {
+        let args = Args::parse(["--compress", "zstd"].iter().map(|s| s.to_string()));
+        assert!(Job::from_args(&args).is_err());
+    }
+}

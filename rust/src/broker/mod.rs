@@ -1,0 +1,226 @@
+//! The broker / IR plane (§3.2): receives a job definition, builds the
+//! stage-level OP-DAG, schedules it onto the testbed, derives the
+//! compression plan, spawns the CompNode workers, feeds data, and collects
+//! losses + statistics into a `TrainReport`.
+
+pub mod job;
+
+pub use job::Job;
+
+use crate::cluster::testbed;
+use crate::compress::{CompressKind, CompressPlan};
+use crate::cost::throughput::PipelineParams;
+use crate::opdag::builders::{stage_chain, TransformerSpec};
+use crate::pipeline::{PipelineSchedule, ScheduleKind};
+use crate::runtime::Manifest;
+use crate::simnet::{simulate_iteration, StagePlan};
+use crate::trainer::{SyntheticCorpus, TrainReport};
+use crate::worker::{spawn_stage, StageCtx, Wire, WorkerStats};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Run a full decentralized training job. Returns the report.
+pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
+    let manifest = Manifest::load(&job.artifacts_root, &job.config)?;
+    let cfg = manifest.config.clone();
+    let tb = testbed::by_id(job.testbed, job.seed);
+    anyhow::ensure!(
+        cfg.n_stages <= tb.nodes.len(),
+        "{} stages > {} devices",
+        cfg.n_stages,
+        tb.nodes.len()
+    );
+
+    // Stage-level OP-DAG for scheduling.
+    let spec = TransformerSpec {
+        vocab: cfg.vocab,
+        d_model: cfg.d_model,
+        n_heads: cfg.n_heads,
+        n_layers: cfg.n_layers,
+        seq_len: cfg.seq_len,
+        microbatch: cfg.microbatch,
+    };
+    let dag = stage_chain(&spec, cfg.n_stages);
+    let part = match &job.placement {
+        Some(devs) => {
+            anyhow::ensure!(
+                devs.len() == cfg.n_stages,
+                "--placement needs {} device ids",
+                cfg.n_stages
+            );
+            let chain = dag.compute_chain();
+            let assign: Vec<usize> = {
+                let mut a = vec![usize::MAX; dag.len()];
+                for (i, &op) in chain.iter().enumerate() {
+                    a[op] = devs[i];
+                }
+                for op in &dag.ops {
+                    if matches!(op.kind, crate::opdag::OpKind::Placeholder) {
+                        a[op.id] = a[op.users[0]];
+                    }
+                }
+                a
+            };
+            crate::opdag::Partition::new(assign)
+        }
+        None => crate::scheduler::by_name(&job.scheduler)?.schedule(&dag, &tb)?,
+    };
+    part.validate(&dag)?;
+    let stage_plan = StagePlan::from_partition(&dag, &part, &tb);
+    anyhow::ensure!(
+        stage_plan.n_stages() == cfg.n_stages,
+        "scheduler merged stages ({} of {})",
+        stage_plan.n_stages(),
+        cfg.n_stages
+    );
+    let devices = stage_plan.devices.clone();
+
+    // Compression plan.
+    let params = PipelineParams {
+        n_micro: job.n_micro,
+        micro_size: cfg.microbatch,
+        include_bwd: true,
+    };
+    let mut plan = match job.compress {
+        CompressKind::None => CompressPlan::dense(tb.nodes.len()),
+        CompressKind::AdaTopK => {
+            CompressPlan::adatopk(&dag, &part, &tb, params, job.ratio)
+        }
+        kind => CompressPlan::uniform(kind, job.ratio, tb.nodes.len()),
+    };
+    plan.direction = job.direction;
+
+    // ---- spawn workers ------------------------------------------------
+    let s_n = cfg.n_stages;
+    let (tx_driver, rx_driver) = mpsc::channel::<Wire>();
+    // Forward links: driver->0 is Data; s->s+1 are Packets.
+    let mut fwd_tx = Vec::new();
+    let mut fwd_rx = Vec::new();
+    for _ in 0..s_n {
+        let (t, r) = mpsc::channel::<Wire>();
+        fwd_tx.push(t);
+        fwd_rx.push(Some(r));
+    }
+    let mut bwd_tx = Vec::new();
+    let mut bwd_rx = Vec::new();
+    for _ in 0..s_n {
+        let (t, r) = mpsc::channel::<Wire>();
+        bwd_tx.push(t);
+        bwd_rx.push(Some(r));
+    }
+    let (label_tx, label_rx) = mpsc::channel::<Wire>();
+    let mut label_rx = Some(label_rx);
+
+    let mut handles = Vec::new();
+    for s in 0..s_n {
+        let ctx = StageCtx {
+            stage: s,
+            n_stages: s_n,
+            device: devices[s],
+            next_device: devices.get(s + 1).copied(),
+            prev_device: if s > 0 { Some(devices[s - 1]) } else { None },
+            manifest: manifest.clone(),
+            plan: plan.clone(),
+            iters: job.iters,
+            n_micro: job.n_micro,
+            lr: job.lr,
+            momentum: job.momentum,
+            optimizer: job.optimizer.clone(),
+            param_seed: job.seed.wrapping_add(s as u64),
+            rx_fwd: fwd_rx[s].take().unwrap(),
+            rx_bwd: if s + 1 < s_n { bwd_rx[s].take() } else { None },
+            tx_fwd: if s + 1 < s_n { Some(fwd_tx[s + 1].clone()) } else { None },
+            tx_bwd: if s > 0 { Some(bwd_tx[s - 1].clone()) } else { None },
+            rx_labels: if s == s_n - 1 { label_rx.take() } else { None },
+            tx_driver: tx_driver.clone(),
+        };
+        handles.push(spawn_stage(ctx));
+    }
+    drop(tx_driver);
+
+    // ---- drive the training loop --------------------------------------
+    let mut corpus = SyntheticCorpus::new(cfg.vocab, job.seed ^ 0xDA7A);
+    let mut report = TrainReport {
+        config: cfg.name.clone(),
+        scheduler: job.scheduler.clone(),
+        compressor: job.compress.name().to_string(),
+        ratio: job.ratio,
+        n_micro: job.n_micro,
+        placement: devices.clone(),
+        ..Default::default()
+    };
+
+    let mut stats: Vec<WorkerStats> = Vec::new();
+    let mut bytes_prev = 0.0f64;
+    for iter in 0..job.iters as u32 {
+        let t0 = Instant::now();
+        for micro in 0..job.n_micro as u32 {
+            let (tokens, targets) = corpus.next_batch(cfg.microbatch, cfg.seq_len);
+            fwd_tx[0].send(Wire::Data { iter, micro, tokens })?;
+            label_tx.send(Wire::Labels { iter, micro, targets })?;
+        }
+        // Collect the n_micro losses of this iteration.
+        let mut sum = 0.0f32;
+        let mut got = 0usize;
+        while got < job.n_micro {
+            match rx_driver.recv()? {
+                Wire::Loss { loss, .. } => {
+                    sum += loss;
+                    got += 1;
+                }
+                Wire::Stats(st) => stats.push(st),
+                Wire::Fatal { stage, error } => {
+                    anyhow::bail!("stage {stage} failed: {error}")
+                }
+                other => anyhow::bail!("driver: unexpected {other:?}"),
+            }
+        }
+        report.losses.push(sum / job.n_micro as f32);
+        report.wall_s.push(t0.elapsed().as_secs_f64());
+        // Wire bytes are reported at the end; estimate per-iteration from
+        // the plan for the running log, corrected after stats arrive.
+        report.wire_bytes.push(bytes_prev);
+        bytes_prev = 0.0;
+    }
+
+    // ---- drain worker stats --------------------------------------------
+    while stats.len() < s_n {
+        match rx_driver.recv() {
+            Ok(Wire::Stats(st)) => stats.push(st),
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => anyhow::bail!("worker failed: {e:#}"),
+            Err(_) => anyhow::bail!("worker panicked"),
+        }
+    }
+
+    // Actual wire bytes per iteration (uniform across iters by protocol).
+    let total_bytes: f64 = stats.iter().map(|s| s.bytes_sent).sum();
+    let per_iter = total_bytes / job.iters.max(1) as f64;
+    for b in report.wire_bytes.iter_mut() {
+        *b = per_iter;
+    }
+
+    // ---- post-hoc geo-simulation with measured compute ------------------
+    // Replace the cost-model compute times with measured PJRT wall times
+    // (per microbatch), then run the discrete-event simulator to get the
+    // iteration latency this run WOULD have had on the geo testbed.
+    let mut measured = stage_plan.clone();
+    let denom = (job.iters * job.n_micro) as f64;
+    for st in &stats {
+        let s = st.stage;
+        measured.fwd_s[s] = st.fwd_s / denom;
+        measured.bwd_s[s] = st.bwd_s / denom;
+        measured.update_s[s] = st.update_s / job.iters.max(1) as f64;
+    }
+    let sched = PipelineSchedule::new(ScheduleKind::GPipe, s_n, job.n_micro);
+    let sim = simulate_iteration(&measured, &tb, &sched, &plan);
+    report.sim_s = vec![sim.iter_s; job.iters];
+
+    Ok(report)
+}

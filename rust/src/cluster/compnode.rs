@@ -1,0 +1,160 @@
+//! CompNode: one contributed GPU (§2.3). Carries the device model, peak
+//! speed S*, the regression-fitted scaling factor λ (so the *actual* speed
+//! is `S(p) = λ_p · S*(p)`, §3.5), and memory capacity.
+
+/// GPU models used in the paper (Table 1 + the two testbed clusters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuModel {
+    H100,
+    A100,
+    Rtx4090,
+    Rtx4080,
+    Rtx3080,
+    Rtx2080,
+}
+
+impl GpuModel {
+    /// Peak tensor TFLOPS (Table 1; RTX 2080 from vendor spec).
+    pub fn peak_tflops(self) -> f64 {
+        match self {
+            GpuModel::H100 => 756.0,
+            GpuModel::A100 => 311.84,
+            GpuModel::Rtx4090 => 165.16,
+            GpuModel::Rtx4080 => 97.5,
+            GpuModel::Rtx3080 => 59.5,
+            GpuModel::Rtx2080 => 42.0,
+        }
+    }
+
+    /// Device memory in bytes (Table 1).
+    pub fn memory_bytes(self) -> u64 {
+        let gib = match self {
+            GpuModel::H100 | GpuModel::A100 => 80,
+            GpuModel::Rtx4090 => 24,
+            GpuModel::Rtx4080 => 16,
+            GpuModel::Rtx3080 => 10,
+            GpuModel::Rtx2080 => 8,
+        };
+        gib * (1u64 << 30)
+    }
+
+    /// Lowest Amazon price, 2023-10-10 (Table 1). RTX 2080 contemporary used
+    /// price for the economics extension.
+    pub fn price_usd(self) -> f64 {
+        match self {
+            GpuModel::H100 => 37_799.0,
+            GpuModel::A100 => 6_780.0,
+            GpuModel::Rtx4090 => 1_699.0,
+            GpuModel::Rtx4080 => 989.0,
+            GpuModel::Rtx3080 => 679.0,
+            GpuModel::Rtx2080 => 420.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuModel::H100 => "H100",
+            GpuModel::A100 => "A100",
+            GpuModel::Rtx4090 => "RTX 4090",
+            GpuModel::Rtx4080 => "RTX 4080",
+            GpuModel::Rtx3080 => "RTX 3080",
+            GpuModel::Rtx2080 => "RTX 2080",
+        }
+    }
+}
+
+/// One compute provider in the decentralized system.
+#[derive(Debug, Clone)]
+pub struct CompNode {
+    pub id: usize,
+    /// Human label, e.g. "A/node1/gpu3".
+    pub name: String,
+    pub gpu: GpuModel,
+    /// Regression-fitted scaling-down factor λ_p ∈ (0, 1] (§3.5, [54]);
+    /// fitted by short warm-up profiling before scheduling.
+    pub lambda: f64,
+    /// Cluster label ("A"/"B") — ground truth for testbeds; the scheduler
+    /// must NOT read this (it must discover locality via Louvain).
+    pub cluster: String,
+    /// Machine index within the cluster (GPUs in one box share a host).
+    pub machine: usize,
+}
+
+impl CompNode {
+    /// Actual sustained speed S(p) = λ_p · S*(p), in FLOP/s.
+    pub fn speed_flops(&self) -> f64 {
+        self.lambda * self.gpu.peak_tflops() * 1e12
+    }
+
+    pub fn memory_bytes(&self) -> u64 {
+        self.gpu.memory_bytes()
+    }
+}
+
+/// Table 1 reproduction: GPU-days to pre-train GPT-3 (3.14e23 FLOPs, [5])
+/// and #GPUs to hold 175B fp32 parameters.
+pub const GPT3_FLOPS: f64 = 3.14e23;
+pub const GPT3_PARAMS: f64 = 175e9;
+
+pub fn gpu_days_for_gpt3(gpu: GpuModel) -> f64 {
+    GPT3_FLOPS / (gpu.peak_tflops() * 1e12) / 86_400.0
+}
+
+pub fn gpus_to_load_gpt3(gpu: GpuModel) -> u64 {
+    // The paper counts in decimal GB (700 GB of fp32 params / N GB cards).
+    let gb_needed = GPT3_PARAMS * 4.0 / 1e9;
+    let card_gb = match gpu {
+        GpuModel::H100 | GpuModel::A100 => 80.0,
+        GpuModel::Rtx4090 => 24.0,
+        GpuModel::Rtx4080 => 16.0,
+        GpuModel::Rtx3080 => 10.0,
+        GpuModel::Rtx2080 => 8.0,
+    };
+    (gb_needed / card_gb).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_gpu_days_match_paper() {
+        // Paper: H100 4807 days; A100 23308 is a typo in the paper (its own
+        // abstract says 13.17 years ≈ 4807 days for H100); we check H100,
+        // 4080 and 3080 which are internally consistent in Table 1.
+        assert!((gpu_days_for_gpt3(GpuModel::H100) - 4807.0).abs() < 5.0);
+        assert!((gpu_days_for_gpt3(GpuModel::Rtx4080) - 37274.0).abs() < 60.0);
+        assert!((gpu_days_for_gpt3(GpuModel::Rtx3080) - 61079.0).abs() < 100.0);
+    }
+
+    #[test]
+    fn table1_gpu_counts_match_paper() {
+        assert_eq!(gpus_to_load_gpt3(GpuModel::H100), 9);
+        assert_eq!(gpus_to_load_gpt3(GpuModel::A100), 9);
+        assert_eq!(gpus_to_load_gpt3(GpuModel::Rtx4090), 30);
+        assert_eq!(gpus_to_load_gpt3(GpuModel::Rtx4080), 44);
+        assert_eq!(gpus_to_load_gpt3(GpuModel::Rtx3080), 70);
+    }
+
+    #[test]
+    fn lambda_scales_speed() {
+        let n = CompNode {
+            id: 0,
+            name: "t".into(),
+            gpu: GpuModel::Rtx4090,
+            lambda: 0.5,
+            cluster: "A".into(),
+            machine: 0,
+        };
+        assert!((n.speed_flops() - 0.5 * 165.16e12).abs() < 1e6);
+    }
+
+    #[test]
+    fn consumer_gpus_have_better_days_per_dollar() {
+        // §2.3 motivation: 4090 has better GPU-days/price than H100.
+        let h = gpu_days_for_gpt3(GpuModel::H100) * GpuModel::H100.price_usd();
+        let c = gpu_days_for_gpt3(GpuModel::Rtx4090) * GpuModel::Rtx4090.price_usd();
+        // Cost to train solo (days × price proxy): 4090 cheaper overall.
+        assert!(c < h);
+    }
+}

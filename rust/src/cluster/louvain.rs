@@ -1,0 +1,257 @@
+//! Louvain community detection [4] over the bandwidth graph (§4).
+//!
+//! OP-Fence's first step: discover "high-bandwidth islands" among
+//! CompNodes without being told cluster boundaries. Standard two-phase
+//! Louvain maximizing weighted modularity, iterated until no gain.
+
+use super::netgraph::NetGraph;
+
+/// Sparse weighted undirected graph for the aggregation phases.
+#[derive(Debug, Clone)]
+struct WGraph {
+    n: usize,
+    /// adjacency: for each node, (neighbor, weight); includes self loops.
+    adj: Vec<Vec<(usize, f64)>>,
+    total_weight: f64, // m = sum of all edge weights (each edge once)
+}
+
+impl WGraph {
+    fn from_netgraph(g: &NetGraph) -> WGraph {
+        let n = g.len();
+        let mut adj = vec![Vec::new(); n];
+        let mut total = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let w = g.louvain_weight(i, j);
+                if w > 0.0 {
+                    adj[i].push((j, w));
+                    adj[j].push((i, w));
+                    total += w;
+                }
+            }
+        }
+        WGraph { n, adj, total_weight: total }
+    }
+
+    fn degree(&self, i: usize) -> f64 {
+        // Weighted degree; self-loops count twice per convention.
+        self.adj[i]
+            .iter()
+            .map(|&(j, w)| if j == i { 2.0 * w } else { w })
+            .sum()
+    }
+}
+
+/// Run Louvain; returns community id per node (0..k, densely renumbered).
+pub fn louvain(g: &NetGraph) -> Vec<usize> {
+    let mut graph = WGraph::from_netgraph(g);
+    // node -> community at the current level; membership[orig] composes.
+    let mut membership: Vec<usize> = (0..g.len()).collect();
+
+    loop {
+        let (comm_raw, improved) = one_level(&graph);
+        // Dense labels so membership composition and aggregation agree.
+        let comm = renumber(&comm_raw);
+        // Compose: original node -> new community.
+        for m in membership.iter_mut() {
+            *m = comm[*m];
+        }
+        if !improved {
+            break;
+        }
+        graph = aggregate(&graph, &comm);
+        if graph.n <= 1 {
+            break;
+        }
+    }
+    renumber(&membership)
+}
+
+/// Phase 1: greedy local moves until no modularity gain.
+fn one_level(g: &WGraph) -> (Vec<usize>, bool) {
+    let m = g.total_weight.max(1e-12);
+    let mut comm: Vec<usize> = (0..g.n).collect();
+    // Sum of weighted degrees per community.
+    let mut sigma_tot: Vec<f64> = (0..g.n).map(|i| g.degree(i)).collect();
+    let degrees: Vec<f64> = (0..g.n).map(|i| g.degree(i)).collect();
+    let mut improved_any = false;
+
+    loop {
+        let mut moved = false;
+        for i in 0..g.n {
+            let ci = comm[i];
+            // Weights from i to each neighboring community.
+            let mut to_comm: Vec<(usize, f64)> = Vec::new();
+            for &(j, w) in &g.adj[i] {
+                if j == i {
+                    continue;
+                }
+                let cj = comm[j];
+                match to_comm.iter_mut().find(|(c, _)| *c == cj) {
+                    Some((_, acc)) => *acc += w,
+                    None => to_comm.push((cj, w)),
+                }
+            }
+            // Remove i from its community.
+            sigma_tot[ci] -= degrees[i];
+            let w_own = to_comm
+                .iter()
+                .find(|(c, _)| *c == ci)
+                .map(|(_, w)| *w)
+                .unwrap_or(0.0);
+            // Best gain: ΔQ = k_{i,in}/m - Σ_tot·k_i/(2m²) relative terms.
+            let mut best_c = ci;
+            let mut best_gain = w_own - sigma_tot[ci] * degrees[i] / (2.0 * m);
+            for &(c, w) in &to_comm {
+                if c == ci {
+                    continue;
+                }
+                let gain = w - sigma_tot[c] * degrees[i] / (2.0 * m);
+                if gain > best_gain + 1e-12 {
+                    best_gain = gain;
+                    best_c = c;
+                }
+            }
+            sigma_tot[best_c] += degrees[i];
+            if best_c != ci {
+                comm[i] = best_c;
+                moved = true;
+                improved_any = true;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    (comm, improved_any)
+}
+
+/// Phase 2: collapse communities into super-nodes. `comm` must already be
+/// densely renumbered (0..k).
+fn aggregate(g: &WGraph, comm: &[usize]) -> WGraph {
+    let ids = comm;
+    let k = ids.iter().max().map(|&m| m + 1).unwrap_or(0);
+    let mut acc: std::collections::BTreeMap<(usize, usize), f64> =
+        std::collections::BTreeMap::new();
+    for i in 0..g.n {
+        for &(j, w) in &g.adj[i] {
+            if j < i {
+                continue; // count each undirected edge once (self loops i==j kept)
+            }
+            let (a, b) = (ids[i].min(ids[j]), ids[i].max(ids[j]));
+            *acc.entry((a, b)).or_insert(0.0) += w;
+        }
+    }
+    let mut adj = vec![Vec::new(); k];
+    let mut total = 0.0;
+    for (&(a, b), &w) in &acc {
+        if a == b {
+            adj[a].push((a, w));
+        } else {
+            adj[a].push((b, w));
+            adj[b].push((a, w));
+        }
+        total += w;
+    }
+    WGraph { n: k, adj, total_weight: total }
+}
+
+/// Densely renumber community labels to 0..k in first-appearance order.
+fn renumber(comm: &[usize]) -> Vec<usize> {
+    let mut map: std::collections::BTreeMap<usize, usize> = Default::default();
+    let mut out = Vec::with_capacity(comm.len());
+    for &c in comm {
+        let next = map.len();
+        out.push(*map.entry(c).or_insert(next));
+    }
+    out
+}
+
+/// Weighted modularity Q of a partition (for tests/diagnostics).
+pub fn modularity(g: &NetGraph, comm: &[usize]) -> f64 {
+    let n = g.len();
+    let mut m = 0.0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            m += g.louvain_weight(i, j);
+        }
+    }
+    if m <= 0.0 {
+        return 0.0;
+    }
+    let deg: Vec<f64> = (0..n)
+        .map(|i| (0..n).map(|j| g.louvain_weight(i, j)).sum())
+        .collect();
+    let mut q = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            if comm[i] == comm[j] {
+                let a = g.louvain_weight(i, j);
+                q += a - deg[i] * deg[j] / (2.0 * m);
+            }
+        }
+    }
+    q / (2.0 * m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two dense 1 Gbps islands bridged by an 8 Mbps link must split in two.
+    fn two_island_graph() -> NetGraph {
+        let mut g = NetGraph::new(8);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                g.set_link(i, j, 1e-4, 1e9);
+                g.set_link(i + 4, j + 4, 1e-4, 1e9);
+            }
+        }
+        g.set_link(0, 4, 0.02, 8e6);
+        g
+    }
+
+    #[test]
+    fn separates_two_islands() {
+        let g = two_island_graph();
+        let comm = louvain(&g);
+        assert_eq!(comm.len(), 8);
+        for i in 1..4 {
+            assert_eq!(comm[i], comm[0], "island A node {i}");
+            assert_eq!(comm[i + 4], comm[4], "island B node {i}");
+        }
+        assert_ne!(comm[0], comm[4]);
+    }
+
+    #[test]
+    fn louvain_beats_trivial_partition() {
+        let g = two_island_graph();
+        let comm = louvain(&g);
+        let all_one = vec![0usize; 8];
+        assert!(modularity(&g, &comm) > modularity(&g, &all_one));
+    }
+
+    #[test]
+    fn fully_connected_uniform_is_one_community() {
+        let mut g = NetGraph::new(5);
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                g.set_link(i, j, 1e-4, 1e9);
+            }
+        }
+        let comm = louvain(&g);
+        assert!(comm.iter().all(|&c| c == comm[0]));
+    }
+
+    #[test]
+    fn singleton_graph() {
+        let g = NetGraph::new(1);
+        assert_eq!(louvain(&g), vec![0]);
+    }
+
+    #[test]
+    fn renumber_dense() {
+        assert_eq!(renumber(&[5, 5, 2, 7, 2]), vec![0, 0, 1, 2, 1]);
+    }
+}
+

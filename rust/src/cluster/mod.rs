@@ -1,0 +1,13 @@
+//! The decentralized computing substrate: CompNodes, the bidirectional
+//! network graph `P` with alpha–beta links (§3.5), Louvain community
+//! detection over bandwidth (§4 Observation 2), and the Fig. 9 testbed
+//! generators (Table 5).
+
+pub mod compnode;
+pub mod louvain;
+pub mod netgraph;
+pub mod testbed;
+
+pub use compnode::{CompNode, GpuModel};
+pub use netgraph::NetGraph;
+pub use testbed::Testbed;

@@ -1,0 +1,127 @@
+//! The bidirectional communication graph `P` (§3.5): per-link alpha–beta
+//! model `T_comm(M) = α + β·M` [60, 70]. α in seconds, β in seconds/byte.
+
+/// Dense symmetric link matrix over n CompNodes.
+#[derive(Debug, Clone)]
+pub struct NetGraph {
+    n: usize,
+    /// Latency component α (seconds), row-major n×n. 0 on the diagonal.
+    alpha: Vec<f64>,
+    /// Inverse bandwidth β (seconds/byte), row-major n×n. 0 on the diagonal.
+    beta: Vec<f64>,
+}
+
+impl NetGraph {
+    pub fn new(n: usize) -> NetGraph {
+        NetGraph { n, alpha: vec![0.0; n * n], beta: vec![0.0; n * n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Set a symmetric link: latency (s) and bandwidth (bits/sec).
+    pub fn set_link(&mut self, i: usize, j: usize, alpha_s: f64, bw_bps: f64) {
+        assert!(i != j, "no self links");
+        assert!(bw_bps > 0.0);
+        let beta = 8.0 / bw_bps; // seconds per BYTE
+        self.alpha[i * self.n + j] = alpha_s;
+        self.alpha[j * self.n + i] = alpha_s;
+        self.beta[i * self.n + j] = beta;
+        self.beta[j * self.n + i] = beta;
+    }
+
+    pub fn alpha(&self, i: usize, j: usize) -> f64 {
+        self.alpha[i * self.n + j]
+    }
+
+    pub fn beta(&self, i: usize, j: usize) -> f64 {
+        self.beta[i * self.n + j]
+    }
+
+    /// Link bandwidth in bits/sec (∞-free: returns f64::INFINITY for i==j).
+    pub fn bandwidth_bps(&self, i: usize, j: usize) -> f64 {
+        let b = self.beta(i, j);
+        if b == 0.0 {
+            f64::INFINITY
+        } else {
+            8.0 / b
+        }
+    }
+
+    /// T_comm^{ij}(M) = α^{ij} + β^{ij}·M, M in bytes. Free if i == j.
+    pub fn comm_time(&self, i: usize, j: usize, bytes: f64) -> f64 {
+        if i == j {
+            return 0.0;
+        }
+        self.alpha(i, j) + self.beta(i, j) * bytes
+    }
+
+    /// Symmetric weight for community detection: bandwidth in Mbps.
+    /// (Louvain clusters "high-bandwidth islands", §4 Observation 2.)
+    pub fn louvain_weight(&self, i: usize, j: usize) -> f64 {
+        // beta == 0 off the diagonal means "no link" — weight 0, not ∞.
+        if i == j || self.beta(i, j) == 0.0 {
+            return 0.0;
+        }
+        self.bandwidth_bps(i, j) / 1e6
+    }
+
+    /// Fit α/β for a link from (message size, measured time) samples via
+    /// least squares — the warm-up profiling path (§3.5).
+    pub fn fit_link(
+        &mut self,
+        i: usize,
+        j: usize,
+        sizes_bytes: &[f64],
+        times_s: &[f64],
+    ) {
+        let (a, b) = crate::util::math::linfit(sizes_bytes, times_s);
+        let a = a.max(0.0);
+        let b = b.max(1e-12);
+        self.alpha[i * self.n + j] = a;
+        self.alpha[j * self.n + i] = a;
+        self.beta[i * self.n + j] = b;
+        self.beta[j * self.n + i] = b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_time_is_alpha_beta() {
+        let mut g = NetGraph::new(3);
+        g.set_link(0, 1, 0.01, 8e6); // 8 Mbps -> 1 MB/s
+        // 1 MB at 1 MB/s + 10ms latency = ~1.01 s
+        let t = g.comm_time(0, 1, 1e6);
+        assert!((t - 1.01).abs() < 1e-9, "t={t}");
+        assert_eq!(g.comm_time(1, 1, 1e9), 0.0);
+        // symmetric
+        assert_eq!(g.comm_time(1, 0, 1e6), t);
+    }
+
+    #[test]
+    fn bandwidth_roundtrip() {
+        let mut g = NetGraph::new(2);
+        g.set_link(0, 1, 0.0, 1e9);
+        assert!((g.bandwidth_bps(0, 1) - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn fit_link_recovers_params() {
+        let mut g = NetGraph::new(2);
+        let alpha = 0.02;
+        let beta = 1e-6;
+        let sizes: Vec<f64> = (1..=10).map(|k| k as f64 * 1e5).collect();
+        let times: Vec<f64> = sizes.iter().map(|m| alpha + beta * m).collect();
+        g.fit_link(0, 1, &sizes, &times);
+        assert!((g.alpha(0, 1) - alpha).abs() < 1e-9);
+        assert!((g.beta(0, 1) - beta).abs() < 1e-12);
+    }
+}

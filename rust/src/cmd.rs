@@ -1,0 +1,216 @@
+//! CLI subcommand implementations (thin wrappers over the library API).
+
+use crate::broker::{self, Job};
+use crate::cluster::compnode::{gpu_days_for_gpt3, gpus_to_load_gpt3, GpuModel};
+use crate::cluster::{louvain::louvain, testbed};
+use crate::compress::{CompressKind, CompressPlan};
+use crate::cost::throughput::{dense_bytes, evaluate, PipelineParams};
+use crate::opdag::builders::{transformer_chain, TransformerSpec};
+use crate::pipeline::{PipelineSchedule, ScheduleKind};
+use crate::simnet::{simulate_iteration, StagePlan};
+use crate::util::cli::Args;
+use crate::util::math::{fmt_bytes, fmt_secs};
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// `fusionllm testbed --testbed N [--seed S]` — Fig. 9.
+pub fn testbed(args: &Args) -> Result<()> {
+    let tb = testbed::by_id(args.usize("testbed", 1), args.u64("seed", 1));
+    println!("{}\n", tb.summary());
+
+    let mut t = Table::new(vec!["node", "gpu", "λ", "S(p) TFLOPS", "cluster/machine"]);
+    for n in &tb.nodes {
+        t.row(vec![
+            n.id.to_string(),
+            n.gpu.name().to_string(),
+            format!("{:.3}", n.lambda),
+            format!("{:.1}", n.speed_flops() / 1e12),
+            format!("{}/{}", n.cluster, n.machine),
+        ]);
+    }
+    t.print();
+
+    // Link-class statistics (the Fig. 9 heatmap, summarized).
+    println!("\nlink classes (α latency / bandwidth):");
+    let mut classes: std::collections::BTreeMap<&str, Vec<(f64, f64)>> = Default::default();
+    for i in 0..tb.nodes.len() {
+        for j in (i + 1)..tb.nodes.len() {
+            let (a, b) = (&tb.nodes[i], &tb.nodes[j]);
+            let class = if a.cluster == b.cluster && a.machine == b.machine {
+                "intra-machine"
+            } else if a.cluster == b.cluster {
+                "intra-cluster"
+            } else {
+                "cross-cluster"
+            };
+            classes
+                .entry(class)
+                .or_default()
+                .push((tb.net.alpha(i, j), tb.net.bandwidth_bps(i, j)));
+        }
+    }
+    let mut t = Table::new(vec!["class", "links", "α min–max", "bw min–max"]);
+    for (class, links) in classes {
+        let amin = links.iter().map(|l| l.0).fold(f64::MAX, f64::min);
+        let amax = links.iter().map(|l| l.0).fold(0.0, f64::max);
+        let bmin = links.iter().map(|l| l.1).fold(f64::MAX, f64::min);
+        let bmax = links.iter().map(|l| l.1).fold(0.0, f64::max);
+        t.row(vec![
+            class.to_string(),
+            links.len().to_string(),
+            format!("{} – {}", fmt_secs(amin), fmt_secs(amax)),
+            format!("{:.0} Mbps – {:.1} Gbps", bmin / 1e6, bmax / 1e9),
+        ]);
+    }
+    t.print();
+
+    let comm = louvain(&tb.net);
+    let k = comm.iter().max().map(|&c| c + 1).unwrap_or(0);
+    println!("\nLouvain discovers {k} high-bandwidth communities");
+    Ok(())
+}
+
+/// `fusionllm schedule --testbed N --scheduler S` — partition + Eq. 2/3.
+pub fn schedule(args: &Args) -> Result<()> {
+    let tb = testbed::by_id(args.usize("testbed", 1), args.u64("seed", 1));
+    let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+    let name = args.str("scheduler", "opfence");
+    let sched = crate::scheduler::by_name(&name)?;
+    let part = sched.schedule(&dag, &tb)?;
+    part.validate(&dag)?;
+    let params = PipelineParams {
+        n_micro: args.usize("micro", 2),
+        micro_size: 3,
+        include_bwd: true,
+    };
+    let est = evaluate(&dag, &part, &tb, params, &dense_bytes);
+
+    println!("scheduler={name} workload=GPT2-XL testbed={}", tb.name);
+    let mut t = Table::new(vec!["node", "gpu", "ops", "C_p", "R_p"]);
+    for c in &est.per_node {
+        let ops = dag
+            .ops
+            .iter()
+            .filter(|o| part.node_of(o.id) == c.node)
+            .count();
+        t.row(vec![
+            c.node.to_string(),
+            tb.nodes[c.node].gpu.name().to_string(),
+            ops.to_string(),
+            fmt_secs(c.comp_s),
+            fmt_secs(c.comm_s),
+        ]);
+    }
+    t.print();
+    println!(
+        "T_lat={} T_pipe={} bottleneck={} @node{} cut-edges={}",
+        fmt_secs(est.t_lat),
+        fmt_secs(est.t_pipe),
+        fmt_secs(est.bottleneck_s),
+        est.bottleneck_node,
+        part.cut_edges(&dag),
+    );
+    Ok(())
+}
+
+/// `fusionllm simulate --testbed N --scheduler S --compress C --ratio R`.
+pub fn simulate(args: &Args) -> Result<()> {
+    let tb = testbed::by_id(args.usize("testbed", 1), args.u64("seed", 1));
+    let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+    let sched_name = args.str("scheduler", "opfence");
+    let part = crate::scheduler::by_name(&sched_name)?.schedule(&dag, &tb)?;
+    let n_micro = args.usize("micro", 2);
+    let kind = CompressKind::parse(&args.str("compress", "none"))?;
+    let ratio = args.f64("ratio", 100.0);
+    let params = PipelineParams { n_micro, micro_size: 3, include_bwd: true };
+    let plan = match kind {
+        CompressKind::None => CompressPlan::dense(tb.nodes.len()),
+        CompressKind::AdaTopK => CompressPlan::adatopk(&dag, &part, &tb, params, ratio),
+        k => CompressPlan::uniform(k, ratio, tb.nodes.len()),
+    };
+    let stage_plan = StagePlan::from_partition(&dag, &part, &tb);
+    let pipe_kind = ScheduleKind::parse(&args.str("pipeline", "gpipe"))?;
+    let sched = PipelineSchedule::new(pipe_kind, stage_plan.n_stages(), n_micro);
+    let sim = simulate_iteration(&stage_plan, &tb, &sched, &plan);
+    println!(
+        "testbed={} scheduler={sched_name} compress={} ratio={ratio} n_micro={n_micro}",
+        tb.name,
+        kind.name()
+    );
+    println!(
+        "iteration latency = {}   wire = {}   bubble = {:.1}%",
+        fmt_secs(sim.iter_s),
+        fmt_bytes(sim.wire_bytes),
+        100.0 * sim.bubble_frac
+    );
+    Ok(())
+}
+
+/// `fusionllm train --config C --steps N ...` — real PJRT training.
+pub fn train(args: &Args) -> Result<()> {
+    let job = Job::from_args(args)?;
+    println!(
+        "training config={} scheduler={} compress={} ratio={} steps={}",
+        job.config,
+        job.scheduler,
+        job.compress.name(),
+        job.ratio,
+        job.iters
+    );
+    let report = broker::run(&job)?;
+    for (i, loss) in report.losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == report.losses.len() {
+            println!(
+                "step {i:4}  loss {loss:.4}  wall {}  sim-geo {}",
+                fmt_secs(report.wall_s[i]),
+                fmt_secs(report.sim_s[i]),
+            );
+        }
+    }
+    println!(
+        "final loss {:.4}; mean simulated geo-iteration {}",
+        report.final_loss(),
+        fmt_secs(report.mean_sim_latency())
+    );
+    if let Some(path) = args.opt_str("out") {
+        std::fs::write(path, report.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `fusionllm economics` — Table 1.
+pub fn economics(_args: &Args) -> Result<()> {
+    println!("Table 1: pre-training GPT-3 (175B, 3.14e23 FLOPs) on one GPU\n");
+    let mut t = Table::new(vec![
+        "GPU",
+        "Price",
+        "TFLOPS",
+        "GPU days",
+        "Memory",
+        "# GPUs to load GPT-3",
+        "days·$ (M)",
+    ]);
+    for gpu in [
+        GpuModel::H100,
+        GpuModel::A100,
+        GpuModel::Rtx4090,
+        GpuModel::Rtx4080,
+        GpuModel::Rtx3080,
+    ] {
+        let days = gpu_days_for_gpt3(gpu);
+        t.row(vec![
+            gpu.name().to_string(),
+            format!("${:.0}", gpu.price_usd()),
+            format!("{:.2}", gpu.peak_tflops()),
+            format!("{:.0}", days),
+            format!("{} GB", gpu.memory_bytes() >> 30),
+            gpus_to_load_gpt3(gpu).to_string(),
+            format!("{:.1}", days * gpu.price_usd() / 1e6),
+        ]);
+    }
+    t.print();
+    println!("\nConsumer GPUs have the better GPU-days/price ratio (§2.3) —");
+    println!("the motivation for aggregating geo-distributed consumer GPUs.");
+    Ok(())
+}

@@ -1,0 +1,232 @@
+//! AdaTopK (§5.2): adaptive per-node compression ratios.
+//!
+//! Given the user ratio r and the estimated per-node communication times
+//! R_p from the dense cost model, Eq. 7 assigns
+//!
+//! ```text
+//! r_i = max(1, 3r * R_i / max_p(R_p))
+//! ```
+//!
+//! so the slowest links get (up to) the full 3r ratio while fast links are
+//! compressed little or not at all — preserving convergence (Fig. 8) at
+//! nearly uniform-Top-K latency (Fig. 10).
+
+use crate::cluster::Testbed;
+use crate::compress::CompressKind;
+use crate::cost::throughput::{dense_bytes, evaluate, PipelineParams};
+use crate::opdag::{Dag, Partition};
+
+/// Which message direction gets compressed. The paper compresses both
+/// activations and gradients; at small model scale forward-activation
+/// sparsification can dominate the convergence gap, so the direction is a
+/// first-class knob (ablated in EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressDirection {
+    Both,
+    /// Gradients only (backward messages).
+    BwdOnly,
+    /// Activations only (forward messages).
+    FwdOnly,
+}
+
+impl CompressDirection {
+    pub fn parse(s: &str) -> anyhow::Result<CompressDirection> {
+        Ok(match s {
+            "both" => CompressDirection::Both,
+            "bwd" | "grad" => CompressDirection::BwdOnly,
+            "fwd" | "act" => CompressDirection::FwdOnly,
+            other => anyhow::bail!("unknown direction `{other}` (both|bwd|fwd)"),
+        })
+    }
+}
+
+/// Per-node compression ratios; messages *received by* node i are
+/// compressed at `node_ratio[i]` (R_i is node i's retrieval time, §3.5).
+#[derive(Debug, Clone)]
+pub struct CompressPlan {
+    pub kind: CompressKind,
+    /// Base user-facing ratio r.
+    pub base_ratio: f64,
+    /// Effective ratio per CompNode (indexed by node id); 1.0 = dense.
+    pub node_ratio: Vec<f64>,
+    /// Which direction is compressed (default Both, per the paper).
+    pub direction: CompressDirection,
+}
+
+impl CompressPlan {
+    /// Dense plan (no compression anywhere).
+    pub fn dense(n_nodes: usize) -> CompressPlan {
+        CompressPlan {
+            kind: CompressKind::None,
+            base_ratio: 1.0,
+            node_ratio: vec![1.0; n_nodes],
+            direction: CompressDirection::Both,
+        }
+    }
+
+    /// Uniform plan: every node compresses at r.
+    pub fn uniform(kind: CompressKind, ratio: f64, n_nodes: usize) -> CompressPlan {
+        CompressPlan {
+            kind,
+            base_ratio: ratio,
+            node_ratio: vec![ratio; n_nodes],
+            direction: CompressDirection::Both,
+        }
+    }
+
+    /// AdaTopK plan (Eq. 7) from the dense cost model.
+    pub fn adatopk(
+        dag: &Dag,
+        part: &Partition,
+        testbed: &Testbed,
+        params: PipelineParams,
+        base_ratio: f64,
+    ) -> CompressPlan {
+        let est = evaluate(dag, part, testbed, params, &dense_bytes);
+        let mut r_by_node = vec![0.0f64; testbed.nodes.len()];
+        for c in &est.per_node {
+            r_by_node[c.node] = c.comm_s;
+        }
+        let rmax = r_by_node.iter().cloned().fold(0.0f64, f64::max);
+        let node_ratio = r_by_node
+            .iter()
+            .map(|&ri| {
+                if rmax <= 0.0 {
+                    1.0
+                } else {
+                    (3.0 * base_ratio * ri / rmax).max(1.0)
+                }
+            })
+            .collect();
+        CompressPlan {
+            kind: CompressKind::AdaTopK,
+            base_ratio,
+            node_ratio,
+            direction: CompressDirection::Both,
+        }
+    }
+
+    /// Effective ratio for a message delivered to `dst`.
+    pub fn ratio_for(&self, dst: usize) -> f64 {
+        self.node_ratio.get(dst).copied().unwrap_or(1.0)
+    }
+
+    /// Wire-byte scaling for the latency models: dense bytes -> effective.
+    /// Top-K style encodings pay 3× per kept element (f32 value + i64 idx).
+    pub fn scale_bytes(&self, dst: usize, bytes: f64) -> f64 {
+        let r = self.ratio_for(dst);
+        match self.kind {
+            CompressKind::None => bytes,
+            CompressKind::Int8 => bytes / 4.0 + 4.0,
+            CompressKind::TopK | CompressKind::AdaTopK | CompressKind::RandomK => {
+                if r <= 1.0 {
+                    bytes
+                } else {
+                    3.0 * bytes / r
+                }
+            }
+        }
+    }
+
+    /// Closure adapter for `cost::throughput::evaluate`.
+    pub fn msg_scale(&self) -> impl Fn(usize, usize, f64) -> f64 + '_ {
+        move |_src, dst, bytes| self.scale_bytes(dst, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testbed::testbed1;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+    use crate::opdag::OpKind;
+
+    fn cross_cluster_partition(dag: &Dag) -> Partition {
+        // Half the chain on node 0 (cluster A), half on node 23 (cluster B),
+        // with one segment on node 1 to create a fast link too.
+        let chain = dag.compute_chain();
+        let mut assign = vec![usize::MAX; dag.len()];
+        for (i, &op) in chain.iter().enumerate() {
+            assign[op] = if i < chain.len() / 3 {
+                0
+            } else if i < 2 * chain.len() / 3 {
+                1
+            } else {
+                23
+            };
+        }
+        for op in &dag.ops {
+            if op.kind == OpKind::Placeholder {
+                assign[op.id] = assign[op.users[0]];
+            }
+        }
+        Partition::new(assign)
+    }
+
+    #[test]
+    fn eq7_slowest_node_gets_3r() {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let part = cross_cluster_partition(&dag);
+        let plan =
+            CompressPlan::adatopk(&dag, &part, &tb, PipelineParams::default(), 100.0);
+        let max_r = plan.node_ratio.iter().cloned().fold(0.0f64, f64::max);
+        assert!((max_r - 300.0).abs() < 1e-6, "max ratio {max_r} != 3r");
+        // Nodes receiving nothing stay dense.
+        assert_eq!(plan.ratio_for(5), 1.0);
+    }
+
+    #[test]
+    fn fast_links_less_compressed_than_slow() {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let part = cross_cluster_partition(&dag);
+        let plan =
+            CompressPlan::adatopk(&dag, &part, &tb, PipelineParams::default(), 100.0);
+        // Node 0 only receives the gradient from node 1 over a fast
+        // intra-machine link; node 23 receives the activation over the slow
+        // cross-cluster link. (Node 1 also sees the slow link in BP, so it
+        // is NOT a fast-only receiver.)
+        assert!(
+            plan.ratio_for(0) < plan.ratio_for(23) / 10.0,
+            "fast {} vs slow {}",
+            plan.ratio_for(0),
+            plan.ratio_for(23)
+        );
+    }
+
+    #[test]
+    fn scale_bytes_semantics() {
+        let mut plan = CompressPlan::uniform(CompressKind::TopK, 100.0, 4);
+        assert!((plan.scale_bytes(0, 1e6) - 3e4).abs() < 1.0);
+        plan.kind = CompressKind::None;
+        assert_eq!(plan.scale_bytes(0, 1e6), 1e6);
+        plan.kind = CompressKind::Int8;
+        assert!((plan.scale_bytes(0, 1e6) - 250004.0).abs() < 1.0);
+        // Ratio 1 in TopK mode = dense bytes.
+        let p = CompressPlan::dense(2);
+        assert_eq!(p.scale_bytes(1, 777.0), 777.0);
+    }
+
+    #[test]
+    fn adatopk_latency_close_to_uniform_and_far_below_dense() {
+        // Fig. 10: both compressed variants beat dense by a wide margin;
+        // uniform and AdaTopK land close to each other ("uniform TopK
+        // cannot obtain lower latency than adaptive TopK with a large
+        // gap", §7.4) — AdaTopK may even win since it compresses the
+        // bottleneck link at 3r.
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let part = cross_cluster_partition(&dag);
+        let params = PipelineParams::default();
+        let dense = evaluate(&dag, &part, &tb, params, &dense_bytes).t_pipe;
+        let uni = CompressPlan::uniform(CompressKind::TopK, 100.0, tb.nodes.len());
+        let t_uni = evaluate(&dag, &part, &tb, params, &uni.msg_scale()).t_pipe;
+        let ada = CompressPlan::adatopk(&dag, &part, &tb, params, 100.0);
+        let t_ada = evaluate(&dag, &part, &tb, params, &ada.msg_scale()).t_pipe;
+        assert!(t_ada < dense / 2.0, "ada={t_ada} dense={dense}");
+        assert!(t_uni < dense / 2.0, "uni={t_uni} dense={dense}");
+        let gap = t_ada.max(t_uni) / t_ada.min(t_uni);
+        assert!(gap < 2.0, "uniform/adaptive gap {gap} too large");
+    }
+}

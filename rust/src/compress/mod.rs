@@ -1,0 +1,50 @@
+//! Communication compression (§5): Top-K sparsification, the AdaTopK
+//! adaptive per-link ratio plan (Eq. 7), and baselines (Random-K, int8
+//! quantization), plus error-feedback residuals (paper §10 future work).
+//!
+//! These operate on real f32 payloads in the e2e training path AND provide
+//! the message-scaling closures the analytic/simulated latency models use.
+
+pub mod adatopk;
+pub mod error_feedback;
+pub mod sparsify;
+
+pub use adatopk::{CompressDirection, CompressPlan};
+pub use sparsify::{ChunkedTopK, Compressor, Int8Quantizer, NoCompress, RandomK, TopK};
+
+/// User-facing compressor selection (CLI / configs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressKind {
+    None,
+    /// Uniform Top-K at the given ratio on every cross-node link.
+    TopK,
+    /// AdaTopK: per-link ratios from Eq. 7.
+    AdaTopK,
+    /// Random-K baseline.
+    RandomK,
+    /// Int8 linear quantization baseline.
+    Int8,
+}
+
+impl CompressKind {
+    pub fn parse(s: &str) -> anyhow::Result<CompressKind> {
+        Ok(match s {
+            "none" | "dense" => CompressKind::None,
+            "topk" => CompressKind::TopK,
+            "adatopk" => CompressKind::AdaTopK,
+            "randomk" => CompressKind::RandomK,
+            "int8" => CompressKind::Int8,
+            other => anyhow::bail!("unknown compressor `{other}`"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CompressKind::None => "none",
+            CompressKind::TopK => "topk",
+            CompressKind::AdaTopK => "adatopk",
+            CompressKind::RandomK => "randomk",
+            CompressKind::Int8 => "int8",
+        }
+    }
+}

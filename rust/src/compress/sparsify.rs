@@ -1,0 +1,415 @@
+//! Wire compressors over f32 payloads (Fig. 6).
+//!
+//! Top-K is the hot path (every cross-node message in the AdaTopK runs):
+//! a quickselect threshold (O(n), no sort) followed by a single gather
+//! pass — the same streaming-select shape as the L1 Pallas kernel.
+
+use crate::opdag::data::CompressCfg;
+use crate::util::math::kth_largest_abs;
+use crate::util::rng::Rng;
+
+/// A sparse/quantized wire message.
+#[derive(Debug, Clone)]
+pub struct Compressed {
+    pub cfg: CompressCfg,
+    pub values: Vec<f32>,
+    pub indices: Vec<u32>,
+    pub bytes: Vec<u8>,
+}
+
+impl Compressed {
+    /// Bytes on the wire (paper accounting: f32 values + int64 indices).
+    pub fn wire_bytes(&self) -> f64 {
+        match self.cfg {
+            CompressCfg::None => 4.0 * self.values.len() as f64,
+            CompressCfg::TopK { .. } | CompressCfg::RandomK { .. } => {
+                4.0 * self.values.len() as f64 + 8.0 * self.indices.len() as f64
+            }
+            CompressCfg::Int8 { .. } => self.bytes.len() as f64 + 4.0,
+        }
+    }
+}
+
+/// Compressor interface: compress a dense payload, decompress to dense.
+pub trait Compressor: Send + Sync {
+    fn compress(&self, data: &[f32]) -> Compressed;
+    fn decompress(&self, c: &Compressed, out: &mut [f32]);
+    fn name(&self) -> &'static str;
+}
+
+/// Identity (dense) — the paper's "no compression" baseline.
+#[derive(Debug, Clone, Copy)]
+pub struct NoCompress;
+
+impl Compressor for NoCompress {
+    fn compress(&self, data: &[f32]) -> Compressed {
+        Compressed {
+            cfg: CompressCfg::None,
+            values: data.to_vec(),
+            indices: Vec::new(),
+            bytes: Vec::new(),
+        }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        out.copy_from_slice(&c.values);
+    }
+
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}
+
+/// Top-K by magnitude at compression ratio r (keep k = ceil(n/r)).
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    pub ratio: f64,
+}
+
+impl TopK {
+    pub fn k_for(&self, n: usize) -> usize {
+        ((n as f64 / self.ratio).ceil() as usize).clamp(1, n)
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&self, data: &[f32]) -> Compressed {
+        let n = data.len();
+        let k = self.k_for(n);
+        let mut values = Vec::with_capacity(k);
+        let mut indices = Vec::with_capacity(k);
+        if k >= n {
+            values.extend_from_slice(data);
+            indices.extend(0..n as u32);
+        } else {
+            let tau = kth_largest_abs(data, k);
+            // First pass: strictly-above-threshold entries (always kept).
+            for (i, &v) in data.iter().enumerate() {
+                if v.abs() > tau {
+                    values.push(v);
+                    indices.push(i as u32);
+                }
+            }
+            // Second pass: fill remaining slots with at-threshold ties.
+            if values.len() < k {
+                for (i, &v) in data.iter().enumerate() {
+                    if v.abs() == tau {
+                        values.push(v);
+                        indices.push(i as u32);
+                        if values.len() == k {
+                            break;
+                        }
+                    }
+                }
+                // Keep indices sorted for cache-friendly decode.
+                let mut pairs: Vec<(u32, f32)> =
+                    indices.iter().copied().zip(values.iter().copied()).collect();
+                pairs.sort_unstable_by_key(|p| p.0);
+                indices = pairs.iter().map(|p| p.0).collect();
+                values = pairs.iter().map(|p| p.1).collect();
+            }
+        }
+        Compressed {
+            cfg: CompressCfg::TopK { ratio: self.ratio, total_len: n as u32 },
+            values,
+            indices,
+            bytes: Vec::new(),
+        }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        out.fill(0.0);
+        for (&i, &v) in c.indices.iter().zip(&c.values) {
+            out[i as usize] = v;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+}
+
+/// Row-chunked Top-K (Fig. 6 applied per vector): the payload is treated
+/// as rows of `chunk` elements (one token's feature vector) and Top-K is
+/// selected within each row, so every token keeps its strongest features.
+/// Whole-tensor Top-K concentrates the budget on a few high-norm tokens and
+/// zeroes the rest entirely — much worse for convergence (EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkedTopK {
+    pub ratio: f64,
+    pub chunk: usize,
+}
+
+impl Compressor for ChunkedTopK {
+    fn compress(&self, data: &[f32]) -> Compressed {
+        let n = data.len();
+        let inner = TopK { ratio: self.ratio };
+        let mut values = Vec::new();
+        let mut indices = Vec::new();
+        let mut off = 0usize;
+        while off < n {
+            let end = (off + self.chunk).min(n);
+            let c = inner.compress(&data[off..end]);
+            values.extend_from_slice(&c.values);
+            indices.extend(c.indices.iter().map(|&i| i + off as u32));
+            off = end;
+        }
+        Compressed {
+            cfg: CompressCfg::TopK { ratio: self.ratio, total_len: n as u32 },
+            values,
+            indices,
+            bytes: Vec::new(),
+        }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        out.fill(0.0);
+        for (&i, &v) in c.indices.iter().zip(&c.values) {
+            out[i as usize] = v;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "chunked-topk"
+    }
+}
+
+/// Random-K baseline: uniformly sampled support, deterministic by seed.
+#[derive(Debug, Clone, Copy)]
+pub struct RandomK {
+    pub ratio: f64,
+    pub seed: u64,
+}
+
+impl Compressor for RandomK {
+    fn compress(&self, data: &[f32]) -> Compressed {
+        let n = data.len();
+        let k = ((n as f64 / self.ratio).ceil() as usize).clamp(1, n);
+        let mut rng = Rng::new(self.seed);
+        // Partial Fisher–Yates over indices: first k of a shuffle.
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + rng.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        let mut indices: Vec<u32> = idx[..k].to_vec();
+        indices.sort_unstable();
+        let values = indices.iter().map(|&i| data[i as usize]).collect();
+        Compressed {
+            cfg: CompressCfg::RandomK {
+                ratio: self.ratio,
+                total_len: n as u32,
+                seed: self.seed,
+            },
+            values,
+            indices,
+            bytes: Vec::new(),
+        }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        out.fill(0.0);
+        for (&i, &v) in c.indices.iter().zip(&c.values) {
+            out[i as usize] = v;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "randomk"
+    }
+}
+
+/// Linear int8 quantization with per-message absmax scale.
+#[derive(Debug, Clone, Copy)]
+pub struct Int8Quantizer;
+
+impl Compressor for Int8Quantizer {
+    fn compress(&self, data: &[f32]) -> Compressed {
+        let absmax = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        let bytes = data
+            .iter()
+            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8 as u8)
+            .collect();
+        Compressed {
+            cfg: CompressCfg::Int8 { scale, total_len: data.len() as u32 },
+            values: Vec::new(),
+            indices: Vec::new(),
+            bytes,
+        }
+    }
+
+    fn decompress(&self, c: &Compressed, out: &mut [f32]) {
+        let scale = match c.cfg {
+            CompressCfg::Int8 { scale, .. } => scale,
+            _ => panic!("int8 decompress on non-int8 payload"),
+        };
+        for (o, &b) in out.iter_mut().zip(&c.bytes) {
+            *o = (b as i8) as f32 * scale;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.f32() - 0.5) * 4.0).collect()
+    }
+
+    #[test]
+    fn topk_keeps_exactly_k_largest() {
+        let xs = data(1000, 1);
+        let c = TopK { ratio: 100.0 }.compress(&xs);
+        assert_eq!(c.values.len(), 10);
+        assert_eq!(c.indices.len(), 10);
+        // Every kept |v| >= every dropped |v|.
+        let kept_min = c.values.iter().map(|v| v.abs()).fold(f32::MAX, f32::min);
+        let kept: std::collections::BTreeSet<u32> = c.indices.iter().copied().collect();
+        for (i, &v) in xs.iter().enumerate() {
+            if !kept.contains(&(i as u32)) {
+                assert!(v.abs() <= kept_min + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn topk_roundtrip_preserves_support() {
+        let xs = data(512, 2);
+        let comp = TopK { ratio: 8.0 };
+        let c = comp.compress(&xs);
+        let mut out = vec![0f32; xs.len()];
+        comp.decompress(&c, &mut out);
+        for (&i, &v) in c.indices.iter().zip(&c.values) {
+            assert_eq!(out[i as usize], v);
+            assert_eq!(xs[i as usize], v);
+        }
+        let nz = out.iter().filter(|v| **v != 0.0).count();
+        assert!(nz <= comp.k_for(xs.len()));
+    }
+
+    #[test]
+    fn topk_with_duplicates_respects_k() {
+        let xs = vec![1.0f32; 100];
+        let c = TopK { ratio: 10.0 }.compress(&xs);
+        assert_eq!(c.values.len(), 10);
+    }
+
+    #[test]
+    fn topk_ratio_one_is_dense() {
+        let xs = data(64, 3);
+        let c = TopK { ratio: 1.0 }.compress(&xs);
+        assert_eq!(c.values.len(), 64);
+        let mut out = vec![0f32; 64];
+        TopK { ratio: 1.0 }.decompress(&c, &mut out);
+        assert_eq!(out, xs);
+    }
+
+    #[test]
+    fn randomk_deterministic_and_correct_size() {
+        let xs = data(1000, 4);
+        let comp = RandomK { ratio: 50.0, seed: 99 };
+        let c1 = comp.compress(&xs);
+        let c2 = comp.compress(&xs);
+        assert_eq!(c1.indices, c2.indices);
+        assert_eq!(c1.values.len(), 20);
+        // Indices unique.
+        let set: std::collections::BTreeSet<u32> = c1.indices.iter().copied().collect();
+        assert_eq!(set.len(), 20);
+    }
+
+    #[test]
+    fn int8_roundtrip_within_quant_error() {
+        let xs = data(256, 5);
+        let comp = Int8Quantizer;
+        let c = comp.compress(&xs);
+        let mut out = vec![0f32; 256];
+        comp.decompress(&c, &mut out);
+        let absmax = xs.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in xs.iter().zip(&out) {
+            assert!((a - b).abs() <= absmax / 127.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn wire_bytes_ratio_is_3x_smaller_than_nominal() {
+        // Paper Fig. 10 caption: ratio 100 gives 33.3× smaller payloads
+        // (4B values + 8B indices per kept element = 12B vs 4B dense).
+        let xs = data(10_000, 6);
+        let dense = NoCompress.compress(&xs);
+        let sparse = TopK { ratio: 100.0 }.compress(&xs);
+        let shrink = dense.wire_bytes() / sparse.wire_bytes();
+        assert!((shrink - 33.33).abs() < 0.5, "shrink={shrink}");
+    }
+
+    #[test]
+    fn topk_compression_error_smaller_than_randomk() {
+        let xs = data(2000, 7);
+        let t = TopK { ratio: 20.0 };
+        let r = RandomK { ratio: 20.0, seed: 1 };
+        let mut out_t = vec![0f32; 2000];
+        let mut out_r = vec![0f32; 2000];
+        t.decompress(&t.compress(&xs), &mut out_t);
+        r.decompress(&r.compress(&xs), &mut out_r);
+        let err = |out: &[f32]| -> f32 {
+            xs.iter().zip(out).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        assert!(err(&out_t) < err(&out_r));
+    }
+}
+
+#[cfg(test)]
+mod chunked_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn chunked_topk_keeps_k_per_row() {
+        let mut rng = Rng::new(11);
+        let d = 64usize;
+        let rows = 10usize;
+        // One row has huge values; whole-tensor TopK would spend the whole
+        // budget there, chunked keeps k in EVERY row.
+        let mut data: Vec<f32> = (0..rows * d).map(|_| rng.f32() * 0.1).collect();
+        for v in &mut data[..d] {
+            *v += 100.0;
+        }
+        let comp = ChunkedTopK { ratio: 8.0, chunk: d };
+        let c = comp.compress(&data);
+        let per_row = (d as f64 / 8.0).ceil() as usize;
+        assert_eq!(c.values.len(), per_row * rows);
+        for r in 0..rows {
+            let cnt = c
+                .indices
+                .iter()
+                .filter(|&&i| (i as usize) / d == r)
+                .count();
+            assert_eq!(cnt, per_row, "row {r}");
+        }
+        // Contrast: whole-tensor TopK starves the small rows.
+        let whole = TopK { ratio: 8.0 }.compress(&data);
+        let row0 = whole.indices.iter().filter(|&&i| (i as usize) < d).count();
+        assert_eq!(row0, d.min(whole.indices.len()), "whole-tensor concentrates");
+    }
+
+    #[test]
+    fn chunked_topk_roundtrip_and_ragged_tail() {
+        let mut rng = Rng::new(12);
+        let data: Vec<f32> = (0..150).map(|_| rng.f32() - 0.5).collect();
+        let comp = ChunkedTopK { ratio: 4.0, chunk: 64 }; // 64+64+22 tail
+        let c = comp.compress(&data);
+        let mut out = vec![0.0f32; 150];
+        comp.decompress(&c, &mut out);
+        for (&i, &v) in c.indices.iter().zip(&c.values) {
+            assert_eq!(out[i as usize], v);
+            assert_eq!(data[i as usize], v);
+        }
+        assert!(c.indices.iter().all(|&i| (i as usize) < 150));
+    }
+}

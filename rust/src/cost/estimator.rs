@@ -1,0 +1,109 @@
+//! Per-op computation / communication time model (§3.5).
+
+use crate::cluster::Testbed;
+use crate::opdag::{Dag, OpId};
+
+/// Wraps a testbed and provides the paper's timing primitives.
+pub struct Estimator<'a> {
+    pub testbed: &'a Testbed,
+    /// Fixed per-op host overhead W(f,p) (memory write / framework
+    /// dispatch). The paper argues IO time is negligible; keep it small
+    /// but nonzero so per-op counts still matter a little.
+    pub host_overhead_s: f64,
+}
+
+impl<'a> Estimator<'a> {
+    pub fn new(testbed: &'a Testbed) -> Estimator<'a> {
+        Estimator { testbed, host_overhead_s: 1e-5 }
+    }
+
+    /// C(f, p) = FLOPs(f) / S(p), forward pass.
+    pub fn comp_time_fwd(&self, dag: &Dag, op: OpId, node: usize) -> f64 {
+        let f = &dag.ops[op];
+        if f.flops_fwd == 0.0 {
+            return 0.0;
+        }
+        f.flops_fwd / self.testbed.nodes[node].speed_flops() + self.host_overhead_s
+    }
+
+    /// Backward-pass compute (≈ 2× forward).
+    pub fn comp_time_bwd(&self, dag: &Dag, op: OpId, node: usize) -> f64 {
+        let f = &dag.ops[op];
+        if f.flops_bwd() == 0.0 {
+            return 0.0;
+        }
+        f.flops_bwd() / self.testbed.nodes[node].speed_flops() + self.host_overhead_s
+    }
+
+    /// R(Pa(f)): retrieving `bytes` from node `src` at node `dst`
+    /// (0 when co-located — the paper drops local IO).
+    pub fn retrieve_time(&self, src: usize, dst: usize, bytes: f64) -> f64 {
+        self.testbed.net.comm_time(src, dst, bytes)
+    }
+
+    /// Full T(f,p) = Σ_pa R(pa) + C(f,p) + W, given an assignment.
+    pub fn op_time_fwd(&self, dag: &Dag, op: OpId, assignment: &[usize]) -> f64 {
+        let node = assignment[op];
+        let mut t = self.comp_time_fwd(dag, op, node);
+        for &a in &dag.ops[op].args {
+            let src = assignment[a];
+            if src != node {
+                t += self.retrieve_time(src, node, dag.ops[a].out_bytes);
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testbed::testbed1;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+
+    #[test]
+    fn compute_time_scales_with_speed() {
+        let tb = testbed1(1);
+        let est = Estimator::new(&tb);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let block = dag.ops.iter().find(|o| o.name == "Block0").unwrap().id;
+        // Node 0 is a 4090, node 23 is a 2080 — 4090 must be faster.
+        let fast = est.comp_time_fwd(&dag, block, 0);
+        let slow = est.comp_time_fwd(&dag, block, 23);
+        assert!(fast < slow, "fast={fast} slow={slow}");
+        // bwd ≈ 2× fwd (modulo the fixed overhead).
+        let bwd = est.comp_time_bwd(&dag, block, 0);
+        assert!((bwd - 2.0 * (fast - est.host_overhead_s) - est.host_overhead_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_20mb_over_1mbs_is_20s() {
+        // §7.4: "intermediate features occupy around 20 MB, leading to 20
+        // seconds to communicate with the 1 MB/s bandwidth".
+        let tb = testbed1(1);
+        let est = Estimator::new(&tb);
+        // Find the slowest cross-cluster link (≈ 8 Mbps = 1 MB/s).
+        let mut worst = (0, 0, f64::INFINITY);
+        for i in 0..tb.nodes.len() {
+            for j in 0..tb.nodes.len() {
+                if i != j {
+                    let bw = tb.net.bandwidth_bps(i, j);
+                    if bw < worst.2 {
+                        worst = (i, j, bw);
+                    }
+                }
+            }
+        }
+        let t = est.retrieve_time(worst.0, worst.1, 19.66e6);
+        assert!(t > 1.3 && t < 25.0, "t={t} (paper says ~20s at exactly 1MB/s)");
+    }
+
+    #[test]
+    fn placeholders_cost_nothing() {
+        let tb = testbed1(1);
+        let est = Estimator::new(&tb);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        assert_eq!(est.comp_time_fwd(&dag, 0, 0), 0.0); // Input
+        assert_eq!(est.comp_time_bwd(&dag, 0, 0), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Workload & throughput estimation (§3.5–3.6).
+//!
+//! `estimator` implements the per-op performance model
+//! `T(f,p) = R(Pa(f)) + C(f,p) + W(f,p)` with `C = FLOPs/S(p)` and the
+//! alpha–beta communication model; `throughput` evaluates Eq. 2 (pipeline
+//! stage latency), Eq. 3 (pipelined iteration time) and Eq. 4 (throughput)
+//! for a (DAG, partition, testbed, compression-plan) tuple; `profile` fits
+//! λ_p and link parameters from warm-up measurements.
+
+pub mod estimator;
+pub mod profile;
+pub mod throughput;
+
+pub use estimator::Estimator;
+pub use throughput::{IterationEstimate, PipelineParams};

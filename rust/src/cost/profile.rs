@@ -1,0 +1,104 @@
+//! Warm-up profiling (§3.5): fit the λ_p scaling factor from measured
+//! op timings, and the α/β link parameters from measured transfers.
+//!
+//! In the real system these measurements come from a short profiling run on
+//! each CompNode; in this reproduction the `worker` feeds back wall-clock
+//! PJRT execution times, and the simulated network self-reports.
+
+use crate::cluster::CompNode;
+
+/// One timing sample: (FLOPs executed, seconds measured).
+#[derive(Debug, Clone, Copy)]
+pub struct CompSample {
+    pub flops: f64,
+    pub seconds: f64,
+}
+
+/// Fit λ_p from samples: measured speed / peak speed, robust mean
+/// (median of per-sample ratios, clamped to (0, 1]).
+pub fn fit_lambda(node: &CompNode, samples: &[CompSample]) -> f64 {
+    if samples.is_empty() {
+        return node.lambda;
+    }
+    let peak = node.gpu.peak_tflops() * 1e12;
+    let ratios: Vec<f64> = samples
+        .iter()
+        .filter(|s| s.seconds > 0.0 && s.flops > 0.0)
+        .map(|s| (s.flops / s.seconds) / peak)
+        .collect();
+    if ratios.is_empty() {
+        return node.lambda;
+    }
+    crate::util::math::median(&ratios).clamp(1e-6, 1.0)
+}
+
+/// One link sample: (bytes sent, seconds measured).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSample {
+    pub bytes: f64,
+    pub seconds: f64,
+}
+
+/// Fit (α, β) from link samples via least squares.
+pub fn fit_link(samples: &[LinkSample]) -> (f64, f64) {
+    let xs: Vec<f64> = samples.iter().map(|s| s.bytes).collect();
+    let ys: Vec<f64> = samples.iter().map(|s| s.seconds).collect();
+    let (a, b) = crate::util::math::linfit(&xs, &ys);
+    (a.max(0.0), b.max(1e-15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuModel;
+
+    fn node() -> CompNode {
+        CompNode {
+            id: 0,
+            name: "t".into(),
+            gpu: GpuModel::Rtx4090,
+            lambda: 1.0,
+            cluster: "A".into(),
+            machine: 0,
+        }
+    }
+
+    #[test]
+    fn lambda_fit_recovers_half_speed() {
+        let n = node();
+        let peak = n.gpu.peak_tflops() * 1e12;
+        // Device sustains 50% of peak.
+        let samples: Vec<CompSample> = (1..=5)
+            .map(|k| CompSample { flops: k as f64 * 1e12, seconds: k as f64 * 1e12 / (0.5 * peak) })
+            .collect();
+        let l = fit_lambda(&n, &samples);
+        assert!((l - 0.5).abs() < 1e-9, "λ={l}");
+    }
+
+    #[test]
+    fn lambda_fit_empty_keeps_prior() {
+        let n = node();
+        assert_eq!(fit_lambda(&n, &[]), 1.0);
+    }
+
+    #[test]
+    fn lambda_clamped_to_one() {
+        let n = node();
+        let samples = [CompSample { flops: 1e15, seconds: 1e-3 }]; // impossible
+        assert_eq!(fit_lambda(&n, &samples), 1.0);
+    }
+
+    #[test]
+    fn link_fit_recovers_alpha_beta() {
+        let (alpha, beta) = (0.015, 8.0 / 100e6);
+        let samples: Vec<LinkSample> = (1..=8)
+            .map(|k| {
+                let b = k as f64 * 250_000.0;
+                LinkSample { bytes: b, seconds: alpha + beta * b }
+            })
+            .collect();
+        let (a, bfit) = fit_link(&samples);
+        assert!((a - alpha).abs() < 1e-9);
+        assert!((bfit - beta).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,203 @@
+//! Iteration latency / throughput model (§3.6, Eq. 2–4; §5.2 Eq. 8).
+//!
+//! Evaluates a (DAG, partition, testbed, message-scaling) tuple. Message
+//! scaling is how compression enters: a closure maps (src node, dst node,
+//! dense bytes) -> effective wire bytes, so AdaTopK's per-link ratios
+//! (Eq. 7) and uniform Top-K both plug in without this module knowing
+//! about compressors.
+
+use super::estimator::Estimator;
+use crate::cluster::Testbed;
+use crate::opdag::{Dag, Partition};
+
+/// Pipeline execution parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineParams {
+    /// Number of pipelined microbatches n_b.
+    pub n_micro: usize,
+    /// Samples per microbatch (for Eq. 4 throughput).
+    pub micro_size: usize,
+    /// Include the backward pass in the estimate (the paper schedules on
+    /// the FP DAG only; the full-iteration estimate doubles compute and
+    /// mirrors messages).
+    pub include_bwd: bool,
+}
+
+impl Default for PipelineParams {
+    fn default() -> Self {
+        PipelineParams { n_micro: 2, micro_size: 3, include_bwd: true }
+    }
+}
+
+/// Per-node cost decomposition.
+#[derive(Debug, Clone, Default)]
+pub struct NodeCost {
+    pub node: usize,
+    /// C_p: compute seconds per microbatch.
+    pub comp_s: f64,
+    /// R_p: communication seconds per microbatch (incoming retrievals).
+    pub comm_s: f64,
+}
+
+/// Result of evaluating Eq. 2–4.
+#[derive(Debug, Clone)]
+pub struct IterationEstimate {
+    pub per_node: Vec<NodeCost>,
+    /// T(G)_lat: one traversal of the whole graph (Eq. 2).
+    pub t_lat: f64,
+    /// T(G)_{n_b, pipe}: pipelined iteration time (Eq. 3).
+    pub t_pipe: f64,
+    /// φ = N_s / T_pipe (Eq. 4), samples/second.
+    pub throughput: f64,
+    /// The bottleneck term max_p max(C_p, R_p).
+    pub bottleneck_s: f64,
+    /// Node index realizing the bottleneck.
+    pub bottleneck_node: usize,
+}
+
+/// Identity message scaling (no compression).
+pub fn dense_bytes(_src: usize, _dst: usize, bytes: f64) -> f64 {
+    bytes
+}
+
+/// Evaluate the model. `msg_scale(src_node, dst_node, bytes)` returns the
+/// effective wire bytes for a message on that link.
+pub fn evaluate(
+    dag: &Dag,
+    part: &Partition,
+    testbed: &Testbed,
+    params: PipelineParams,
+    msg_scale: &dyn Fn(usize, usize, f64) -> f64,
+) -> IterationEstimate {
+    let est = Estimator::new(testbed);
+    let mut used: Vec<usize> = part.assignment.clone();
+    used.sort_unstable();
+    used.dedup();
+    let idx_of = |n: usize| used.binary_search(&n).unwrap();
+    let mut costs: Vec<NodeCost> = used
+        .iter()
+        .map(|&n| NodeCost { node: n, ..Default::default() })
+        .collect();
+
+    for op in &dag.ops {
+        let node = part.assignment[op.id];
+        let c = &mut costs[idx_of(node)];
+        c.comp_s += est.comp_time_fwd(dag, op.id, node);
+        if params.include_bwd {
+            c.comp_s += est.comp_time_bwd(dag, op.id, node);
+        }
+        // Incoming activations (FP) and outgoing-edge gradients (BP).
+        for &a in &op.args {
+            let src = part.assignment[a];
+            if src != node {
+                let eff = msg_scale(src, node, dag.ops[a].out_bytes);
+                costs[idx_of(node)].comm_s += est.retrieve_time(src, node, eff);
+                if params.include_bwd && dag.ops[a].requires_grad() {
+                    // Gradient w.r.t. that activation flows back src <- node.
+                    let effg = msg_scale(node, src, dag.ops[a].out_bytes);
+                    costs[idx_of(src)].comm_s += est.retrieve_time(node, src, effg);
+                }
+            }
+        }
+    }
+
+    let t_lat: f64 = costs.iter().map(|c| c.comp_s + c.comm_s).sum();
+    let (mut bmax, mut bnode) = (0.0f64, used.first().copied().unwrap_or(0));
+    for c in &costs {
+        let b = c.comp_s.max(c.comm_s);
+        if b > bmax {
+            bmax = b;
+            bnode = c.node;
+        }
+    }
+    let t_pipe = t_lat + (params.n_micro.saturating_sub(1)) as f64 * bmax;
+    let n_samples = (params.n_micro * params.micro_size) as f64;
+    IterationEstimate {
+        per_node: costs,
+        t_lat,
+        t_pipe,
+        throughput: if t_pipe > 0.0 { n_samples / t_pipe } else { 0.0 },
+        bottleneck_s: bmax,
+        bottleneck_node: bnode,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testbed::testbed1;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+    use crate::opdag::OpKind;
+
+    fn chain_partition(dag: &Dag, nodes: &[usize]) -> Partition {
+        // Round-robin contiguous split of the compute chain over `nodes`.
+        let chain = dag.compute_chain();
+        let per = (chain.len() + nodes.len() - 1) / nodes.len();
+        let mut assign = vec![usize::MAX; dag.len()];
+        for (i, &op) in chain.iter().enumerate() {
+            assign[op] = nodes[(i / per).min(nodes.len() - 1)];
+        }
+        for op in &dag.ops {
+            if op.kind == OpKind::Placeholder {
+                assign[op.id] = assign[op.users[0]];
+            }
+        }
+        Partition::new(assign)
+    }
+
+    #[test]
+    fn single_node_has_no_comm() {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let p = chain_partition(&dag, &[0]);
+        let e = evaluate(&dag, &p, &tb, PipelineParams::default(), &dense_bytes);
+        assert_eq!(e.per_node.len(), 1);
+        assert_eq!(e.per_node[0].comm_s, 0.0);
+        assert!(e.t_lat > 0.0);
+    }
+
+    #[test]
+    fn pipelining_amortizes_latency() {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let p = chain_partition(&dag, &[0, 1, 8, 12]);
+        let p1 = PipelineParams { n_micro: 1, micro_size: 3, include_bwd: true };
+        let p8 = PipelineParams { n_micro: 8, micro_size: 3, include_bwd: true };
+        let e1 = evaluate(&dag, &p, &tb, p1, &dense_bytes);
+        let e8 = evaluate(&dag, &p, &tb, p8, &dense_bytes);
+        assert!(e8.t_pipe > e1.t_pipe);
+        // Throughput per sample should improve with pipelining.
+        assert!(e8.throughput > e1.throughput);
+        // Eq. 3 structure: t_pipe(n) = t_lat + (n-1)·bottleneck.
+        assert!((e8.t_pipe - (e8.t_lat + 7.0 * e8.bottleneck_s)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_scaling_reduces_comm() {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        // Split across clusters: node 0 (A) and node 23 (B) — slow link.
+        let p = chain_partition(&dag, &[0, 23]);
+        let dense = evaluate(&dag, &p, &tb, PipelineParams::default(), &dense_bytes);
+        // Uniform ratio 100 => 3/100 of bytes (values + int64 indices).
+        let scale = |_s: usize, _d: usize, b: f64| 3.0 * b / 100.0;
+        let comp = evaluate(&dag, &p, &tb, PipelineParams::default(), &scale);
+        assert!(comp.t_pipe < dense.t_pipe);
+        let total_comm_dense: f64 = dense.per_node.iter().map(|c| c.comm_s).sum();
+        let total_comm_comp: f64 = comp.per_node.iter().map(|c| c.comm_s).sum();
+        assert!(total_comm_comp < total_comm_dense / 10.0);
+    }
+
+    #[test]
+    fn comm_dominates_on_cross_cluster_gpt2xl() {
+        // §7.4: FP+BP < 0.5 s while communication ≈ 20 s on slow links —
+        // the bottleneck must be communication for cross-cluster splits.
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let p = chain_partition(&dag, &[0, 23]);
+        let e = evaluate(&dag, &p, &tb, PipelineParams::default(), &dense_bytes);
+        let comm: f64 = e.per_node.iter().map(|c| c.comm_s).sum();
+        let comp: f64 = e.per_node.iter().map(|c| c.comp_s).sum();
+        assert!(comm > comp, "comm={comm} comp={comp}");
+    }
+}

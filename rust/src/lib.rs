@@ -1,0 +1,18 @@
+//! FusionLLM — a decentralized LLM training system on geo-distributed GPUs
+//! with adaptive compression (reproduction of Tang et al., 2024).
+//!
+//! Layer 3 of the three-layer stack: the rust coordinator. See DESIGN.md.
+
+pub mod broker;
+pub mod cluster;
+pub mod cmd;
+pub mod compress;
+pub mod cost;
+pub mod opdag;
+pub mod pipeline;
+pub mod runtime;
+pub mod scheduler;
+pub mod simnet;
+pub mod trainer;
+pub mod util;
+pub mod worker;

@@ -1,0 +1,54 @@
+//! FusionLLM leader entrypoint.
+//!
+//! Subcommands:
+//!   testbed   — print the synthesized geo-distributed testbed (Fig. 9)
+//!   schedule  — partition a model DAG onto a testbed and print the plan
+//!   simulate  — discrete-event iteration-latency simulation (Fig. 10/11)
+//!   train     — end-to-end pipeline training over PJRT artifacts (Fig. 8)
+//!   economics — GPU cost table (Table 1)
+
+use fusionllm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "testbed" => fusionllm::cmd::testbed(&args),
+        "schedule" => fusionllm::cmd::schedule(&args),
+        "simulate" => fusionllm::cmd::simulate(&args),
+        "train" => fusionllm::cmd::train(&args),
+        "economics" => fusionllm::cmd::economics(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "fusionllm — decentralized LLM training with adaptive compression\n\
+         \n\
+         USAGE: fusionllm <subcommand> [--flags]\n\
+         \n\
+         SUBCOMMANDS\n\
+           testbed   --testbed 1|2              print CompNodes + link matrix (Fig. 9)\n\
+           schedule  --testbed N --scheduler S  partition the model, print the plan\n\
+           simulate  --testbed N --scheduler S --compress C --ratio R\n\
+                                                 iteration-latency simulation (Fig. 10/11)\n\
+           train     --config PATH --steps N    real pipeline training over artifacts (Fig. 8)\n\
+           economics                             GPU-days table (Table 1)\n\
+         \n\
+         Schedulers: opfence | equal-number | equal-compute\n\
+         Compressors: none | topk | adatopk | randomk | int8"
+    );
+}

@@ -1,0 +1,292 @@
+//! Workload builders: OP-DAGs with per-op FLOPs / output-size / parameter
+//! attributes for the paper's three benchmark models (Table 6) plus the
+//! configurable transformer used by the e2e driver.
+
+use super::{Dag, OpKind};
+
+/// Hyper-parameters of a GPT-2-style decoder-only transformer.
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub microbatch: usize,
+}
+
+impl TransformerSpec {
+    /// GPT2-XL as benchmarked in Table 6 (batch 3, seq 1024).
+    pub fn gpt2_xl() -> TransformerSpec {
+        TransformerSpec {
+            vocab: 50_257,
+            d_model: 1600,
+            n_heads: 25,
+            n_layers: 48,
+            seq_len: 1024,
+            microbatch: 3,
+        }
+    }
+
+    /// Activation message elements between stages.
+    pub fn act_bytes(&self) -> f64 {
+        (self.microbatch * self.seq_len * self.d_model) as f64 * 4.0
+    }
+
+    /// One transformer block's forward FLOPs for a microbatch.
+    pub fn block_flops(&self) -> f64 {
+        let (b, t, d) = (self.microbatch as f64, self.seq_len as f64, self.d_model as f64);
+        // qkv (2·BTD·3D) + scores (2·BT²D) + AV (2·BT²D) + proj (2·BTD·D)
+        // + mlp (2·BTD·4D ×2) = 24·BTD² + 4·BT²D
+        24.0 * b * t * d * d + 4.0 * b * t * t * d
+    }
+
+    pub fn block_param_bytes(&self) -> f64 {
+        let d = self.d_model as f64;
+        (12.0 * d * d + 13.0 * d) * 4.0
+    }
+
+    /// Total parameters (all ops), in count not bytes.
+    pub fn total_params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let v = self.vocab as f64;
+        let t = self.seq_len as f64;
+        (v * d + t * d) + self.n_layers as f64 * (12.0 * d * d + 13.0 * d) + (d * v + v + 2.0 * d)
+    }
+}
+
+/// Build the transformer FP DAG: Input -> Embed -> Block_i ... -> Head <- Label.
+pub fn transformer_chain(s: &TransformerSpec) -> Dag {
+    let (b, t, d, v) =
+        (s.microbatch as f64, s.seq_len as f64, s.d_model as f64, s.vocab as f64);
+    let mut dag = Dag::default();
+    let input = dag.add("Input", OpKind::Placeholder, &[], 0.0, b * t * 4.0, 0.0);
+    let embed = dag.add(
+        "Embed",
+        OpKind::Parametric,
+        &[input],
+        2.0 * b * t * d,
+        s.act_bytes(),
+        (v * d + t * d) * 4.0,
+    );
+    let mut prev = embed;
+    for i in 0..s.n_layers {
+        prev = dag.add(
+            &format!("Block{i}"),
+            OpKind::Parametric,
+            &[prev],
+            s.block_flops(),
+            s.act_bytes(),
+            s.block_param_bytes(),
+        );
+    }
+    let label = dag.add("Label", OpKind::Placeholder, &[], 0.0, b * t * 4.0, 0.0);
+    let _loss = dag.add(
+        "Head+CE",
+        OpKind::Loss,
+        &[prev, label],
+        2.0 * b * t * d * v + 5.0 * b * t * v,
+        4.0,
+        (d * v + v + 2.0 * d) * 4.0,
+    );
+    dag
+}
+
+/// Stage-granularity chain for a pipeline with `n_stages` stages (embed /
+/// body×(n−2) / head), matching the AOT artifact structure: ops are whole
+/// stages, so schedulers decide stage→device placement.
+pub fn stage_chain(s: &TransformerSpec, n_stages: usize) -> Dag {
+    assert!(n_stages >= 3);
+    let (b, t, d, v) =
+        (s.microbatch as f64, s.seq_len as f64, s.d_model as f64, s.vocab as f64);
+    let body_stages = n_stages - 2;
+    assert_eq!(s.n_layers % body_stages, 0);
+    let layers_per = (s.n_layers / body_stages) as f64;
+    let mut dag = Dag::default();
+    let input = dag.add("Input", OpKind::Placeholder, &[], 0.0, b * t * 4.0, 0.0);
+    let mut prev = dag.add(
+        "Embed",
+        OpKind::Parametric,
+        &[input],
+        2.0 * b * t * d,
+        s.act_bytes(),
+        (v * d + t * d) * 4.0,
+    );
+    for i in 0..body_stages {
+        prev = dag.add(
+            &format!("BodyStage{i}"),
+            OpKind::Parametric,
+            &[prev],
+            layers_per * s.block_flops(),
+            s.act_bytes(),
+            layers_per * s.block_param_bytes(),
+        );
+    }
+    let label = dag.add("Label", OpKind::Placeholder, &[], 0.0, b * t * 4.0, 0.0);
+    dag.add(
+        "Head+CE",
+        OpKind::Loss,
+        &[prev, label],
+        2.0 * b * t * d * v + 5.0 * b * t * v,
+        4.0,
+        (d * v + v + 2.0 * d) * 4.0,
+    );
+    dag
+}
+
+/// Hyper-parameters for a ResNet-style CNN workload.
+#[derive(Debug, Clone, Copy)]
+pub struct ResNetSpec {
+    pub depth: usize, // 18 or 101
+    pub batch: usize,
+    pub image: usize, // input H = W
+    pub classes: usize,
+}
+
+impl ResNetSpec {
+    /// Table 6 row: ResNet18 on 3×32×32, batch 128.
+    pub fn resnet18() -> ResNetSpec {
+        ResNetSpec { depth: 18, batch: 128, image: 32, classes: 10 }
+    }
+
+    /// Table 6 row: ResNet101 on 3×64×64, batch 32.
+    pub fn resnet101() -> ResNetSpec {
+        ResNetSpec { depth: 101, batch: 32, image: 64, classes: 200 }
+    }
+}
+
+fn conv_flops(b: f64, cin: f64, cout: f64, k: f64, h: f64, w: f64) -> f64 {
+    2.0 * b * cin * cout * k * k * h * w
+}
+
+/// Build a ResNet FP DAG at residual-block granularity.
+pub fn resnet_chain(s: &ResNetSpec) -> Dag {
+    let b = s.batch as f64;
+    let mut dag = Dag::default();
+    let input =
+        dag.add("Input", OpKind::Placeholder, &[], 0.0, b * 3.0 * (s.image * s.image) as f64 * 4.0, 0.0);
+
+    // Stem: 3x3 conv (CIFAR-style stem for small inputs).
+    let mut h = s.image as f64;
+    let mut c = 64.0;
+    let stem_flops = conv_flops(b, 3.0, c, 3.0, h, h);
+    let mut prev = dag.add(
+        "Stem",
+        OpKind::Parametric,
+        &[input],
+        stem_flops,
+        b * c * h * h * 4.0,
+        (3.0 * c * 9.0 + 2.0 * c) * 4.0,
+    );
+
+    // (blocks per stage, bottleneck?) per depth.
+    let (stages, bottleneck): (&[usize], bool) = match s.depth {
+        18 => (&[2, 2, 2, 2], false),
+        34 => (&[3, 4, 6, 3], false),
+        50 => (&[3, 4, 6, 3], true),
+        101 => (&[3, 4, 23, 3], true),
+        other => panic!("unsupported resnet depth {other}"),
+    };
+    let widths = [64.0, 128.0, 256.0, 512.0];
+    for (si, (&nblocks, &width)) in stages.iter().zip(widths.iter()).enumerate() {
+        for bi in 0..nblocks {
+            let stride_down = si > 0 && bi == 0;
+            if stride_down {
+                h /= 2.0;
+            }
+            let cin = c;
+            let cout = if bottleneck { width * 4.0 } else { width };
+            let (flops, params) = if bottleneck {
+                // 1x1 cin->width, 3x3 width->width, 1x1 width->cout (+proj)
+                let f = conv_flops(b, cin, width, 1.0, h, h)
+                    + conv_flops(b, width, width, 3.0, h, h)
+                    + conv_flops(b, width, cout, 1.0, h, h)
+                    + if cin != cout { conv_flops(b, cin, cout, 1.0, h, h) } else { 0.0 };
+                let p = cin * width + width * width * 9.0 + width * cout
+                    + if cin != cout { cin * cout } else { 0.0 };
+                (f, p * 4.0)
+            } else {
+                let f = conv_flops(b, cin, width, 3.0, h, h)
+                    + conv_flops(b, width, width, 3.0, h, h)
+                    + if cin != width { conv_flops(b, cin, width, 1.0, h, h) } else { 0.0 };
+                let p = cin * width * 9.0 + width * width * 9.0
+                    + if cin != width { cin * width } else { 0.0 };
+                (f, p * 4.0)
+            };
+            c = cout;
+            prev = dag.add(
+                &format!("Stage{si}Block{bi}"),
+                OpKind::Parametric,
+                &[prev],
+                flops,
+                b * c * h * h * 4.0,
+                params,
+            );
+        }
+    }
+
+    let label = dag.add("Label", OpKind::Placeholder, &[], 0.0, b * 4.0, 0.0);
+    let cls = s.classes as f64;
+    let _loss = dag.add(
+        "Pool+FC+CE",
+        OpKind::Loss,
+        &[prev, label],
+        2.0 * b * c * cls + b * c * h * h,
+        4.0,
+        (c * cls + cls) * 4.0,
+    );
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt2_xl_params_about_1_5b() {
+        let s = TransformerSpec::gpt2_xl();
+        let p = s.total_params();
+        assert!(p > 1.4e9 && p < 1.8e9, "params={p:.3e}");
+    }
+
+    #[test]
+    fn transformer_chain_is_a_chain() {
+        let s = TransformerSpec::gpt2_xl();
+        let d = transformer_chain(&s);
+        d.validate().unwrap();
+        assert_eq!(d.len(), 2 + s.n_layers + 2); // input, embed, blocks, label, head
+        assert_eq!(d.max_degree(), 2);
+        // Paper §7.4: GPT2-XL intermediate features ≈ 20 MB; at batch 3 ×
+        // 1024 × 1600 × 4B = 19.66 MB. ✔
+        let mb = s.act_bytes() / 1e6;
+        assert!((mb - 19.66).abs() < 0.5, "act MB = {mb}");
+    }
+
+    #[test]
+    fn resnet18_flops_sane() {
+        // ResNet18 @ 32×32 ≈ 0.56 GFLOPs/image forward; batch 128.
+        let d = resnet_chain(&ResNetSpec::resnet18());
+        d.validate().unwrap();
+        let per_image = d.total_flops_fwd() / 128.0;
+        assert!(per_image > 2e8 && per_image < 2e9, "per-image={per_image:.3e}");
+    }
+
+    #[test]
+    fn resnet101_deeper_than_18() {
+        let d18 = resnet_chain(&ResNetSpec::resnet18());
+        let d101 = resnet_chain(&ResNetSpec::resnet101());
+        assert!(d101.len() > d18.len());
+        d101.validate().unwrap();
+        // 33 residual blocks + stem + head + 2 placeholders.
+        assert_eq!(d101.len(), 33 + 4);
+    }
+
+    #[test]
+    fn chain_activation_bytes_monotone_structure() {
+        // Downsampling halves H but doubles C: bytes shrink across stages.
+        let d = resnet_chain(&ResNetSpec::resnet18());
+        let first = d.ops.iter().find(|o| o.name == "Stage0Block0").unwrap();
+        let last = d.ops.iter().find(|o| o.name == "Stage3Block1").unwrap();
+        assert!(first.out_bytes > last.out_bytes);
+    }
+}

@@ -1,0 +1,293 @@
+//! OP-Data: the unified message structure exchanged between operators and
+//! CompNodes (§3.4). Every attribute from the paper is carried; the wire
+//! format is a flat little-endian encoding handled by `encode`/`decode`
+//! (no serde offline, and the hot path wants zero-copy payload access
+//! anyway).
+
+use crate::opdag::OpId;
+
+/// What the payload is (forward activation or backward gradient).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpDataKind {
+    Activation,
+    Gradient,
+}
+
+/// Compression metadata ("Compress_cfg", §3.4): algorithm, ratio and the
+/// hyper-parameters needed to decode.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressCfg {
+    /// Dense f32 payload.
+    None,
+    /// Top-K sparsified: `values` + `indices` wire pair; `total_len` dense
+    /// elements on decode. `ratio` is the user-facing compression ratio r.
+    TopK { ratio: f64, total_len: u32 },
+    /// Random-K baseline (same wire layout as TopK).
+    RandomK { ratio: f64, total_len: u32, seed: u64 },
+    /// Linear int8 quantization with per-message scale.
+    Int8 { scale: f32, total_len: u32 },
+}
+
+/// One message between operators / CompNodes.
+#[derive(Debug, Clone)]
+pub struct OpData {
+    /// Originating OP node ("Name").
+    pub src_op: OpId,
+    /// Consuming OP node ("OP users" — the concrete edge being served).
+    pub dst_op: OpId,
+    /// "Actual OP user": the arg-slot instance for gradient routing;
+    /// gradients are identified by (generator, consumer) — Table 3.
+    pub actual_user: OpId,
+    pub kind: OpDataKind,
+    /// "Is_loss": payload is the loss output.
+    pub is_loss: bool,
+    /// "Require_grad": whether a gradient will flow back for this edge.
+    pub require_grad: bool,
+    /// "Local_iter": training iteration for synchronization.
+    pub local_iter: u32,
+    /// "Micro_batch": microbatch index within the pipeline.
+    pub micro_batch: u32,
+    pub compress: CompressCfg,
+    /// Payload: dense f32 values, or (values ++ indices-as-f32-bits) for
+    /// sparse encodings. Interpretation is governed by `compress`.
+    pub payload: Vec<f32>,
+    /// Sparse indices (u32), empty for dense/int8 payloads.
+    pub indices: Vec<u32>,
+    /// int8 payload bytes (only for Int8).
+    pub bytes_payload: Vec<u8>,
+}
+
+impl OpData {
+    pub fn dense(
+        src_op: OpId,
+        dst_op: OpId,
+        kind: OpDataKind,
+        local_iter: u32,
+        micro_batch: u32,
+        payload: Vec<f32>,
+    ) -> OpData {
+        OpData {
+            src_op,
+            dst_op,
+            actual_user: dst_op,
+            kind,
+            is_loss: false,
+            require_grad: kind == OpDataKind::Activation,
+            local_iter,
+            micro_batch,
+            compress: CompressCfg::None,
+            payload,
+            indices: Vec::new(),
+            bytes_payload: Vec::new(),
+        }
+    }
+
+    /// Bytes this message occupies on the wire. The paper's accounting
+    /// (Fig. 6): dense = 4·d; TopK/RandomK = 4·k values + 8·k indices
+    /// (indices counted at int64 width like the paper's implementation,
+    /// even though we store u32 in memory).
+    pub fn wire_bytes(&self) -> f64 {
+        let header = 48.0; // fixed fields
+        let body = match &self.compress {
+            CompressCfg::None => 4.0 * self.payload.len() as f64,
+            CompressCfg::TopK { .. } | CompressCfg::RandomK { .. } => {
+                4.0 * self.payload.len() as f64 + 8.0 * self.indices.len() as f64
+            }
+            CompressCfg::Int8 { .. } => self.bytes_payload.len() as f64 + 4.0,
+        };
+        header + body
+    }
+
+    /// Serialize to a flat byte buffer (little endian).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.payload.len() * 4);
+        let push_u32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
+        let push_u64 = |out: &mut Vec<u8>, v: u64| out.extend_from_slice(&v.to_le_bytes());
+        push_u64(&mut out, self.src_op as u64);
+        push_u64(&mut out, self.dst_op as u64);
+        push_u64(&mut out, self.actual_user as u64);
+        out.push(match self.kind {
+            OpDataKind::Activation => 0,
+            OpDataKind::Gradient => 1,
+        });
+        out.push(self.is_loss as u8);
+        out.push(self.require_grad as u8);
+        push_u32(&mut out, self.local_iter);
+        push_u32(&mut out, self.micro_batch);
+        // compress cfg
+        match &self.compress {
+            CompressCfg::None => {
+                out.push(0);
+            }
+            CompressCfg::TopK { ratio, total_len } => {
+                out.push(1);
+                out.extend_from_slice(&ratio.to_le_bytes());
+                push_u32(&mut out, *total_len);
+            }
+            CompressCfg::RandomK { ratio, total_len, seed } => {
+                out.push(2);
+                out.extend_from_slice(&ratio.to_le_bytes());
+                push_u32(&mut out, *total_len);
+                push_u64(&mut out, *seed);
+            }
+            CompressCfg::Int8 { scale, total_len } => {
+                out.push(3);
+                out.extend_from_slice(&scale.to_le_bytes());
+                push_u32(&mut out, *total_len);
+            }
+        }
+        push_u32(&mut out, self.payload.len() as u32);
+        for v in &self.payload {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        push_u32(&mut out, self.indices.len() as u32);
+        for v in &self.indices {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        push_u32(&mut out, self.bytes_payload.len() as u32);
+        out.extend_from_slice(&self.bytes_payload);
+        out
+    }
+
+    /// Decode a buffer produced by `encode`.
+    pub fn decode(buf: &[u8]) -> anyhow::Result<OpData> {
+        let mut r = Reader { b: buf, i: 0 };
+        let src_op = r.u64()? as OpId;
+        let dst_op = r.u64()? as OpId;
+        let actual_user = r.u64()? as OpId;
+        let kind = match r.u8()? {
+            0 => OpDataKind::Activation,
+            1 => OpDataKind::Gradient,
+            k => anyhow::bail!("bad kind {k}"),
+        };
+        let is_loss = r.u8()? != 0;
+        let require_grad = r.u8()? != 0;
+        let local_iter = r.u32()?;
+        let micro_batch = r.u32()?;
+        let compress = match r.u8()? {
+            0 => CompressCfg::None,
+            1 => CompressCfg::TopK { ratio: r.f64()?, total_len: r.u32()? },
+            2 => CompressCfg::RandomK {
+                ratio: r.f64()?,
+                total_len: r.u32()?,
+                seed: r.u64()?,
+            },
+            3 => CompressCfg::Int8 { scale: r.f32()?, total_len: r.u32()? },
+            c => anyhow::bail!("bad compress tag {c}"),
+        };
+        let np = r.u32()? as usize;
+        let mut payload = Vec::with_capacity(np);
+        for _ in 0..np {
+            payload.push(r.f32()?);
+        }
+        let ni = r.u32()? as usize;
+        let mut indices = Vec::with_capacity(ni);
+        for _ in 0..ni {
+            indices.push(r.u32()?);
+        }
+        let nb = r.u32()? as usize;
+        let bytes_payload = r.bytes(nb)?.to_vec();
+        anyhow::ensure!(r.i == buf.len(), "trailing bytes in OpData");
+        Ok(OpData {
+            src_op,
+            dst_op,
+            actual_user,
+            kind,
+            is_loss,
+            require_grad,
+            local_iter,
+            micro_batch,
+            compress,
+            payload,
+            indices,
+            bytes_payload,
+        })
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let s = self
+            .b
+            .get(self.i..self.i + n)
+            .ok_or_else(|| anyhow::anyhow!("short OpData buffer"))?;
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_dense() {
+        let d = OpData::dense(3, 4, OpDataKind::Activation, 7, 2, vec![1.0, -2.5, 0.0]);
+        let back = OpData::decode(&d.encode()).unwrap();
+        assert_eq!(back.src_op, 3);
+        assert_eq!(back.dst_op, 4);
+        assert_eq!(back.local_iter, 7);
+        assert_eq!(back.micro_batch, 2);
+        assert_eq!(back.payload, vec![1.0, -2.5, 0.0]);
+        assert_eq!(back.compress, CompressCfg::None);
+    }
+
+    #[test]
+    fn roundtrip_topk() {
+        let mut d = OpData::dense(0, 1, OpDataKind::Gradient, 1, 0, vec![5.0, -7.0]);
+        d.indices = vec![10, 90];
+        d.compress = CompressCfg::TopK { ratio: 100.0, total_len: 100 };
+        let back = OpData::decode(&d.encode()).unwrap();
+        assert_eq!(back.indices, vec![10, 90]);
+        assert_eq!(back.compress, CompressCfg::TopK { ratio: 100.0, total_len: 100 });
+        assert_eq!(back.kind, OpDataKind::Gradient);
+    }
+
+    #[test]
+    fn roundtrip_int8() {
+        let mut d = OpData::dense(0, 1, OpDataKind::Activation, 0, 0, vec![]);
+        d.bytes_payload = vec![1, 2, 255];
+        d.compress = CompressCfg::Int8 { scale: 0.5, total_len: 3 };
+        let back = OpData::decode(&d.encode()).unwrap();
+        assert_eq!(back.bytes_payload, vec![1, 2, 255]);
+    }
+
+    #[test]
+    fn wire_bytes_fig6_accounting() {
+        // Fig. 6: dense d floats = 32d bits; sparse k kept = 32k + 64k bits.
+        let mut dense = OpData::dense(0, 1, OpDataKind::Activation, 0, 0, vec![0.0; 100]);
+        assert_eq!(dense.wire_bytes() as u64, 48 + 400);
+        dense.payload.truncate(10);
+        dense.indices = vec![0; 10];
+        dense.compress = CompressCfg::TopK { ratio: 10.0, total_len: 100 };
+        assert_eq!(dense.wire_bytes() as u64, 48 + 40 + 80);
+    }
+
+    #[test]
+    fn decode_rejects_truncated() {
+        let d = OpData::dense(0, 1, OpDataKind::Activation, 0, 0, vec![1.0; 8]);
+        let enc = d.encode();
+        assert!(OpData::decode(&enc[..enc.len() - 3]).is_err());
+        assert!(OpData::decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,258 @@
+//! OP-DAG: the model as a directed acyclic graph of operators (§3.3).
+//!
+//! Each node is a layer-granularity operator (Table 2 kinds); each directed
+//! edge carries activations forward and gradients backward. The BP DAG is
+//! the FP DAG with edges reversed (minus placeholder legs), so — like the
+//! paper — we store only the FP DAG and derive BP from it.
+
+pub mod builders;
+pub mod data;
+pub mod partition;
+
+pub use data::{CompressCfg, OpData, OpDataKind};
+pub use partition::{Partition, SubDag};
+
+/// Operator kinds (Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Dataset inputs / labels: no compute, no gradients.
+    Placeholder,
+    /// Standalone trainable tensor.
+    Variable,
+    /// Layer with trainable parameters (Conv, Linear, transformer block...).
+    Parametric,
+    /// Stateless layer (ReLU, Add, ...).
+    NonParametric,
+    /// Terminal loss function.
+    Loss,
+}
+
+pub type OpId = usize;
+
+/// One operator node with its workload attributes used by the estimator.
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Operators whose outputs this op consumes ("Args", Table 2).
+    pub args: Vec<OpId>,
+    /// Operators that consume this op's output ("OP users").
+    pub users: Vec<OpId>,
+    /// Forward-pass floating point operations for one microbatch.
+    pub flops_fwd: f64,
+    /// Bytes of this op's output activation for one microbatch (edge payload).
+    pub out_bytes: f64,
+    /// Bytes of trainable parameters (+grads+optimizer state live here).
+    pub param_bytes: f64,
+}
+
+impl OpNode {
+    /// Backward FLOPs ≈ 2× forward (standard autodiff cost model).
+    pub fn flops_bwd(&self) -> f64 {
+        if self.requires_grad() {
+            2.0 * self.flops_fwd
+        } else {
+            0.0
+        }
+    }
+
+    pub fn requires_grad(&self) -> bool {
+        !matches!(self.kind, OpKind::Placeholder)
+    }
+}
+
+/// The FP DAG G = <{o^i}, {(o^i, o^j)}>.
+#[derive(Debug, Clone, Default)]
+pub struct Dag {
+    pub ops: Vec<OpNode>,
+}
+
+impl Dag {
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Append an op wired to its args; returns its id.
+    pub fn add(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        args: &[OpId],
+        flops_fwd: f64,
+        out_bytes: f64,
+        param_bytes: f64,
+    ) -> OpId {
+        let id = self.ops.len();
+        for &a in args {
+            assert!(a < id, "arg {a} not yet defined for `{name}`");
+            self.ops[a].users.push(id);
+        }
+        self.ops.push(OpNode {
+            id,
+            name: name.to_string(),
+            kind,
+            args: args.to_vec(),
+            users: Vec::new(),
+            flops_fwd,
+            out_bytes,
+            param_bytes,
+        });
+        id
+    }
+
+    /// Topological order (ids ascend by construction, but validate anyway).
+    pub fn topo_order(&self) -> Vec<OpId> {
+        let mut indeg: Vec<usize> = self.ops.iter().map(|o| o.args.len()).collect();
+        let mut queue: std::collections::VecDeque<OpId> = (0..self.len())
+            .filter(|&i| indeg[i] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(i) = queue.pop_front() {
+            order.push(i);
+            for &u in &self.ops[i].users {
+                indeg[u] -= 1;
+                if indeg[u] == 0 {
+                    queue.push_back(u);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.len(), "cycle in OP-DAG");
+        order
+    }
+
+    /// Structural validation: arg/user symmetry, single loss, acyclicity.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for op in &self.ops {
+            for &a in &op.args {
+                anyhow::ensure!(
+                    self.ops[a].users.contains(&op.id),
+                    "user link missing {} -> {}",
+                    a,
+                    op.id
+                );
+            }
+            for &u in &op.users {
+                anyhow::ensure!(
+                    self.ops[u].args.contains(&op.id),
+                    "arg link missing {} -> {}",
+                    op.id,
+                    u
+                );
+            }
+            anyhow::ensure!(
+                op.flops_fwd >= 0.0 && op.out_bytes >= 0.0 && op.param_bytes >= 0.0,
+                "negative workload on {}",
+                op.name
+            );
+        }
+        let losses = self.ops.iter().filter(|o| o.kind == OpKind::Loss).count();
+        anyhow::ensure!(losses <= 1, "multiple loss ops");
+        let _ = self.topo_order(); // panics on cycle
+        Ok(())
+    }
+
+    /// Max in/out degree over compute ops — Observation 1 says this is
+    /// small (≤2) for typical DNNs, which OP-Fence exploits.
+    pub fn max_degree(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|o| o.args.len().max(o.users.len()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total forward FLOPs for one microbatch.
+    pub fn total_flops_fwd(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops_fwd).sum()
+    }
+
+    /// Total parameter bytes.
+    pub fn total_param_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.param_bytes).sum()
+    }
+
+    /// The compute ops in topological order, placeholders excluded —
+    /// the "chain" view used by contiguous partitioning.
+    pub fn compute_chain(&self) -> Vec<OpId> {
+        self.topo_order()
+            .into_iter()
+            .filter(|&i| !matches!(self.ops[i].kind, OpKind::Placeholder))
+            .collect()
+    }
+
+    /// BP edges: reverse of FP edges, excluding edges into ops that do not
+    /// require gradients (Input/Label placeholders) — §3.3 "BP".
+    pub fn bp_edges(&self) -> Vec<(OpId, OpId)> {
+        let mut out = Vec::new();
+        for op in &self.ops {
+            for &a in &op.args {
+                if self.ops[a].requires_grad() {
+                    out.push((op.id, a));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 3 example: Input->Conv->Add<-ReLu<-TensorA;
+    /// Add->Linear->CE<-Label.
+    pub fn fig3_dag() -> Dag {
+        let mut d = Dag::default();
+        let input = d.add("Input", OpKind::Placeholder, &[], 0.0, 1e3, 0.0);
+        let conv = d.add("Conv", OpKind::Parametric, &[input], 1e6, 1e3, 4e3);
+        let ta = d.add("TensorA", OpKind::Variable, &[], 0.0, 1e3, 1e3);
+        let relu = d.add("ReLu", OpKind::NonParametric, &[ta], 1e3, 1e3, 0.0);
+        let add = d.add("Add", OpKind::NonParametric, &[relu, conv], 1e3, 1e3, 0.0);
+        let lin = d.add("Linear", OpKind::Parametric, &[add], 1e6, 1e2, 4e3);
+        let label = d.add("Label", OpKind::Placeholder, &[], 0.0, 1e2, 0.0);
+        let _ce = d.add("CE", OpKind::Loss, &[label, lin], 1e2, 4.0, 0.0);
+        d
+    }
+
+    #[test]
+    fn fig3_structure() {
+        let d = fig3_dag();
+        d.validate().unwrap();
+        assert_eq!(d.len(), 8);
+        assert_eq!(d.max_degree(), 2); // Observation 1
+        let order = d.topo_order();
+        let pos = |n: &str| order.iter().position(|&i| d.ops[i].name == n).unwrap();
+        assert!(pos("Conv") < pos("Add"));
+        assert!(pos("ReLu") < pos("Add"));
+        assert!(pos("Add") < pos("Linear"));
+        assert!(pos("Linear") < pos("CE"));
+    }
+
+    #[test]
+    fn bp_edges_skip_placeholders() {
+        let d = fig3_dag();
+        let bp = d.bp_edges();
+        // No gradient edges into Input or Label.
+        for &(_, dst) in &bp {
+            assert!(d.ops[dst].requires_grad());
+        }
+        // Add sends gradients to both Conv and ReLu (Table 3).
+        let add = d.ops.iter().find(|o| o.name == "Add").unwrap().id;
+        let conv = d.ops.iter().find(|o| o.name == "Conv").unwrap().id;
+        let relu = d.ops.iter().find(|o| o.name == "ReLu").unwrap().id;
+        assert!(bp.contains(&(add, conv)));
+        assert!(bp.contains(&(add, relu)));
+    }
+
+    #[test]
+    #[should_panic(expected = "arg 5 not yet defined")]
+    fn forward_reference_panics() {
+        let mut d = Dag::default();
+        d.add("bad", OpKind::NonParametric, &[5], 0.0, 0.0, 0.0);
+    }
+}

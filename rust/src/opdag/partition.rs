@@ -1,0 +1,244 @@
+//! DAG partition records (§3.3, Table 3): assignment of ops to CompNodes,
+//! derived sub-DAGs with their required/sent activations and gradients,
+//! and the memory-constraint check of Eq. 6.
+
+use super::{Dag, OpId, OpKind};
+
+/// op -> CompNode assignment. Placeholders follow their (first) user.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    pub assignment: Vec<usize>, // indexed by OpId
+}
+
+/// One sub-DAG on one CompNode, with its message sets (Table 3).
+#[derive(Debug, Clone)]
+pub struct SubDag {
+    pub node: usize,
+    pub ops: Vec<OpId>,
+    /// FP inputs that must arrive from other CompNodes: (src_op, dst_op).
+    pub required_acti: Vec<(OpId, OpId)>,
+    /// FP outputs that must be sent out: (src_op, dst_op).
+    pub send_acti: Vec<(OpId, OpId)>,
+    /// BP gradients that must arrive: identified by (generator, consumer)
+    /// i.e. (downstream op computing the grad, op receiving it).
+    pub required_grad: Vec<(OpId, OpId)>,
+    /// BP gradients that must be sent out.
+    pub send_grad: Vec<(OpId, OpId)>,
+}
+
+impl Partition {
+    pub fn new(assignment: Vec<usize>) -> Partition {
+        Partition { assignment }
+    }
+
+    pub fn node_of(&self, op: OpId) -> usize {
+        self.assignment[op]
+    }
+
+    /// Number of distinct CompNodes used.
+    pub fn nodes_used(&self) -> usize {
+        let mut v = self.assignment.clone();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+
+    /// Validate: complete, and placeholders co-located with a user (so no
+    /// raw-data transfer happens — the privacy property of §1).
+    pub fn validate(&self, dag: &Dag) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.assignment.len() == dag.len(),
+            "assignment covers {} of {} ops",
+            self.assignment.len(),
+            dag.len()
+        );
+        for op in &dag.ops {
+            if op.kind == OpKind::Placeholder && !op.users.is_empty() {
+                let here = self.assignment[op.id];
+                anyhow::ensure!(
+                    op.users.iter().any(|&u| self.assignment[u] == here),
+                    "placeholder `{}` not co-located with any user",
+                    op.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Derive per-node sub-DAGs with their Table-3 message sets.
+    pub fn sub_dags(&self, dag: &Dag) -> Vec<SubDag> {
+        let mut nodes: Vec<usize> = self.assignment.clone();
+        nodes.sort_unstable();
+        nodes.dedup();
+        let mut subs: Vec<SubDag> = nodes
+            .iter()
+            .map(|&n| SubDag {
+                node: n,
+                ops: Vec::new(),
+                required_acti: Vec::new(),
+                send_acti: Vec::new(),
+                required_grad: Vec::new(),
+                send_grad: Vec::new(),
+            })
+            .collect();
+        let idx_of = |n: usize| nodes.binary_search(&n).unwrap();
+
+        for op in &dag.ops {
+            subs[idx_of(self.assignment[op.id])].ops.push(op.id);
+        }
+        for op in &dag.ops {
+            let src_node = self.assignment[op.id];
+            for &u in &op.users {
+                let dst_node = self.assignment[u];
+                if src_node != dst_node {
+                    // FP: activation crosses the cut.
+                    subs[idx_of(src_node)].send_acti.push((op.id, u));
+                    subs[idx_of(dst_node)].required_acti.push((op.id, u));
+                    // BP: gradient flows back along the same edge if the
+                    // producer requires grad (§3.3 "BP").
+                    if op.requires_grad() {
+                        subs[idx_of(dst_node)].send_grad.push((u, op.id));
+                        subs[idx_of(src_node)].required_grad.push((u, op.id));
+                    }
+                }
+            }
+        }
+        subs
+    }
+
+    /// Eq. 6 memory check: per node, params (×`opt_factor` for grads +
+    /// optimizer state) + activation stash for `n_micro` in-flight
+    /// microbatches must fit device memory.
+    pub fn check_memory(
+        &self,
+        dag: &Dag,
+        mem_bytes: &dyn Fn(usize) -> u64,
+        n_micro: usize,
+        opt_factor: f64,
+    ) -> anyhow::Result<()> {
+        let mut usage: std::collections::BTreeMap<usize, f64> = Default::default();
+        for op in &dag.ops {
+            let u = usage.entry(self.assignment[op.id]).or_insert(0.0);
+            *u += op.param_bytes * opt_factor + op.out_bytes * n_micro as f64;
+        }
+        for (&node, &bytes) in &usage {
+            let cap = mem_bytes(node) as f64;
+            anyhow::ensure!(
+                bytes <= cap,
+                "node {node} needs {} > capacity {}",
+                crate::util::math::fmt_bytes(bytes),
+                crate::util::math::fmt_bytes(cap)
+            );
+        }
+        Ok(())
+    }
+
+    /// Count of cut edges (communication touchpoints) — the quantity
+    /// inter-layer partitioning minimizes (Opportunity 1).
+    pub fn cut_edges(&self, dag: &Dag) -> usize {
+        dag.ops
+            .iter()
+            .flat_map(|op| op.users.iter().map(move |&u| (op.id, u)))
+            .filter(|&(a, b)| self.assignment[a] != self.assignment[b])
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+
+    fn small_spec() -> TransformerSpec {
+        TransformerSpec {
+            vocab: 256,
+            d_model: 64,
+            n_heads: 4,
+            n_layers: 4,
+            seq_len: 32,
+            microbatch: 2,
+        }
+    }
+
+    /// Fig. 3 partition (Tables 2–3): verify required/send sets match.
+    #[test]
+    fn fig3_table3_message_sets() {
+        use crate::opdag::OpKind;
+        let mut d = Dag::default();
+        let input = d.add("Input", OpKind::Placeholder, &[], 0.0, 1e3, 0.0);
+        let conv = d.add("Conv", OpKind::Parametric, &[input], 1e6, 1e3, 4e3);
+        let ta = d.add("TensorA", OpKind::Variable, &[], 0.0, 1e3, 1e3);
+        let relu = d.add("ReLu", OpKind::NonParametric, &[ta], 1e3, 1e3, 0.0);
+        let add = d.add("Add", OpKind::NonParametric, &[relu, conv], 1e3, 1e3, 0.0);
+        let lin = d.add("Linear", OpKind::Parametric, &[add], 1e6, 1e2, 4e3);
+        let label = d.add("Label", OpKind::Placeholder, &[], 0.0, 1e2, 0.0);
+        let ce = d.add("CE", OpKind::Loss, &[label, lin], 1e2, 4.0, 0.0);
+        // CompNode 1: Input, Conv; 2: TensorA, ReLu; 3: Add, Linear, Label, CE.
+        let p = Partition::new(vec![1, 1, 2, 2, 3, 3, 3, 3]);
+        p.validate(&d).unwrap();
+        let subs = p.sub_dags(&d);
+        let s1 = subs.iter().find(|s| s.node == 1).unwrap();
+        let s2 = subs.iter().find(|s| s.node == 2).unwrap();
+        let s3 = subs.iter().find(|s| s.node == 3).unwrap();
+        // Table 3 row 1: sub-DAG 1 sends Conv, requires grad Conv-Add.
+        assert_eq!(s1.send_acti, vec![(conv, add)]);
+        assert_eq!(s1.required_grad, vec![(add, conv)]);
+        assert!(s1.required_acti.is_empty() && s1.send_grad.is_empty());
+        // Row 2: sends ReLu, requires grad ReLu-Add.
+        assert_eq!(s2.send_acti, vec![(relu, add)]);
+        assert_eq!(s2.required_grad, vec![(add, relu)]);
+        // Row 3: requires Conv+ReLu acts, sends both grads.
+        let mut req = s3.required_acti.clone();
+        req.sort_unstable();
+        assert_eq!(req, vec![(conv, add), (relu, add)]);
+        let mut sg = s3.send_grad.clone();
+        sg.sort_unstable();
+        assert_eq!(sg, vec![(add, conv), (add, relu)]);
+        let _ = (lin, label, ce);
+    }
+
+    #[test]
+    fn chain_partition_cut_edges() {
+        let d = transformer_chain(&small_spec());
+        // Everything on one node: zero cuts.
+        let p0 = Partition::new(vec![0; d.len()]);
+        assert_eq!(p0.cut_edges(&d), 0);
+        // Split at the middle block: exactly 1 cut (chain degree 1).
+        let chain = d.compute_chain();
+        let mid = chain[chain.len() / 2];
+        let assign: Vec<usize> =
+            (0..d.len()).map(|i| if i < mid { 0 } else { 1 }).collect();
+        // Keep placeholders with their users.
+        let mut assign = assign;
+        for op in &d.ops {
+            if op.kind == OpKind::Placeholder {
+                assign[op.id] = assign[op.users[0]];
+            }
+        }
+        let p = Partition::new(assign);
+        p.validate(&d).unwrap();
+        assert_eq!(p.cut_edges(&d), 1);
+        assert_eq!(p.nodes_used(), 2);
+    }
+
+    #[test]
+    fn memory_check_rejects_overload() {
+        let d = transformer_chain(&small_spec());
+        let p = Partition::new(vec![0; d.len()]);
+        // Tiny capacity fails; huge capacity passes.
+        assert!(p.check_memory(&d, &|_| 1024, 2, 4.0).is_err());
+        assert!(p.check_memory(&d, &|_| 1 << 40, 2, 4.0).is_ok());
+    }
+
+    #[test]
+    fn placeholder_colocation_enforced() {
+        let d = transformer_chain(&small_spec());
+        let chain = d.compute_chain();
+        // Assign label's user (head) to node 1 but label to node 0.
+        let mut assign = vec![0usize; d.len()];
+        let head = *chain.last().unwrap();
+        assign[head] = 1;
+        let p = Partition::new(assign);
+        assert!(p.validate(&d).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Microbatch pipeline schedules (§3.6, Eq. 3): GPipe-style all-forward /
+//! all-backward and 1F1B (PipeDream-flush) as an ablation. The schedule is
+//! a per-device ordered task list consumed by the discrete-event simulator
+//! (`simnet`) and the real threaded workers (`worker`).
+
+pub mod schedule;
+
+pub use schedule::{PipelineSchedule, ScheduleKind, Task, TaskKind};

@@ -1,0 +1,206 @@
+//! Pipeline task schedules over S stages × n_b microbatches.
+
+/// What a pipeline task does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Forward,
+    Backward,
+    /// Optimizer step (once per device, after all backwards).
+    Update,
+}
+
+/// One schedulable unit: (stage, microbatch, kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Task {
+    pub stage: usize,
+    pub micro: usize,
+    pub kind: TaskKind,
+}
+
+/// Schedule flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// GPipe: all microbatch forwards, then all backwards (flush).
+    GPipe,
+    /// 1F1B (PipeDream-flush): steady state interleaves one forward with
+    /// one backward, reducing peak activation stash.
+    OneFOneB,
+}
+
+impl ScheduleKind {
+    pub fn parse(s: &str) -> anyhow::Result<ScheduleKind> {
+        Ok(match s {
+            "gpipe" => ScheduleKind::GPipe,
+            "1f1b" => ScheduleKind::OneFOneB,
+            other => anyhow::bail!("unknown schedule `{other}`"),
+        })
+    }
+}
+
+/// Per-device ordered task lists for an S-stage pipeline.
+#[derive(Debug, Clone)]
+pub struct PipelineSchedule {
+    pub kind: ScheduleKind,
+    pub n_stages: usize,
+    pub n_micro: usize,
+    /// tasks[stage] = ordered execution list for the device owning stage.
+    pub tasks: Vec<Vec<Task>>,
+}
+
+impl PipelineSchedule {
+    pub fn new(kind: ScheduleKind, n_stages: usize, n_micro: usize) -> PipelineSchedule {
+        let tasks = match kind {
+            ScheduleKind::GPipe => gpipe(n_stages, n_micro),
+            ScheduleKind::OneFOneB => one_f_one_b(n_stages, n_micro),
+        };
+        PipelineSchedule { kind, n_stages, n_micro, tasks }
+    }
+
+    /// Peak number of stashed forward activations on a stage (memory
+    /// pressure): GPipe stashes n_micro everywhere; 1F1B stashes at most
+    /// (n_stages - stage) per PipeDream-flush.
+    pub fn peak_stash(&self, stage: usize) -> usize {
+        let mut live = 0usize;
+        let mut peak = 0usize;
+        for t in &self.tasks[stage] {
+            match t.kind {
+                TaskKind::Forward => {
+                    live += 1;
+                    peak = peak.max(live);
+                }
+                TaskKind::Backward => live = live.saturating_sub(1),
+                TaskKind::Update => {}
+            }
+        }
+        peak
+    }
+
+    /// Structural validation: every (micro, kind) exactly once per stage,
+    /// each backward after its forward, update last.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (s, list) in self.tasks.iter().enumerate() {
+            anyhow::ensure!(
+                list.len() == 2 * self.n_micro + 1,
+                "stage {s}: {} tasks",
+                list.len()
+            );
+            let mut seen_f = vec![false; self.n_micro];
+            let mut seen_b = vec![false; self.n_micro];
+            for (pos, t) in list.iter().enumerate() {
+                anyhow::ensure!(t.stage == s, "task on wrong stage");
+                match t.kind {
+                    TaskKind::Forward => {
+                        anyhow::ensure!(!seen_f[t.micro], "dup fwd");
+                        seen_f[t.micro] = true;
+                    }
+                    TaskKind::Backward => {
+                        anyhow::ensure!(seen_f[t.micro], "bwd before fwd");
+                        anyhow::ensure!(!seen_b[t.micro], "dup bwd");
+                        seen_b[t.micro] = true;
+                    }
+                    TaskKind::Update => {
+                        anyhow::ensure!(pos == list.len() - 1, "update not last");
+                    }
+                }
+            }
+            anyhow::ensure!(seen_f.iter().all(|&x| x), "missing fwd");
+            anyhow::ensure!(seen_b.iter().all(|&x| x), "missing bwd");
+        }
+        Ok(())
+    }
+}
+
+fn gpipe(n_stages: usize, n_micro: usize) -> Vec<Vec<Task>> {
+    (0..n_stages)
+        .map(|s| {
+            let mut v: Vec<Task> = (0..n_micro)
+                .map(|m| Task { stage: s, micro: m, kind: TaskKind::Forward })
+                .collect();
+            // Backwards in reverse microbatch order (last fwd, first bwd).
+            v.extend(
+                (0..n_micro)
+                    .rev()
+                    .map(|m| Task { stage: s, micro: m, kind: TaskKind::Backward }),
+            );
+            v.push(Task { stage: s, micro: 0, kind: TaskKind::Update });
+            v
+        })
+        .collect()
+}
+
+fn one_f_one_b(n_stages: usize, n_micro: usize) -> Vec<Vec<Task>> {
+    (0..n_stages)
+        .map(|s| {
+            // Warmup forwards: min(n_stages - s, n_micro).
+            let warmup = (n_stages - s).min(n_micro);
+            let mut v = Vec::with_capacity(2 * n_micro + 1);
+            let mut f = 0usize;
+            let mut b = 0usize;
+            for _ in 0..warmup {
+                v.push(Task { stage: s, micro: f, kind: TaskKind::Forward });
+                f += 1;
+            }
+            // Steady state: 1B1F until forwards exhausted, then drain.
+            while b < n_micro {
+                v.push(Task { stage: s, micro: b, kind: TaskKind::Backward });
+                b += 1;
+                if f < n_micro {
+                    v.push(Task { stage: s, micro: f, kind: TaskKind::Forward });
+                    f += 1;
+                }
+            }
+            v.push(Task { stage: s, micro: 0, kind: TaskKind::Update });
+            v
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpipe_valid() {
+        for (s, m) in [(1, 1), (2, 3), (4, 8), (6, 2)] {
+            PipelineSchedule::new(ScheduleKind::GPipe, s, m).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_valid() {
+        for (s, m) in [(1, 1), (2, 3), (4, 8), (6, 2), (8, 4)] {
+            PipelineSchedule::new(ScheduleKind::OneFOneB, s, m).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_reduces_stash() {
+        let g = PipelineSchedule::new(ScheduleKind::GPipe, 4, 8);
+        let o = PipelineSchedule::new(ScheduleKind::OneFOneB, 4, 8);
+        // First stage benefits most: GPipe stashes all 8, 1F1B only 4.
+        assert_eq!(g.peak_stash(0), 8);
+        assert_eq!(o.peak_stash(0), 4);
+        // Last stage: both stash 1 under 1F1B-with-immediate-bwd? GPipe
+        // stashes all; 1F1B stashes 1.
+        assert_eq!(o.peak_stash(3), 1);
+    }
+
+    #[test]
+    fn gpipe_backward_order_is_lifo() {
+        let g = PipelineSchedule::new(ScheduleKind::GPipe, 2, 3);
+        let kinds: Vec<(TaskKind, usize)> =
+            g.tasks[0].iter().map(|t| (t.kind, t.micro)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (TaskKind::Forward, 0),
+                (TaskKind::Forward, 1),
+                (TaskKind::Forward, 2),
+                (TaskKind::Backward, 2),
+                (TaskKind::Backward, 1),
+                (TaskKind::Backward, 0),
+                (TaskKind::Update, 0),
+            ]
+        );
+    }
+}

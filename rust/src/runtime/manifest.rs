@@ -1,0 +1,296 @@
+//! Artifact manifest parsing (shared, Send; the PJRT handles are per-thread).
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Model configuration the artifacts were compiled for.
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub microbatch: usize,
+    pub n_stages: usize,
+    pub compress_ratio: f64,
+    pub topk_k: usize,
+}
+
+impl ModelCfg {
+    /// Elements in one inter-stage activation tensor.
+    pub fn act_elems(&self) -> usize {
+        self.microbatch * self.seq_len * self.d_model
+    }
+}
+
+/// Parameter initialization spec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitSpec {
+    Zeros,
+    Ones,
+    Normal(f32),
+}
+
+impl InitSpec {
+    fn parse(s: &str) -> anyhow::Result<InitSpec> {
+        Ok(match s {
+            "zeros" => InitSpec::Zeros,
+            "ones" => InitSpec::Ones,
+            other => {
+                let std: f32 = other
+                    .strip_prefix("normal:")
+                    .ok_or_else(|| anyhow::anyhow!("bad init `{other}`"))?
+                    .parse()?;
+                InitSpec::Normal(std)
+            }
+        })
+    }
+}
+
+/// One named slice of a stage's flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct SegmentSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub offset: usize,
+    pub init: InitSpec,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    Embed,
+    Body,
+    Head,
+}
+
+/// One pipeline stage: which artifacts run it and its parameter layout.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub kind: StageKind,
+    pub param_size: usize,
+    pub fwd_entry: String,
+    pub bwd_entry: String,
+    pub segments: Vec<SegmentSpec>,
+}
+
+impl StageSpec {
+    /// Optimizer update entry for this stage kind.
+    pub fn sgd_entry(&self) -> &'static str {
+        match self.kind {
+            StageKind::Embed => "sgd_embed",
+            StageKind::Body => "sgd_body",
+            StageKind::Head => "sgd_head",
+        }
+    }
+
+    pub fn adam_entry(&self) -> &'static str {
+        match self.kind {
+            StageKind::Embed => "adam_embed",
+            StageKind::Body => "adam_body",
+            StageKind::Head => "adam_head",
+        }
+    }
+
+    /// Initialize the flat parameter vector (deterministic per seed).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut flat = vec![0.0f32; self.param_size];
+        let mut rng = Rng::new(seed);
+        for seg in &self.segments {
+            let dst = &mut flat[seg.offset..seg.offset + seg.size];
+            match seg.init {
+                InitSpec::Zeros => {}
+                InitSpec::Ones => dst.fill(1.0),
+                InitSpec::Normal(std) => rng.fill_normal_f32(dst, std),
+            }
+        }
+        flat
+    }
+}
+
+/// IO tensor description of an artifact entry.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The per-config artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelCfg,
+    pub stages: Vec<StageSpec>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+fn parse_io(list: &[Json]) -> anyhow::Result<Vec<IoSpec>> {
+    list.iter()
+        .map(|j| {
+            Ok(IoSpec {
+                name: j.req_str("name")?.to_string(),
+                dtype: j.req_str("dtype")?.to_string(),
+                shape: j
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape")))
+                    .collect::<anyhow::Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<root>/<config>/manifest.json`.
+    pub fn load(root: &Path, config: &str) -> anyhow::Result<Manifest> {
+        let dir = root.join(config);
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        anyhow::ensure!(j.req_usize("format")? == 1, "unsupported manifest format");
+
+        let c = j.get("config");
+        let config = ModelCfg {
+            name: c.req_str("name")?.to_string(),
+            vocab: c.req_usize("vocab")?,
+            d_model: c.req_usize("d_model")?,
+            n_heads: c.req_usize("n_heads")?,
+            n_layers: c.req_usize("n_layers")?,
+            seq_len: c.req_usize("seq_len")?,
+            microbatch: c.req_usize("microbatch")?,
+            n_stages: c.req_usize("n_stages")?,
+            compress_ratio: c.req_f64("compress_ratio")?,
+            topk_k: c.req_usize("topk_k")?,
+        };
+
+        let mut stages = Vec::new();
+        for s in j.req_arr("stages")? {
+            let kind = match s.req_str("kind")? {
+                "embed" => StageKind::Embed,
+                "body" => StageKind::Body,
+                "head" => StageKind::Head,
+                other => anyhow::bail!("unknown stage kind `{other}`"),
+            };
+            let segments = s
+                .req_arr("segments")?
+                .iter()
+                .map(|seg| {
+                    Ok(SegmentSpec {
+                        name: seg.req_str("name")?.to_string(),
+                        shape: seg
+                            .req_arr("shape")?
+                            .iter()
+                            .map(|v| v.as_usize().unwrap_or(0))
+                            .collect(),
+                        size: seg.req_usize("size")?,
+                        offset: seg.req_usize("offset")?,
+                        init: InitSpec::parse(seg.req_str("init")?)?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            stages.push(StageSpec {
+                kind,
+                param_size: s.req_usize("param_size")?,
+                fwd_entry: s.req_str("fwd")?.to_string(),
+                bwd_entry: s.req_str("bwd")?.to_string(),
+                segments,
+            });
+        }
+        anyhow::ensure!(stages.len() == config.n_stages, "stage count mismatch");
+
+        let mut entries = BTreeMap::new();
+        let eobj = j
+            .get("entries")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("missing entries"))?;
+        for (name, e) in eobj {
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    file: dir.join(e.req_str("file")?),
+                    inputs: parse_io(e.req_arr("inputs")?)?,
+                    outputs: parse_io(e.req_arr("outputs")?)?,
+                },
+            );
+        }
+        Ok(Manifest { dir, config, stages, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact entry `{name}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_root().join("tiny/manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_root(), "tiny").unwrap();
+        assert_eq!(m.config.name, "tiny");
+        assert_eq!(m.stages.len(), m.config.n_stages);
+        assert_eq!(m.stages[0].kind, StageKind::Embed);
+        assert_eq!(m.stages.last().unwrap().kind, StageKind::Head);
+        for st in &m.stages {
+            assert_eq!(
+                st.param_size,
+                st.segments.iter().map(|s| s.size).sum::<usize>()
+            );
+            assert!(m.entries.contains_key(&st.fwd_entry));
+            assert!(m.entries.contains_key(st.sgd_entry()));
+        }
+    }
+
+    #[test]
+    fn init_params_deterministic_and_respects_spec() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_root(), "tiny").unwrap();
+        let st = &m.stages[1]; // body
+        let p1 = st.init_params(7);
+        let p2 = st.init_params(7);
+        assert_eq!(p1, p2);
+        let p3 = st.init_params(8);
+        assert_ne!(p1, p3);
+        // ln gains are ones, biases zeros.
+        for seg in &st.segments {
+            let sl = &p1[seg.offset..seg.offset + seg.size];
+            match seg.init {
+                InitSpec::Ones => assert!(sl.iter().all(|&v| v == 1.0), "{}", seg.name),
+                InitSpec::Zeros => assert!(sl.iter().all(|&v| v == 0.0), "{}", seg.name),
+                InitSpec::Normal(std) => {
+                    let mean: f32 = sl.iter().sum::<f32>() / sl.len() as f32;
+                    assert!(mean.abs() < 5.0 * std, "{}", seg.name);
+                    assert!(sl.iter().any(|&v| v != 0.0));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime (the execution plane, §3.2): loads the AOT artifacts
+//! emitted by `python/compile/aot.py` (HLO text + manifest.json), compiles
+//! them on the PJRT CPU client, and executes them from the coordinator.
+//!
+//! Python never runs here — the rust binary is self-contained once
+//! `make artifacts` has produced the HLO files.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{EntrySpec, InitSpec, Manifest, ModelCfg, SegmentSpec, StageKind, StageSpec};
+pub use pjrt::Runtime;

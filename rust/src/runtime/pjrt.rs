@@ -1,0 +1,270 @@
+//! Per-thread PJRT execution: compile HLO-text artifacts once, execute many
+//! times. `PjRtClient` is Rc-based (not Send), so every worker thread
+//! builds its own `Runtime` with only the entries it needs.
+
+use super::manifest::{EntrySpec, Manifest};
+use std::collections::HashMap;
+use std::time::Instant;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub struct Runtime {
+    client: PjRtClient,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    /// Cumulative wall seconds per entry (feeds λ profiling, §3.5).
+    pub exec_seconds: HashMap<String, (u64, f64)>,
+}
+
+/// XLA's client factory and compiler are not safe to enter from multiple
+/// threads simultaneously (workers each build their own client because the
+/// handles are Rc-based). Serialize creation + compilation globally.
+static LOAD_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+impl Runtime {
+    /// Compile the named entries from the manifest (None = all).
+    pub fn load(manifest: &Manifest, entries: Option<&[&str]>) -> anyhow::Result<Runtime> {
+        let _guard = LOAD_LOCK.lock().unwrap();
+        let client = PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        let mut exes = HashMap::new();
+        let names: Vec<String> = match entries {
+            Some(list) => list.iter().map(|s| s.to_string()).collect(),
+            None => manifest.entries.keys().cloned().collect(),
+        };
+        for name in names {
+            let spec: &EntrySpec = manifest.entry(&name)?;
+            let proto = HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e}", spec.file.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile `{name}`: {e}"))?;
+            exes.insert(name, exe);
+        }
+        Ok(Runtime { client, exes, exec_seconds: HashMap::new() })
+    }
+
+    /// Execute an entry; returns the decomposed output tuple.
+    pub fn exec(&mut self, entry: &str, inputs: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        let exe = self
+            .exes
+            .get(entry)
+            .ok_or_else(|| anyhow::anyhow!("entry `{entry}` not loaded"))?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute `{entry}`: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch `{entry}`: {e}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow::anyhow!("untuple `{entry}`: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let slot = self.exec_seconds.entry(entry.to_string()).or_insert((0, 0.0));
+        slot.0 += 1;
+        slot.1 += dt;
+        Ok(parts)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    // ---- Literal construction helpers -------------------------------------
+
+    /// f32 tensor literal with the given dims.
+    pub fn f32_tensor(data: &[f32], dims: &[i64]) -> anyhow::Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        Literal::vec1(data).reshape(dims).map_err(anyhow::Error::msg)
+    }
+
+    /// i32 tensor literal.
+    pub fn i32_tensor(data: &[i32], dims: &[i64]) -> anyhow::Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        Literal::vec1(data).reshape(dims).map_err(anyhow::Error::msg)
+    }
+
+    /// f32 scalar literal.
+    pub fn f32_scalar(v: f32) -> Literal {
+        Literal::scalar(v)
+    }
+
+    /// Extract an f32 vector from a literal.
+    pub fn to_f32_vec(lit: &Literal) -> anyhow::Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(anyhow::Error::msg)
+    }
+
+    /// Extract the single f32 value of a scalar literal.
+    pub fn to_f32_scalar(lit: &Literal) -> anyhow::Result<f32> {
+        lit.get_first_element::<f32>().map_err(anyhow::Error::msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("tiny/manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Manifest::load(&root, "tiny").unwrap())
+    }
+
+    #[test]
+    fn embed_forward_shapes_and_determinism() {
+        let Some(m) = manifest() else { return };
+        let mut rt = Runtime::load(&m, Some(&["embed_fwd"])).unwrap();
+        let cfg = &m.config;
+        let params = m.stages[0].init_params(1);
+        let p = Runtime::f32_tensor(&params, &[params.len() as i64]).unwrap();
+        let tokens: Vec<i32> = (0..cfg.microbatch * cfg.seq_len)
+            .map(|i| (i % cfg.vocab) as i32)
+            .collect();
+        let t = Runtime::i32_tensor(&tokens, &[cfg.microbatch as i64, cfg.seq_len as i64])
+            .unwrap();
+        let out = rt.exec("embed_fwd", &[p, t]).unwrap();
+        assert_eq!(out.len(), 1);
+        let x = Runtime::to_f32_vec(&out[0]).unwrap();
+        assert_eq!(x.len(), cfg.act_elems());
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(x.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn full_stage_roundtrip_loss_is_near_ln_vocab() {
+        // Compose embed -> bodies -> head through PJRT and check that the
+        // random-init loss sits near ln(V) — proves all artifact legs and
+        // the flat-param plumbing line up with the python tests.
+        let Some(m) = manifest() else { return };
+        let mut rt = Runtime::load(
+            &m,
+            Some(&["embed_fwd", "body_fwd", "head_fwd_loss"]),
+        )
+        .unwrap();
+        let cfg = m.config.clone();
+        let (b, t) = (cfg.microbatch as i64, cfg.seq_len as i64);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let tokens: Vec<i32> =
+            (0..(b * t) as usize).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+        let targets: Vec<i32> =
+            (0..(b * t) as usize).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+
+        let p0 = m.stages[0].init_params(10);
+        let mut act = {
+            let p = Runtime::f32_tensor(&p0, &[p0.len() as i64]).unwrap();
+            let tk = Runtime::i32_tensor(&tokens, &[b, t]).unwrap();
+            rt.exec("embed_fwd", &[p, tk]).unwrap().remove(0)
+        };
+        for (si, st) in m.stages.iter().enumerate() {
+            if st.kind != super::super::manifest::StageKind::Body {
+                continue;
+            }
+            let ps = st.init_params(10 + si as u64);
+            let p = Runtime::f32_tensor(&ps, &[ps.len() as i64]).unwrap();
+            act = rt.exec("body_fwd", &[p, act]).unwrap().remove(0);
+        }
+        let ph = m.stages.last().unwrap().init_params(99);
+        let p = Runtime::f32_tensor(&ph, &[ph.len() as i64]).unwrap();
+        let tg = Runtime::i32_tensor(&targets, &[b, t]).unwrap();
+        let out = rt.exec("head_fwd_loss", &[p, act, tg]).unwrap();
+        assert_eq!(out.len(), 3);
+        let loss = Runtime::to_f32_scalar(&out[0]).unwrap();
+        let expected = (cfg.vocab as f32).ln();
+        assert!(
+            (loss - expected).abs() < 1.0,
+            "loss={loss} vs ln(V)={expected}"
+        );
+    }
+
+    #[test]
+    fn sgd_update_artifact_moves_params() {
+        let Some(m) = manifest() else { return };
+        let mut rt = Runtime::load(&m, Some(&["sgd_body"])).unwrap();
+        let st = &m.stages[1];
+        let p0 = st.init_params(5);
+        let grads = vec![1.0f32; st.param_size];
+        let mom = vec![0.0f32; st.param_size];
+        let out = rt
+            .exec(
+                "sgd_body",
+                &[
+                    Runtime::f32_tensor(&p0, &[st.param_size as i64]).unwrap(),
+                    Runtime::f32_tensor(&grads, &[st.param_size as i64]).unwrap(),
+                    Runtime::f32_tensor(&mom, &[st.param_size as i64]).unwrap(),
+                    Runtime::f32_scalar(0.1),
+                    Runtime::f32_scalar(0.9),
+                ],
+            )
+            .unwrap();
+        let p1 = Runtime::to_f32_vec(&out[0]).unwrap();
+        let m1 = Runtime::to_f32_vec(&out[1]).unwrap();
+        for i in 0..8 {
+            assert!((p1[i] - (p0[i] - 0.1)).abs() < 1e-6);
+            assert!((m1[i] - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pallas_parity_artifact_matches_jnp_body() {
+        // body_fwd_pallas (L1 kernels lowered into HLO) must equal body_fwd.
+        let Some(m) = manifest() else { return };
+        if !m.entries.contains_key("body_fwd_pallas") {
+            return;
+        }
+        let mut rt =
+            Runtime::load(&m, Some(&["body_fwd", "body_fwd_pallas"])).unwrap();
+        let cfg = &m.config;
+        let st = &m.stages[1];
+        let ps = st.init_params(42);
+        let mut rng = crate::util::rng::Rng::new(17);
+        let x: Vec<f32> = (0..cfg.act_elems()).map(|_| rng.f32() - 0.5).collect();
+        let dims = [cfg.microbatch as i64, cfg.seq_len as i64, cfg.d_model as i64];
+        let run = |rt: &mut Runtime, entry: &str| {
+            let p = Runtime::f32_tensor(&ps, &[ps.len() as i64]).unwrap();
+            let xx = Runtime::f32_tensor(&x, &dims).unwrap();
+            let out = rt.exec(entry, &[p, xx]).unwrap();
+            Runtime::to_f32_vec(&out[0]).unwrap()
+        };
+        let a = run(&mut rt, "body_fwd");
+        let b = run(&mut rt, "body_fwd_pallas");
+        for (i, (u, v)) in a.iter().zip(&b).enumerate() {
+            assert!((u - v).abs() < 5e-4, "elem {i}: {u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn topk_compress_artifact_matches_rust_topk() {
+        // The L1 compression path and the rust wire compressor agree on
+        // the kept support.
+        let Some(m) = manifest() else { return };
+        let mut rt = Runtime::load(&m, Some(&["topk_compress_act"])).unwrap();
+        let cfg = &m.config;
+        let mut rng = crate::util::rng::Rng::new(23);
+        let x: Vec<f32> = (0..cfg.act_elems()).map(|_| rng.f32() - 0.5).collect();
+        let dims = [cfg.microbatch as i64, cfg.seq_len as i64, cfg.d_model as i64];
+        let out = rt
+            .exec("topk_compress_act", &[Runtime::f32_tensor(&x, &dims).unwrap()])
+            .unwrap();
+        let sparse = Runtime::to_f32_vec(&out[0]).unwrap();
+
+        let comp = crate::compress::TopK { ratio: cfg.act_elems() as f64 / cfg.topk_k as f64 };
+        use crate::compress::Compressor;
+        let c = comp.compress(&x);
+        let mut dense = vec![0.0f32; x.len()];
+        comp.decompress(&c, &mut dense);
+
+        let nz_pjrt = sparse.iter().filter(|v| **v != 0.0).count();
+        let nz_rust = dense.iter().filter(|v| **v != 0.0).count();
+        assert!((nz_pjrt as i64 - nz_rust as i64).abs() <= 2);
+        // Supports overlap almost entirely (ties may differ).
+        let mism = sparse
+            .iter()
+            .zip(&dense)
+            .filter(|(a, b)| (**a != 0.0) != (**b != 0.0))
+            .count();
+        assert!(mism <= 4, "support mismatch {mism}");
+    }
+}

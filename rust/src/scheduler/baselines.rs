@@ -1,0 +1,114 @@
+//! The paper's two baseline schedulers (§7.2 "Baselines"):
+//!
+//! 1. equal-number: the same number of user-defined modules per CompNode,
+//!    devices in id order (blind to both compute speed and bandwidth).
+//! 2. equal-compute: contiguous partitions balancing total FLOPs,
+//!    devices in id order (load-balanced but bandwidth-blind).
+
+use super::{partition_from_chain, proportional_contiguous_split, Scheduler};
+use crate::cluster::Testbed;
+use crate::opdag::{Dag, Partition};
+
+/// Equal number of ops per device, device id order.
+pub struct EqualNumber;
+
+impl Scheduler for EqualNumber {
+    fn name(&self) -> &'static str {
+        "equal-number"
+    }
+
+    fn schedule(&self, dag: &Dag, testbed: &Testbed) -> anyhow::Result<Partition> {
+        let chain = dag.compute_chain();
+        let n_dev = testbed.nodes.len().min(chain.len());
+        let weights = vec![1.0; chain.len()];
+        let capacity = vec![1.0; n_dev];
+        let segs = proportional_contiguous_split(&weights, &capacity);
+        let assign: Vec<usize> = segs.iter().map(|&s| s).collect();
+        Ok(partition_from_chain(dag, &chain, &assign))
+    }
+}
+
+/// Equal computation cost per device (FLOPs-balanced), device id order.
+pub struct EqualCompute;
+
+impl Scheduler for EqualCompute {
+    fn name(&self) -> &'static str {
+        "equal-compute"
+    }
+
+    fn schedule(&self, dag: &Dag, testbed: &Testbed) -> anyhow::Result<Partition> {
+        let chain = dag.compute_chain();
+        let n_dev = testbed.nodes.len().min(chain.len());
+        let weights: Vec<f64> = chain.iter().map(|&op| dag.ops[op].flops_fwd).collect();
+        let capacity = vec![1.0; n_dev];
+        let segs = proportional_contiguous_split(&weights, &capacity);
+        Ok(partition_from_chain(dag, &chain, &segs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testbed::testbed1;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+
+    fn big_chain() -> Dag {
+        transformer_chain(&TransformerSpec {
+            vocab: 1000,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 46, // chain = 48 compute ops
+            seq_len: 64,
+            microbatch: 2,
+        })
+    }
+
+    #[test]
+    fn equal_number_uses_all_devices_evenly() {
+        let tb = testbed1(1); // 24 devices
+        let dag = big_chain(); // 48 compute ops
+        let p = EqualNumber.schedule(&dag, &tb).unwrap();
+        p.validate(&dag).unwrap();
+        assert_eq!(p.nodes_used(), 24);
+        // Exactly 2 compute ops per device.
+        let chain = dag.compute_chain();
+        let mut counts = vec![0usize; 24];
+        for &op in &chain {
+            counts[p.node_of(op)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 2), "{counts:?}");
+    }
+
+    #[test]
+    fn equal_compute_balances_flops() {
+        let tb = testbed1(1);
+        let dag = big_chain();
+        let p = EqualCompute.schedule(&dag, &tb).unwrap();
+        p.validate(&dag).unwrap();
+        let mut flops = vec![0.0f64; 24];
+        for op in &dag.ops {
+            flops[p.node_of(op.id)] += op.flops_fwd;
+        }
+        let max = flops.iter().cloned().fold(0.0, f64::max);
+        let min = flops.iter().cloned().fold(f64::MAX, f64::min);
+        // Head op is heavy; allow 4x imbalance but not the 100x the
+        // equal-number split would give on this skewed chain.
+        assert!(max / min < 6.0, "max={max:.2e} min={min:.2e}");
+    }
+
+    #[test]
+    fn more_devices_than_ops_is_ok() {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec {
+            vocab: 100,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 4,
+            seq_len: 16,
+            microbatch: 1,
+        });
+        let p = EqualNumber.schedule(&dag, &tb).unwrap();
+        p.validate(&dag).unwrap();
+        assert!(p.nodes_used() <= dag.compute_chain().len());
+    }
+}

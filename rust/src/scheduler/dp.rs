@@ -1,0 +1,175 @@
+//! Min-bottleneck chain partition DP (the "opfence-dp" ablation).
+//!
+//! Given a FIXED device order (from OP-Fence's cluster path), choose the
+//! contiguous segment boundaries minimizing the pipeline bottleneck
+//! `max_p max(C_p, R_p)` (the term that multiplies (n_b−1) in Eq. 3),
+//! breaking ties toward smaller total latency. O(n²·k).
+
+use crate::cluster::Testbed;
+use crate::opdag::Dag;
+
+/// Returns segment index (position in `order`) per chain position.
+pub fn min_bottleneck_split(
+    dag: &Dag,
+    chain: &[usize],
+    testbed: &Testbed,
+    order: &[usize],
+    _n_micro: usize,
+) -> Vec<usize> {
+    let n = chain.len();
+    let k = order.len().min(n);
+
+    // Prefix FLOPs (fwd+bwd) for O(1) segment compute cost.
+    let mut prefix = vec![0.0f64; n + 1];
+    for (i, &op) in chain.iter().enumerate() {
+        prefix[i + 1] =
+            prefix[i] + dag.ops[op].flops_fwd + dag.ops[op].flops_bwd();
+    }
+
+    // Cost of assigning chain[j..i] to device slot d (0-based in `order`):
+    // C = flops / speed; R = incoming activation over link (d-1 -> d) and
+    // incoming gradient over link (d+1 -> d) — neighbors known because the
+    // order is fixed. Boundary bytes use the edge op's activation size.
+    let seg_cost = |j: usize, i: usize, d: usize| -> (f64, f64) {
+        let dev = order[d];
+        let c = (prefix[i] - prefix[j]) / testbed.nodes[dev].speed_flops();
+        let mut r = 0.0;
+        if j > 0 && d > 0 {
+            let bytes = dag.ops[chain[j - 1]].out_bytes;
+            r += testbed.net.comm_time(order[d - 1], dev, bytes);
+        }
+        if i < n && d + 1 < k {
+            // Gradient w.r.t. our last op's output comes back from d+1.
+            let bytes = dag.ops[chain[i - 1]].out_bytes;
+            r += testbed.net.comm_time(order[d + 1], dev, bytes);
+        }
+        (c, r)
+    };
+
+    // dp[i][d] = (bottleneck, total) covering chain[..i] with devices[..=d].
+    const INF: f64 = f64::INFINITY;
+    let mut dp = vec![vec![(INF, INF); k]; n + 1];
+    let mut parent = vec![vec![0usize; k]; n + 1];
+    for i in 1..=n {
+        // Device 0 takes the whole prefix.
+        let (c, r) = seg_cost(0, i, 0);
+        dp[i][0] = (c.max(r), c + r);
+    }
+    for d in 1..k {
+        for i in (d + 1)..=n {
+            let mut best = (INF, INF);
+            let mut bj = d;
+            for j in d..i {
+                let (c, r) = seg_cost(j, i, d);
+                let prev = dp[j][d - 1];
+                if prev.0 == INF {
+                    continue;
+                }
+                let cand = (prev.0.max(c.max(r)), prev.1 + c + r);
+                if cand < best {
+                    best = cand;
+                    bj = j;
+                }
+            }
+            dp[i][d] = best;
+            parent[i][d] = bj;
+        }
+    }
+
+    // Pick the best device count d* ≤ k (using fewer devices is allowed).
+    let mut best_d = 0;
+    let mut best = dp[n][0];
+    for d in 1..k {
+        if dp[n][d] < best {
+            best = dp[n][d];
+            best_d = d;
+        }
+    }
+
+    // Walk back the boundaries.
+    let mut segs = vec![0usize; n];
+    let mut i = n;
+    let mut d = best_d;
+    loop {
+        let j = if d == 0 { 0 } else { parent[i][d] };
+        for pos in j..i {
+            segs[pos] = d;
+        }
+        if d == 0 {
+            break;
+        }
+        i = j;
+        d -= 1;
+    }
+    segs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testbed::testbed1;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+
+    #[test]
+    fn dp_split_is_contiguous_and_complete() {
+        let tb = testbed1(2);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let chain = dag.compute_chain();
+        let order: Vec<usize> = (0..24).collect();
+        let segs = min_bottleneck_split(&dag, &chain, &tb, &order, 2);
+        assert_eq!(segs.len(), chain.len());
+        assert!(segs.windows(2).all(|w| w[0] <= w[1] && w[1] - w[0] <= 1));
+        assert_eq!(segs[0], 0);
+    }
+
+    #[test]
+    fn dp_on_uniform_two_devices_splits_near_middle() {
+        // Uniform chain, two identical devices, genuinely negligible comm
+        // (zero latency, petabit link): the DP must split near the middle.
+        let mut tb = testbed1(2);
+        tb.nodes.truncate(2);
+        tb.nodes[1].gpu = tb.nodes[0].gpu;
+        tb.nodes[1].lambda = tb.nodes[0].lambda;
+        tb.net = crate::cluster::NetGraph::new(2);
+        tb.net.set_link(0, 1, 0.0, 1e15);
+        let dag = transformer_chain(&TransformerSpec {
+            vocab: 512,
+            d_model: 512,
+            n_heads: 8,
+            n_layers: 18,
+            seq_len: 128,
+            microbatch: 4,
+        });
+        let chain = dag.compute_chain();
+        let segs = min_bottleneck_split(&dag, &chain, &tb, &[0, 1], 2);
+        let n0 = segs.iter().filter(|&&s| s == 0).count();
+        assert!(segs.contains(&1), "never split: {segs:?}");
+        // Head op is heavier; allow middle ± 4.
+        assert!(
+            (n0 as i64 - (chain.len() / 2) as i64).abs() <= 4,
+            "n0={n0} of {}",
+            chain.len()
+        );
+    }
+
+    #[test]
+    fn dp_may_use_fewer_devices_when_comm_dominates() {
+        // Two devices across a dreadful link and a tiny model: best plan
+        // is to not split at all.
+        let mut tb = testbed1(2);
+        tb.nodes.truncate(2);
+        tb.net = crate::cluster::NetGraph::new(24);
+        tb.net.set_link(0, 1, 5.0, 8e6); // 5 s latency
+        let dag = transformer_chain(&TransformerSpec {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 4,
+            seq_len: 8,
+            microbatch: 1,
+        });
+        let chain = dag.compute_chain();
+        let segs = min_bottleneck_split(&dag, &chain, &tb, &[0, 1], 2);
+        assert!(segs.iter().all(|&s| s == 0), "{segs:?}");
+    }
+}

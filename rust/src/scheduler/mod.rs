@@ -1,0 +1,135 @@
+//! Partitioning & placement (§4): the OP-Fence scheduler plus the paper's
+//! two baselines (equal-number and equal-compute), and a DP-optimal chain
+//! splitter used as an ablation upper bound.
+//!
+//! All schedulers consume the FP DAG only (the BP DAG mirrors it, §4) and
+//! return a `Partition` assigning every op — placeholders included — to a
+//! CompNode.
+
+pub mod baselines;
+pub mod dp;
+pub mod opfence;
+
+use crate::cluster::Testbed;
+use crate::opdag::{Dag, OpKind, Partition};
+
+/// Common scheduler interface.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    /// Produce an assignment of all ops onto the testbed's CompNodes.
+    fn schedule(&self, dag: &Dag, testbed: &Testbed) -> anyhow::Result<Partition>;
+}
+
+/// Parse a scheduler by CLI name.
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn Scheduler>> {
+    Ok(match name {
+        "opfence" => Box::new(opfence::OpFence::default()),
+        "opfence-dp" => Box::new(opfence::OpFence { use_dp: true, ..Default::default() }),
+        "equal-number" => Box::new(baselines::EqualNumber),
+        "equal-compute" => Box::new(baselines::EqualCompute),
+        other => anyhow::bail!("unknown scheduler `{other}`"),
+    })
+}
+
+/// Shared helper: turn per-chain-position device choices into a full
+/// Partition, snapping placeholders to their first user's device.
+pub(crate) fn partition_from_chain(
+    dag: &Dag,
+    chain: &[usize],
+    chain_assign: &[usize],
+) -> Partition {
+    assert_eq!(chain.len(), chain_assign.len());
+    let mut assign = vec![usize::MAX; dag.len()];
+    for (&op, &dev) in chain.iter().zip(chain_assign) {
+        assign[op] = dev;
+    }
+    for op in &dag.ops {
+        if op.kind == OpKind::Placeholder {
+            assign[op.id] = assign[op.users[0]];
+        }
+    }
+    debug_assert!(assign.iter().all(|&d| d != usize::MAX));
+    Partition::new(assign)
+}
+
+/// Split `weights` (chain order) into `k` contiguous segments with
+/// capacity proportional to `capacity` — greedy prefix walker used by both
+/// equal-compute and OP-Fence's within-cluster split. Returns segment id
+/// per position (non-decreasing, all k used when possible).
+pub(crate) fn proportional_contiguous_split(
+    weights: &[f64],
+    capacity: &[f64],
+) -> Vec<usize> {
+    let k = capacity.len();
+    assert!(k > 0);
+    let n = weights.len();
+    let total_w: f64 = weights.iter().sum();
+    let total_c: f64 = capacity.iter().sum();
+    let mut out = vec![0usize; n];
+    let mut seg = 0usize;
+    let mut acc = 0.0;
+    // Target cumulative weight at the end of each segment.
+    let mut target: f64 = total_w * capacity[0] / total_c;
+    let mut cum_cap = capacity[0];
+    for i in 0..n {
+        let remaining_ops = n - i;
+        // Segments after the current one still needing >= 1 op each.
+        let segs_after = k - 1 - seg;
+        // Forced advance: exactly one op left per remaining segment.
+        let must_advance = seg + 1 < k && remaining_ops == segs_after;
+        let may_advance = seg + 1 < k && remaining_ops > segs_after;
+        if must_advance || (may_advance && acc + 0.5 * weights[i] > target) {
+            seg += 1;
+            cum_cap += capacity[seg];
+            target = total_w * cum_cap / total_c;
+        }
+        out[i] = seg;
+        acc += weights[i];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proportional_split_balances_uniform() {
+        let w = vec![1.0; 12];
+        let c = vec![1.0; 4];
+        let s = proportional_contiguous_split(&w, &c);
+        // 3 ops per segment.
+        assert_eq!(s, vec![0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    fn proportional_split_respects_capacity() {
+        let w = vec![1.0; 10];
+        let c = vec![3.0, 1.0];
+        let s = proportional_contiguous_split(&w, &c);
+        let seg0 = s.iter().filter(|&&x| x == 0).count();
+        assert!((7..=8).contains(&seg0), "seg0={seg0}");
+        // Both segments non-empty.
+        assert!(s.contains(&1));
+    }
+
+    #[test]
+    fn proportional_split_more_segments_than_ops() {
+        let w = vec![1.0; 2];
+        let c = vec![1.0; 5];
+        let s = proportional_contiguous_split(&w, &c);
+        assert_eq!(s.len(), 2);
+        // Non-decreasing and within range.
+        assert!(s.windows(2).all(|p| p[0] <= p[1]));
+        assert!(s.iter().all(|&x| x < 5));
+    }
+
+    #[test]
+    fn heavy_first_op_gets_own_segment() {
+        let w = vec![100.0, 1.0, 1.0, 1.0];
+        let c = vec![1.0, 1.0];
+        let s = proportional_contiguous_split(&w, &c);
+        assert_eq!(s[0], 0);
+        assert_eq!(s[1], 1); // everything else pushed to segment 1
+    }
+}

@@ -1,0 +1,276 @@
+//! OP-Fence (§4): bandwidth-aware partitioning.
+//!
+//! 1. Detect high-bandwidth device clusters with Louvain (Observation 2).
+//! 2. Order clusters along a max-bandwidth path, and devices within a
+//!    cluster by machine, so the op chain crosses slow links as few times
+//!    as possible (Fig. 5) — each cluster receives a *connected* sub-graph.
+//! 3. Split the chain contiguously with per-device capacity proportional
+//!    to the measured speed S(p) = λ_p·S*(p), so C_p is balanced (Eq. 5).
+//! 4. Optionally refine cut points with a min-bottleneck DP over the fixed
+//!    device order (`use_dp`, the "opfence-dp" ablation).
+
+use super::{partition_from_chain, proportional_contiguous_split, Scheduler};
+use crate::cluster::louvain::louvain;
+use crate::cluster::Testbed;
+use crate::opdag::{Dag, Partition};
+
+#[derive(Debug, Clone)]
+pub struct OpFence {
+    /// Refine split points with the DP (slower, Eq. 3-optimal for the
+    /// chosen device order).
+    pub use_dp: bool,
+    /// Pipeline depth assumed by the DP objective.
+    pub n_micro: usize,
+    /// Rotate cluster members so the chain crosses each community boundary
+    /// on the best link pair (ablated in benches/ablations.rs).
+    pub refine_boundaries: bool,
+}
+
+impl Default for OpFence {
+    fn default() -> Self {
+        OpFence { use_dp: false, n_micro: 2, refine_boundaries: true }
+    }
+}
+
+impl Scheduler for OpFence {
+    fn name(&self) -> &'static str {
+        if self.use_dp {
+            "opfence-dp"
+        } else {
+            "opfence"
+        }
+    }
+
+    fn schedule(&self, dag: &Dag, testbed: &Testbed) -> anyhow::Result<Partition> {
+        let order = self.device_order(testbed);
+        let chain = dag.compute_chain();
+        let n_dev = order.len().min(chain.len());
+        let order = &order[..n_dev];
+
+        let chain_assign = if self.use_dp {
+            let segs = super::dp::min_bottleneck_split(dag, &chain, testbed, order, self.n_micro);
+            segs.iter().map(|&s| order[s]).collect::<Vec<_>>()
+        } else {
+            let weights: Vec<f64> =
+                chain.iter().map(|&op| dag.ops[op].flops_fwd.max(1.0)).collect();
+            let capacity: Vec<f64> =
+                order.iter().map(|&d| testbed.nodes[d].speed_flops()).collect();
+            let segs = proportional_contiguous_split(&weights, &capacity);
+            segs.iter().map(|&s| order[s]).collect::<Vec<_>>()
+        };
+        Ok(partition_from_chain(dag, &chain, &chain_assign))
+    }
+}
+
+impl OpFence {
+    /// Cluster-major device order: Louvain communities chained along a
+    /// greedy max-bandwidth path; within a community, devices grouped by
+    /// machine and ordered by id.
+    pub fn device_order(&self, testbed: &Testbed) -> Vec<usize> {
+        let n = testbed.nodes.len();
+        let comm = louvain(&testbed.net);
+        let k = comm.iter().max().map(|&c| c + 1).unwrap_or(0);
+
+        // Members per community.
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (i, &c) in comm.iter().enumerate() {
+            members[c].push(i);
+        }
+        // Within community: stable order by (cluster label, machine, id) —
+        // labels only group co-machine devices; we derive machine grouping
+        // purely from bandwidth if labels are absent by sorting on the
+        // nearest-neighbor structure. Here machine/id sort is equivalent.
+        for m in members.iter_mut() {
+            m.sort_by_key(|&i| (testbed.nodes[i].machine, i));
+        }
+
+        // Aggregate capacity per community.
+        let cap: Vec<f64> = members
+            .iter()
+            .map(|m| m.iter().map(|&i| testbed.nodes[i].speed_flops()).sum())
+            .collect();
+        // Mean inter-community bandwidth.
+        let mean_bw = |a: &Vec<usize>, b: &Vec<usize>| -> f64 {
+            let mut s = 0.0;
+            let mut c = 0usize;
+            for &i in a {
+                for &j in b {
+                    s += testbed.net.louvain_weight(i, j);
+                    c += 1;
+                }
+            }
+            if c == 0 {
+                0.0
+            } else {
+                s / c as f64
+            }
+        };
+
+        // Greedy path: start from the highest-capacity community, then
+        // repeatedly append the unvisited community with the best
+        // bandwidth to the current tail.
+        let mut unvisited: Vec<usize> = (0..k).collect();
+        let start = (0..k)
+            .max_by(|&a, &b| cap[a].partial_cmp(&cap[b]).unwrap())
+            .unwrap_or(0);
+        let mut path = vec![start];
+        unvisited.retain(|&c| c != start);
+        while !unvisited.is_empty() {
+            let tail = *path.last().unwrap();
+            let next = *unvisited
+                .iter()
+                .max_by(|&&a, &&b| {
+                    mean_bw(&members[tail], &members[a])
+                        .partial_cmp(&mean_bw(&members[tail], &members[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            path.push(next);
+            unvisited.retain(|&c| c != next);
+        }
+
+        // Boundary refinement: the chain crosses community boundaries at
+        // (last device of prev, first device of next). Devices within a
+        // machine are interchangeable (uniform fast links), so rotate each
+        // community to put the best cross-boundary pair on the boundary.
+        let n_bounds = if self.refine_boundaries {
+            path.len().saturating_sub(1)
+        } else {
+            0
+        };
+        for w in 0..n_bounds {
+            let (pa, pb) = (path[w], path[w + 1]);
+            let (mut bi, mut bj, mut best) = (0usize, 0usize, -1.0f64);
+            for (ii, &i) in members[pa].iter().enumerate() {
+                for (jj, &j) in members[pb].iter().enumerate() {
+                    let bw = testbed.net.louvain_weight(i, j);
+                    if bw > best {
+                        best = bw;
+                        bi = ii;
+                        bj = jj;
+                    }
+                }
+            }
+            // Exit device: rotate pa so bi's machine block is last and bi
+            // is the final element of that block.
+            let exit_machine = testbed.nodes[members[pa][bi]].machine;
+            let exit_dev = members[pa][bi];
+            let mut pa_new: Vec<usize> = members[pa]
+                .iter()
+                .copied()
+                .filter(|&d| testbed.nodes[d].machine != exit_machine)
+                .collect();
+            pa_new.extend(
+                members[pa]
+                    .iter()
+                    .copied()
+                    .filter(|&d| testbed.nodes[d].machine == exit_machine && d != exit_dev),
+            );
+            pa_new.push(exit_dev);
+            members[pa] = pa_new;
+            // Entry device: rotate pb so bj's machine block is first and bj
+            // leads it.
+            let entry_machine = testbed.nodes[members[pb][bj]].machine;
+            let entry_dev = members[pb][bj];
+            let mut pb_new = vec![entry_dev];
+            pb_new.extend(
+                members[pb]
+                    .iter()
+                    .copied()
+                    .filter(|&d| testbed.nodes[d].machine == entry_machine && d != entry_dev),
+            );
+            pb_new.extend(
+                members[pb]
+                    .iter()
+                    .copied()
+                    .filter(|&d| testbed.nodes[d].machine != entry_machine),
+            );
+            members[pb] = pb_new;
+        }
+
+        let mut order = Vec::with_capacity(n);
+        for c in path {
+            order.extend(&members[c]);
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testbed::{testbed1, testbed2};
+    use crate::cost::throughput::{dense_bytes, evaluate, PipelineParams};
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+    use crate::scheduler::baselines::{EqualCompute, EqualNumber};
+
+    fn gpt2() -> Dag {
+        transformer_chain(&TransformerSpec::gpt2_xl())
+    }
+
+    #[test]
+    fn device_order_keeps_clusters_contiguous() {
+        let tb = testbed2(3);
+        let order = OpFence::default().device_order(&tb);
+        assert_eq!(order.len(), 48);
+        // Cluster labels along the order must form contiguous runs.
+        let labels: Vec<&str> =
+            order.iter().map(|&i| tb.nodes[i].cluster.as_str()).collect();
+        let transitions = labels.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(transitions, 1, "order crosses clusters {transitions} times");
+    }
+
+    #[test]
+    fn opfence_partition_valid_and_cluster_contiguous() {
+        let tb = testbed1(1);
+        let dag = gpt2();
+        let p = OpFence::default().schedule(&dag, &tb).unwrap();
+        p.validate(&dag).unwrap();
+        // Walk the chain: cluster label changes at most once.
+        let chain = dag.compute_chain();
+        let labels: Vec<&str> = chain
+            .iter()
+            .map(|&op| tb.nodes[p.node_of(op)].cluster.as_str())
+            .collect();
+        let transitions = labels.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(transitions <= 1, "chain crosses clusters {transitions} times");
+    }
+
+    #[test]
+    fn opfence_beats_baselines_on_iteration_latency() {
+        // The headline Fig. 10 ordering: OP-Fence < equal-compute <
+        // equal-number, on both testbeds, dense.
+        for tb in [testbed1(1), testbed2(1)] {
+            let dag = gpt2();
+            let params = PipelineParams { n_micro: 2, micro_size: 3, include_bwd: true };
+            let t = |s: &dyn Scheduler| {
+                let p = s.schedule(&dag, &tb).unwrap();
+                p.validate(&dag).unwrap();
+                evaluate(&dag, &p, &tb, params, &dense_bytes).t_pipe
+            };
+            let t_fence = t(&OpFence::default());
+            let t_eq_n = t(&EqualNumber);
+            let t_eq_c = t(&EqualCompute);
+            assert!(
+                t_fence < t_eq_c && t_fence < t_eq_n,
+                "{}: fence={t_fence:.1} eq_c={t_eq_c:.1} eq_n={t_eq_n:.1}",
+                tb.name
+            );
+        }
+    }
+
+    #[test]
+    fn dp_refinement_not_worse() {
+        let tb = testbed1(5);
+        let dag = gpt2();
+        let params = PipelineParams { n_micro: 2, micro_size: 3, include_bwd: true };
+        let base = OpFence::default().schedule(&dag, &tb).unwrap();
+        let dp = OpFence { use_dp: true, ..Default::default() }.schedule(&dag, &tb).unwrap();
+        dp.validate(&dag).unwrap();
+        let t_base = evaluate(&dag, &base, &tb, params, &dense_bytes).t_pipe;
+        let t_dp = evaluate(&dag, &dp, &tb, params, &dense_bytes).t_pipe;
+        // DP optimizes the bottleneck; allow small slack on t_pipe (sum
+        // term may differ) but it must not be drastically worse.
+        assert!(t_dp <= t_base * 1.10, "dp={t_dp} base={t_base}");
+    }
+}

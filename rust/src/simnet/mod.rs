@@ -1,0 +1,13 @@
+//! Discrete-event simulation of one training iteration over the
+//! geo-distributed testbed (drives Fig. 10 / Fig. 11).
+//!
+//! Unlike the closed-form Eq. 3 estimate, the simulator executes the actual
+//! pipeline schedule (GPipe or 1F1B) with per-link α+βM transfer times and
+//! FIFO link serialization, so compute/communication overlap and stragglers
+//! emerge rather than being assumed.
+
+pub mod sim;
+pub mod stageplan;
+
+pub use sim::{simulate_iteration, simulate_iteration_faulty, FaultModel, SimResult};
+pub use stageplan::StagePlan;

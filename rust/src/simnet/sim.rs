@@ -1,0 +1,404 @@
+//! Event-driven pipeline execution over the alpha–beta network.
+//!
+//! Each stage's device executes its schedule strictly in order; messages
+//! between adjacent stages pay `α + β·bytes` and serialize FIFO per
+//! directed link. Compression enters through the `CompressPlan`: a message
+//! delivered to device d carries `scale_bytes(d, dense_bytes)` wire bytes.
+
+use super::stageplan::StagePlan;
+use crate::cluster::Testbed;
+use crate::compress::CompressPlan;
+use crate::pipeline::{PipelineSchedule, TaskKind};
+use crate::util::rng::Rng;
+
+/// Network-instability model (paper §8 "Network stability"): each transfer
+/// is independently lost with `loss_prob` and retransmitted after an RTO of
+/// `rto_s` seconds, repeating until delivered (geometric retries).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultModel {
+    pub loss_prob: f64,
+    pub rto_s: f64,
+    pub seed: u64,
+}
+
+impl FaultModel {
+    pub fn none() -> FaultModel {
+        FaultModel { loss_prob: 0.0, rto_s: 0.2, seed: 0 }
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Wall-clock seconds for the full iteration (all stages done).
+    pub iter_s: f64,
+    /// Per-stage busy compute seconds.
+    pub busy_s: Vec<f64>,
+    /// Per-stage seconds spent blocked waiting on messages/deps.
+    pub stall_s: Vec<f64>,
+    /// Total bytes put on the wire.
+    pub wire_bytes: f64,
+    /// Pipeline bubble fraction: 1 - busy / (stages · iter).
+    pub bubble_frac: f64,
+}
+
+/// Simulate one training iteration (no network faults).
+pub fn simulate_iteration(
+    plan: &StagePlan,
+    testbed: &Testbed,
+    schedule: &PipelineSchedule,
+    compress: &CompressPlan,
+) -> SimResult {
+    simulate_iteration_faulty(plan, testbed, schedule, compress, FaultModel::none())
+}
+
+/// Simulate one training iteration under the given fault model.
+pub fn simulate_iteration_faulty(
+    plan: &StagePlan,
+    testbed: &Testbed,
+    schedule: &PipelineSchedule,
+    compress: &CompressPlan,
+    faults: FaultModel,
+) -> SimResult {
+    let mut frng = Rng::new(faults.seed ^ 0xFA17);
+    // Retransmission overhead for one logical transfer of base time `t`:
+    // lost tries each cost a full timeout + resend.
+    let mut xfer_time = move |t: f64| -> f64 {
+        if faults.loss_prob <= 0.0 {
+            return t;
+        }
+        let mut total = t;
+        while frng.f64() < faults.loss_prob {
+            total += faults.rto_s + t;
+        }
+        total
+    };
+    let s_n = plan.n_stages();
+    assert_eq!(schedule.n_stages, s_n, "schedule/plan stage mismatch");
+    let m_n = schedule.n_micro;
+    const UNSET: f64 = -1.0;
+
+    // arrival_f[s][m]: time the fwd input for (s,m) is available.
+    let mut arrival_f = vec![vec![UNSET; m_n]; s_n];
+    // arrival_b[s][m]: time the grad input for (s,m) is available.
+    let mut arrival_b = vec![vec![UNSET; m_n]; s_n];
+    // fwd_done[s][m]: forward must precede its own backward locally.
+    let mut fwd_done = vec![vec![UNSET; m_n]; s_n];
+    for m in 0..m_n {
+        arrival_f[0][m] = 0.0; // data is local to stage 0
+    }
+    // last stage computes loss in fwd; its "grad arrival" is its own fwd.
+
+    let mut dev_time = vec![0.0f64; s_n];
+    let mut next_task = vec![0usize; s_n];
+    let mut busy = vec![0.0f64; s_n];
+    let mut stall = vec![0.0f64; s_n];
+    // FIFO serialization per directed inter-stage link.
+    let mut link_free_fwd = vec![0.0f64; s_n.saturating_sub(1)]; // s -> s+1
+    let mut link_free_bwd = vec![0.0f64; s_n.saturating_sub(1)]; // s+1 -> s
+    let mut wire_bytes = 0.0f64;
+
+    let total_tasks: usize = schedule.tasks.iter().map(|t| t.len()).sum();
+    let mut done_tasks = 0usize;
+
+    while done_tasks < total_tasks {
+        let mut progressed = false;
+        for s in 0..s_n {
+            while next_task[s] < schedule.tasks[s].len() {
+                let t = schedule.tasks[s][next_task[s]];
+                // Readiness check.
+                let ready_at = match t.kind {
+                    TaskKind::Forward => arrival_f[s][t.micro],
+                    TaskKind::Backward => {
+                        if s == s_n - 1 {
+                            fwd_done[s][t.micro]
+                        } else {
+                            let a = arrival_b[s][t.micro];
+                            let f = fwd_done[s][t.micro];
+                            if a < 0.0 || f < 0.0 {
+                                UNSET
+                            } else {
+                                a.max(f)
+                            }
+                        }
+                    }
+                    TaskKind::Update => dev_time[s], // always ready (deps via order)
+                };
+                if ready_at < 0.0 {
+                    break; // head task blocked; device waits
+                }
+                let start = dev_time[s].max(ready_at);
+                stall[s] += start - dev_time[s];
+                let dur = match t.kind {
+                    TaskKind::Forward => plan.fwd_s[s],
+                    TaskKind::Backward => plan.bwd_s[s],
+                    TaskKind::Update => plan.update_s[s],
+                };
+                let end = start + dur;
+                busy[s] += dur;
+                dev_time[s] = end;
+                next_task[s] += 1;
+                done_tasks += 1;
+                progressed = true;
+
+                match t.kind {
+                    TaskKind::Forward => {
+                        fwd_done[s][t.micro] = end;
+                        if s + 1 < s_n {
+                            // Send activation to stage s+1.
+                            let (src, dst) = (plan.devices[s], plan.devices[s + 1]);
+                            let eff = compress.scale_bytes(dst, plan.act_bytes[s]);
+                            let xfer_start = end.max(link_free_fwd[s]);
+                            let xfer_end = xfer_start
+                                + xfer_time(testbed.net.comm_time(src, dst, eff));
+                            link_free_fwd[s] = xfer_end;
+                            arrival_f[s + 1][t.micro] = xfer_end;
+                            wire_bytes += eff;
+                        }
+                    }
+                    TaskKind::Backward => {
+                        if s > 0 {
+                            // Send gradient to stage s-1 (same size as the
+                            // activation on that edge).
+                            let (src, dst) = (plan.devices[s], plan.devices[s - 1]);
+                            let eff =
+                                compress.scale_bytes(dst, plan.act_bytes[s - 1]);
+                            let xfer_start = end.max(link_free_bwd[s - 1]);
+                            let xfer_end = xfer_start
+                                + xfer_time(testbed.net.comm_time(src, dst, eff));
+                            link_free_bwd[s - 1] = xfer_end;
+                            arrival_b[s - 1][t.micro] = xfer_end;
+                            wire_bytes += eff;
+                        }
+                    }
+                    TaskKind::Update => {}
+                }
+            }
+        }
+        assert!(progressed, "pipeline deadlock (schedule/dependency bug)");
+    }
+
+    let iter_s = dev_time.iter().cloned().fold(0.0, f64::max);
+    let total_busy: f64 = busy.iter().sum();
+    SimResult {
+        iter_s,
+        busy_s: busy,
+        stall_s: stall,
+        wire_bytes,
+        bubble_frac: if iter_s > 0.0 && s_n > 0 {
+            1.0 - total_busy / (s_n as f64 * iter_s)
+        } else {
+            0.0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testbed::testbed1;
+    use crate::compress::CompressKind;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+    use crate::pipeline::ScheduleKind;
+    use crate::scheduler::{by_name, Scheduler};
+
+    fn setup() -> (crate::opdag::Dag, crate::cluster::Testbed, StagePlan) {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let p = by_name("opfence").unwrap().schedule(&dag, &tb).unwrap();
+        let plan = StagePlan::from_partition(&dag, &p, &tb);
+        (dag, tb, plan)
+    }
+
+    #[test]
+    fn iteration_completes_and_is_positive() {
+        let (_, tb, plan) = setup();
+        let sched = PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let r = simulate_iteration(&plan, &tb, &sched, &dense);
+        assert!(r.iter_s > 0.0);
+        assert!(r.bubble_frac >= 0.0 && r.bubble_frac <= 1.0);
+        assert!(r.wire_bytes > 0.0);
+    }
+
+    #[test]
+    fn compression_cuts_simulated_latency() {
+        let (_, tb, plan) = setup();
+        let sched = PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let topk = CompressPlan::uniform(CompressKind::TopK, 100.0, tb.nodes.len());
+        let td = simulate_iteration(&plan, &tb, &sched, &dense).iter_s;
+        let tc = simulate_iteration(&plan, &tb, &sched, &topk).iter_s;
+        assert!(tc < td, "topk {tc} !< dense {td}");
+    }
+
+    #[test]
+    fn sim_bounded_by_serial_and_floor() {
+        // Simulated iteration must be at least the critical compute path
+        // and at most the fully serialized Eq. 2 estimate × n_micro.
+        let (dag, tb, plan) = setup();
+        let n_micro = 2;
+        let sched = PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), n_micro);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let r = simulate_iteration(&plan, &tb, &sched, &dense);
+        let floor: f64 = plan
+            .fwd_s
+            .iter()
+            .zip(&plan.bwd_s)
+            .map(|(f, b)| (f + b) * n_micro as f64)
+            .fold(0.0, f64::max);
+        assert!(r.iter_s >= floor, "{} < floor {}", r.iter_s, floor);
+        let _ = dag;
+        // Serial ceiling: everything sequential.
+        let serial: f64 = plan
+            .fwd_s
+            .iter()
+            .zip(&plan.bwd_s)
+            .map(|(f, b)| f + b)
+            .sum::<f64>()
+            * n_micro as f64
+            + plan
+                .act_bytes
+                .iter()
+                .enumerate()
+                .map(|(s, &b)| {
+                    2.0 * n_micro as f64
+                        * tb.net.comm_time(plan.devices[s], plan.devices[s + 1], b)
+                })
+                .sum::<f64>()
+            + plan.update_s.iter().sum::<f64>();
+        assert!(r.iter_s <= serial * 1.01, "{} > serial {}", r.iter_s, serial);
+    }
+
+    #[test]
+    fn more_microbatches_improve_per_sample_time() {
+        let (_, tb, plan) = setup();
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let t2 = simulate_iteration(
+            &plan,
+            &tb,
+            &PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), 2),
+            &dense,
+        )
+        .iter_s
+            / 2.0;
+        let t8 = simulate_iteration(
+            &plan,
+            &tb,
+            &PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), 8),
+            &dense,
+        )
+        .iter_s
+            / 8.0;
+        assert!(t8 < t2, "per-micro t8={t8} t2={t2}");
+    }
+
+    #[test]
+    fn one_f_one_b_no_slower_than_gpipe() {
+        let (_, tb, plan) = setup();
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let tg = simulate_iteration(
+            &plan,
+            &tb,
+            &PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), 4),
+            &dense,
+        )
+        .iter_s;
+        let to = simulate_iteration(
+            &plan,
+            &tb,
+            &PipelineSchedule::new(ScheduleKind::OneFOneB, plan.n_stages(), 4),
+            &dense,
+        )
+        .iter_s;
+        // 1F1B should be within a whisker (it mainly saves memory).
+        assert!(to <= tg * 1.25, "1f1b={to} gpipe={tg}");
+    }
+
+    #[test]
+    fn single_stage_pipeline_works() {
+        let tb = testbed1(1);
+        let plan = StagePlan {
+            devices: vec![0],
+            fwd_s: vec![0.5],
+            bwd_s: vec![1.0],
+            update_s: vec![0.1],
+            act_bytes: vec![],
+        };
+        let sched = PipelineSchedule::new(ScheduleKind::GPipe, 1, 3);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let r = simulate_iteration(&plan, &tb, &sched, &dense);
+        assert!((r.iter_s - (3.0 * 1.5 + 0.1)).abs() < 1e-9);
+        assert_eq!(r.wire_bytes, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod fault_tests {
+    use super::*;
+    use crate::cluster::testbed::testbed1;
+    use crate::compress::CompressPlan;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+    use crate::pipeline::ScheduleKind;
+    use crate::scheduler::{by_name, Scheduler};
+
+    fn setup() -> (crate::cluster::Testbed, StagePlan) {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let p = by_name("opfence").unwrap().schedule(&dag, &tb).unwrap();
+        let plan = StagePlan::from_partition(&dag, &p, &tb);
+        (tb, plan)
+    }
+
+    #[test]
+    fn zero_loss_equals_baseline() {
+        let (tb, plan) = setup();
+        let sched = PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let a = simulate_iteration(&plan, &tb, &sched, &dense).iter_s;
+        let b = simulate_iteration_faulty(
+            &plan,
+            &tb,
+            &sched,
+            &dense,
+            FaultModel { loss_prob: 0.0, rto_s: 1.0, seed: 9 },
+        )
+        .iter_s;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn packet_loss_monotonically_slows_iterations() {
+        let (tb, plan) = setup();
+        let sched = PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let mut prev = 0.0;
+        for p in [0.0, 0.05, 0.2, 0.5] {
+            let t = simulate_iteration_faulty(
+                &plan,
+                &tb,
+                &sched,
+                &dense,
+                FaultModel { loss_prob: p, rto_s: 0.2, seed: 42 },
+            )
+            .iter_s;
+            assert!(t >= prev, "p={p}: {t} < {prev}");
+            prev = t;
+        }
+        // 50% loss should hurt a lot.
+        assert!(prev > simulate_iteration(&plan, &tb, &sched, &dense).iter_s * 1.5);
+    }
+
+    #[test]
+    fn compression_mitigates_faulty_links() {
+        // Fewer/smaller transfers => fewer loss events on the wire clock.
+        let (tb, plan) = setup();
+        let sched = PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), 2);
+        let faults = FaultModel { loss_prob: 0.2, rto_s: 0.2, seed: 7 };
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let topk = CompressPlan::uniform(crate::compress::CompressKind::TopK, 100.0, tb.nodes.len());
+        let td = simulate_iteration_faulty(&plan, &tb, &sched, &dense, faults).iter_s;
+        let tc = simulate_iteration_faulty(&plan, &tb, &sched, &topk, faults).iter_s;
+        assert!(tc < td);
+    }
+}

@@ -1,0 +1,105 @@
+//! StagePlan: the linearized pipeline view of a (DAG, Partition) pair.
+//!
+//! Contiguous chain partitions induce a sequence of stages, one per device
+//! in chain order, with per-stage compute seconds and inter-stage message
+//! sizes — the structure both the simulator and the real workers execute.
+
+use crate::cluster::Testbed;
+use crate::cost::Estimator;
+use crate::opdag::{Dag, Partition};
+
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    /// Device id per stage, in chain order.
+    pub devices: Vec<usize>,
+    /// Forward compute seconds per stage (one microbatch).
+    pub fwd_s: Vec<f64>,
+    /// Backward compute seconds per stage.
+    pub bwd_s: Vec<f64>,
+    /// Optimizer-update seconds per stage.
+    pub update_s: Vec<f64>,
+    /// Dense activation bytes on edge stage s -> s+1 (len = stages - 1).
+    pub act_bytes: Vec<f64>,
+}
+
+impl StagePlan {
+    /// Linearize a contiguous chain partition. Panics if the partition is
+    /// not contiguous along the chain (all our schedulers produce
+    /// contiguous partitions; a non-contiguous one is a scheduler bug).
+    pub fn from_partition(dag: &Dag, part: &Partition, testbed: &Testbed) -> StagePlan {
+        let est = Estimator::new(testbed);
+        let chain = dag.compute_chain();
+        let mut devices: Vec<usize> = Vec::new();
+        let mut fwd_s = Vec::new();
+        let mut bwd_s = Vec::new();
+        let mut update_s = Vec::new();
+        let mut act_bytes = Vec::new();
+
+        for (i, &op) in chain.iter().enumerate() {
+            let dev = part.node_of(op);
+            if devices.last() != Some(&dev) {
+                assert!(
+                    !devices.contains(&dev),
+                    "partition not contiguous: device {dev} appears twice"
+                );
+                devices.push(dev);
+                fwd_s.push(0.0);
+                bwd_s.push(0.0);
+                update_s.push(0.0);
+                if devices.len() > 1 {
+                    // Boundary payload: previous op's activation.
+                    act_bytes.push(dag.ops[chain[i - 1]].out_bytes);
+                }
+            }
+            let s = devices.len() - 1;
+            fwd_s[s] += est.comp_time_fwd(dag, op, dev);
+            bwd_s[s] += est.comp_time_bwd(dag, op, dev);
+            // Update cost model: one fused axpy pass over params — tiny
+            // next to fwd/bwd but nonzero (bytes / ~20 GB/s effective).
+            update_s[s] += dag.ops[op].param_bytes * 3.0 / 20e9;
+        }
+        StagePlan { devices, fwd_s, bwd_s, update_s, act_bytes }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testbed::testbed1;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+    use crate::scheduler::{by_name, Scheduler};
+
+    #[test]
+    fn linearizes_opfence_partition() {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let p = by_name("opfence").unwrap().schedule(&dag, &tb).unwrap();
+        let plan = StagePlan::from_partition(&dag, &p, &tb);
+        assert_eq!(plan.n_stages(), p.nodes_used());
+        assert_eq!(plan.act_bytes.len(), plan.n_stages() - 1);
+        assert!(plan.fwd_s.iter().all(|&t| t >= 0.0));
+        // GPT2-XL inter-stage messages ≈ 19.66 MB everywhere.
+        for &b in &plan.act_bytes {
+            assert!((b - 19.66e6).abs() < 1e6, "bytes={b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not contiguous")]
+    fn rejects_non_contiguous() {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let chain = dag.compute_chain();
+        // Alternate devices 0/1 along the chain.
+        let mut assign = vec![0usize; dag.len()];
+        for (i, &op) in chain.iter().enumerate() {
+            assign[op] = i % 2;
+        }
+        let p = Partition::new(assign);
+        let _ = StagePlan::from_partition(&dag, &p, &tb);
+    }
+}

@@ -1,0 +1,7 @@
+//! Training-side substrates: synthetic datasets and the training report.
+
+pub mod data;
+pub mod report;
+
+pub use data::SyntheticCorpus;
+pub use report::TrainReport;

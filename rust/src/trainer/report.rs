@@ -1,0 +1,104 @@
+//! Training run report: per-iteration losses, wall times, wire bytes, and
+//! the post-hoc simulated geo-network latency (the testbed link model
+//! applied to the *measured* message sizes and compute times).
+
+use crate::util::json::{arr, n, ni, obj, s, Json};
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub config: String,
+    pub scheduler: String,
+    pub compressor: String,
+    pub ratio: f64,
+    pub n_micro: usize,
+    /// Mean loss per iteration (averaged over microbatches).
+    pub losses: Vec<f32>,
+    /// Wall seconds per iteration (local CPU execution).
+    pub wall_s: Vec<f64>,
+    /// Simulated geo-distributed seconds per iteration (α–β model over the
+    /// actual wire bytes + measured per-stage compute).
+    pub sim_s: Vec<f64>,
+    /// Total wire bytes sent per iteration.
+    pub wire_bytes: Vec<f64>,
+    /// Stage -> device placement used.
+    pub placement: Vec<usize>,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+
+    /// Mean simulated iteration latency (the Fig. 10 metric).
+    pub fn mean_sim_latency(&self) -> f64 {
+        crate::util::math::mean(&self.sim_s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("config", s(&self.config)),
+            ("scheduler", s(&self.scheduler)),
+            ("compressor", s(&self.compressor)),
+            ("ratio", n(self.ratio)),
+            ("n_micro", ni(self.n_micro)),
+            (
+                "losses",
+                arr(self.losses.iter().map(|&l| n(l as f64)).collect()),
+            ),
+            ("wall_s", arr(self.wall_s.iter().map(|&v| n(v)).collect())),
+            ("sim_s", arr(self.sim_s.iter().map(|&v| n(v)).collect())),
+            (
+                "wire_bytes",
+                arr(self.wire_bytes.iter().map(|&v| n(v)).collect()),
+            ),
+            (
+                "placement",
+                arr(self.placement.iter().map(|&p| ni(p)).collect()),
+            ),
+        ])
+    }
+
+    /// CSV of (iter, loss, wall_s, sim_s, wire_bytes) for plotting Fig. 8.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("iter,loss,wall_s,sim_s,wire_bytes\n");
+        for i in 0..self.losses.len() {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                i,
+                self.losses[i],
+                self.wall_s.get(i).unwrap_or(&0.0),
+                self.sim_s.get(i).unwrap_or(&0.0),
+                self.wire_bytes.get(i).unwrap_or(&0.0),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let r = TrainReport {
+            config: "tiny".into(),
+            scheduler: "opfence".into(),
+            compressor: "adatopk".into(),
+            ratio: 100.0,
+            n_micro: 2,
+            losses: vec![5.5, 5.0, 4.5],
+            wall_s: vec![0.1, 0.1, 0.1],
+            sim_s: vec![1.0, 1.0, 1.0],
+            wire_bytes: vec![100.0, 100.0, 100.0],
+            placement: vec![0, 1, 2, 3],
+        };
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.contains("0,5.5"));
+        let j = r.to_json();
+        assert_eq!(j.get("scheduler").as_str().unwrap(), "opfence");
+        assert_eq!(j.get("losses").as_arr().unwrap().len(), 3);
+        assert!((r.mean_sim_latency() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,63 @@
+//! Tiny benchmark harness (criterion is unavailable offline): warmup +
+//! N timed iterations, reporting min/median/mean.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>10}/iter (min {:>10}, n={})",
+            self.name,
+            crate::util::math::fmt_secs(self.median_s),
+            crate::util::math::fmt_secs(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs. Returns stats.
+/// `f` should return something observable to keep the optimizer honest.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        min_s: samples[0],
+        median_s: samples[samples.len() / 2],
+        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 11, || {
+            (0..1000).map(|i| i * i).sum::<usize>()
+        });
+        assert!(r.min_s >= 0.0);
+        assert!(r.median_s >= r.min_s);
+        assert_eq!(r.iters, 11);
+        assert!(r.line().contains("noop-ish"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals, with
+//! typed getters and a usage printer. Subcommand dispatch is done by the
+//! binary itself (first positional).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                    out.present.push(rest.to_string());
+                } else {
+                    out.flags.insert(rest.to_string(), String::new());
+                    out.present.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.f64(key, default as f64) as f32
+    }
+
+    /// Keys the user actually passed (for echoing config in logs).
+    pub fn passed(&self) -> &[String] {
+        &self.present
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // Positionals come before flags; a bare trailing `--flag` is boolean.
+        let a = parse("train extra --steps 10 --lr=0.5 --verbose");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.usize("steps", 0), 10);
+        assert_eq!(a.f64("lr", 0.0), 0.5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize("steps", 7), 7);
+        assert_eq!(a.str("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn flag_then_flag() {
+        let a = parse("--x --y 3");
+        assert!(a.has("x"));
+        assert_eq!(a.usize("y", 0), 3);
+    }
+}

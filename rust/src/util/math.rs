@@ -1,0 +1,318 @@
+//! Numeric helpers shared across the coordinator: radix/quick-select for
+//! Top-K thresholds, stable statistics, and unit formatting.
+
+/// k-th largest absolute value of `xs` (1-based k) — the wire-compression
+/// hot path (a threshold is computed for every cross-node message).
+///
+/// Radix select over the f32 bit patterns: for non-negative floats the IEEE
+/// bit pattern is monotone in value, so |x| reduces to `bits & 0x7FFF_FFFF`
+/// and selection proceeds byte-by-byte over histograms — two streaming
+/// passes and a small tail sort, no swaps. ~16x faster than the quickselect
+/// it replaced (see EXPERIMENTS.md §Perf).
+pub fn kth_largest_abs(xs: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= xs.len(), "k={k} len={}", xs.len());
+    // Small inputs: sorting is simpler and faster.
+    if xs.len() <= 512 {
+        let mut v: Vec<u32> = xs.iter().map(|x| x.to_bits() & 0x7FFF_FFFF).collect();
+        v.sort_unstable();
+        return f32::from_bits(v[v.len() - k]);
+    }
+
+    // Multi-level radix select over the 31-bit magnitude patterns: refine
+    // one byte per level, narrowing the candidate set each time. Floats
+    // cluster by exponent, so a single level can leave most of the data in
+    // one bucket — the recursion handles any distribution in O(n) total.
+    let mut remaining = k;
+    let mut prefix: u32 = 0;
+    let mut prefix_mask: u32 = 0;
+    let mut cand: Vec<u32> = Vec::new(); // empty sentinel = "all of xs"
+    for shift in [24u32, 16, 8, 0] {
+        // Histogram of this level's byte among prefix-matching candidates.
+        let mut hist = [0usize; 256];
+        if cand.is_empty() {
+            for x in xs {
+                let b = x.to_bits() & 0x7FFF_FFFF;
+                hist[((b >> shift) & 0xFF) as usize] += 1;
+            }
+        } else {
+            for &b in &cand {
+                hist[((b >> shift) & 0xFF) as usize] += 1;
+            }
+        }
+        // Walk buckets from the top to locate the k-th largest.
+        let mut bucket = 255usize;
+        loop {
+            if hist[bucket] >= remaining {
+                break;
+            }
+            remaining -= hist[bucket];
+            if bucket == 0 {
+                break;
+            }
+            bucket -= 1;
+        }
+        prefix |= (bucket as u32) << shift;
+        prefix_mask |= 0xFFu32 << shift;
+        if shift == 0 {
+            break; // all 32 bits determined
+        }
+        // Gather the next candidate set.
+        cand = if cand.is_empty() {
+            xs.iter()
+                .map(|x| x.to_bits() & 0x7FFF_FFFF)
+                .filter(|b| b & prefix_mask == prefix)
+                .collect()
+        } else {
+            cand.into_iter().filter(|b| b & prefix_mask == prefix).collect()
+        };
+        if cand.len() <= 2048 {
+            // Small tail: sort and index directly.
+            cand.sort_unstable();
+            return f32::from_bits(cand[cand.len() - remaining]);
+        }
+    }
+    f32::from_bits(prefix)
+}
+
+/// Quickselect variant kept for the §Perf ablation and as a cross-check
+/// oracle in tests.
+pub fn kth_largest_abs_quickselect(xs: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= xs.len(), "k={k} len={}", xs.len());
+    let mut buf: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    // k-th largest == (len-k)-th smallest (0-based).
+    let target = buf.len() - k;
+    let (mut lo, mut hi) = (0usize, buf.len() - 1);
+    // Deterministic median-of-three pivoting.
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        // median of buf[lo], buf[mid], buf[hi]
+        let (a, b, c) = (buf[lo], buf[mid], buf[hi]);
+        let pivot = if (a <= b) == (b <= c) {
+            b
+        } else if (b <= a) == (a <= c) {
+            a
+        } else {
+            c
+        };
+        // 3-way partition (Dutch national flag) to handle duplicates fast.
+        let (mut i, mut j, mut p) = (lo, lo, hi);
+        while j <= p {
+            if buf[j] < pivot {
+                buf.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if buf[j] > pivot {
+                buf.swap(j, p);
+                if p == 0 {
+                    break;
+                }
+                p -= 1;
+            } else {
+                j += 1;
+            }
+        }
+        if target < i {
+            if i == 0 {
+                break;
+            }
+            hi = i - 1;
+        } else if target > p {
+            lo = p + 1;
+        } else {
+            return pivot;
+        }
+    }
+    buf[target.min(buf.len() - 1)]
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts; for reporting only).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Simple least-squares fit y = a + b·x, returns (a, b).
+/// Used to fit the λ scaling factor and alpha-beta link models from
+/// warm-up profiling measurements (§3.5 of the paper).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (sy / n, 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn kth_ref(xs: &[f32], k: usize) -> f32 {
+        let mut v: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v[k - 1]
+    }
+
+    #[test]
+    fn kth_largest_matches_sort_reference() {
+        let mut rng = Rng::new(123);
+        for trial in 0..50 {
+            let n = 1 + rng.below(200) as usize;
+            let xs: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 10.0).collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            let got = kth_largest_abs(&xs, k);
+            let want = kth_ref(&xs, k);
+            assert_eq!(got, want, "trial {trial} n={n} k={k}");
+            assert_eq!(kth_largest_abs_quickselect(&xs, k), want);
+        }
+    }
+
+    #[test]
+    fn kth_largest_radix_path_matches_reference() {
+        // Force the >512 radix path with varied distributions.
+        let mut rng = Rng::new(321);
+        for trial in 0..20 {
+            let n = 600 + rng.below(5000) as usize;
+            let scale = 10f32.powi(rng.range(-6, 6) as i32);
+            let xs: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * scale).collect();
+            for k in [1, 7, n / 100 + 1, n / 2, n] {
+                let got = kth_largest_abs(&xs, k);
+                let want = kth_ref(&xs, k);
+                assert_eq!(got, want, "trial {trial} n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn kth_largest_radix_with_zeros_and_duplicates() {
+        let mut xs = vec![0.0f32; 1000];
+        xs[10] = 3.0;
+        xs[900] = -5.0;
+        assert_eq!(kth_largest_abs(&xs, 1), 5.0);
+        assert_eq!(kth_largest_abs(&xs, 2), 3.0);
+        assert_eq!(kth_largest_abs(&xs, 3), 0.0);
+        assert_eq!(kth_largest_abs(&xs, 1000), 0.0);
+        let xs = vec![2.5f32; 4096];
+        assert_eq!(kth_largest_abs(&xs, 1), 2.5);
+        assert_eq!(kth_largest_abs(&xs, 4096), 2.5);
+    }
+
+    #[test]
+    fn kth_with_duplicates() {
+        let xs = vec![1.0f32; 64];
+        assert_eq!(kth_largest_abs(&xs, 1), 1.0);
+        assert_eq!(kth_largest_abs(&xs, 64), 1.0);
+        let xs = vec![2.0, -2.0, 2.0, 1.0, -1.0];
+        assert_eq!(kth_largest_abs(&xs, 3), 2.0);
+        assert_eq!(kth_largest_abs(&xs, 4), 1.0);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 0.5 * x).collect();
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_sane() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!(std_dev(&xs) > 1.0 && std_dev(&xs) < 1.2);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert!(fmt_secs(0.5).contains("ms"));
+        assert!(fmt_secs(5.0).contains("s"));
+    }
+}
+
+#[cfg(test)]
+mod perf_probe {
+    use super::*;
+    use crate::util::rng::Rng;
+    #[test]
+    #[ignore]
+    fn breakdown() {
+        let mut rng = Rng::new(7);
+        let n = 3 * 1024 * 1600;
+        let xs: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let k = n / 100;
+        let t0 = std::time::Instant::now();
+        for _ in 0..5 { std::hint::black_box(kth_largest_abs(&xs, k)); }
+        println!("kth_largest_abs: {:?}/iter", t0.elapsed() / 5);
+        let t0 = std::time::Instant::now();
+        for _ in 0..5 {
+            let v: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+            std::hint::black_box(v);
+        }
+        println!("abs copy: {:?}/iter", t0.elapsed() / 5);
+    }
+}

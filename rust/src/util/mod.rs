@@ -1,0 +1,10 @@
+//! Small self-contained substrates: JSON, CLI parsing, RNG, math helpers.
+//! These exist because the build is fully offline — only the `xla` crate
+//! dependency closure is vendored, so serde/clap/rand are hand-rolled here.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod table;

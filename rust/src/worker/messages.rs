@@ -1,0 +1,175 @@
+//! Wire protocol between the driver and stage workers.
+
+use crate::compress::sparsify::ChunkedTopK;
+use crate::compress::{CompressKind, Compressor, Int8Quantizer, NoCompress, RandomK};
+use crate::opdag::data::{CompressCfg, OpData, OpDataKind};
+
+/// Channel message. Activations/gradients travel as *encoded* OP-Data
+/// byte buffers (the socket wire format), everything else is control.
+#[derive(Debug)]
+pub enum Wire {
+    /// Driver -> embed worker: token microbatch.
+    Data { iter: u32, micro: u32, tokens: Vec<i32> },
+    /// Driver -> head worker: target microbatch.
+    Labels { iter: u32, micro: u32, targets: Vec<i32> },
+    /// Stage -> stage: encoded OP-Data (activation or gradient).
+    Packet(Vec<u8>),
+    /// Head -> driver: per-microbatch loss.
+    Loss { iter: u32, micro: u32, loss: f32 },
+    /// Worker -> driver on shutdown: accumulated statistics.
+    Stats(WorkerStats),
+    /// Worker -> driver: unrecoverable error (driver aborts the job).
+    Fatal { stage: usize, error: String },
+    /// Driver -> workers: clean shutdown.
+    Stop,
+}
+
+/// Per-worker accumulated counters (profiling plane, §3.5).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub stage: usize,
+    pub device: usize,
+    /// Wall seconds in fwd / bwd / update PJRT execution.
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub update_s: f64,
+    /// Seconds blocked on channel receives.
+    pub wait_s: f64,
+    /// Wire bytes sent (post-compression, OP-Data accounting).
+    pub bytes_sent: f64,
+    /// Messages sent.
+    pub msgs_sent: u64,
+    /// FLOPs executed (from the cost model) for λ fitting.
+    pub flops: f64,
+}
+
+/// Build the compressor for one message given plan kind + effective ratio.
+/// Top-K variants select per feature row (`chunk` = d_model), per Fig. 6.
+pub fn compressor_for(
+    kind: CompressKind,
+    ratio: f64,
+    chunk: usize,
+    seed: u64,
+) -> Box<dyn Compressor> {
+    match kind {
+        CompressKind::None => Box::new(NoCompress),
+        CompressKind::TopK | CompressKind::AdaTopK => {
+            Box::new(ChunkedTopK { ratio, chunk: chunk.max(1) })
+        }
+        CompressKind::RandomK => Box::new(RandomK { ratio, seed }),
+        CompressKind::Int8 => Box::new(Int8Quantizer),
+    }
+}
+
+/// Compress + wrap a dense payload into an encoded OP-Data packet.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_payload(
+    kind: CompressKind,
+    ratio: f64,
+    chunk: usize,
+    src_op: usize,
+    dst_op: usize,
+    data_kind: OpDataKind,
+    iter: u32,
+    micro: u32,
+    dense: &[f32],
+) -> (Vec<u8>, f64) {
+    let effective_kind = if ratio <= 1.0 { CompressKind::None } else { kind };
+    let comp =
+        compressor_for(effective_kind, ratio, chunk, (iter as u64) << 32 | micro as u64);
+    let c = comp.compress(dense);
+    let mut od = OpData::dense(src_op, dst_op, data_kind, iter, micro, Vec::new());
+    od.compress = c.cfg.clone();
+    od.payload = c.values;
+    od.indices = c.indices;
+    od.bytes_payload = c.bytes;
+    let wire = od.wire_bytes();
+    (od.encode(), wire)
+}
+
+/// Decode a packet and reconstruct the dense payload of length `n`.
+pub fn decode_payload(buf: &[u8], n: usize) -> anyhow::Result<(OpData, Vec<f32>)> {
+    let od = OpData::decode(buf)?;
+    let mut dense = vec![0.0f32; n];
+    match &od.compress {
+        CompressCfg::None => {
+            anyhow::ensure!(od.payload.len() == n, "dense length mismatch");
+            dense.copy_from_slice(&od.payload);
+        }
+        CompressCfg::TopK { total_len, .. } | CompressCfg::RandomK { total_len, .. } => {
+            anyhow::ensure!(*total_len as usize == n, "sparse length mismatch");
+            for (&i, &v) in od.indices.iter().zip(&od.payload) {
+                anyhow::ensure!((i as usize) < n, "index out of range");
+                dense[i as usize] = v;
+            }
+        }
+        CompressCfg::Int8 { scale, total_len } => {
+            anyhow::ensure!(*total_len as usize == n, "int8 length mismatch");
+            for (d, &b) in dense.iter_mut().zip(&od.bytes_payload) {
+                *d = (b as i8) as f32 * scale;
+            }
+        }
+    }
+    Ok((od, dense))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn encode_decode_roundtrip_topk() {
+        let mut rng = Rng::new(1);
+        let dense: Vec<f32> = (0..1000).map(|_| rng.f32() - 0.5).collect();
+        let (buf, wire) =
+            encode_payload(CompressKind::TopK, 100.0, 1000, 2, 3, OpDataKind::Activation, 5, 1, &dense);
+        assert!(wire < 1000.0); // 10 values*4 + 10 idx*8 + header
+        let (od, out) = decode_payload(&buf, 1000).unwrap();
+        assert_eq!(od.src_op, 2);
+        assert_eq!(od.local_iter, 5);
+        let nz = out.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nz, 10);
+        // Kept values exact.
+        for (i, &v) in out.iter().enumerate() {
+            if v != 0.0 {
+                assert_eq!(v, dense[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_dense_and_int8() {
+        let dense: Vec<f32> = vec![0.5, -1.0, 0.25];
+        let (buf, _) =
+            encode_payload(CompressKind::None, 1.0, 0, 0, 1, OpDataKind::Gradient, 0, 0, &dense);
+        let (_, out) = decode_payload(&buf, 3).unwrap();
+        assert_eq!(out, dense);
+
+        let (buf, wire) =
+            encode_payload(CompressKind::Int8, 4.0, 0, 0, 1, OpDataKind::Gradient, 0, 0, &dense);
+        assert!(wire < 60.0);
+        let (_, out) = decode_payload(&buf, 3).unwrap();
+        for (a, b) in dense.iter().zip(&out) {
+            assert!((a - b).abs() < 1.0 / 127.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn ratio_one_falls_back_to_dense() {
+        let dense = vec![1.0f32; 16];
+        let (buf, _) =
+            encode_payload(CompressKind::AdaTopK, 1.0, 64, 0, 1, OpDataKind::Activation, 0, 0, &dense);
+        let (od, out) = decode_payload(&buf, 16).unwrap();
+        assert_eq!(od.compress, CompressCfg::None);
+        assert_eq!(out, dense);
+    }
+
+    #[test]
+    fn decode_rejects_wrong_length() {
+        let dense = vec![1.0f32; 8];
+        let (buf, _) =
+            encode_payload(CompressKind::None, 1.0, 0, 0, 1, OpDataKind::Activation, 0, 0, &dense);
+        assert!(decode_payload(&buf, 9).is_err());
+    }
+}

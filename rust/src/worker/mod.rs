@@ -1,0 +1,14 @@
+//! The execution plane (§3.2): per-CompNode stage workers.
+//!
+//! Each worker is an OS thread owning its own PJRT runtime (the client is
+//! Rc-based, so handles cannot cross threads), its stage's flat parameters
+//! and optimizer state, and channel endpoints to its pipeline neighbors.
+//! Messages are OP-Data (§3.4) encoded to flat byte buffers — exactly what
+//! would go on a socket — with compression applied per the broker's
+//! `CompressPlan` before encoding and reversed after decoding.
+
+pub mod messages;
+pub mod stage;
+
+pub use messages::{decode_payload, Wire, WorkerStats};
+pub use stage::{spawn_stage, StageCtx};

@@ -1,0 +1,371 @@
+//! Stage worker threads: the per-CompNode executor.
+//!
+//! GPipe iteration protocol (matching `pipeline::ScheduleKind::GPipe`):
+//!   fwd phase: for m in 0..n_micro — recv input, run fwd, send output
+//!   bwd phase: for m in rev      — recv grad, run bwd, send grad back
+//!   update    : scale accumulated grads by 1/n_micro, run SGD artifact
+//!
+//! The head stage computes loss+gradients in its forward leg
+//! (head_fwd_loss) and replays the stored dx in reverse order during the
+//! bwd phase — a GPipe flush.
+
+use super::messages::{decode_payload, encode_payload, Wire, WorkerStats};
+use crate::compress::{CompressKind, CompressPlan};
+use crate::opdag::data::OpDataKind;
+use crate::runtime::{Manifest, Runtime, StageKind};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// Everything a stage worker needs (all Send).
+pub struct StageCtx {
+    pub stage: usize,
+    pub n_stages: usize,
+    /// CompNode id hosting this stage (selects compression ratios).
+    pub device: usize,
+    /// CompNode id of the next stage (dst of our fwd messages).
+    pub next_device: Option<usize>,
+    /// CompNode id of the previous stage (dst of our bwd messages).
+    pub prev_device: Option<usize>,
+    pub manifest: Manifest,
+    pub plan: CompressPlan,
+    pub iters: usize,
+    pub n_micro: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// "sgd" or "adam".
+    pub optimizer: String,
+    pub param_seed: u64,
+    /// Forward input (None for embed: tokens come from the driver).
+    pub rx_fwd: Receiver<Wire>,
+    /// Backward gradient input (None for head).
+    pub rx_bwd: Option<Receiver<Wire>>,
+    /// Forward output (None for head).
+    pub tx_fwd: Option<Sender<Wire>>,
+    /// Backward gradient output (None for embed).
+    pub tx_bwd: Option<Sender<Wire>>,
+    /// Head only: label stream from the driver.
+    pub rx_labels: Option<Receiver<Wire>>,
+    /// Loss + stats reporting to the driver.
+    pub tx_driver: Sender<Wire>,
+}
+
+/// Spawn the worker thread for one stage. Errors are reported to the
+/// driver as `Wire::Fatal` so the job aborts instead of hanging.
+pub fn spawn_stage(ctx: StageCtx) -> std::thread::JoinHandle<anyhow::Result<()>> {
+    std::thread::Builder::new()
+        .name(format!("stage{}", ctx.stage))
+        .spawn(move || {
+            let stage = ctx.stage;
+            let tx = ctx.tx_driver.clone();
+            let r = run_stage(ctx);
+            if let Err(e) = &r {
+                let _ = tx.send(Wire::Fatal { stage, error: format!("{e:#}") });
+            }
+            r
+        })
+        .expect("spawn stage worker")
+}
+
+fn axpy_acc(acc: &mut [f32], x: &[f32]) {
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
+    let spec = ctx.manifest.stages[ctx.stage].clone();
+    let cfg = ctx.manifest.config.clone();
+    let act_n = cfg.act_elems();
+    let act_dims = [cfg.microbatch as i64, cfg.seq_len as i64, cfg.d_model as i64];
+    let tok_dims = [cfg.microbatch as i64, cfg.seq_len as i64];
+
+    // Per-thread PJRT runtime with only this stage's entries.
+    let use_adam = ctx.optimizer == "adam";
+    let opt_entry: String = if use_adam {
+        spec.adam_entry().to_string()
+    } else {
+        spec.sgd_entry().to_string()
+    };
+    let mut entries: Vec<&str> = match spec.kind {
+        StageKind::Embed => vec!["embed_fwd", "embed_bwd"],
+        StageKind::Body => vec!["body_fwd", "body_bwd"],
+        StageKind::Head => vec!["head_fwd_loss"],
+    };
+    entries.push(&opt_entry);
+    let mut rt = Runtime::load(&ctx.manifest, Some(&entries))?;
+
+    let mut params = spec.init_params(ctx.param_seed);
+    let mut momentum = vec![0.0f32; spec.param_size];
+    // Second moment buffer (Adam only).
+    let mut second = vec![0.0f32; if use_adam { spec.param_size } else { 0 }];
+    let mut stats = WorkerStats {
+        stage: ctx.stage,
+        device: ctx.device,
+        ..Default::default()
+    };
+
+    // Effective compression ratios for the links we SEND on (ratio is
+    // keyed by the receiving device, Eq. 7), gated by the direction knob.
+    use crate::compress::adatopk::CompressDirection;
+    let dir = ctx.plan.direction;
+    let fwd_ratio = if dir == CompressDirection::BwdOnly {
+        1.0
+    } else {
+        ctx.next_device.map(|d| ctx.plan.ratio_for(d)).unwrap_or(1.0)
+    };
+    let bwd_ratio = if dir == CompressDirection::FwdOnly {
+        1.0
+    } else {
+        ctx.prev_device.map(|d| ctx.plan.ratio_for(d)).unwrap_or(1.0)
+    };
+    let kind = ctx.plan.kind;
+
+    for iter in 0..ctx.iters as u32 {
+        // ---------------- forward phase ----------------
+        // Stash: embed keeps tokens; body keeps inputs; head keeps dx.
+        let mut stash_tokens: Vec<Vec<i32>> = Vec::new();
+        let mut stash_acts: Vec<Vec<f32>> = Vec::new();
+        let mut stash_dx: Vec<Vec<f32>> = Vec::new();
+        let mut grad_acc = vec![0.0f32; spec.param_size];
+
+        for micro in 0..ctx.n_micro as u32 {
+            let t_wait = Instant::now();
+            match spec.kind {
+                StageKind::Embed => {
+                    let msg = ctx.rx_fwd.recv()?;
+                    stats.wait_s += t_wait.elapsed().as_secs_f64();
+                    let tokens = match msg {
+                        Wire::Data { tokens, .. } => tokens,
+                        Wire::Stop => return finish(&ctx, stats),
+                        other => anyhow::bail!("embed: unexpected {other:?}"),
+                    };
+                    let t0 = Instant::now();
+                    let out = rt.exec(
+                        "embed_fwd",
+                        &[
+                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
+                            Runtime::i32_tensor(&tokens, &tok_dims)?,
+                        ],
+                    )?;
+                    stats.fwd_s += t0.elapsed().as_secs_f64();
+                    let y = Runtime::to_f32_vec(&out[0])?;
+                    stash_tokens.push(tokens);
+                    send_act(&mut ctx, &mut stats, kind, fwd_ratio, iter, micro, &y)?;
+                }
+                StageKind::Body => {
+                    let msg = ctx.rx_fwd.recv()?;
+                    stats.wait_s += t_wait.elapsed().as_secs_f64();
+                    let buf = match msg {
+                        Wire::Packet(b) => b,
+                        Wire::Stop => return finish(&ctx, stats),
+                        other => anyhow::bail!("body: unexpected {other:?}"),
+                    };
+                    let (_od, x) = decode_payload(&buf, act_n)?;
+                    let t0 = Instant::now();
+                    let out = rt.exec(
+                        "body_fwd",
+                        &[
+                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
+                            Runtime::f32_tensor(&x, &act_dims)?,
+                        ],
+                    )?;
+                    stats.fwd_s += t0.elapsed().as_secs_f64();
+                    let y = Runtime::to_f32_vec(&out[0])?;
+                    stash_acts.push(x);
+                    send_act(&mut ctx, &mut stats, kind, fwd_ratio, iter, micro, &y)?;
+                }
+                StageKind::Head => {
+                    // Labels first (driver sends them eagerly), then act.
+                    let labels = match ctx.rx_labels.as_ref().unwrap().recv()? {
+                        Wire::Labels { targets, .. } => targets,
+                        Wire::Stop => return finish(&ctx, stats),
+                        other => anyhow::bail!("head labels: unexpected {other:?}"),
+                    };
+                    let buf = match ctx.rx_fwd.recv()? {
+                        Wire::Packet(b) => b,
+                        Wire::Stop => return finish(&ctx, stats),
+                        other => anyhow::bail!("head: unexpected {other:?}"),
+                    };
+                    stats.wait_s += t_wait.elapsed().as_secs_f64();
+                    let (_od, x) = decode_payload(&buf, act_n)?;
+                    let t0 = Instant::now();
+                    let out = rt.exec(
+                        "head_fwd_loss",
+                        &[
+                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
+                            Runtime::f32_tensor(&x, &act_dims)?,
+                            Runtime::i32_tensor(&labels, &tok_dims)?,
+                        ],
+                    )?;
+                    stats.fwd_s += t0.elapsed().as_secs_f64();
+                    let loss = Runtime::to_f32_scalar(&out[0])?;
+                    let dx = Runtime::to_f32_vec(&out[1])?;
+                    let dp = Runtime::to_f32_vec(&out[2])?;
+                    axpy_acc(&mut grad_acc, &dp);
+                    stash_dx.push(dx);
+                    ctx.tx_driver.send(Wire::Loss { iter, micro, loss })?;
+                }
+            }
+        }
+
+        // ---------------- backward phase (reverse microbatch order) ------
+        for micro in (0..ctx.n_micro as u32).rev() {
+            match spec.kind {
+                StageKind::Head => {
+                    // Replay stored dx (GPipe flush).
+                    let dx = stash_dx.pop().expect("head dx stash");
+                    send_grad(&mut ctx, &mut stats, kind, bwd_ratio, iter, micro, &dx)?;
+                }
+                StageKind::Body => {
+                    let t_wait = Instant::now();
+                    let buf = match ctx.rx_bwd.as_ref().unwrap().recv()? {
+                        Wire::Packet(b) => b,
+                        Wire::Stop => return finish(&ctx, stats),
+                        other => anyhow::bail!("body bwd: unexpected {other:?}"),
+                    };
+                    stats.wait_s += t_wait.elapsed().as_secs_f64();
+                    let (_od, dy) = decode_payload(&buf, act_n)?;
+                    let x = stash_acts.pop().expect("body act stash");
+                    let t0 = Instant::now();
+                    let out = rt.exec(
+                        "body_bwd",
+                        &[
+                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
+                            Runtime::f32_tensor(&x, &act_dims)?,
+                            Runtime::f32_tensor(&dy, &act_dims)?,
+                        ],
+                    )?;
+                    stats.bwd_s += t0.elapsed().as_secs_f64();
+                    let dx = Runtime::to_f32_vec(&out[0])?;
+                    let dp = Runtime::to_f32_vec(&out[1])?;
+                    axpy_acc(&mut grad_acc, &dp);
+                    send_grad(&mut ctx, &mut stats, kind, bwd_ratio, iter, micro, &dx)?;
+                }
+                StageKind::Embed => {
+                    let t_wait = Instant::now();
+                    let buf = match ctx.rx_bwd.as_ref().unwrap().recv()? {
+                        Wire::Packet(b) => b,
+                        Wire::Stop => return finish(&ctx, stats),
+                        other => anyhow::bail!("embed bwd: unexpected {other:?}"),
+                    };
+                    stats.wait_s += t_wait.elapsed().as_secs_f64();
+                    let (_od, dx) = decode_payload(&buf, act_n)?;
+                    let tokens = stash_tokens.pop().expect("embed token stash");
+                    let t0 = Instant::now();
+                    let out = rt.exec(
+                        "embed_bwd",
+                        &[
+                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
+                            Runtime::i32_tensor(&tokens, &tok_dims)?,
+                            Runtime::f32_tensor(&dx, &act_dims)?,
+                        ],
+                    )?;
+                    stats.bwd_s += t0.elapsed().as_secs_f64();
+                    let dp = Runtime::to_f32_vec(&out[0])?;
+                    axpy_acc(&mut grad_acc, &dp);
+                }
+            }
+        }
+
+        // ---------------- update ----------------
+        let scale = 1.0 / ctx.n_micro as f32;
+        for g in grad_acc.iter_mut() {
+            *g *= scale;
+        }
+        let t0 = Instant::now();
+        if use_adam {
+            let out = rt.exec(
+                &opt_entry,
+                &[
+                    Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
+                    Runtime::f32_tensor(&grad_acc, &[spec.param_size as i64])?,
+                    Runtime::f32_tensor(&momentum, &[spec.param_size as i64])?,
+                    Runtime::f32_tensor(&second, &[spec.param_size as i64])?,
+                    Runtime::f32_scalar(ctx.lr),
+                    Runtime::f32_scalar((iter + 1) as f32),
+                ],
+            )?;
+            stats.update_s += t0.elapsed().as_secs_f64();
+            params = Runtime::to_f32_vec(&out[0])?;
+            momentum = Runtime::to_f32_vec(&out[1])?;
+            second = Runtime::to_f32_vec(&out[2])?;
+        } else {
+            let out = rt.exec(
+                &opt_entry,
+                &[
+                    Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
+                    Runtime::f32_tensor(&grad_acc, &[spec.param_size as i64])?,
+                    Runtime::f32_tensor(&momentum, &[spec.param_size as i64])?,
+                    Runtime::f32_scalar(ctx.lr),
+                    Runtime::f32_scalar(ctx.momentum),
+                ],
+            )?;
+            stats.update_s += t0.elapsed().as_secs_f64();
+            params = Runtime::to_f32_vec(&out[0])?;
+            momentum = Runtime::to_f32_vec(&out[1])?;
+        }
+    }
+
+    finish(&ctx, stats)
+}
+
+fn finish(ctx: &StageCtx, stats: WorkerStats) -> anyhow::Result<()> {
+    let _ = ctx.tx_driver.send(Wire::Stats(stats));
+    Ok(())
+}
+
+fn send_act(
+    ctx: &mut StageCtx,
+    stats: &mut WorkerStats,
+    kind: CompressKind,
+    ratio: f64,
+    iter: u32,
+    micro: u32,
+    dense: &[f32],
+) -> anyhow::Result<()> {
+    if let Some(tx) = &ctx.tx_fwd {
+        let (buf, wire) = encode_payload(
+            kind,
+            ratio,
+            ctx.manifest.config.d_model,
+            ctx.stage,
+            ctx.stage + 1,
+            OpDataKind::Activation,
+            iter,
+            micro,
+            dense,
+        );
+        stats.bytes_sent += wire;
+        stats.msgs_sent += 1;
+        tx.send(Wire::Packet(buf))?;
+    }
+    Ok(())
+}
+
+fn send_grad(
+    ctx: &mut StageCtx,
+    stats: &mut WorkerStats,
+    kind: CompressKind,
+    ratio: f64,
+    iter: u32,
+    micro: u32,
+    dense: &[f32],
+) -> anyhow::Result<()> {
+    if let Some(tx) = &ctx.tx_bwd {
+        let (buf, wire) = encode_payload(
+            kind,
+            ratio,
+            ctx.manifest.config.d_model,
+            ctx.stage,
+            ctx.stage - 1,
+            OpDataKind::Gradient,
+            iter,
+            micro,
+            dense,
+        );
+        stats.bytes_sent += wire;
+        stats.msgs_sent += 1;
+        tx.send(Wire::Packet(buf))?;
+    }
+    Ok(())
+}

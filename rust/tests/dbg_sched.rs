@@ -1,0 +1,23 @@
+use fusionllm::cluster::testbed::testbed1;
+use fusionllm::cost::throughput::{dense_bytes, evaluate, PipelineParams};
+use fusionllm::opdag::builders::{transformer_chain, TransformerSpec};
+use fusionllm::scheduler::{by_name, Scheduler};
+
+#[test]
+fn dbg_decomposition() {
+    let tb = testbed1(1);
+    let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+    let params = PipelineParams { n_micro: 2, micro_size: 3, include_bwd: true };
+    for name in ["opfence", "equal-number", "equal-compute"] {
+        let p = by_name(name).unwrap().schedule(&dag, &tb).unwrap();
+        let e = evaluate(&dag, &p, &tb, params, &dense_bytes);
+        let comm: f64 = e.per_node.iter().map(|c| c.comm_s).sum();
+        let comp: f64 = e.per_node.iter().map(|c| c.comp_s).sum();
+        println!("{name}: t_pipe={:.2} t_lat={:.2} comm={comm:.2} comp={comp:.2} bneck={:.2}@{} used={}",
+            e.t_pipe, e.t_lat, e.bottleneck_s, e.bottleneck_node, e.per_node.len());
+        // top 3 comm nodes
+        let mut pn = e.per_node.clone();
+        pn.sort_by(|a,b| b.comm_s.partial_cmp(&a.comm_s).unwrap());
+        for c in pn.iter().take(4) { println!("   node {} comm={:.2} comp={:.3}", c.node, c.comm_s, c.comp_s); }
+    }
+}

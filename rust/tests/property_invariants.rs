@@ -1,0 +1,421 @@
+//! Property-based invariants over the coordinator (proptest-lite: seeded
+//! xoshiro generators + many trials, since proptest is unavailable
+//! offline). Every test names the invariant it defends.
+
+use fusionllm::cluster::louvain::{louvain, modularity};
+use fusionllm::cluster::NetGraph;
+use fusionllm::compress::{Compressor, Int8Quantizer, NoCompress, RandomK, TopK};
+use fusionllm::opdag::data::{CompressCfg, OpData, OpDataKind};
+use fusionllm::opdag::{Dag, OpKind, Partition};
+use fusionllm::pipeline::{PipelineSchedule, ScheduleKind};
+use fusionllm::util::json::{arr, n, obj, s, Json};
+use fusionllm::util::math::kth_largest_abs;
+use fusionllm::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------
+
+/// Random layered DAG: a chain with occasional side-branches that re-merge
+/// (degree <= 2, like real DNNs — Observation 1).
+fn random_dag(rng: &mut Rng) -> Dag {
+    let mut d = Dag::default();
+    let input = d.add("input", OpKind::Placeholder, &[], 0.0, 64.0, 0.0);
+    let mut prev =
+        d.add("stem", OpKind::Parametric, &[input], 1e6 * (1.0 + rng.f64()), 1e3, 1e3);
+    let n_ops = 3 + rng.below(20) as usize;
+    let mut branch: Option<usize> = None;
+    for i in 0..n_ops {
+        if branch.is_none() && rng.f64() < 0.2 {
+            // Open a side branch from a fresh variable.
+            let v = d.add(&format!("var{i}"), OpKind::Variable, &[], 0.0, 1e3, 1e3);
+            let r = d.add(
+                &format!("branch{i}"),
+                OpKind::NonParametric,
+                &[v],
+                1e5,
+                1e3,
+                0.0,
+            );
+            branch = Some(r);
+        } else if let Some(b) = branch.take() {
+            prev = d.add(
+                &format!("merge{i}"),
+                OpKind::NonParametric,
+                &[prev, b],
+                1e5,
+                1e3,
+                0.0,
+            );
+        } else {
+            prev = d.add(
+                &format!("op{i}"),
+                OpKind::Parametric,
+                &[prev],
+                1e6 * (1.0 + rng.f64()),
+                1e3 * (1.0 + rng.f64()),
+                1e3,
+            );
+        }
+    }
+    let label = d.add("label", OpKind::Placeholder, &[], 0.0, 64.0, 0.0);
+    d.add("loss", OpKind::Loss, &[prev, label], 1e4, 4.0, 0.0);
+    d
+}
+
+/// Random contiguous partition of the dag over up to `max_dev` devices.
+fn random_partition(rng: &mut Rng, dag: &Dag, max_dev: usize) -> Partition {
+    let chain = dag.compute_chain();
+    let k = 1 + rng.below(max_dev.min(chain.len()) as u64) as usize;
+    let mut assign = vec![usize::MAX; dag.len()];
+    // k-1 sorted random cut points.
+    let mut cuts: Vec<usize> = (0..k - 1).map(|_| 1 + rng.below(chain.len() as u64 - 1) as usize).collect();
+    cuts.sort_unstable();
+    let mut dev = 0;
+    for (i, &op) in chain.iter().enumerate() {
+        while dev < cuts.len() && i >= cuts[dev] {
+            dev += 1;
+        }
+        assign[op] = dev;
+    }
+    for op in &dag.ops {
+        if op.kind == OpKind::Placeholder {
+            assign[op.id] = assign[op.users[0]];
+        }
+    }
+    Partition::new(assign)
+}
+
+// ---------------------------------------------------------------------
+// OP-DAG / partition invariants (the routing core)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_subdag_message_sets_are_symmetric() {
+    // INVARIANT (Table 3): every (src,dst) in some sub-DAG's send_acti
+    // appears in exactly one other sub-DAG's required_acti, and gradients
+    // mirror activations for grad-requiring producers.
+    let mut rng = Rng::new(0xDA6);
+    for trial in 0..200 {
+        let dag = random_dag(&mut rng);
+        dag.validate().unwrap();
+        let part = random_partition(&mut rng, &dag, 6);
+        part.validate(&dag).unwrap();
+        let subs = part.sub_dags(&dag);
+
+        // Every op appears exactly once.
+        let mut seen = vec![0usize; dag.len()];
+        for sd in &subs {
+            for &op in &sd.ops {
+                seen[op] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "trial {trial}: op coverage {seen:?}");
+
+        let all_send: Vec<_> = subs.iter().flat_map(|s| s.send_acti.clone()).collect();
+        let all_req: Vec<_> = subs.iter().flat_map(|s| s.required_acti.clone()).collect();
+        let mut a = all_send.clone();
+        let mut b = all_req.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "trial {trial}: acti send/require mismatch");
+
+        let mut sg: Vec<_> = subs.iter().flat_map(|s| s.send_grad.clone()).collect();
+        let mut rg: Vec<_> = subs.iter().flat_map(|s| s.required_grad.clone()).collect();
+        sg.sort_unstable();
+        rg.sort_unstable();
+        assert_eq!(sg, rg, "trial {trial}: grad send/require mismatch");
+
+        // Gradient edges exist iff the producer requires grad.
+        for &(src, dst) in &all_send {
+            let has_grad = sg.contains(&(dst, src));
+            assert_eq!(
+                has_grad,
+                dag.ops[src].requires_grad(),
+                "trial {trial}: grad mirror for ({src},{dst})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_cut_edges_counts_cross_device_edges() {
+    let mut rng = Rng::new(0xC075);
+    for _ in 0..100 {
+        let dag = random_dag(&mut rng);
+        let part = random_partition(&mut rng, &dag, 5);
+        let subs = part.sub_dags(&dag);
+        let total_send: usize = subs.iter().map(|s| s.send_acti.len()).sum();
+        assert_eq!(part.cut_edges(&dag), total_send);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compression invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_topk_keeps_largest_and_roundtrips() {
+    let mut rng = Rng::new(0x70BA);
+    for trial in 0..300 {
+        let n = 1 + rng.below(3000) as usize;
+        let ratio = 1.0 + rng.f64() * 200.0;
+        let data: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 8.0).collect();
+        let comp = TopK { ratio };
+        let c = comp.compress(&data);
+        let k = comp.k_for(n);
+        assert_eq!(c.values.len(), k, "trial {trial}");
+        assert_eq!(c.indices.len(), k);
+        // indices strictly increasing & in range (decode safety).
+        assert!(c.indices.windows(2).all(|w| w[0] < w[1]));
+        assert!(c.indices.iter().all(|&i| (i as usize) < n));
+        // kept magnitudes >= k-th largest.
+        let tau = kth_largest_abs(&data, k);
+        assert!(c.values.iter().all(|v| v.abs() >= tau - 1e-7));
+        // roundtrip exactness on the support.
+        let mut out = vec![0.0f32; n];
+        comp.decompress(&c, &mut out);
+        for (&i, &v) in c.indices.iter().zip(&c.values) {
+            assert_eq!(out[i as usize], data[i as usize]);
+            assert_eq!(out[i as usize], v);
+        }
+    }
+}
+
+#[test]
+fn prop_compression_error_ordering() {
+    // INVARIANT: for the same ratio, TopK's L2 error <= RandomK's (in
+    // expectation — we allow rare ties but never a large inversion).
+    let mut rng = Rng::new(0xE44);
+    let mut topk_wins = 0;
+    let trials = 60;
+    for t in 0..trials {
+        let n = 500 + rng.below(2000) as usize;
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let ratio = 10.0 + rng.f64() * 40.0;
+        let err = |out: &[f32]| -> f64 {
+            data.iter().zip(out).map(|(a, b)| ((a - b) * (a - b)) as f64).sum()
+        };
+        let tk = TopK { ratio };
+        let rk = RandomK { ratio, seed: t as u64 };
+        let mut out_t = vec![0.0; n];
+        let mut out_r = vec![0.0; n];
+        tk.decompress(&tk.compress(&data), &mut out_t);
+        rk.decompress(&rk.compress(&data), &mut out_r);
+        if err(&out_t) <= err(&out_r) {
+            topk_wins += 1;
+        }
+    }
+    assert_eq!(topk_wins, trials, "TopK must always beat RandomK on L2");
+}
+
+#[test]
+fn prop_int8_bounded_error_and_wire_size() {
+    let mut rng = Rng::new(0x1E8);
+    for _ in 0..100 {
+        let n = 1 + rng.below(4000) as usize;
+        let scale_mag = 10f32.powi(rng.range(-3, 3) as i32);
+        let data: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * scale_mag).collect();
+        let q = Int8Quantizer;
+        let c = q.compress(&data);
+        let mut out = vec![0.0f32; n];
+        q.decompress(&c, &mut out);
+        let absmax = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in data.iter().zip(&out) {
+            assert!((a - b).abs() <= absmax / 127.0 * 1.01 + 1e-9);
+        }
+        // 4x smaller than dense (+constant).
+        let dense = NoCompress.compress(&data);
+        assert!(c.wire_bytes() <= dense.wire_bytes() / 4.0 + 8.0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// OP-Data wire format: fuzz for panics, roundtrip for fidelity
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_opdata_roundtrip_random() {
+    let mut rng = Rng::new(0x0DA7A);
+    for _ in 0..300 {
+        let np = rng.below(200) as usize;
+        let ni = rng.below(200) as usize;
+        let nb = rng.below(100) as usize;
+        let mut od = OpData::dense(
+            rng.below(1000) as usize,
+            rng.below(1000) as usize,
+            if rng.f64() < 0.5 { OpDataKind::Activation } else { OpDataKind::Gradient },
+            rng.below(u32::MAX as u64) as u32,
+            rng.below(64) as u32,
+            (0..np).map(|_| rng.f32() - 0.5).collect(),
+        );
+        od.indices = (0..ni).map(|_| rng.below(1 << 20) as u32).collect();
+        od.bytes_payload = (0..nb).map(|_| rng.below(256) as u8).collect();
+        od.is_loss = rng.f64() < 0.5;
+        od.require_grad = rng.f64() < 0.5;
+        od.compress = match rng.below(4) {
+            0 => CompressCfg::None,
+            1 => CompressCfg::TopK { ratio: rng.f64() * 100.0, total_len: 1 << 20 },
+            2 => CompressCfg::RandomK {
+                ratio: rng.f64() * 100.0,
+                total_len: 1 << 20,
+                seed: rng.next_u64(),
+            },
+            _ => CompressCfg::Int8 { scale: rng.f32(), total_len: nb as u32 },
+        };
+        let enc = od.encode();
+        let back = OpData::decode(&enc).unwrap();
+        assert_eq!(back.src_op, od.src_op);
+        assert_eq!(back.dst_op, od.dst_op);
+        assert_eq!(back.kind, od.kind);
+        assert_eq!(back.is_loss, od.is_loss);
+        assert_eq!(back.require_grad, od.require_grad);
+        assert_eq!(back.local_iter, od.local_iter);
+        assert_eq!(back.micro_batch, od.micro_batch);
+        assert_eq!(back.compress, od.compress);
+        assert_eq!(back.payload, od.payload);
+        assert_eq!(back.indices, od.indices);
+        assert_eq!(back.bytes_payload, od.bytes_payload);
+    }
+}
+
+#[test]
+fn prop_opdata_decode_never_panics_on_corruption() {
+    // FAILURE INJECTION: random truncations and byte flips must yield
+    // Err or a decoded value — never a panic.
+    let mut rng = Rng::new(0xFA11);
+    let base = {
+        let mut od = OpData::dense(1, 2, OpDataKind::Activation, 3, 4, vec![1.0; 64]);
+        od.indices = (0..32).collect();
+        od.compress = CompressCfg::TopK { ratio: 2.0, total_len: 64 };
+        od.encode()
+    };
+    for _ in 0..500 {
+        let mut buf = base.clone();
+        match rng.below(3) {
+            0 => {
+                let cut = rng.below(buf.len() as u64) as usize;
+                buf.truncate(cut);
+            }
+            1 => {
+                for _ in 0..1 + rng.below(8) {
+                    let i = rng.below(buf.len() as u64) as usize;
+                    buf[i] ^= rng.below(256) as u8;
+                }
+            }
+            _ => {
+                let extra = rng.below(16) as usize;
+                buf.extend(std::iter::repeat(0xAB).take(extra));
+            }
+        }
+        let _ = OpData::decode(&buf); // must not panic
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pipeline schedules & Louvain
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_schedules_valid_for_all_shapes() {
+    for s in 1..=8 {
+        for m in 1..=8 {
+            for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+                let sched = PipelineSchedule::new(kind, s, m);
+                sched.validate().unwrap();
+                // 1F1B never stashes more than GPipe.
+                if kind == ScheduleKind::OneFOneB {
+                    let g = PipelineSchedule::new(ScheduleKind::GPipe, s, m);
+                    for st in 0..s {
+                        assert!(sched.peak_stash(st) <= g.peak_stash(st));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_louvain_planted_partition_recovers_islands() {
+    let mut rng = Rng::new(0x10BA);
+    for trial in 0..20 {
+        let k = 2 + rng.below(3) as usize; // 2-4 islands
+        let per = 3 + rng.below(4) as usize; // 3-6 nodes each
+        let n = k * per;
+        let mut g = NetGraph::new(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let same = i / per == j / per;
+                let bw = if same {
+                    1e9 * rng.uniform(0.8, 1.2)
+                } else {
+                    1e7 * rng.uniform(0.5, 1.5)
+                };
+                g.set_link(i, j, 1e-4, bw);
+            }
+        }
+        let comm = louvain(&g);
+        for i in 0..n {
+            for j in 0..n {
+                if i / per == j / per {
+                    assert_eq!(comm[i], comm[j], "trial {trial} split island");
+                } else {
+                    assert_ne!(comm[i], comm[j], "trial {trial} merged islands");
+                }
+            }
+        }
+        // Modularity at least that of the trivial partition.
+        assert!(modularity(&g, &comm) >= modularity(&g, &vec![0; n]));
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON roundtrip fuzz
+// ---------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::Num((rng.f64() * 2000.0 - 1000.0).round() / 4.0),
+        3 => {
+            let len = rng.below(12) as usize;
+            Json::Str(
+                (0..len)
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c < 0x20 {
+                            ' '
+                        } else {
+                            c as char
+                        }
+                    })
+                    .collect(),
+            )
+        }
+        4 => arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let fields = rng.below(5);
+            obj((0..fields)
+                .map(|i| {
+                    let key = format!("k{i}");
+                    (Box::leak(key.into_boxed_str()) as &str, random_json(rng, depth - 1))
+                })
+                .collect())
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Rng::new(0x1503);
+    for _ in 0..300 {
+        let v = random_json(&mut rng, 3);
+        let compact = Json::parse(&v.dump()).unwrap();
+        let pretty = Json::parse(&v.dump_pretty()).unwrap();
+        assert_eq!(compact, v);
+        assert_eq!(pretty, v);
+    }
+    // Keep the imports used in all cfg paths.
+    let _ = (n(1.0), s("x"));
+}
