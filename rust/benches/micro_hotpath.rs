@@ -1,31 +1,59 @@
 //! Hot-path microbenchmarks (§Perf, L3): the operations on the per-message
 //! critical path of the coordinator, measured with the offline benchkit.
 //!
-//!   * Top-K wire compression of a GPT2-XL-sized activation (19.66 MB)
-//!   * OP-Data encode/decode round trip
+//!   * Top-K wire compression of a GPT2-XL-sized activation (19.66 MB),
+//!     both the allocating API and the steady-state `compress_into` path
+//!   * OP-Data encode/decode round trip (bulk codec + zero-copy view)
 //!   * discrete-event iteration simulation (48 devices)
 //!   * Louvain + OP-Fence scheduling (48 devices)
+//!
+//! Besides the human-readable table, results are emitted to
+//! `BENCH_micro_hotpath.json` at the repo root (op -> median_s / GB/s) so
+//! the perf trajectory is tracked across PRs (EXPERIMENTS.md §Perf).
 
+use fusionllm::compress::{
+    CompressPlan, CompressScratch, Compressed, Compressor, TopK,
+};
 use fusionllm::cluster::testbed;
-use fusionllm::compress::{CompressPlan, Compressor, TopK};
 use fusionllm::opdag::builders::{transformer_chain, TransformerSpec};
-use fusionllm::opdag::data::{OpData, OpDataKind};
+use fusionllm::opdag::data::{OpData, OpDataKind, OpDataView};
 use fusionllm::pipeline::{PipelineSchedule, ScheduleKind};
 use fusionllm::scheduler::{self, Scheduler};
 use fusionllm::simnet::{simulate_iteration, StagePlan};
-use fusionllm::util::benchkit::bench;
+use fusionllm::util::benchkit::{bench, BenchResult};
+use fusionllm::util::json::{n, obj, Json};
+use fusionllm::util::math::compress_threads;
 use fusionllm::util::rng::Rng;
 
 fn main() {
+    let mut results: Vec<(BenchResult, f64)> = Vec::new();
+    let mut run = |r: BenchResult, bytes: f64| {
+        println!("{}", r.line());
+        if bytes > 0.0 {
+            let tput = bytes / r.median_s / 1e9;
+            println!("{:<40} {tput:>9.2} GB/s", "  -> effective throughput");
+        }
+        results.push((r, bytes));
+    };
+
     let mut rng = Rng::new(7);
     // GPT2-XL inter-stage activation: 3*1024*1600 f32 = 19.66 MB.
     let act: Vec<f32> = (0..3 * 1024 * 1600).map(|_| rng.f32() - 0.5).collect();
+    let act_bytes = act.len() as f64 * 4.0;
+    println!("compress worker threads: {}\n", compress_threads());
 
     let topk = TopK { ratio: 100.0 };
     let r = bench("topk compress 19.66MB (ratio 100)", 2, 10, || topk.compress(&act));
-    println!("{}", r.line());
-    let tput = act.len() as f64 * 4.0 / r.median_s / 1e9;
-    println!("{:<40} {tput:>9.2} GB/s", "  -> effective throughput");
+    run(r, act_bytes);
+
+    // Steady state: per-link scratch + reused Compressed, zero alloc/msg.
+    let mut scratch = CompressScratch::default();
+    let mut comp = Compressed::default();
+    let r = bench("topk compress_into (steady-state)", 2, 10, || {
+        topk.compress_with(&act, &mut comp, &mut scratch);
+        comp.values.len()
+    });
+    run(r, act_bytes);
 
     let c = topk.compress(&act);
     let mut dense = vec![0.0f32; act.len()];
@@ -33,23 +61,38 @@ fn main() {
         topk.decompress(&c, &mut dense);
         dense[0]
     });
-    println!("{}", r.line());
+    run(r, act_bytes);
 
     let mut od = OpData::dense(0, 1, OpDataKind::Activation, 0, 0, c.values.clone());
     od.indices = c.indices.clone();
     od.compress = c.cfg.clone();
+    let msg_bytes = (od.payload.len() * 4 + od.indices.len() * 4 + 64) as f64;
     let r = bench("OpData encode (sparse 196k keep)", 2, 20, || od.encode());
-    println!("{}", r.line());
+    run(r, msg_bytes);
+
+    let mut wire = Vec::new();
+    let r = bench("OpData encode_into (reused buf)", 2, 20, || {
+        od.encode_into(&mut wire);
+        wire.len()
+    });
+    run(r, msg_bytes);
+
     let buf = od.encode();
     let r = bench("OpData decode", 2, 20, || OpData::decode(&buf).unwrap());
-    println!("{}", r.line());
+    run(r, msg_bytes);
+
+    let r = bench("OpDataView parse (zero-copy)", 2, 20, || {
+        let v = OpDataView::parse(&buf).unwrap();
+        v.payload_len()
+    });
+    run(r, msg_bytes);
 
     let tb = testbed::testbed2(1);
     let dag = transformer_chain(&TransformerSpec::gpt2_xl());
     let r = bench("OP-Fence schedule (48 devices)", 1, 10, || {
         scheduler::opfence::OpFence::default().schedule(&dag, &tb).unwrap()
     });
-    println!("{}", r.line());
+    run(r, 0.0);
 
     let part = scheduler::by_name("opfence").unwrap().schedule(&dag, &tb).unwrap();
     let sp = StagePlan::from_partition(&dag, &part, &tb);
@@ -58,7 +101,32 @@ fn main() {
     let r = bench("simnet iteration (48 stages, nb=8)", 2, 50, || {
         simulate_iteration(&sp, &tb, &sched, &plan).iter_s
     });
-    println!("{}", r.line());
+    run(r, 0.0);
 
-    println!("\n(record before/after in EXPERIMENTS.md §Perf)");
+    write_json(&results);
+    println!("\n(recorded in EXPERIMENTS.md §Perf; machine-readable copy at BENCH_micro_hotpath.json)");
+}
+
+/// Emit op -> {median_s, min_s, gb_per_s} to the repo root.
+fn write_json(results: &[(BenchResult, f64)]) {
+    let mut ops: Vec<(&str, Json)> = Vec::new();
+    for (r, bytes) in results {
+        let mut fields = vec![
+            ("median_s", n(r.median_s)),
+            ("min_s", n(r.min_s)),
+            ("iters", n(r.iters as f64)),
+        ];
+        if *bytes > 0.0 {
+            fields.push(("gb_per_s", n(bytes / r.median_s / 1e9)));
+        }
+        ops.push((r.name.as_str(), obj(fields)));
+    }
+    ops.push(("_threads", n(compress_threads() as f64)));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_micro_hotpath.json");
+    match std::fs::write(&path, obj(ops).dump_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nWARN could not write {}: {e}", path.display()),
+    }
 }

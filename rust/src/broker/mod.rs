@@ -15,7 +15,7 @@ use crate::pipeline::{PipelineSchedule, ScheduleKind};
 use crate::runtime::Manifest;
 use crate::simnet::{simulate_iteration, StagePlan};
 use crate::trainer::{SyntheticCorpus, TrainReport};
-use crate::worker::{spawn_stage, StageCtx, Wire, WorkerStats};
+use crate::worker::{spawn_stage, StageCodec, StageCtx, Wire, WorkerStats};
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -113,14 +113,18 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
 
     let mut handles = Vec::new();
     for s in 0..s_n {
+        let next_device = devices.get(s + 1).copied();
+        let prev_device = if s > 0 { Some(devices[s - 1]) } else { None };
         let ctx = StageCtx {
             stage: s,
             n_stages: s_n,
             device: devices[s],
-            next_device: devices.get(s + 1).copied(),
-            prev_device: if s > 0 { Some(devices[s - 1]) } else { None },
+            next_device,
+            prev_device,
             manifest: manifest.clone(),
-            plan: plan.clone(),
+            // Per-link wire codecs: ratios keyed by the receiving device
+            // (Eq. 7), scratch owned for the life of the link.
+            codec: StageCodec::from_plan(&plan, next_device, prev_device, cfg.d_model),
             iters: job.iters,
             n_micro: job.n_micro,
             lr: job.lr,

@@ -111,6 +111,23 @@ impl CompressPlan {
         self.node_ratio.get(dst).copied().unwrap_or(1.0)
     }
 
+    /// Effective ratio for a message of `kind` delivered to `dst`, honoring
+    /// the direction gate (activations travel forward, gradients backward).
+    /// This is what the per-link wire codecs are built from.
+    pub fn ratio_for_kind(&self, dst: usize, kind: crate::opdag::data::OpDataKind) -> f64 {
+        use crate::opdag::data::OpDataKind;
+        let gated = matches!(
+            (self.direction, kind),
+            (CompressDirection::BwdOnly, OpDataKind::Activation)
+                | (CompressDirection::FwdOnly, OpDataKind::Gradient)
+        );
+        if gated {
+            1.0
+        } else {
+            self.ratio_for(dst)
+        }
+    }
+
     /// Wire-byte scaling for the latency models: dense bytes -> effective.
     /// Top-K style encodings pay 3× per kept element (f32 value + i64 idx).
     pub fn scale_bytes(&self, dst: usize, bytes: f64) -> f64 {
@@ -193,6 +210,20 @@ mod tests {
             plan.ratio_for(0),
             plan.ratio_for(23)
         );
+    }
+
+    #[test]
+    fn ratio_for_kind_honors_direction_gate() {
+        use crate::opdag::data::OpDataKind;
+        let mut plan = CompressPlan::uniform(CompressKind::TopK, 50.0, 2);
+        assert_eq!(plan.ratio_for_kind(0, OpDataKind::Activation), 50.0);
+        assert_eq!(plan.ratio_for_kind(0, OpDataKind::Gradient), 50.0);
+        plan.direction = CompressDirection::BwdOnly;
+        assert_eq!(plan.ratio_for_kind(0, OpDataKind::Activation), 1.0);
+        assert_eq!(plan.ratio_for_kind(0, OpDataKind::Gradient), 50.0);
+        plan.direction = CompressDirection::FwdOnly;
+        assert_eq!(plan.ratio_for_kind(0, OpDataKind::Activation), 50.0);
+        assert_eq!(plan.ratio_for_kind(0, OpDataKind::Gradient), 1.0);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! e_{t-1}); the dropped mass re-enters the next message instead of being
 //! lost, which tightens convergence at high ratios.
 
-use super::sparsify::{Compressed, Compressor};
+use super::sparsify::{Compressed, CompressScratch, Compressor};
 use std::collections::HashMap;
 
 /// Wraps a compressor with per-edge residual memory.
@@ -13,15 +13,37 @@ pub struct ErrorFeedback<C: Compressor> {
     inner: C,
     residuals: HashMap<(usize, usize), Vec<f32>>,
     scratch: Vec<f32>,
+    comp_scratch: CompressScratch,
+    decoded: Vec<f32>,
 }
 
 impl<C: Compressor> ErrorFeedback<C> {
     pub fn new(inner: C) -> Self {
-        ErrorFeedback { inner, residuals: HashMap::new(), scratch: Vec::new() }
+        ErrorFeedback {
+            inner,
+            residuals: HashMap::new(),
+            scratch: Vec::new(),
+            comp_scratch: CompressScratch::default(),
+            decoded: Vec::new(),
+        }
     }
 
     /// Compress `data` for the edge key, folding in and updating residuals.
     pub fn compress_edge(&mut self, edge: (usize, usize), data: &[f32]) -> Compressed {
+        let mut out = Compressed::default();
+        self.compress_edge_into(edge, data, &mut out);
+        out
+    }
+
+    /// `compress_edge` into a caller-owned `Compressed` — together with the
+    /// internal residual/decode buffers this keeps the steady-state EF path
+    /// allocation-free.
+    pub fn compress_edge_into(
+        &mut self,
+        edge: (usize, usize),
+        data: &[f32],
+        out: &mut Compressed,
+    ) {
         let res = self
             .residuals
             .entry(edge)
@@ -33,14 +55,14 @@ impl<C: Compressor> ErrorFeedback<C> {
         // corrected = data + residual
         self.scratch.clear();
         self.scratch.extend(data.iter().zip(res.iter()).map(|(d, r)| d + r));
-        let c = self.inner.compress(&self.scratch);
+        self.inner.compress_with(&self.scratch, out, &mut self.comp_scratch);
         // residual = corrected - decompress(c)
-        let mut decoded = vec![0.0f32; data.len()];
-        self.inner.decompress(&c, &mut decoded);
-        for ((r, s), d) in res.iter_mut().zip(&self.scratch).zip(&decoded) {
+        self.decoded.clear();
+        self.decoded.resize(data.len(), 0.0);
+        self.inner.decompress(out, &mut self.decoded);
+        for ((r, s), d) in res.iter_mut().zip(&self.scratch).zip(&self.decoded) {
             *r = s - d;
         }
-        c
     }
 
     pub fn decompress(&self, c: &Compressed, out: &mut [f32]) {

@@ -10,7 +10,11 @@ pub mod error_feedback;
 pub mod sparsify;
 
 pub use adatopk::{CompressDirection, CompressPlan};
-pub use sparsify::{ChunkedTopK, Compressor, Int8Quantizer, NoCompress, RandomK, TopK};
+pub use error_feedback::ErrorFeedback;
+pub use sparsify::{
+    ChunkedTopK, CompressScratch, Compressed, Compressor, Int8Quantizer, NoCompress, RandomK,
+    TopK,
+};
 
 /// User-facing compressor selection (CLI / configs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,15 +1,24 @@
 //! Wire compressors over f32 payloads (Fig. 6).
 //!
 //! Top-K is the hot path (every cross-node message in the AdaTopK runs):
-//! a quickselect threshold (O(n), no sort) followed by a single gather
-//! pass — the same streaming-select shape as the L1 Pallas kernel.
+//! a radix-select threshold (O(n), no sort) followed by a gather pass —
+//! the same streaming-select shape as the L1 Pallas kernel. Both passes
+//! run on `compress_threads()` workers with per-thread partitions stitched
+//! in index order, so results are bit-identical for every thread count.
+//!
+//! Steady-state entry point is `Compressor::compress_with`, which reuses
+//! the caller's `Compressed` buffers and a per-link `CompressScratch` —
+//! zero heap allocation per message once warm (EXPERIMENTS.md §Perf). The
+//! allocating `compress` remains as a thin wrapper so every pre-existing
+//! test doubles as a differential oracle for the `_into` forms.
 
 use crate::opdag::data::CompressCfg;
-use crate::util::math::kth_largest_abs;
+use crate::util::math::{compress_threads, kth_largest_abs_with, SelectScratch, PAR_MIN};
 use crate::util::rng::Rng;
+use std::collections::HashSet;
 
 /// A sparse/quantized wire message.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Compressed {
     pub cfg: CompressCfg,
     pub values: Vec<f32>,
@@ -28,11 +37,80 @@ impl Compressed {
             CompressCfg::Int8 { .. } => self.bytes.len() as f64 + 4.0,
         }
     }
+
+    fn reset(&mut self, cfg: CompressCfg) {
+        self.cfg = cfg;
+        self.values.clear();
+        self.indices.clear();
+        self.bytes.clear();
+    }
+}
+
+/// One thread's stitch partition for the parallel gather: chunk-local
+/// strictly-above and at-threshold entries, concatenated in chunk (= index)
+/// order by the caller — deterministic for every thread count.
+#[derive(Debug, Default)]
+struct PartBuf {
+    values: Vec<f32>,
+    indices: Vec<u32>,
+    tie_values: Vec<f32>,
+    tie_indices: Vec<u32>,
+    /// Per-thread select scratch for the row-parallel ChunkedTopK path.
+    select: SelectScratch,
+}
+
+/// Reusable per-link scratch for `Compressor::compress_with`: radix-select
+/// buffers, per-thread gather partitions, and the Random-K sample set. One
+/// of these per link keeps the steady-state wire path allocation-free.
+#[derive(Debug)]
+pub struct CompressScratch {
+    threads: usize,
+    select: SelectScratch,
+    parts: Vec<PartBuf>,
+    sample: HashSet<u32>,
+}
+
+impl Default for CompressScratch {
+    fn default() -> Self {
+        CompressScratch::with_threads(compress_threads())
+    }
+}
+
+impl CompressScratch {
+    /// Scratch pinned to an explicit worker count (tests use 1/2/8 to prove
+    /// determinism; production uses `Default` = `compress_threads()`).
+    pub fn with_threads(threads: usize) -> Self {
+        CompressScratch {
+            threads: threads.max(1),
+            select: SelectScratch::default(),
+            parts: Vec::new(),
+            sample: HashSet::new(),
+        }
+    }
 }
 
 /// Compressor interface: compress a dense payload, decompress to dense.
+///
+/// `compress_with` is the steady-state form; `compress_into` and `compress`
+/// are provided wrappers (the latter is the differential oracle used by the
+/// seed tests).
 pub trait Compressor: Send + Sync {
-    fn compress(&self, data: &[f32]) -> Compressed;
+    /// Compress `data` into `out`, reusing its buffers and `scratch`.
+    fn compress_with(&self, data: &[f32], out: &mut Compressed, scratch: &mut CompressScratch);
+
+    /// Compress into `out`, reusing its buffers (fresh scratch).
+    fn compress_into(&self, data: &[f32], out: &mut Compressed) {
+        let mut scratch = CompressScratch::default();
+        self.compress_with(data, out, &mut scratch);
+    }
+
+    /// Allocating wrapper around `compress_into`.
+    fn compress(&self, data: &[f32]) -> Compressed {
+        let mut out = Compressed::default();
+        self.compress_into(data, &mut out);
+        out
+    }
+
     fn decompress(&self, c: &Compressed, out: &mut [f32]);
     fn name(&self) -> &'static str;
 }
@@ -42,13 +120,9 @@ pub trait Compressor: Send + Sync {
 pub struct NoCompress;
 
 impl Compressor for NoCompress {
-    fn compress(&self, data: &[f32]) -> Compressed {
-        Compressed {
-            cfg: CompressCfg::None,
-            values: data.to_vec(),
-            indices: Vec::new(),
-            bytes: Vec::new(),
-        }
+    fn compress_with(&self, data: &[f32], out: &mut Compressed, _scratch: &mut CompressScratch) {
+        out.reset(CompressCfg::None);
+        out.values.extend_from_slice(data);
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
@@ -68,53 +142,34 @@ pub struct TopK {
 
 impl TopK {
     pub fn k_for(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
         ((n as f64 / self.ratio).ceil() as usize).clamp(1, n)
     }
 }
 
 impl Compressor for TopK {
-    fn compress(&self, data: &[f32]) -> Compressed {
+    fn compress_with(&self, data: &[f32], out: &mut Compressed, scratch: &mut CompressScratch) {
         let n = data.len();
         let k = self.k_for(n);
-        let mut values = Vec::with_capacity(k);
-        let mut indices = Vec::with_capacity(k);
+        out.reset(CompressCfg::TopK { ratio: self.ratio, total_len: n as u32 });
         if k >= n {
-            values.extend_from_slice(data);
-            indices.extend(0..n as u32);
-        } else {
-            let tau = kth_largest_abs(data, k);
-            // First pass: strictly-above-threshold entries (always kept).
-            for (i, &v) in data.iter().enumerate() {
-                if v.abs() > tau {
-                    values.push(v);
-                    indices.push(i as u32);
-                }
-            }
-            // Second pass: fill remaining slots with at-threshold ties.
-            if values.len() < k {
-                for (i, &v) in data.iter().enumerate() {
-                    if v.abs() == tau {
-                        values.push(v);
-                        indices.push(i as u32);
-                        if values.len() == k {
-                            break;
-                        }
-                    }
-                }
-                // Keep indices sorted for cache-friendly decode.
-                let mut pairs: Vec<(u32, f32)> =
-                    indices.iter().copied().zip(values.iter().copied()).collect();
-                pairs.sort_unstable_by_key(|p| p.0);
-                indices = pairs.iter().map(|p| p.0).collect();
-                values = pairs.iter().map(|p| p.1).collect();
-            }
+            out.values.extend_from_slice(data);
+            out.indices.extend(0..n as u32);
+            return;
         }
-        Compressed {
-            cfg: CompressCfg::TopK { ratio: self.ratio, total_len: n as u32 },
-            values,
-            indices,
-            bytes: Vec::new(),
-        }
+        let threads = scratch.threads;
+        let tau = kth_largest_abs_with(data, k, threads, &mut scratch.select);
+        topk_gather(
+            data,
+            tau,
+            k,
+            threads,
+            &mut scratch.parts,
+            &mut out.values,
+            &mut out.indices,
+        );
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
@@ -129,11 +184,134 @@ impl Compressor for TopK {
     }
 }
 
+/// Gather the k top-|v| entries given threshold `tau`, index-sorted: every
+/// strictly-above entry plus the first at-threshold ties in index order.
+/// Parallel chunks stitch in index order, so the output is identical for
+/// every thread count (and to the sequential seed implementation).
+fn topk_gather(
+    data: &[f32],
+    tau: f32,
+    k: usize,
+    threads: usize,
+    parts: &mut Vec<PartBuf>,
+    values: &mut Vec<f32>,
+    indices: &mut Vec<u32>,
+) {
+    let n = data.len();
+    let threads = threads.max(1).min(n / PAR_MIN + 1);
+    if threads <= 1 {
+        gather_seq(data, tau, k, 0, values, indices);
+        return;
+    }
+    let chunk = (n + threads - 1) / threads;
+    let n_parts = data.chunks(chunk).len();
+    if parts.len() < n_parts {
+        parts.resize_with(n_parts, PartBuf::default);
+    }
+    std::thread::scope(|s| {
+        for (t, (slice, part)) in data.chunks(chunk).zip(parts.iter_mut()).enumerate() {
+            let base = (t * chunk) as u32;
+            s.spawn(move || {
+                part.values.clear();
+                part.indices.clear();
+                part.tie_values.clear();
+                part.tie_indices.clear();
+                for (i, &v) in slice.iter().enumerate() {
+                    let a = v.abs();
+                    if a > tau {
+                        part.values.push(v);
+                        part.indices.push(base + i as u32);
+                    } else if a == tau {
+                        part.tie_values.push(v);
+                        part.tie_indices.push(base + i as u32);
+                    }
+                }
+            });
+        }
+    });
+    let mut above = 0usize;
+    for part in parts.iter().take(n_parts) {
+        above += part.values.len();
+        values.extend_from_slice(&part.values);
+        indices.extend_from_slice(&part.indices);
+    }
+    let split = values.len();
+    let mut need = k.saturating_sub(above);
+    'ties: for part in parts.iter().take(n_parts) {
+        for (&i, &v) in part.tie_indices.iter().zip(&part.tie_values) {
+            if need == 0 {
+                break 'ties;
+            }
+            values.push(v);
+            indices.push(i);
+            need -= 1;
+        }
+    }
+    merge_tail_by_index(values, indices, split);
+}
+
+/// Sequential gather of the k top-|v| entries of one region: strictly-above
+/// pass, then at-threshold ties until k, then an index-order tail merge.
+/// Appends to (values, indices) with `base` added to every index. Shared by
+/// the single-thread whole-tensor path and the per-row ChunkedTopK path.
+fn gather_seq(
+    data: &[f32],
+    tau: f32,
+    k: usize,
+    base: u32,
+    values: &mut Vec<f32>,
+    indices: &mut Vec<u32>,
+) {
+    let start = values.len();
+    // First pass: strictly-above-threshold entries (always kept).
+    for (i, &v) in data.iter().enumerate() {
+        if v.abs() > tau {
+            values.push(v);
+            indices.push(base + i as u32);
+        }
+    }
+    let split = values.len() - start;
+    if split < k {
+        // Second pass: fill remaining slots with at-threshold ties.
+        for (i, &v) in data.iter().enumerate() {
+            if v.abs() == tau {
+                values.push(v);
+                indices.push(base + i as u32);
+                if values.len() - start == k {
+                    break;
+                }
+            }
+        }
+        // Keep indices sorted for cache-friendly decode.
+        merge_tail_by_index(&mut values[start..], &mut indices[start..], split);
+    }
+}
+
+/// Merge the two index-sorted runs `[..split]` and `[split..]` in place
+/// (the tail holds the threshold ties, which is almost always tiny, so
+/// binary-search + rotate beats re-sorting all k pairs).
+fn merge_tail_by_index(values: &mut [f32], indices: &mut [u32], split: usize) {
+    let len = indices.len();
+    if split == 0 || split == len || indices[split - 1] < indices[split] {
+        return;
+    }
+    let mut lo = 0usize;
+    for t in split..len {
+        let idx = indices[t];
+        let pos = lo + indices[lo..t].partition_point(|&x| x < idx);
+        indices[pos..=t].rotate_right(1);
+        values[pos..=t].rotate_right(1);
+        lo = pos + 1;
+    }
+}
+
 /// Row-chunked Top-K (Fig. 6 applied per vector): the payload is treated
 /// as rows of `chunk` elements (one token's feature vector) and Top-K is
 /// selected within each row, so every token keeps its strongest features.
 /// Whole-tensor Top-K concentrates the budget on a few high-norm tokens and
 /// zeroes the rest entirely — much worse for convergence (EXPERIMENTS.md).
+/// Rows are independent, so they parallelize across `compress_threads()`
+/// workers in contiguous row ranges (stitched in row order: deterministic).
 #[derive(Debug, Clone, Copy)]
 pub struct ChunkedTopK {
     pub ratio: f64,
@@ -141,24 +319,58 @@ pub struct ChunkedTopK {
 }
 
 impl Compressor for ChunkedTopK {
-    fn compress(&self, data: &[f32]) -> Compressed {
+    fn compress_with(&self, data: &[f32], out: &mut Compressed, scratch: &mut CompressScratch) {
         let n = data.len();
-        let inner = TopK { ratio: self.ratio };
-        let mut values = Vec::new();
-        let mut indices = Vec::new();
-        let mut off = 0usize;
-        while off < n {
-            let end = (off + self.chunk).min(n);
-            let c = inner.compress(&data[off..end]);
-            values.extend_from_slice(&c.values);
-            indices.extend(c.indices.iter().map(|&i| i + off as u32));
-            off = end;
+        out.reset(CompressCfg::TopK { ratio: self.ratio, total_len: n as u32 });
+        if n == 0 {
+            return;
         }
-        Compressed {
-            cfg: CompressCfg::TopK { ratio: self.ratio, total_len: n as u32 },
-            values,
-            indices,
-            bytes: Vec::new(),
+        let chunk = self.chunk.max(1);
+        let inner = TopK { ratio: self.ratio };
+        let n_rows = (n + chunk - 1) / chunk;
+        let threads = scratch.threads.min(n_rows).max(1);
+        if threads <= 1 || n < PAR_MIN {
+            compress_rows(
+                data,
+                chunk,
+                inner,
+                0,
+                n_rows,
+                &mut scratch.select,
+                &mut out.values,
+                &mut out.indices,
+            );
+            return;
+        }
+        let rows_per = (n_rows + threads - 1) / threads;
+        let active = (n_rows + rows_per - 1) / rows_per;
+        if scratch.parts.len() < active {
+            scratch.parts.resize_with(active, PartBuf::default);
+        }
+        let parts = &mut scratch.parts[..active];
+        std::thread::scope(|s| {
+            for (t, part) in parts.iter_mut().enumerate() {
+                let row0 = t * rows_per;
+                let row1 = ((t + 1) * rows_per).min(n_rows);
+                s.spawn(move || {
+                    part.values.clear();
+                    part.indices.clear();
+                    compress_rows(
+                        data,
+                        chunk,
+                        inner,
+                        row0,
+                        row1,
+                        &mut part.select,
+                        &mut part.values,
+                        &mut part.indices,
+                    );
+                });
+            }
+        });
+        for part in parts.iter() {
+            out.values.extend_from_slice(&part.values);
+            out.indices.extend_from_slice(&part.indices);
         }
     }
 
@@ -174,6 +386,33 @@ impl Compressor for ChunkedTopK {
     }
 }
 
+/// Sequentially compress rows `[row0, row1)` of the chunked layout,
+/// appending (values, indices) per row in index order.
+fn compress_rows(
+    data: &[f32],
+    chunk: usize,
+    inner: TopK,
+    row0: usize,
+    row1: usize,
+    select: &mut SelectScratch,
+    values: &mut Vec<f32>,
+    indices: &mut Vec<u32>,
+) {
+    for r in row0..row1 {
+        let off = r * chunk;
+        let end = (off + chunk).min(data.len());
+        let row = &data[off..end];
+        let k = inner.k_for(row.len());
+        if k >= row.len() {
+            values.extend_from_slice(row);
+            indices.extend((off as u32)..(end as u32));
+            continue;
+        }
+        let tau = kth_largest_abs_with(row, k, 1, select);
+        gather_seq(row, tau, k, off as u32, values, indices);
+    }
+}
+
 /// Random-K baseline: uniformly sampled support, deterministic by seed.
 #[derive(Debug, Clone, Copy)]
 pub struct RandomK {
@@ -182,29 +421,37 @@ pub struct RandomK {
 }
 
 impl Compressor for RandomK {
-    fn compress(&self, data: &[f32]) -> Compressed {
+    fn compress_with(&self, data: &[f32], out: &mut Compressed, scratch: &mut CompressScratch) {
         let n = data.len();
+        out.reset(CompressCfg::RandomK {
+            ratio: self.ratio,
+            total_len: n as u32,
+            seed: self.seed,
+        });
+        if n == 0 {
+            return;
+        }
         let k = ((n as f64 / self.ratio).ceil() as usize).clamp(1, n);
-        let mut rng = Rng::new(self.seed);
-        // Partial Fisher–Yates over indices: first k of a shuffle.
-        let mut idx: Vec<u32> = (0..n as u32).collect();
-        for i in 0..k {
-            let j = i + rng.below((n - i) as u64) as usize;
-            idx.swap(i, j);
+        if k >= n {
+            out.indices.extend(0..n as u32);
+        } else {
+            // Floyd's sampling: k distinct indices in O(k) time and memory.
+            // (The seed implementation materialized a full 0..n index vector
+            // per message — 7.8 MB of throwaway churn for a 19.66 MB payload.)
+            let mut rng = Rng::new(self.seed);
+            let set = &mut scratch.sample;
+            set.clear();
+            for j in (n - k)..n {
+                let t = rng.below((j + 1) as u64) as u32;
+                if !set.insert(t) {
+                    set.insert(j as u32);
+                }
+            }
+            out.indices.extend(set.iter().copied());
+            out.indices.sort_unstable();
         }
-        let mut indices: Vec<u32> = idx[..k].to_vec();
-        indices.sort_unstable();
-        let values = indices.iter().map(|&i| data[i as usize]).collect();
-        Compressed {
-            cfg: CompressCfg::RandomK {
-                ratio: self.ratio,
-                total_len: n as u32,
-                seed: self.seed,
-            },
-            values,
-            indices,
-            bytes: Vec::new(),
-        }
+        let (values, indices) = (&mut out.values, &out.indices);
+        values.extend(indices.iter().map(|&i| data[i as usize]));
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
@@ -224,19 +471,12 @@ impl Compressor for RandomK {
 pub struct Int8Quantizer;
 
 impl Compressor for Int8Quantizer {
-    fn compress(&self, data: &[f32]) -> Compressed {
+    fn compress_with(&self, data: &[f32], out: &mut Compressed, _scratch: &mut CompressScratch) {
         let absmax = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
         let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
-        let bytes = data
-            .iter()
-            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8 as u8)
-            .collect();
-        Compressed {
-            cfg: CompressCfg::Int8 { scale, total_len: data.len() as u32 },
-            values: Vec::new(),
-            indices: Vec::new(),
-            bytes,
-        }
+        out.reset(CompressCfg::Int8 { scale, total_len: data.len() as u32 });
+        out.bytes
+            .extend(data.iter().map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8 as u8));
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
@@ -338,7 +578,7 @@ mod tests {
     }
 
     #[test]
-    fn wire_bytes_ratio_is_3x_smaller_than_nominal() {
+    fn wire_bytes_ratio100_is_33x_smaller_than_dense() {
         // Paper Fig. 10 caption: ratio 100 gives 33.3× smaller payloads
         // (4B values + 8B indices per kept element = 12B vs 4B dense).
         let xs = data(10_000, 6);
@@ -361,6 +601,54 @@ mod tests {
             xs.iter().zip(out).map(|(a, b)| (a - b) * (a - b)).sum()
         };
         assert!(err(&out_t) < err(&out_r));
+    }
+
+    #[test]
+    fn compress_into_reuses_buffers_steady_state() {
+        // Zero per-message heap growth on the steady-state Top-K path:
+        // after warm-up, the Compressed buffer capacities must be stable
+        // across 100 messages of the same shape.
+        let comp = ChunkedTopK { ratio: 100.0, chunk: 256 };
+        let mut scratch = CompressScratch::with_threads(4);
+        let mut out = Compressed::default();
+        let mut rng = Rng::new(9);
+        let n = 64 * 1024;
+        let mut data = vec![0.0f32; n];
+        let mut caps = Vec::new();
+        for msg in 0..100 {
+            for v in data.iter_mut() {
+                *v = rng.f32() - 0.5;
+            }
+            comp.compress_with(&data, &mut out, &mut scratch);
+            assert_eq!(out.values.len(), (n / 256) * 3); // ceil(256/100) = 3 kept per row
+            if msg >= 2 {
+                caps.push((out.values.capacity(), out.indices.capacity()));
+            }
+        }
+        assert!(
+            caps.windows(2).all(|w| w[0] == w[1]),
+            "steady-state capacity drifted: {caps:?}"
+        );
+    }
+
+    #[test]
+    fn empty_payload_is_handled_by_all_compressors() {
+        let mut out = Compressed::default();
+        let comps: [&dyn Compressor; 5] = [
+            &NoCompress,
+            &TopK { ratio: 8.0 },
+            &ChunkedTopK { ratio: 8.0, chunk: 64 },
+            &RandomK { ratio: 8.0, seed: 3 },
+            &Int8Quantizer,
+        ];
+        for comp in comps {
+            comp.compress_into(&[], &mut out);
+            assert!(out.values.is_empty(), "{}", comp.name());
+            assert!(out.indices.is_empty(), "{}", comp.name());
+            assert!(out.bytes.is_empty(), "{}", comp.name());
+            let c = comp.compress(&[]);
+            comp.decompress(&c, &mut []);
+        }
     }
 }
 

@@ -2,9 +2,12 @@
 //! CompNodes (§3.4). Every attribute from the paper is carried; the wire
 //! format is a flat little-endian encoding handled by `encode`/`decode`
 //! (no serde offline, and the hot path wants zero-copy payload access
-//! anyway).
+//! anyway — see `OpDataView`).
 
 use crate::opdag::OpId;
+
+/// Wire-accounting bytes for the fixed header fields.
+pub const WIRE_HEADER_BYTES: f64 = 48.0;
 
 /// What the payload is (forward activation or backward gradient).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -15,9 +18,10 @@ pub enum OpDataKind {
 
 /// Compression metadata ("Compress_cfg", §3.4): algorithm, ratio and the
 /// hyper-parameters needed to decode.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub enum CompressCfg {
     /// Dense f32 payload.
+    #[default]
     None,
     /// Top-K sparsified: `values` + `indices` wire pair; `total_len` dense
     /// elements on decode. `ratio` is the user-facing compression ratio r.
@@ -28,9 +32,11 @@ pub enum CompressCfg {
     Int8 { scale: f32, total_len: u32 },
 }
 
-/// One message between operators / CompNodes.
-#[derive(Debug, Clone)]
-pub struct OpData {
+/// Header fields of one OP-Data message (everything but the payload).
+/// Lets the wire codecs encode straight from borrowed payload slices and
+/// decode without materializing the payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpDataHeader {
     /// Originating OP node ("Name").
     pub src_op: OpId,
     /// Consuming OP node ("OP users" — the concrete edge being served).
@@ -46,6 +52,19 @@ pub struct OpData {
     /// "Local_iter": training iteration for synchronization.
     pub local_iter: u32,
     /// "Micro_batch": microbatch index within the pipeline.
+    pub micro_batch: u32,
+}
+
+/// One message between operators / CompNodes.
+#[derive(Debug, Clone)]
+pub struct OpData {
+    pub src_op: OpId,
+    pub dst_op: OpId,
+    pub actual_user: OpId,
+    pub kind: OpDataKind,
+    pub is_loss: bool,
+    pub require_grad: bool,
+    pub local_iter: u32,
     pub micro_batch: u32,
     pub compress: CompressCfg,
     /// Payload: dense f32 values, or (values ++ indices-as-f32-bits) for
@@ -82,12 +101,24 @@ impl OpData {
         }
     }
 
+    fn header(&self) -> OpDataHeader {
+        OpDataHeader {
+            src_op: self.src_op,
+            dst_op: self.dst_op,
+            actual_user: self.actual_user,
+            kind: self.kind,
+            is_loss: self.is_loss,
+            require_grad: self.require_grad,
+            local_iter: self.local_iter,
+            micro_batch: self.micro_batch,
+        }
+    }
+
     /// Bytes this message occupies on the wire. The paper's accounting
     /// (Fig. 6): dense = 4·d; TopK/RandomK = 4·k values + 8·k indices
     /// (indices counted at int64 width like the paper's implementation,
     /// even though we store u32 in memory).
     pub fn wire_bytes(&self) -> f64 {
-        let header = 48.0; // fixed fields
         let body = match &self.compress {
             CompressCfg::None => 4.0 * self.payload.len() as f64,
             CompressCfg::TopK { .. } | CompressCfg::RandomK { .. } => {
@@ -95,62 +126,146 @@ impl OpData {
             }
             CompressCfg::Int8 { .. } => self.bytes_payload.len() as f64 + 4.0,
         };
-        header + body
+        WIRE_HEADER_BYTES + body
     }
 
-    /// Serialize to a flat byte buffer (little endian).
+    /// Serialize to a fresh flat byte buffer (little endian).
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(64 + self.payload.len() * 4);
-        let push_u32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
-        let push_u64 = |out: &mut Vec<u8>, v: u64| out.extend_from_slice(&v.to_le_bytes());
-        push_u64(&mut out, self.src_op as u64);
-        push_u64(&mut out, self.dst_op as u64);
-        push_u64(&mut out, self.actual_user as u64);
-        out.push(match self.kind {
-            OpDataKind::Activation => 0,
-            OpDataKind::Gradient => 1,
-        });
-        out.push(self.is_loss as u8);
-        out.push(self.require_grad as u8);
-        push_u32(&mut out, self.local_iter);
-        push_u32(&mut out, self.micro_batch);
-        // compress cfg
-        match &self.compress {
-            CompressCfg::None => {
-                out.push(0);
-            }
-            CompressCfg::TopK { ratio, total_len } => {
-                out.push(1);
-                out.extend_from_slice(&ratio.to_le_bytes());
-                push_u32(&mut out, *total_len);
-            }
-            CompressCfg::RandomK { ratio, total_len, seed } => {
-                out.push(2);
-                out.extend_from_slice(&ratio.to_le_bytes());
-                push_u32(&mut out, *total_len);
-                push_u64(&mut out, *seed);
-            }
-            CompressCfg::Int8 { scale, total_len } => {
-                out.push(3);
-                out.extend_from_slice(&scale.to_le_bytes());
-                push_u32(&mut out, *total_len);
-            }
-        }
-        push_u32(&mut out, self.payload.len() as u32);
-        for v in &self.payload {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
-        push_u32(&mut out, self.indices.len() as u32);
-        for v in &self.indices {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
-        push_u32(&mut out, self.bytes_payload.len() as u32);
-        out.extend_from_slice(&self.bytes_payload);
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
         out
+    }
+
+    /// Serialize into `out` (cleared first), reusing its capacity — the
+    /// steady-state wire path.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        encode_parts_into(
+            &self.header(),
+            &self.compress,
+            &self.payload,
+            &self.indices,
+            &self.bytes_payload,
+            out,
+        );
     }
 
     /// Decode a buffer produced by `encode`.
     pub fn decode(buf: &[u8]) -> anyhow::Result<OpData> {
+        Ok(OpDataView::parse(buf)?.to_opdata())
+    }
+}
+
+/// Encode one message from borrowed parts, appending to `out` (callers
+/// that reuse `out` clear it first). Payload/index slices are written with
+/// bulk little-endian copies — no per-element byte loop.
+pub fn encode_parts_into(
+    hdr: &OpDataHeader,
+    compress: &CompressCfg,
+    payload: &[f32],
+    indices: &[u32],
+    bytes_payload: &[u8],
+    out: &mut Vec<u8>,
+) {
+    out.reserve(64 + payload.len() * 4 + indices.len() * 4 + bytes_payload.len());
+    out.extend_from_slice(&(hdr.src_op as u64).to_le_bytes());
+    out.extend_from_slice(&(hdr.dst_op as u64).to_le_bytes());
+    out.extend_from_slice(&(hdr.actual_user as u64).to_le_bytes());
+    out.push(match hdr.kind {
+        OpDataKind::Activation => 0,
+        OpDataKind::Gradient => 1,
+    });
+    out.push(hdr.is_loss as u8);
+    out.push(hdr.require_grad as u8);
+    out.extend_from_slice(&hdr.local_iter.to_le_bytes());
+    out.extend_from_slice(&hdr.micro_batch.to_le_bytes());
+    match compress {
+        CompressCfg::None => {
+            out.push(0);
+        }
+        CompressCfg::TopK { ratio, total_len } => {
+            out.push(1);
+            out.extend_from_slice(&ratio.to_le_bytes());
+            out.extend_from_slice(&total_len.to_le_bytes());
+        }
+        CompressCfg::RandomK { ratio, total_len, seed } => {
+            out.push(2);
+            out.extend_from_slice(&ratio.to_le_bytes());
+            out.extend_from_slice(&total_len.to_le_bytes());
+            out.extend_from_slice(&seed.to_le_bytes());
+        }
+        CompressCfg::Int8 { scale, total_len } => {
+            out.push(3);
+            out.extend_from_slice(&scale.to_le_bytes());
+            out.extend_from_slice(&total_len.to_le_bytes());
+        }
+    }
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    extend_f32_le(out, payload);
+    out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+    extend_u32_le(out, indices);
+    out.extend_from_slice(&(bytes_payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(bytes_payload);
+}
+
+/// Bulk little-endian f32 append: on LE targets the in-memory layout IS the
+/// wire layout, so this is a single memcpy; elsewhere a vectorizable
+/// 4-byte-chunk loop.
+fn extend_f32_le(out: &mut Vec<u8>, xs: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: f32 has no padding and every bit pattern is valid to read
+        // as bytes; u8 has alignment 1; the slice lifetime is bounded by xs.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let start = out.len();
+        out.resize(start + xs.len() * 4, 0);
+        for (c, v) in out[start..].chunks_exact_mut(4).zip(xs) {
+            c.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Bulk little-endian u32 append (see `extend_f32_le`).
+fn extend_u32_le(out: &mut Vec<u8>, xs: &[u32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: as `extend_f32_le`.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let start = out.len();
+        out.resize(start + xs.len() * 4, 0);
+        for (c, v) in out[start..].chunks_exact_mut(4).zip(xs) {
+            c.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Zero-copy view of an encoded OP-Data buffer: the header is parsed, the
+/// payload/index/byte regions stay as borrowed little-endian slices of the
+/// input. The hot decode path scatters straight from the view without
+/// materializing `Vec`s; `to_opdata` is the compat path.
+#[derive(Debug, Clone)]
+pub struct OpDataView<'a> {
+    pub header: OpDataHeader,
+    pub compress: CompressCfg,
+    payload: &'a [u8],
+    indices: &'a [u8],
+    bytes_payload: &'a [u8],
+}
+
+impl<'a> OpDataView<'a> {
+    /// Parse the header and locate the payload regions. Errors on short or
+    /// trailing bytes exactly like `OpData::decode`.
+    pub fn parse(buf: &'a [u8]) -> anyhow::Result<OpDataView<'a>> {
         let mut r = Reader { b: buf, i: 0 };
         let src_op = r.u64()? as OpId;
         let dst_op = r.u64()? as OpId;
@@ -176,32 +291,85 @@ impl OpData {
             c => anyhow::bail!("bad compress tag {c}"),
         };
         let np = r.u32()? as usize;
-        let mut payload = Vec::with_capacity(np);
-        for _ in 0..np {
-            payload.push(r.f32()?);
-        }
+        let payload = r.bytes(
+            np.checked_mul(4).ok_or_else(|| anyhow::anyhow!("short OpData buffer"))?,
+        )?;
         let ni = r.u32()? as usize;
-        let mut indices = Vec::with_capacity(ni);
-        for _ in 0..ni {
-            indices.push(r.u32()?);
-        }
+        let indices = r.bytes(
+            ni.checked_mul(4).ok_or_else(|| anyhow::anyhow!("short OpData buffer"))?,
+        )?;
         let nb = r.u32()? as usize;
-        let bytes_payload = r.bytes(nb)?.to_vec();
+        let bytes_payload = r.bytes(nb)?;
         anyhow::ensure!(r.i == buf.len(), "trailing bytes in OpData");
-        Ok(OpData {
-            src_op,
-            dst_op,
-            actual_user,
-            kind,
-            is_loss,
-            require_grad,
-            local_iter,
-            micro_batch,
+        Ok(OpDataView {
+            header: OpDataHeader {
+                src_op,
+                dst_op,
+                actual_user,
+                kind,
+                is_loss,
+                require_grad,
+                local_iter,
+                micro_batch,
+            },
             compress,
             payload,
             indices,
             bytes_payload,
         })
+    }
+
+    pub fn payload_len(&self) -> usize {
+        self.payload.len() / 4
+    }
+
+    pub fn indices_len(&self) -> usize {
+        self.indices.len() / 4
+    }
+
+    /// Borrowed little-endian payload bytes (alignment-free).
+    pub fn payload_le_bytes(&self) -> &'a [u8] {
+        self.payload
+    }
+
+    /// Borrowed little-endian index bytes (alignment-free).
+    pub fn indices_le_bytes(&self) -> &'a [u8] {
+        self.indices
+    }
+
+    /// Borrowed int8 payload bytes.
+    pub fn bytes_payload(&self) -> &'a [u8] {
+        self.bytes_payload
+    }
+
+    /// Iterate payload values without materializing a `Vec` (the 4-byte
+    /// chunked reads compile to unaligned loads — no copy, no alignment
+    /// requirement on the buffer).
+    pub fn payload_iter(&self) -> impl Iterator<Item = f32> + 'a {
+        self.payload.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+    }
+
+    /// Iterate sparse indices without materializing a `Vec`.
+    pub fn indices_iter(&self) -> impl Iterator<Item = u32> + 'a {
+        self.indices.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+    }
+
+    /// Materialize an owned `OpData` (the compat/decode path).
+    pub fn to_opdata(&self) -> OpData {
+        OpData {
+            src_op: self.header.src_op,
+            dst_op: self.header.dst_op,
+            actual_user: self.header.actual_user,
+            kind: self.header.kind,
+            is_loss: self.header.is_loss,
+            require_grad: self.header.require_grad,
+            local_iter: self.header.local_iter,
+            micro_batch: self.header.micro_batch,
+            compress: self.compress.clone(),
+            payload: self.payload_iter().collect(),
+            indices: self.indices_iter().collect(),
+            bytes_payload: self.bytes_payload.to_vec(),
+        }
     }
 }
 
@@ -289,5 +457,38 @@ mod tests {
         let enc = d.encode();
         assert!(OpData::decode(&enc[..enc.len() - 3]).is_err());
         assert!(OpData::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer_and_matches_encode() {
+        let mut d = OpData::dense(9, 8, OpDataKind::Gradient, 2, 1, vec![1.5; 300]);
+        d.indices = (0..300).collect();
+        d.compress = CompressCfg::TopK { ratio: 4.0, total_len: 1200 };
+        let fresh = d.encode();
+        let mut reused = Vec::new();
+        d.encode_into(&mut reused);
+        assert_eq!(fresh, reused);
+        let cap = reused.capacity();
+        d.encode_into(&mut reused);
+        assert_eq!(fresh, reused);
+        assert_eq!(reused.capacity(), cap, "encode_into must reuse capacity");
+    }
+
+    #[test]
+    fn view_matches_owned_decode() {
+        let mut d = OpData::dense(5, 6, OpDataKind::Activation, 11, 3, vec![0.25, -4.0, 9.5]);
+        d.indices = vec![7, 8, 2_000_000];
+        d.compress = CompressCfg::RandomK { ratio: 12.0, total_len: 4_000_000, seed: 77 };
+        let enc = d.encode();
+        let v = OpDataView::parse(&enc).unwrap();
+        let od = OpData::decode(&enc).unwrap();
+        assert_eq!(v.header.src_op, od.src_op);
+        assert_eq!(v.header.micro_batch, od.micro_batch);
+        assert_eq!(v.compress, od.compress);
+        assert_eq!(v.payload_iter().collect::<Vec<_>>(), od.payload);
+        assert_eq!(v.indices_iter().collect::<Vec<_>>(), od.indices);
+        assert_eq!(v.bytes_payload(), &od.bytes_payload[..]);
+        assert_eq!(v.payload_len(), 3);
+        assert_eq!(v.indices_len(), 3);
     }
 }

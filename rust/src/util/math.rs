@@ -1,77 +1,272 @@
 //! Numeric helpers shared across the coordinator: radix/quick-select for
 //! Top-K thresholds, stable statistics, and unit formatting.
 
+use std::sync::OnceLock;
+
+/// IEEE-754 f32 magnitude mask: |x| is monotone in `bits & ABS_MASK`.
+const ABS_MASK: u32 = 0x7FFF_FFFF;
+
+/// Below this many elements the parallel paths (select AND gather — shared
+/// so the cutover is consistent) fall back to sequential scans: thread
+/// spawn/join overhead would dominate.
+pub(crate) const PAR_MIN: usize = 1 << 15;
+
+/// Worker-thread count for the wire hot path (compress + select). Reads
+/// `FUSIONLLM_COMPRESS_THREADS` once, else `available_parallelism` capped
+/// at 8 (stage workers already run one thread per pipeline stage, so the
+/// per-message fan-out stays bounded).
+pub fn compress_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("FUSIONLLM_COMPRESS_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+    })
+}
+
+/// Reusable buffers for `kth_largest_abs_with`: holding these per link makes
+/// the steady-state threshold computation allocation-free.
+#[derive(Debug, Default)]
+pub struct SelectScratch {
+    /// Magnitude bit patterns surviving the current radix prefix.
+    cand: Vec<u32>,
+    /// Spare buffer ping-ponged with `cand` during narrowing passes.
+    spare: Vec<u32>,
+    /// Per-thread stitch partitions for the parallel filter passes.
+    parts: Vec<Vec<u32>>,
+    /// Per-thread histograms for the parallel counting passes.
+    hists: Vec<[usize; 256]>,
+}
+
 /// k-th largest absolute value of `xs` (1-based k) — the wire-compression
 /// hot path (a threshold is computed for every cross-node message).
 ///
 /// Radix select over the f32 bit patterns: for non-negative floats the IEEE
 /// bit pattern is monotone in value, so |x| reduces to `bits & 0x7FFF_FFFF`
-/// and selection proceeds byte-by-byte over histograms — two streaming
-/// passes and a small tail sort, no swaps. ~16x faster than the quickselect
-/// it replaced (see EXPERIMENTS.md §Perf).
+/// and selection proceeds byte-by-byte over histograms — streaming passes
+/// and a small tail sort, no swaps. Histogram and filter passes run on
+/// `compress_threads()` worker threads; see `kth_largest_abs_threads` for
+/// the determinism contract.
 pub fn kth_largest_abs(xs: &[f32], k: usize) -> f32 {
+    let mut scratch = SelectScratch::default();
+    kth_largest_abs_with(xs, k, compress_threads(), &mut scratch)
+}
+
+/// `kth_largest_abs` with an explicit thread count. The result is
+/// bit-identical for every thread count: per-chunk histograms merge by
+/// exact integer addition and per-thread filter partitions are stitched in
+/// chunk (= index) order, so the candidate multiset never depends on the
+/// chunking.
+pub fn kth_largest_abs_threads(xs: &[f32], k: usize, threads: usize) -> f32 {
+    let mut scratch = SelectScratch::default();
+    kth_largest_abs_with(xs, k, threads, &mut scratch)
+}
+
+/// `kth_largest_abs_threads` with caller-owned scratch (allocation-free in
+/// steady state once the scratch has warmed up).
+pub fn kth_largest_abs_with(
+    xs: &[f32],
+    k: usize,
+    threads: usize,
+    scratch: &mut SelectScratch,
+) -> f32 {
     assert!(k >= 1 && k <= xs.len(), "k={k} len={}", xs.len());
     // Small inputs: sorting is simpler and faster.
     if xs.len() <= 512 {
-        let mut v: Vec<u32> = xs.iter().map(|x| x.to_bits() & 0x7FFF_FFFF).collect();
+        let v = &mut scratch.cand;
+        v.clear();
+        v.extend(xs.iter().map(|x| x.to_bits() & ABS_MASK));
         v.sort_unstable();
         return f32::from_bits(v[v.len() - k]);
     }
+    let threads = threads.max(1).min(xs.len() / PAR_MIN + 1);
 
     // Multi-level radix select over the 31-bit magnitude patterns: refine
     // one byte per level, narrowing the candidate set each time. Floats
     // cluster by exponent, so a single level can leave most of the data in
-    // one bucket — the recursion handles any distribution in O(n) total.
+    // one bucket — the later levels handle any distribution in O(n) total.
     let mut remaining = k;
-    let mut prefix: u32 = 0;
-    let mut prefix_mask: u32 = 0;
-    let mut cand: Vec<u32> = Vec::new(); // empty sentinel = "all of xs"
-    for shift in [24u32, 16, 8, 0] {
-        // Histogram of this level's byte among prefix-matching candidates.
-        let mut hist = [0usize; 256];
-        if cand.is_empty() {
-            for x in xs {
-                let b = x.to_bits() & 0x7FFF_FFFF;
-                hist[((b >> shift) & 0xFF) as usize] += 1;
-            }
-        } else {
-            for &b in &cand {
-                hist[((b >> shift) & 0xFF) as usize] += 1;
-            }
+    let hist = hist_f32(xs, 24, threads, &mut scratch.hists);
+    let bucket = take_bucket(&hist, &mut remaining);
+    let mut prefix: u32 = (bucket as u32) << 24;
+    let mut prefix_mask: u32 = 0xFF << 24;
+    filter_f32(xs, prefix, prefix_mask, threads, &mut scratch.parts, &mut scratch.cand);
+
+    for shift in [16u32, 8, 0] {
+        if scratch.cand.len() <= 2048 {
+            // Small tail: sort and index directly.
+            scratch.cand.sort_unstable();
+            return f32::from_bits(scratch.cand[scratch.cand.len() - remaining]);
         }
-        // Walk buckets from the top to locate the k-th largest.
-        let mut bucket = 255usize;
-        loop {
-            if hist[bucket] >= remaining {
-                break;
-            }
-            remaining -= hist[bucket];
-            if bucket == 0 {
-                break;
-            }
-            bucket -= 1;
-        }
+        let hist = hist_u32(&scratch.cand, shift, threads, &mut scratch.hists);
+        let bucket = take_bucket(&hist, &mut remaining);
         prefix |= (bucket as u32) << shift;
         prefix_mask |= 0xFFu32 << shift;
         if shift == 0 {
             break; // all 32 bits determined
         }
-        // Gather the next candidate set.
-        cand = if cand.is_empty() {
-            xs.iter()
-                .map(|x| x.to_bits() & 0x7FFF_FFFF)
-                .filter(|b| b & prefix_mask == prefix)
-                .collect()
-        } else {
-            cand.into_iter().filter(|b| b & prefix_mask == prefix).collect()
-        };
-        if cand.len() <= 2048 {
-            // Small tail: sort and index directly.
-            cand.sort_unstable();
-            return f32::from_bits(cand[cand.len() - remaining]);
-        }
+        filter_u32(
+            &scratch.cand,
+            prefix,
+            prefix_mask,
+            threads,
+            &mut scratch.parts,
+            &mut scratch.spare,
+        );
+        std::mem::swap(&mut scratch.cand, &mut scratch.spare);
     }
     f32::from_bits(prefix)
+}
+
+/// Walk buckets from the top to locate the one holding the k-th largest,
+/// consuming `remaining` along the way.
+fn take_bucket(hist: &[usize; 256], remaining: &mut usize) -> usize {
+    let mut bucket = 255usize;
+    loop {
+        if hist[bucket] >= *remaining {
+            return bucket;
+        }
+        *remaining -= hist[bucket];
+        if bucket == 0 {
+            return 0;
+        }
+        bucket -= 1;
+    }
+}
+
+fn hist_f32(xs: &[f32], shift: u32, threads: usize, hists: &mut Vec<[usize; 256]>) -> [usize; 256] {
+    let mut hist = [0usize; 256];
+    if threads <= 1 || xs.len() < PAR_MIN {
+        for x in xs {
+            let b = x.to_bits() & ABS_MASK;
+            hist[((b >> shift) & 0xFF) as usize] += 1;
+        }
+        return hist;
+    }
+    let chunk = (xs.len() + threads - 1) / threads;
+    let n_parts = xs.chunks(chunk).len();
+    if hists.len() < n_parts {
+        hists.resize(n_parts, [0usize; 256]);
+    }
+    std::thread::scope(|s| {
+        for (slice, h) in xs.chunks(chunk).zip(hists.iter_mut()) {
+            s.spawn(move || {
+                h.fill(0);
+                for x in slice {
+                    let b = x.to_bits() & ABS_MASK;
+                    h[((b >> shift) & 0xFF) as usize] += 1;
+                }
+            });
+        }
+    });
+    for h in hists.iter().take(n_parts) {
+        for (a, b) in hist.iter_mut().zip(h.iter()) {
+            *a += *b;
+        }
+    }
+    hist
+}
+
+fn hist_u32(bits: &[u32], shift: u32, threads: usize, hists: &mut Vec<[usize; 256]>) -> [usize; 256] {
+    let mut hist = [0usize; 256];
+    if threads <= 1 || bits.len() < PAR_MIN {
+        for &b in bits {
+            hist[((b >> shift) & 0xFF) as usize] += 1;
+        }
+        return hist;
+    }
+    let chunk = (bits.len() + threads - 1) / threads;
+    let n_parts = bits.chunks(chunk).len();
+    if hists.len() < n_parts {
+        hists.resize(n_parts, [0usize; 256]);
+    }
+    std::thread::scope(|s| {
+        for (slice, h) in bits.chunks(chunk).zip(hists.iter_mut()) {
+            s.spawn(move || {
+                h.fill(0);
+                for &b in slice {
+                    h[((b >> shift) & 0xFF) as usize] += 1;
+                }
+            });
+        }
+    });
+    for h in hists.iter().take(n_parts) {
+        for (a, b) in hist.iter_mut().zip(h.iter()) {
+            *a += *b;
+        }
+    }
+    hist
+}
+
+/// Filter the magnitude patterns of `xs` matching `prefix` under `mask`
+/// into `out`: per-thread partitions stitched in chunk order, so the output
+/// order equals the sequential scan's for every thread count.
+fn filter_f32(
+    xs: &[f32],
+    prefix: u32,
+    mask: u32,
+    threads: usize,
+    parts: &mut Vec<Vec<u32>>,
+    out: &mut Vec<u32>,
+) {
+    out.clear();
+    if threads <= 1 || xs.len() < PAR_MIN {
+        out.extend(xs.iter().map(|x| x.to_bits() & ABS_MASK).filter(|b| b & mask == prefix));
+        return;
+    }
+    let chunk = (xs.len() + threads - 1) / threads;
+    let n_parts = xs.chunks(chunk).len();
+    if parts.len() < n_parts {
+        parts.resize_with(n_parts, Vec::new);
+    }
+    std::thread::scope(|s| {
+        for (slice, part) in xs.chunks(chunk).zip(parts.iter_mut()) {
+            s.spawn(move || {
+                part.clear();
+                part.extend(
+                    slice.iter().map(|x| x.to_bits() & ABS_MASK).filter(|b| b & mask == prefix),
+                );
+            });
+        }
+    });
+    for part in parts.iter().take(n_parts) {
+        out.extend_from_slice(part);
+    }
+}
+
+/// `filter_f32` for an already-masked u32 candidate set.
+fn filter_u32(
+    bits: &[u32],
+    prefix: u32,
+    mask: u32,
+    threads: usize,
+    parts: &mut Vec<Vec<u32>>,
+    out: &mut Vec<u32>,
+) {
+    out.clear();
+    if threads <= 1 || bits.len() < PAR_MIN {
+        out.extend(bits.iter().copied().filter(|b| b & mask == prefix));
+        return;
+    }
+    let chunk = (bits.len() + threads - 1) / threads;
+    let n_parts = bits.chunks(chunk).len();
+    if parts.len() < n_parts {
+        parts.resize_with(n_parts, Vec::new);
+    }
+    std::thread::scope(|s| {
+        for (slice, part) in bits.chunks(chunk).zip(parts.iter_mut()) {
+            s.spawn(move || {
+                part.clear();
+                part.extend(slice.iter().copied().filter(|b| b & mask == prefix));
+            });
+        }
+    });
+    for part in parts.iter().take(n_parts) {
+        out.extend_from_slice(part);
+    }
 }
 
 /// Quickselect variant kept for the §Perf ablation and as a cross-check
@@ -267,6 +462,38 @@ mod tests {
         let xs = vec![2.0, -2.0, 2.0, 1.0, -1.0];
         assert_eq!(kth_largest_abs(&xs, 3), 2.0);
         assert_eq!(kth_largest_abs(&xs, 4), 1.0);
+    }
+
+    #[test]
+    fn kth_largest_parallel_is_deterministic_across_thread_counts() {
+        // The parallel radix select must return bit-identical thresholds
+        // for every worker count (chunked histograms merge exactly and
+        // filter partitions stitch in index order).
+        let mut rng = Rng::new(0x7EAD);
+        for &n in &[600usize, 4096, 100_000] {
+            let xs: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 3.0).collect();
+            for k in [1, 2, n / 100 + 1, n / 2, n] {
+                let t1 = kth_largest_abs_threads(&xs, k, 1);
+                let t2 = kth_largest_abs_threads(&xs, k, 2);
+                let t8 = kth_largest_abs_threads(&xs, k, 8);
+                assert_eq!(t1.to_bits(), t2.to_bits(), "n={n} k={k}");
+                assert_eq!(t1.to_bits(), t8.to_bits(), "n={n} k={k}");
+                assert_eq!(t1, kth_ref(&xs, k), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn kth_largest_scratch_reuse_matches_fresh() {
+        let mut rng = Rng::new(0x5C8A);
+        let mut scratch = SelectScratch::default();
+        for trial in 0..20 {
+            let n = 600 + rng.below(4000) as usize;
+            let xs: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 7.0).collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            let with = kth_largest_abs_with(&xs, k, 4, &mut scratch);
+            assert_eq!(with, kth_largest_abs(&xs, k), "trial {trial}");
+        }
     }
 
     #[test]

@@ -1,8 +1,22 @@
 //! Wire protocol between the driver and stage workers.
+//!
+//! The steady-state send path is `StageCodec` → `LinkEncoder`: one encoder
+//! per outgoing link owns the compression scratch and the compressed
+//! staging buffers, so each message costs exactly one allocation — the
+//! packet `Vec` that is moved into the channel. The receive path decodes
+//! through the zero-copy `OpDataView` straight into a caller-provided
+//! dense buffer. `encode_payload`/`decode_payload` remain as allocating
+//! wrappers (and differential oracles for the reusing forms).
 
 use crate::compress::sparsify::ChunkedTopK;
-use crate::compress::{CompressKind, Compressor, Int8Quantizer, NoCompress, RandomK};
-use crate::opdag::data::{CompressCfg, OpData, OpDataKind};
+use crate::compress::{
+    CompressKind, CompressPlan, CompressScratch, Compressed, Compressor, Int8Quantizer,
+    NoCompress, RandomK,
+};
+use crate::opdag::data::{
+    encode_parts_into, CompressCfg, OpData, OpDataHeader, OpDataKind, OpDataView,
+    WIRE_HEADER_BYTES,
+};
 
 /// Channel message. Activations/gradients travel as *encoded* OP-Data
 /// byte buffers (the socket wire format), everything else is control.
@@ -43,6 +57,110 @@ pub struct WorkerStats {
     pub flops: f64,
 }
 
+/// Per-link steady-state encoder: owns the compression scratch and the
+/// compressed staging buffers. Top-K variants select per feature row
+/// (`chunk` = d_model), per Fig. 6; ratios <= 1 fall back to dense.
+pub struct LinkEncoder {
+    kind: CompressKind,
+    ratio: f64,
+    chunk: usize,
+    comp: Compressed,
+    scratch: CompressScratch,
+}
+
+impl LinkEncoder {
+    pub fn new(kind: CompressKind, ratio: f64, chunk: usize) -> LinkEncoder {
+        LinkEncoder {
+            kind,
+            ratio,
+            chunk: chunk.max(1),
+            comp: Compressed::default(),
+            scratch: CompressScratch::default(),
+        }
+    }
+
+    /// Compress + encode one message. Returns the packet and its wire-byte
+    /// accounting (paper Fig. 6, including the fixed header).
+    pub fn encode(
+        &mut self,
+        src_op: usize,
+        dst_op: usize,
+        data_kind: OpDataKind,
+        iter: u32,
+        micro: u32,
+        dense: &[f32],
+    ) -> (Vec<u8>, f64) {
+        let effective = if self.ratio <= 1.0 { CompressKind::None } else { self.kind };
+        match effective {
+            CompressKind::None => {
+                NoCompress.compress_with(dense, &mut self.comp, &mut self.scratch)
+            }
+            CompressKind::TopK | CompressKind::AdaTopK => {
+                ChunkedTopK { ratio: self.ratio, chunk: self.chunk }.compress_with(
+                    dense,
+                    &mut self.comp,
+                    &mut self.scratch,
+                )
+            }
+            CompressKind::RandomK => RandomK {
+                ratio: self.ratio,
+                seed: (iter as u64) << 32 | micro as u64,
+            }
+            .compress_with(dense, &mut self.comp, &mut self.scratch),
+            CompressKind::Int8 => {
+                Int8Quantizer.compress_with(dense, &mut self.comp, &mut self.scratch)
+            }
+        }
+        let hdr = OpDataHeader {
+            src_op,
+            dst_op,
+            actual_user: dst_op,
+            kind: data_kind,
+            is_loss: false,
+            require_grad: data_kind == OpDataKind::Activation,
+            local_iter: iter,
+            micro_batch: micro,
+        };
+        let wire = WIRE_HEADER_BYTES + self.comp.wire_bytes();
+        let mut buf = Vec::new();
+        encode_parts_into(
+            &hdr,
+            &self.comp.cfg,
+            &self.comp.values,
+            &self.comp.indices,
+            &self.comp.bytes,
+            &mut buf,
+        );
+        (buf, wire)
+    }
+}
+
+/// Per-stage codec: one `LinkEncoder` per outgoing link. Ratios are keyed
+/// by the *receiving* device (Eq. 7) and gated by the plan's direction
+/// knob; built once by the broker, owned by the stage worker.
+pub struct StageCodec {
+    pub fwd: Option<LinkEncoder>,
+    pub bwd: Option<LinkEncoder>,
+}
+
+impl StageCodec {
+    pub fn from_plan(
+        plan: &CompressPlan,
+        next_device: Option<usize>,
+        prev_device: Option<usize>,
+        chunk: usize,
+    ) -> StageCodec {
+        StageCodec {
+            fwd: next_device.map(|d| {
+                LinkEncoder::new(plan.kind, plan.ratio_for_kind(d, OpDataKind::Activation), chunk)
+            }),
+            bwd: prev_device.map(|d| {
+                LinkEncoder::new(plan.kind, plan.ratio_for_kind(d, OpDataKind::Gradient), chunk)
+            }),
+        }
+    }
+}
+
 /// Build the compressor for one message given plan kind + effective ratio.
 /// Top-K variants select per feature row (`chunk` = d_model), per Fig. 6.
 pub fn compressor_for(
@@ -61,7 +179,8 @@ pub fn compressor_for(
     }
 }
 
-/// Compress + wrap a dense payload into an encoded OP-Data packet.
+/// Compress + wrap a dense payload into an encoded OP-Data packet
+/// (allocating wrapper over `LinkEncoder::encode`).
 #[allow(clippy::too_many_arguments)]
 pub fn encode_payload(
     kind: CompressKind,
@@ -74,43 +193,54 @@ pub fn encode_payload(
     micro: u32,
     dense: &[f32],
 ) -> (Vec<u8>, f64) {
-    let effective_kind = if ratio <= 1.0 { CompressKind::None } else { kind };
-    let comp =
-        compressor_for(effective_kind, ratio, chunk, (iter as u64) << 32 | micro as u64);
-    let c = comp.compress(dense);
-    let mut od = OpData::dense(src_op, dst_op, data_kind, iter, micro, Vec::new());
-    od.compress = c.cfg.clone();
-    od.payload = c.values;
-    od.indices = c.indices;
-    od.bytes_payload = c.bytes;
-    let wire = od.wire_bytes();
-    (od.encode(), wire)
+    LinkEncoder::new(kind, ratio, chunk).encode(src_op, dst_op, data_kind, iter, micro, dense)
 }
 
-/// Decode a packet and reconstruct the dense payload of length `n`.
-pub fn decode_payload(buf: &[u8], n: usize) -> anyhow::Result<(OpData, Vec<f32>)> {
-    let od = OpData::decode(buf)?;
-    let mut dense = vec![0.0f32; n];
-    match &od.compress {
+/// Decode a packet into a caller-provided dense buffer (its length is the
+/// expected dense element count), scattering straight from the zero-copy
+/// view — no intermediate payload/index `Vec`s. Returns the parsed header.
+pub fn decode_payload_into(buf: &[u8], dense: &mut [f32]) -> anyhow::Result<OpDataHeader> {
+    let v = OpDataView::parse(buf)?;
+    scatter_view(&v, dense)?;
+    Ok(v.header)
+}
+
+/// Scatter a parsed view into the dense buffer per its compression cfg.
+fn scatter_view(v: &OpDataView, dense: &mut [f32]) -> anyhow::Result<()> {
+    let n = dense.len();
+    match &v.compress {
         CompressCfg::None => {
-            anyhow::ensure!(od.payload.len() == n, "dense length mismatch");
-            dense.copy_from_slice(&od.payload);
+            anyhow::ensure!(v.payload_len() == n, "dense length mismatch");
+            for (d, x) in dense.iter_mut().zip(v.payload_iter()) {
+                *d = x;
+            }
         }
         CompressCfg::TopK { total_len, .. } | CompressCfg::RandomK { total_len, .. } => {
             anyhow::ensure!(*total_len as usize == n, "sparse length mismatch");
-            for (&i, &v) in od.indices.iter().zip(&od.payload) {
+            dense.fill(0.0);
+            for (i, x) in v.indices_iter().zip(v.payload_iter()) {
                 anyhow::ensure!((i as usize) < n, "index out of range");
-                dense[i as usize] = v;
+                dense[i as usize] = x;
             }
         }
         CompressCfg::Int8 { scale, total_len } => {
             anyhow::ensure!(*total_len as usize == n, "int8 length mismatch");
-            for (d, &b) in dense.iter_mut().zip(&od.bytes_payload) {
+            dense.fill(0.0);
+            for (d, &b) in dense.iter_mut().zip(v.bytes_payload()) {
                 *d = (b as i8) as f32 * scale;
             }
         }
     }
-    Ok((od, dense))
+    Ok(())
+}
+
+/// Decode a packet and reconstruct the dense payload of length `n`
+/// (allocating wrapper; parses the buffer once).
+pub fn decode_payload(buf: &[u8], n: usize) -> anyhow::Result<(OpData, Vec<f32>)> {
+    let v = OpDataView::parse(buf)?;
+    let mut dense = vec![0.0f32; n];
+    scatter_view(&v, &mut dense)?;
+    Ok((v.to_opdata(), dense))
 }
 
 #[cfg(test)]
@@ -171,5 +301,39 @@ mod tests {
         let (buf, _) =
             encode_payload(CompressKind::None, 1.0, 0, 0, 1, OpDataKind::Activation, 0, 0, &dense);
         assert!(decode_payload(&buf, 9).is_err());
+    }
+
+    #[test]
+    fn link_encoder_reuse_matches_oneshot() {
+        // A reused LinkEncoder must produce byte-identical packets to the
+        // allocating wrapper, message after message.
+        let mut rng = Rng::new(44);
+        let mut enc = LinkEncoder::new(CompressKind::TopK, 20.0, 128);
+        for iter in 0..5u32 {
+            let dense: Vec<f32> = (0..640).map(|_| rng.f32() - 0.5).collect();
+            let (reused, w1) = enc.encode(1, 2, OpDataKind::Gradient, iter, 0, &dense);
+            let (oneshot, w2) =
+                encode_payload(CompressKind::TopK, 20.0, 128, 1, 2, OpDataKind::Gradient, iter, 0, &dense);
+            assert_eq!(reused, oneshot, "iter {iter}");
+            assert_eq!(w1, w2);
+        }
+    }
+
+    #[test]
+    fn decode_into_matches_decode_payload() {
+        let mut rng = Rng::new(45);
+        let dense: Vec<f32> = (0..512).map(|_| rng.f32() - 0.5).collect();
+        for kind in [CompressKind::None, CompressKind::TopK, CompressKind::RandomK, CompressKind::Int8] {
+            let ratio = if kind == CompressKind::None { 1.0 } else { 8.0 };
+            let (buf, _) =
+                encode_payload(kind, ratio, 64, 3, 4, OpDataKind::Activation, 7, 2, &dense);
+            let (od, want) = decode_payload(&buf, 512).unwrap();
+            let mut got = vec![f32::NAN; 512]; // poisoned: decode must overwrite
+            let hdr = decode_payload_into(&buf, &mut got).unwrap();
+            assert_eq!(got, want, "{kind:?}");
+            assert_eq!(hdr.src_op, od.src_op);
+            assert_eq!(hdr.local_iter, od.local_iter);
+            assert_eq!(hdr.micro_batch, od.micro_batch);
+        }
     }
 }

@@ -10,5 +10,7 @@
 pub mod messages;
 pub mod stage;
 
-pub use messages::{decode_payload, Wire, WorkerStats};
+pub use messages::{
+    decode_payload, decode_payload_into, LinkEncoder, StageCodec, Wire, WorkerStats,
+};
 pub use stage::{spawn_stage, StageCtx};

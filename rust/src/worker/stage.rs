@@ -9,8 +9,7 @@
 //! (head_fwd_loss) and replays the stored dx in reverse order during the
 //! bwd phase — a GPipe flush.
 
-use super::messages::{decode_payload, encode_payload, Wire, WorkerStats};
-use crate::compress::{CompressKind, CompressPlan};
+use super::messages::{decode_payload_into, StageCodec, Wire, WorkerStats};
 use crate::opdag::data::OpDataKind;
 use crate::runtime::{Manifest, Runtime, StageKind};
 use std::sync::mpsc::{Receiver, Sender};
@@ -27,7 +26,9 @@ pub struct StageCtx {
     /// CompNode id of the previous stage (dst of our bwd messages).
     pub prev_device: Option<usize>,
     pub manifest: Manifest,
-    pub plan: CompressPlan,
+    /// Per-link wire codecs (compression scratch + staging buffers), built
+    /// by the broker from the `CompressPlan`.
+    pub codec: StageCodec,
     pub iters: usize,
     pub n_micro: usize,
     pub lr: f32,
@@ -104,21 +105,10 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
         ..Default::default()
     };
 
-    // Effective compression ratios for the links we SEND on (ratio is
-    // keyed by the receiving device, Eq. 7), gated by the direction knob.
-    use crate::compress::adatopk::CompressDirection;
-    let dir = ctx.plan.direction;
-    let fwd_ratio = if dir == CompressDirection::BwdOnly {
-        1.0
-    } else {
-        ctx.next_device.map(|d| ctx.plan.ratio_for(d)).unwrap_or(1.0)
-    };
-    let bwd_ratio = if dir == CompressDirection::FwdOnly {
-        1.0
-    } else {
-        ctx.prev_device.map(|d| ctx.plan.ratio_for(d)).unwrap_or(1.0)
-    };
-    let kind = ctx.plan.kind;
+    // Reusable decode buffers: `recycle` feeds the activation stash (bufs
+    // return on the backward pass), `grad_buf` holds transient gradients.
+    let mut recycle: Vec<Vec<f32>> = Vec::new();
+    let mut grad_buf = vec![0.0f32; act_n];
 
     for iter in 0..ctx.iters as u32 {
         // ---------------- forward phase ----------------
@@ -150,7 +140,7 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                     stats.fwd_s += t0.elapsed().as_secs_f64();
                     let y = Runtime::to_f32_vec(&out[0])?;
                     stash_tokens.push(tokens);
-                    send_act(&mut ctx, &mut stats, kind, fwd_ratio, iter, micro, &y)?;
+                    send_act(&mut ctx, &mut stats, iter, micro, &y)?;
                 }
                 StageKind::Body => {
                     let msg = ctx.rx_fwd.recv()?;
@@ -160,7 +150,9 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                         Wire::Stop => return finish(&ctx, stats),
                         other => anyhow::bail!("body: unexpected {other:?}"),
                     };
-                    let (_od, x) = decode_payload(&buf, act_n)?;
+                    let mut x = recycle.pop().unwrap_or_default();
+                    x.resize(act_n, 0.0);
+                    decode_payload_into(&buf, &mut x)?;
                     let t0 = Instant::now();
                     let out = rt.exec(
                         "body_fwd",
@@ -172,7 +164,7 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                     stats.fwd_s += t0.elapsed().as_secs_f64();
                     let y = Runtime::to_f32_vec(&out[0])?;
                     stash_acts.push(x);
-                    send_act(&mut ctx, &mut stats, kind, fwd_ratio, iter, micro, &y)?;
+                    send_act(&mut ctx, &mut stats, iter, micro, &y)?;
                 }
                 StageKind::Head => {
                     // Labels first (driver sends them eagerly), then act.
@@ -187,7 +179,9 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                         other => anyhow::bail!("head: unexpected {other:?}"),
                     };
                     stats.wait_s += t_wait.elapsed().as_secs_f64();
-                    let (_od, x) = decode_payload(&buf, act_n)?;
+                    let mut x = recycle.pop().unwrap_or_default();
+                    x.resize(act_n, 0.0);
+                    decode_payload_into(&buf, &mut x)?;
                     let t0 = Instant::now();
                     let out = rt.exec(
                         "head_fwd_loss",
@@ -197,6 +191,7 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                             Runtime::i32_tensor(&labels, &tok_dims)?,
                         ],
                     )?;
+                    recycle.push(x);
                     stats.fwd_s += t0.elapsed().as_secs_f64();
                     let loss = Runtime::to_f32_scalar(&out[0])?;
                     let dx = Runtime::to_f32_vec(&out[1])?;
@@ -214,7 +209,7 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                 StageKind::Head => {
                     // Replay stored dx (GPipe flush).
                     let dx = stash_dx.pop().expect("head dx stash");
-                    send_grad(&mut ctx, &mut stats, kind, bwd_ratio, iter, micro, &dx)?;
+                    send_grad(&mut ctx, &mut stats, iter, micro, &dx)?;
                 }
                 StageKind::Body => {
                     let t_wait = Instant::now();
@@ -224,7 +219,7 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                         other => anyhow::bail!("body bwd: unexpected {other:?}"),
                     };
                     stats.wait_s += t_wait.elapsed().as_secs_f64();
-                    let (_od, dy) = decode_payload(&buf, act_n)?;
+                    decode_payload_into(&buf, &mut grad_buf)?;
                     let x = stash_acts.pop().expect("body act stash");
                     let t0 = Instant::now();
                     let out = rt.exec(
@@ -232,14 +227,15 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                         &[
                             Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
                             Runtime::f32_tensor(&x, &act_dims)?,
-                            Runtime::f32_tensor(&dy, &act_dims)?,
+                            Runtime::f32_tensor(&grad_buf, &act_dims)?,
                         ],
                     )?;
                     stats.bwd_s += t0.elapsed().as_secs_f64();
+                    recycle.push(x);
                     let dx = Runtime::to_f32_vec(&out[0])?;
                     let dp = Runtime::to_f32_vec(&out[1])?;
                     axpy_acc(&mut grad_acc, &dp);
-                    send_grad(&mut ctx, &mut stats, kind, bwd_ratio, iter, micro, &dx)?;
+                    send_grad(&mut ctx, &mut stats, iter, micro, &dx)?;
                 }
                 StageKind::Embed => {
                     let t_wait = Instant::now();
@@ -249,7 +245,7 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                         other => anyhow::bail!("embed bwd: unexpected {other:?}"),
                     };
                     stats.wait_s += t_wait.elapsed().as_secs_f64();
-                    let (_od, dx) = decode_payload(&buf, act_n)?;
+                    decode_payload_into(&buf, &mut grad_buf)?;
                     let tokens = stash_tokens.pop().expect("embed token stash");
                     let t0 = Instant::now();
                     let out = rt.exec(
@@ -257,7 +253,7 @@ fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
                         &[
                             Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
                             Runtime::i32_tensor(&tokens, &tok_dims)?,
-                            Runtime::f32_tensor(&dx, &act_dims)?,
+                            Runtime::f32_tensor(&grad_buf, &act_dims)?,
                         ],
                     )?;
                     stats.bwd_s += t0.elapsed().as_secs_f64();
@@ -317,17 +313,12 @@ fn finish(ctx: &StageCtx, stats: WorkerStats) -> anyhow::Result<()> {
 fn send_act(
     ctx: &mut StageCtx,
     stats: &mut WorkerStats,
-    kind: CompressKind,
-    ratio: f64,
     iter: u32,
     micro: u32,
     dense: &[f32],
 ) -> anyhow::Result<()> {
-    if let Some(tx) = &ctx.tx_fwd {
-        let (buf, wire) = encode_payload(
-            kind,
-            ratio,
-            ctx.manifest.config.d_model,
+    if let (Some(tx), Some(enc)) = (&ctx.tx_fwd, ctx.codec.fwd.as_mut()) {
+        let (buf, wire) = enc.encode(
             ctx.stage,
             ctx.stage + 1,
             OpDataKind::Activation,
@@ -345,17 +336,12 @@ fn send_act(
 fn send_grad(
     ctx: &mut StageCtx,
     stats: &mut WorkerStats,
-    kind: CompressKind,
-    ratio: f64,
     iter: u32,
     micro: u32,
     dense: &[f32],
 ) -> anyhow::Result<()> {
-    if let Some(tx) = &ctx.tx_bwd {
-        let (buf, wire) = encode_payload(
-            kind,
-            ratio,
-            ctx.manifest.config.d_model,
+    if let (Some(tx), Some(enc)) = (&ctx.tx_bwd, ctx.codec.bwd.as_mut()) {
+        let (buf, wire) = enc.encode(
             ctx.stage,
             ctx.stage - 1,
             OpDataKind::Gradient,

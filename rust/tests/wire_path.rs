@@ -1,0 +1,215 @@
+//! Differential property tests for the allocation-free, multi-core wire
+//! path (proptest-lite style: seeded generators + many trials).
+//!
+//! Invariants defended:
+//!   * `compress_into` ≡ `compress` for every compressor and payload shape
+//!     (0, 1, ragged chunks, all-duplicates, >512-element radix path)
+//!   * the parallel radix select + gather is bit-identical across thread
+//!     counts 1/2/8 (per-thread partitions stitch in index order)
+//!   * `encode_into` ≡ `encode`, and `OpDataView` ≡ `OpData::decode`
+//!   * `LinkEncoder` (steady-state, scratch-reusing) ≡ `encode_payload`
+
+use fusionllm::compress::{
+    ChunkedTopK, CompressKind, CompressScratch, Compressed, Compressor, Int8Quantizer,
+    NoCompress, RandomK, TopK,
+};
+use fusionllm::opdag::data::{CompressCfg, OpData, OpDataKind, OpDataView};
+use fusionllm::util::math::kth_largest_abs_threads;
+use fusionllm::util::rng::Rng;
+use fusionllm::worker::{decode_payload, decode_payload_into, LinkEncoder};
+
+/// Payload shapes covering every special case in the select/gather paths.
+fn payload_shapes(rng: &mut Rng) -> Vec<Vec<f32>> {
+    let mut shapes: Vec<Vec<f32>> = vec![
+        vec![],                  // empty
+        vec![0.25],              // single element
+        vec![1.0; 100],          // small, all duplicates
+        vec![-2.5; 4096],        // all duplicates, radix path
+        (0..150).map(|_| rng.f32() - 0.5).collect(), // ragged vs chunk=64
+        (0..511).map(|_| rng.f32() - 0.5).collect(), // sort-path boundary
+        (0..513).map(|_| rng.f32() - 0.5).collect(), // radix-path boundary
+        (0..5000).map(|_| (rng.f32() - 0.5) * 1e-3).collect(), // tight exponents
+        (0..100_000).map(|_| rng.f32() - 0.5).collect(), // parallel path
+    ];
+    // Plateau + spikes: strictly-above entries AND many threshold ties, so
+    // the tie-merge path runs under the parallel gather.
+    let mixed: Vec<f32> = (0..40_000)
+        .map(|i| match i % 10 {
+            0 => 5.0 + rng.f32(),
+            1 => 1.0,
+            _ => rng.f32() * 0.9,
+        })
+        .collect();
+    shapes.push(mixed);
+    shapes
+}
+
+fn assert_compressed_eq(a: &Compressed, b: &Compressed, ctx: &str) {
+    assert_eq!(a.cfg, b.cfg, "{ctx}: cfg");
+    assert_eq!(a.values, b.values, "{ctx}: values");
+    assert_eq!(a.indices, b.indices, "{ctx}: indices");
+    assert_eq!(a.bytes, b.bytes, "{ctx}: bytes");
+}
+
+#[test]
+fn prop_compress_into_equals_compress_for_all_impls() {
+    let mut rng = Rng::new(0x1A70);
+    let comps: [&dyn Compressor; 7] = [
+        &NoCompress,
+        &TopK { ratio: 100.0 },
+        &TopK { ratio: 3.0 },
+        &ChunkedTopK { ratio: 8.0, chunk: 64 },
+        &ChunkedTopK { ratio: 100.0, chunk: 1600 },
+        &RandomK { ratio: 50.0, seed: 7 },
+        &Int8Quantizer,
+    ];
+    for data in payload_shapes(&mut rng) {
+        for comp in comps {
+            let oracle = comp.compress(&data);
+            let mut into = Compressed::default();
+            comp.compress_into(&data, &mut into);
+            let ctx = format!("{} n={}", comp.name(), data.len());
+            assert_compressed_eq(&oracle, &into, &ctx);
+            // Reuse the same output + scratch for a second pass: identical.
+            let mut scratch = CompressScratch::default();
+            comp.compress_with(&data, &mut into, &mut scratch);
+            comp.compress_with(&data, &mut into, &mut scratch);
+            assert_compressed_eq(&oracle, &into, &format!("{ctx} (reused)"));
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_compress_deterministic_across_thread_counts() {
+    let mut rng = Rng::new(0xDE7E);
+    for data in payload_shapes(&mut rng) {
+        if data.is_empty() {
+            continue;
+        }
+        for ratio in [3.0, 100.0] {
+            // Threshold is bit-identical for 1/2/8 worker threads...
+            let topk = TopK { ratio };
+            let k = topk.k_for(data.len());
+            let t1 = kth_largest_abs_threads(&data, k, 1);
+            let t2 = kth_largest_abs_threads(&data, k, 2);
+            let t8 = kth_largest_abs_threads(&data, k, 8);
+            assert_eq!(t1.to_bits(), t2.to_bits(), "n={} r={ratio}", data.len());
+            assert_eq!(t1.to_bits(), t8.to_bits(), "n={} r={ratio}", data.len());
+            // ...and so is the full compressed (values, indices) pair.
+            for comp in [
+                &ChunkedTopK { ratio, chunk: 1600 } as &dyn Compressor,
+                &topk as &dyn Compressor,
+            ] {
+                let mut base = Compressed::default();
+                comp.compress_with(&data, &mut base, &mut CompressScratch::with_threads(1));
+                for threads in [2usize, 8] {
+                    let mut out = Compressed::default();
+                    comp.compress_with(
+                        &data,
+                        &mut out,
+                        &mut CompressScratch::with_threads(threads),
+                    );
+                    let ctx =
+                        format!("{} n={} r={ratio} threads={threads}", comp.name(), data.len());
+                    assert_compressed_eq(&base, &out, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_encode_into_equals_encode_and_view_equals_decode() {
+    let mut rng = Rng::new(0xE2C0);
+    let mut reused = Vec::new();
+    for trial in 0..200 {
+        let np = match trial % 4 {
+            0 => 0,
+            1 => 1,
+            _ => rng.below(3000) as usize,
+        };
+        let ni = if trial % 3 == 0 { np } else { rng.below(500) as usize };
+        let nb = rng.below(300) as usize;
+        let mut od = OpData::dense(
+            rng.below(1000) as usize,
+            rng.below(1000) as usize,
+            if rng.f64() < 0.5 { OpDataKind::Activation } else { OpDataKind::Gradient },
+            rng.below(u32::MAX as u64) as u32,
+            rng.below(64) as u32,
+            (0..np).map(|_| rng.f32() - 0.5).collect(),
+        );
+        od.indices = (0..ni).map(|_| rng.below(1 << 20) as u32).collect();
+        od.bytes_payload = (0..nb).map(|_| rng.below(256) as u8).collect();
+        od.is_loss = rng.f64() < 0.5;
+        od.compress = match trial % 4 {
+            0 => CompressCfg::None,
+            1 => CompressCfg::TopK { ratio: rng.f64() * 100.0, total_len: 1 << 20 },
+            2 => CompressCfg::RandomK {
+                ratio: rng.f64() * 100.0,
+                total_len: 1 << 20,
+                seed: rng.next_u64(),
+            },
+            _ => CompressCfg::Int8 { scale: rng.f32(), total_len: nb as u32 },
+        };
+
+        // encode_into (reused buffer) must be byte-identical to encode.
+        let fresh = od.encode();
+        od.encode_into(&mut reused);
+        assert_eq!(fresh, reused, "trial {trial}");
+
+        // The zero-copy view must agree with the owned decode.
+        let v = OpDataView::parse(&fresh).unwrap();
+        let back = OpData::decode(&fresh).unwrap();
+        assert_eq!(v.header.src_op, back.src_op, "trial {trial}");
+        assert_eq!(v.header.dst_op, back.dst_op);
+        assert_eq!(v.header.actual_user, back.actual_user);
+        assert_eq!(v.header.kind, back.kind);
+        assert_eq!(v.header.is_loss, back.is_loss);
+        assert_eq!(v.header.require_grad, back.require_grad);
+        assert_eq!(v.header.local_iter, back.local_iter);
+        assert_eq!(v.header.micro_batch, back.micro_batch);
+        assert_eq!(v.compress, back.compress);
+        assert_eq!(v.payload_iter().collect::<Vec<_>>(), back.payload);
+        assert_eq!(v.indices_iter().collect::<Vec<_>>(), back.indices);
+        assert_eq!(v.bytes_payload(), &back.bytes_payload[..]);
+    }
+}
+
+#[test]
+fn link_encoder_steady_state_equals_oneshot_wrappers() {
+    let mut rng = Rng::new(0x11C0);
+    let n = 4 * 1600; // 4 feature rows
+    let kinds = [
+        (CompressKind::TopK, 100.0),
+        (CompressKind::AdaTopK, 20.0),
+        (CompressKind::RandomK, 50.0),
+        (CompressKind::Int8, 4.0),
+        (CompressKind::None, 1.0),
+    ];
+    for (kind, ratio) in kinds {
+        let mut enc = LinkEncoder::new(kind, ratio, 1600);
+        for iter in 0..20u32 {
+            let dense: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let (packet, wire) =
+                enc.encode(3, 4, OpDataKind::Activation, iter, iter % 4, &dense);
+            let (oneshot, wire2) = fusionllm::worker::messages::encode_payload(
+                kind,
+                ratio,
+                1600,
+                3,
+                4,
+                OpDataKind::Activation,
+                iter,
+                iter % 4,
+                &dense,
+            );
+            assert_eq!(packet, oneshot, "{kind:?} iter {iter}");
+            assert_eq!(wire, wire2);
+            // And the zero-copy decode reproduces the allocating decode.
+            let (_od, want) = decode_payload(&packet, n).unwrap();
+            let mut got = vec![f32::NAN; n];
+            decode_payload_into(&packet, &mut got).unwrap();
+            assert_eq!(got, want, "{kind:?} iter {iter}");
+        }
+    }
+}
