@@ -8,7 +8,7 @@ Stage plan: stage 0 = embedding, stages 1..S-2 = transformer-block stages
 (n_layers split evenly), stage S-1 = LM head (+final LN + loss).
 """
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -1,10 +1,8 @@
 """L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
 hypothesis-swept over shapes and value scales."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

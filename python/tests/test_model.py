@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from compile import model
-from compile.configs import CONFIGS, ModelConfig
+from compile.configs import CONFIGS
 from compile.kernels import ref
 
 CFG = CONFIGS["tiny"]

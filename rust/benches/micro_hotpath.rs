@@ -3,6 +3,9 @@
 //!
 //!   * Top-K wire compression of a GPT2-XL-sized activation (19.66 MB),
 //!     both the allocating API and the steady-state `compress_into` path
+//!   * int8 quantize/dequantize of the same payload, and the combined
+//!     int8+Top-K path (select + quantize + per-row scales) — the ~5
+//!     B/kept-value wire encoding
 //!   * OP-Data encode/decode round trip (bulk codec + zero-copy view)
 //!   * discrete-event iteration simulation (48 devices)
 //!   * Louvain + OP-Fence scheduling (48 devices)
@@ -12,7 +15,8 @@
 //! the perf trajectory is tracked across PRs (EXPERIMENTS.md §Perf).
 
 use fusionllm::compress::{
-    CompressPlan, CompressScratch, Compressed, Compressor, TopK,
+    ChunkedTopK, CompressPlan, CompressScratch, Compressed, Compressor, Int8Quantizer,
+    Quantized, TopK,
 };
 use fusionllm::cluster::testbed;
 use fusionllm::opdag::builders::{transformer_chain, TransformerSpec};
@@ -59,6 +63,41 @@ fn main() {
     let mut dense = vec![0.0f32; act.len()];
     let r = bench("topk decompress", 2, 10, || {
         topk.decompress(&c, &mut dense);
+        dense[0]
+    });
+    run(r, act_bytes);
+
+    // int8 value codec: dense quantize/dequantize, then the combined
+    // int8+Top-K path the LinkEncoder runs under `--wire-codec int8`
+    // (ChunkedTopK select + per-row scale quantization, ~5 B/kept value).
+    let r = bench("int8 quantize 19.66MB (dense)", 2, 10, || {
+        Int8Quantizer.compress_with(&act, &mut comp, &mut scratch);
+        comp.bytes.len()
+    });
+    run(r, act_bytes);
+
+    let cq = Int8Quantizer.compress(&act);
+    let r = bench("int8 dequantize 19.66MB", 2, 10, || {
+        Int8Quantizer.decompress(&cq, &mut dense);
+        dense[0]
+    });
+    run(r, act_bytes);
+
+    let combined = Quantized::per_row(ChunkedTopK { ratio: 100.0, chunk: 1600 }, 1600);
+    let r = bench("int8+topk compress_into (combined)", 2, 10, || {
+        combined.compress_with(&act, &mut comp, &mut scratch);
+        comp.bytes.len()
+    });
+    run(r, act_bytes);
+
+    let cc = combined.compress(&act);
+    println!(
+        "{:<40} {:>9.2} B/value",
+        "  -> combined encoded payload",
+        cc.wire_bytes() / cc.indices.len() as f64
+    );
+    let r = bench("int8+topk decompress (combined)", 2, 10, || {
+        combined.decompress(&cc, &mut dense);
         dense[0]
     });
     run(r, act_bytes);

@@ -2,7 +2,7 @@
 //! testbed, which scheduler/compressor, and the training hyper-parameters.
 
 use crate::compress::adatopk::CompressDirection;
-use crate::compress::CompressKind;
+use crate::compress::{CompressKind, ValueCodec};
 use crate::util::cli::Args;
 use std::path::PathBuf;
 
@@ -27,6 +27,9 @@ pub struct Job {
     pub momentum: f32,
     /// Which direction to compress (both|bwd|fwd). Paper default: both.
     pub direction: CompressDirection,
+    /// Per-value wire codec on compressed links (f32|int8). int8 sends
+    /// Top-K values as scale + int8 codes: ~5 B/kept value instead of 8.
+    pub value_codec: ValueCodec,
     /// Optimizer: "sgd" (momentum) or "adam" (per-stage adaptive, §3.3
     /// Update: "users can define optimizers ... for different OPs").
     pub optimizer: String,
@@ -51,6 +54,7 @@ impl Default for Job {
             lr: 0.05,
             momentum: 0.9,
             direction: CompressDirection::Both,
+            value_codec: ValueCodec::F32,
             optimizer: "sgd".into(),
             placement: None,
         }
@@ -84,6 +88,7 @@ impl Job {
             lr: args.f32("lr", d.lr),
             momentum: args.f32("momentum", d.momentum),
             direction: CompressDirection::parse(&args.str("direction", "both"))?,
+            value_codec: ValueCodec::parse(&args.str("wire-codec", "f32"))?,
             optimizer: args.str("optimizer", "sgd"),
             placement: args.opt_str("placement").map(|s| {
                 s.split(',')
@@ -112,6 +117,18 @@ mod tests {
         assert_eq!(j.ratio, 50.0);
         assert_eq!(j.scheduler, "equal-number");
         assert_eq!(j.n_micro, 2); // default preserved
+    }
+
+    #[test]
+    fn wire_codec_parses_and_defaults_to_f32() {
+        let j = Job::from_args(&Args::parse(std::iter::empty::<String>())).unwrap();
+        assert_eq!(j.value_codec, ValueCodec::F32);
+        let args = Args::parse(
+            ["--compress", "adatopk", "--wire-codec", "int8"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(Job::from_args(&args).unwrap().value_codec, ValueCodec::Int8);
+        let bad = Args::parse(["--wire-codec", "fp8"].iter().map(|s| s.to_string()));
+        assert!(Job::from_args(&bad).is_err());
     }
 
     #[test]

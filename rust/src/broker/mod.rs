@@ -82,11 +82,22 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
         include_bwd: true,
     };
     let mut plan = match job.compress {
-        CompressKind::None => CompressPlan::dense(tb.nodes.len()),
-        CompressKind::AdaTopK => {
-            CompressPlan::adatopk(&dag, &part, &tb, params, job.ratio)
+        // `--compress none --wire-codec int8` = dense int8 (1 B/value).
+        CompressKind::None => {
+            CompressPlan::dense(tb.nodes.len()).with_value_codec(job.value_codec)
         }
-        kind => CompressPlan::uniform(kind, job.ratio, tb.nodes.len()),
+        CompressKind::AdaTopK => CompressPlan::adatopk_with_codec(
+            &dag,
+            &part,
+            &tb,
+            params,
+            job.ratio,
+            job.value_codec,
+        ),
+        kind => {
+            CompressPlan::uniform(kind, job.ratio, tb.nodes.len())
+                .with_value_codec(job.value_codec)
+        }
     };
     plan.direction = job.direction;
 
@@ -147,7 +158,10 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
     let mut report = TrainReport {
         config: cfg.name.clone(),
         scheduler: job.scheduler.clone(),
-        compressor: job.compress.name().to_string(),
+        compressor: match job.value_codec {
+            crate::compress::ValueCodec::F32 => job.compress.name().to_string(),
+            crate::compress::ValueCodec::Int8 => format!("{}+int8", job.compress.name()),
+        },
         ratio: job.ratio,
         n_micro: job.n_micro,
         placement: devices.clone(),
@@ -209,6 +223,9 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
     for b in report.wire_bytes.iter_mut() {
         *b = per_iter;
     }
+    // Achieved wire compression (dense payload bytes / wire bytes).
+    let total_dense: f64 = stats.iter().map(|s| s.dense_bytes).sum();
+    report.wire_shrink = if total_bytes > 0.0 { total_dense / total_bytes } else { 1.0 };
 
     // ---- post-hoc geo-simulation with measured compute ------------------
     // Replace the cost-model compute times with measured PJRT wall times

@@ -3,12 +3,13 @@
 use crate::broker::{self, Job};
 use crate::cluster::compnode::{gpu_days_for_gpt3, gpus_to_load_gpt3, GpuModel};
 use crate::cluster::{louvain::louvain, testbed};
-use crate::compress::{CompressKind, CompressPlan};
+use crate::compress::{CompressKind, CompressPlan, ValueCodec};
 use crate::cost::throughput::{dense_bytes, evaluate, PipelineParams};
 use crate::opdag::builders::{transformer_chain, TransformerSpec};
 use crate::pipeline::{PipelineSchedule, ScheduleKind};
 use crate::simnet::{simulate_iteration, StagePlan};
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::math::{fmt_bytes, fmt_secs};
 use crate::util::table::Table;
 use anyhow::Result;
@@ -122,20 +123,24 @@ pub fn simulate(args: &Args) -> Result<()> {
     let n_micro = args.usize("micro", 2);
     let kind = CompressKind::parse(&args.str("compress", "none"))?;
     let ratio = args.f64("ratio", 100.0);
+    let codec = ValueCodec::parse(&args.str("wire-codec", "f32"))?;
     let params = PipelineParams { n_micro, micro_size: 3, include_bwd: true };
     let plan = match kind {
-        CompressKind::None => CompressPlan::dense(tb.nodes.len()),
-        CompressKind::AdaTopK => CompressPlan::adatopk(&dag, &part, &tb, params, ratio),
-        k => CompressPlan::uniform(k, ratio, tb.nodes.len()),
+        CompressKind::None => CompressPlan::dense(tb.nodes.len()).with_value_codec(codec),
+        CompressKind::AdaTopK => {
+            CompressPlan::adatopk_with_codec(&dag, &part, &tb, params, ratio, codec)
+        }
+        k => CompressPlan::uniform(k, ratio, tb.nodes.len()).with_value_codec(codec),
     };
     let stage_plan = StagePlan::from_partition(&dag, &part, &tb);
     let pipe_kind = ScheduleKind::parse(&args.str("pipeline", "gpipe"))?;
     let sched = PipelineSchedule::new(pipe_kind, stage_plan.n_stages(), n_micro);
     let sim = simulate_iteration(&stage_plan, &tb, &sched, &plan);
     println!(
-        "testbed={} scheduler={sched_name} compress={} ratio={ratio} n_micro={n_micro}",
+        "testbed={} scheduler={sched_name} compress={} ratio={ratio} wire-codec={} n_micro={n_micro}",
         tb.name,
-        kind.name()
+        kind.name(),
+        codec.name()
     );
     println!(
         "iteration latency = {}   wire = {}   bubble = {:.1}%",
@@ -168,15 +173,141 @@ pub fn train(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "final loss {:.4}; mean simulated geo-iteration {}",
+        "final loss {:.4}; mean simulated geo-iteration {}; wire shrink {:.1}x",
         report.final_loss(),
-        fmt_secs(report.mean_sim_latency())
+        fmt_secs(report.mean_sim_latency()),
+        report.wire_shrink,
     );
     if let Some(path) = args.opt_str("out") {
         std::fs::write(path, report.to_csv())?;
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// Per-op delta between two `BENCH_micro_hotpath.json` files.
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub op: String,
+    pub old_s: f64,
+    pub new_s: f64,
+    /// Median-time regression in percent (negative = got faster).
+    pub regress_pct: f64,
+}
+
+/// Result of comparing a fresh bench run against the committed baseline.
+#[derive(Debug, Clone, Default)]
+pub struct BenchDiff {
+    pub rows: Vec<BenchDelta>,
+    /// Ops in the baseline missing from the new run (stale baseline —
+    /// refresh it deliberately instead of losing the trajectory).
+    pub missing: Vec<String>,
+    /// Ops only in the new run (no baseline yet; informational).
+    pub added: Vec<String>,
+}
+
+impl BenchDiff {
+    /// Gate violations at the given regression budget.
+    pub fn violations(&self, max_regress_pct: f64) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .rows
+            .iter()
+            .filter(|r| r.regress_pct > max_regress_pct)
+            .map(|r| {
+                format!(
+                    "`{}` regressed {:.1}% ({} -> {})",
+                    r.op,
+                    r.regress_pct,
+                    fmt_secs(r.old_s),
+                    fmt_secs(r.new_s)
+                )
+            })
+            .collect();
+        v.extend(self.missing.iter().map(|op| format!("`{op}` missing from new run")));
+        v
+    }
+}
+
+/// Compare two bench JSON documents (op -> {median_s, ...}). Keys starting
+/// with `_` are metadata (e.g. `_threads`) and are skipped.
+pub fn diff_benches(old: &Json, new: &Json) -> Result<BenchDiff> {
+    let old_obj = old
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("baseline is not a JSON object"))?;
+    let new_obj = new
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("new run is not a JSON object"))?;
+    let mut diff = BenchDiff::default();
+    for (op, entry) in old_obj {
+        if op.starts_with('_') {
+            continue;
+        }
+        let old_s = entry
+            .get("median_s")
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("baseline op `{op}` has no median_s"))?;
+        match new_obj.get(op) {
+            None => diff.missing.push(op.clone()),
+            Some(e) => {
+                let new_s = e
+                    .get("median_s")
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("new op `{op}` has no median_s"))?;
+                let regress_pct = if old_s > 0.0 {
+                    (new_s / old_s - 1.0) * 100.0
+                } else if new_s > 0.0 {
+                    f64::INFINITY
+                } else {
+                    0.0
+                };
+                diff.rows.push(BenchDelta { op: op.clone(), old_s, new_s, regress_pct });
+            }
+        }
+    }
+    for op in new_obj.keys() {
+        if !op.starts_with('_') && !old_obj.contains_key(op) {
+            diff.added.push(op.clone());
+        }
+    }
+    Ok(diff)
+}
+
+/// `fusionllm bench-diff OLD.json NEW.json [--max-regress PCT]` — the CI
+/// perf gate: nonzero exit when any op's median time regressed by more
+/// than the budget (default 20%) against the committed baseline.
+pub fn bench_diff(args: &Args) -> Result<()> {
+    let usage = "usage: fusionllm bench-diff OLD.json NEW.json [--max-regress 20]";
+    let old_path = args.positional.get(1).ok_or_else(|| anyhow::anyhow!(usage))?;
+    let new_path = args.positional.get(2).ok_or_else(|| anyhow::anyhow!(usage))?;
+    let max = args.f64("max-regress", 20.0);
+    let old = Json::parse_file(std::path::Path::new(old_path.as_str()))?;
+    let new = Json::parse_file(std::path::Path::new(new_path.as_str()))?;
+    let diff = diff_benches(&old, &new)?;
+
+    let mut t = Table::new(vec!["op", "baseline", "new", "Δ%", "gate"]);
+    for r in &diff.rows {
+        t.row(vec![
+            r.op.clone(),
+            fmt_secs(r.old_s),
+            fmt_secs(r.new_s),
+            format!("{:+.1}", r.regress_pct),
+            if r.regress_pct > max { "FAIL".into() } else { "ok".into() },
+        ]);
+    }
+    t.print();
+    for op in &diff.added {
+        println!("new op (no baseline yet): {op}");
+    }
+    let violations = diff.violations(max);
+    if violations.is_empty() {
+        println!("bench-diff OK: {} op(s) within {max}% of baseline", diff.rows.len());
+        Ok(())
+    } else {
+        anyhow::bail!(
+            "bench regression gate (max {max}%):\n  {}",
+            violations.join("\n  ")
+        )
+    }
 }
 
 /// `fusionllm economics` — Table 1.
@@ -213,4 +344,85 @@ pub fn economics(_args: &Args) -> Result<()> {
     println!("\nConsumer GPUs have the better GPU-days/price ratio (§2.3) —");
     println!("the motivation for aggregating geo-distributed consumer GPUs.");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::benchkit::bench;
+    use crate::util::json::{n, obj};
+
+    fn doc(entries: &[(&str, f64)]) -> Json {
+        let mut fields: Vec<(&str, Json)> = entries
+            .iter()
+            .map(|&(op, m)| (op, obj(vec![("median_s", n(m)), ("iters", n(10.0))])))
+            .collect();
+        fields.push(("_threads", n(8.0)));
+        obj(fields)
+    }
+
+    #[test]
+    fn diff_flags_only_over_budget_ops() {
+        let old = doc(&[("compress", 1.0), ("encode", 0.010), ("decode", 0.020)]);
+        let new = doc(&[("compress", 1.15), ("encode", 0.013), ("decode", 0.019)]);
+        let d = diff_benches(&old, &new).unwrap();
+        assert_eq!(d.rows.len(), 3);
+        assert!(d.missing.is_empty() && d.added.is_empty());
+        // encode regressed 30% — only violation at a 20% budget.
+        let v = d.violations(20.0);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("encode"));
+        // ...and none at a 40% budget.
+        assert!(d.violations(40.0).is_empty());
+    }
+
+    #[test]
+    fn diff_tracks_missing_and_added_ops() {
+        let old = doc(&[("gone", 1.0), ("kept", 1.0)]);
+        let new = doc(&[("kept", 1.0), ("fresh", 1.0)]);
+        let d = diff_benches(&old, &new).unwrap();
+        assert_eq!(d.missing, vec!["gone".to_string()]);
+        assert_eq!(d.added, vec!["fresh".to_string()]);
+        // A stale baseline is itself a gate violation.
+        assert_eq!(d.violations(1000.0).len(), 1);
+    }
+
+    #[test]
+    fn identical_runs_pass_the_gate() {
+        let old = doc(&[("a", 0.5), ("b", 1e-9)]);
+        let d = diff_benches(&old, &old.clone()).unwrap();
+        assert!(d.violations(0.0).is_empty());
+    }
+
+    /// The gate must trip on a real injected `std::thread::sleep` in a
+    /// benched op (the satellite's acceptance proof): the baseline is the
+    /// clean closure, the "regressed" run has a 2 ms sleep injected.
+    #[test]
+    fn gate_trips_on_injected_sleep() {
+        let work = || std::hint::black_box((0..500u64).map(|i| i * i).sum::<u64>());
+        let clean = bench("hot op", 1, 5, work);
+        let slowed = bench("hot op", 1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            work()
+        });
+        let old = doc(&[("hot op", clean.median_s)]);
+        let new = doc(&[("hot op", slowed.median_s)]);
+        let d = diff_benches(&old, &new).unwrap();
+        assert_eq!(
+            d.violations(20.0).len(),
+            1,
+            "2ms sleep on a microsecond op must blow a 20% budget: {:?}",
+            d.rows
+        );
+        // Comparing the clean run against itself stays green.
+        let same = diff_benches(&old, &old.clone()).unwrap();
+        assert!(same.violations(20.0).is_empty());
+    }
+
+    #[test]
+    fn malformed_docs_are_rejected() {
+        assert!(diff_benches(&Json::Num(3.0), &doc(&[])).is_err());
+        let bad = obj(vec![("op", obj(vec![("min_s", n(1.0))]))]); // no median_s
+        assert!(diff_benches(&bad, &bad.clone()).is_err());
+    }
 }

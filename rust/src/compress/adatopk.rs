@@ -12,7 +12,7 @@
 //! nearly uniform-Top-K latency (Fig. 10).
 
 use crate::cluster::Testbed;
-use crate::compress::CompressKind;
+use crate::compress::{CompressKind, ValueCodec};
 use crate::cost::throughput::{dense_bytes, evaluate, PipelineParams};
 use crate::opdag::{Dag, Partition};
 
@@ -51,6 +51,10 @@ pub struct CompressPlan {
     pub node_ratio: Vec<f64>,
     /// Which direction is compressed (default Both, per the paper).
     pub direction: CompressDirection,
+    /// Per-value wire representation for compressed links (f32 or int8).
+    /// Int8 cuts sparse payloads to ~5 B/value and dense fallbacks to
+    /// ~1 B/value; Eq. 7 and `scale_bytes` account for it.
+    pub value_codec: ValueCodec,
 }
 
 impl CompressPlan {
@@ -61,6 +65,7 @@ impl CompressPlan {
             base_ratio: 1.0,
             node_ratio: vec![1.0; n_nodes],
             direction: CompressDirection::Both,
+            value_codec: ValueCodec::F32,
         }
     }
 
@@ -71,10 +76,18 @@ impl CompressPlan {
             base_ratio: ratio,
             node_ratio: vec![ratio; n_nodes],
             direction: CompressDirection::Both,
+            value_codec: ValueCodec::F32,
         }
     }
 
-    /// AdaTopK plan (Eq. 7) from the dense cost model.
+    /// Builder-style codec override (keeps the constructor call sites
+    /// stable while the codec is negotiated per job).
+    pub fn with_value_codec(mut self, codec: ValueCodec) -> CompressPlan {
+        self.value_codec = codec;
+        self
+    }
+
+    /// AdaTopK plan (Eq. 7) from the dense cost model, f32 value codec.
     pub fn adatopk(
         dag: &Dag,
         part: &Partition,
@@ -82,11 +95,28 @@ impl CompressPlan {
         params: PipelineParams,
         base_ratio: f64,
     ) -> CompressPlan {
+        CompressPlan::adatopk_with_codec(dag, part, testbed, params, base_ratio, ValueCodec::F32)
+    }
+
+    /// AdaTopK plan (Eq. 7), bytes-per-value-aware: to actually shrink a
+    /// link's bytes by the user ratio r, the selection ratio must also pay
+    /// for the per-element wire overhead — 12 B/4 B = 3× under f32-sparse
+    /// (the paper's 3r), but only 5 B/4 B = 1.25× under int8-sparse, so
+    /// the same wire budget drops far fewer values.
+    pub fn adatopk_with_codec(
+        dag: &Dag,
+        part: &Partition,
+        testbed: &Testbed,
+        params: PipelineParams,
+        base_ratio: f64,
+        codec: ValueCodec,
+    ) -> CompressPlan {
         let est = evaluate(dag, part, testbed, params, &dense_bytes);
         let mut r_by_node = vec![0.0f64; testbed.nodes.len()];
         for c in &est.per_node {
             r_by_node[c.node] = c.comm_s;
         }
+        let overhead = codec.sparse_bytes_per_value() / 4.0;
         let rmax = r_by_node.iter().cloned().fold(0.0f64, f64::max);
         let node_ratio = r_by_node
             .iter()
@@ -94,7 +124,7 @@ impl CompressPlan {
                 if rmax <= 0.0 {
                     1.0
                 } else {
-                    (3.0 * base_ratio * ri / rmax).max(1.0)
+                    (overhead * base_ratio * ri / rmax).max(1.0)
                 }
             })
             .collect();
@@ -103,6 +133,7 @@ impl CompressPlan {
             base_ratio,
             node_ratio,
             direction: CompressDirection::Both,
+            value_codec: codec,
         }
     }
 
@@ -111,35 +142,61 @@ impl CompressPlan {
         self.node_ratio.get(dst).copied().unwrap_or(1.0)
     }
 
-    /// Effective ratio for a message of `kind` delivered to `dst`, honoring
-    /// the direction gate (activations travel forward, gradients backward).
-    /// This is what the per-link wire codecs are built from.
-    pub fn ratio_for_kind(&self, dst: usize, kind: crate::opdag::data::OpDataKind) -> f64 {
+    /// Does the direction gate turn compression off for this message kind?
+    /// (Activations travel forward, gradients backward.)
+    fn gated(&self, kind: crate::opdag::data::OpDataKind) -> bool {
         use crate::opdag::data::OpDataKind;
-        let gated = matches!(
+        matches!(
             (self.direction, kind),
             (CompressDirection::BwdOnly, OpDataKind::Activation)
                 | (CompressDirection::FwdOnly, OpDataKind::Gradient)
-        );
-        if gated {
+        )
+    }
+
+    /// Effective ratio for a message of `kind` delivered to `dst`, honoring
+    /// the direction gate. This is what the per-link wire codecs are built
+    /// from.
+    pub fn ratio_for_kind(&self, dst: usize, kind: crate::opdag::data::OpDataKind) -> f64 {
+        if self.gated(kind) {
             1.0
         } else {
             self.ratio_for(dst)
         }
     }
 
+    /// Per-link value codec for a message of `kind` delivered to `dst`: a
+    /// direction-gated link stays lossless f32 (the gate exists to protect
+    /// convergence in that direction — int8 would quietly re-lossify it);
+    /// every other link uses the plan's negotiated codec.
+    pub fn codec_for_kind(&self, _dst: usize, kind: crate::opdag::data::OpDataKind) -> ValueCodec {
+        if self.gated(kind) {
+            ValueCodec::F32
+        } else {
+            self.value_codec
+        }
+    }
+
     /// Wire-byte scaling for the latency models: dense bytes -> effective.
-    /// Top-K style encodings pay 3× per kept element (f32 value + i64 idx).
+    /// Per-kept-element cost comes from the value codec: f32-sparse pays
+    /// 12 B (3× dense, paper accounting), int8-sparse 5 B (1.25×); int8
+    /// dense fallbacks pay 1 B/value + scale.
     pub fn scale_bytes(&self, dst: usize, bytes: f64) -> f64 {
         let r = self.ratio_for(dst);
         match self.kind {
-            CompressKind::None => bytes,
+            // A dense plan under the int8 codec still quantizes (1 B/value).
+            CompressKind::None => match self.value_codec {
+                ValueCodec::F32 => bytes,
+                ValueCodec::Int8 => bytes / 4.0 + 4.0,
+            },
             CompressKind::Int8 => bytes / 4.0 + 4.0,
             CompressKind::TopK | CompressKind::AdaTopK | CompressKind::RandomK => {
                 if r <= 1.0 {
-                    bytes
+                    match self.value_codec {
+                        ValueCodec::F32 => bytes,
+                        ValueCodec::Int8 => bytes / 4.0 + 4.0,
+                    }
                 } else {
-                    3.0 * bytes / r
+                    self.value_codec.sparse_bytes_per_value() / 4.0 * bytes / r
                 }
             }
         }
@@ -237,6 +294,52 @@ mod tests {
         // Ratio 1 in TopK mode = dense bytes.
         let p = CompressPlan::dense(2);
         assert_eq!(p.scale_bytes(1, 777.0), 777.0);
+    }
+
+    #[test]
+    fn eq7_int8_codec_needs_only_fraction_of_3r() {
+        // Same wire budget under 5 B/value costs 1.25r instead of 3r.
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let part = cross_cluster_partition(&dag);
+        let plan = CompressPlan::adatopk_with_codec(
+            &dag,
+            &part,
+            &tb,
+            PipelineParams::default(),
+            100.0,
+            ValueCodec::Int8,
+        );
+        let max_r = plan.node_ratio.iter().cloned().fold(0.0f64, f64::max);
+        assert!((max_r - 125.0).abs() < 1e-6, "max ratio {max_r} != 1.25r");
+        assert_eq!(plan.value_codec, ValueCodec::Int8);
+    }
+
+    #[test]
+    fn scale_bytes_int8_codec() {
+        let mut plan =
+            CompressPlan::uniform(CompressKind::TopK, 100.0, 4).with_value_codec(ValueCodec::Int8);
+        // 5 B/value instead of 12: 1.25 * 1e6 / 100.
+        assert!((plan.scale_bytes(0, 1e6) - 1.25e4).abs() < 1.0);
+        // Dense fallback (ratio 1) quantizes dense: ~1 B/value.
+        plan.node_ratio[1] = 1.0;
+        assert!((plan.scale_bytes(1, 1e6) - 250004.0).abs() < 1.0);
+        // A fully dense plan under int8 (`--compress none --wire-codec
+        // int8`) also quantizes; the f32 dense plan stays pass-through.
+        let dense_q = CompressPlan::dense(2).with_value_codec(ValueCodec::Int8);
+        assert!((dense_q.scale_bytes(0, 1e6) - 250004.0).abs() < 1.0);
+        assert_eq!(CompressPlan::dense(2).scale_bytes(0, 1e6), 1e6);
+    }
+
+    #[test]
+    fn codec_for_kind_keeps_gated_direction_lossless() {
+        use crate::opdag::data::OpDataKind;
+        let mut plan =
+            CompressPlan::uniform(CompressKind::TopK, 50.0, 2).with_value_codec(ValueCodec::Int8);
+        assert_eq!(plan.codec_for_kind(0, OpDataKind::Activation), ValueCodec::Int8);
+        plan.direction = CompressDirection::BwdOnly;
+        assert_eq!(plan.codec_for_kind(0, OpDataKind::Activation), ValueCodec::F32);
+        assert_eq!(plan.codec_for_kind(0, OpDataKind::Gradient), ValueCodec::Int8);
     }
 
     #[test]

@@ -120,6 +120,41 @@ mod tests {
         assert!(once.iter().filter(|v| **v == 0.0).count() >= n - 6);
     }
 
+    /// With the int8-quantized sparse codec the residual absorbs BOTH the
+    /// sparsification error and the quantization error: cumulative
+    /// delivered mass still converges to the true mass, so the cheaper
+    /// wire format costs no systematic bias.
+    #[test]
+    fn residual_absorbs_quantization_error() {
+        use crate::compress::quant::Quantized;
+        let mut ef = ErrorFeedback::new(Quantized::per_message(TopK { ratio: 10.0 }));
+        let mut rng = Rng::new(21);
+        let n = 50;
+        let data: Vec<f32> = (0..n).map(|_| rng.f32() * 0.1 + 0.05).collect();
+        let rounds = 300usize;
+        let mut delivered = vec![0.0f32; n];
+        let mut out = vec![0.0f32; n];
+        for _ in 0..rounds {
+            let c = ef.compress_edge((0, 1), &data);
+            assert!(c.values.is_empty(), "values must travel as int8 codes");
+            ef.decompress(&c, &mut out);
+            for (d, o) in delivered.iter_mut().zip(&out) {
+                *d += o;
+            }
+        }
+        for (i, (&d, &x)) in delivered.iter().zip(&data).enumerate() {
+            let want = x * rounds as f32;
+            assert!(
+                (d - want).abs() / want < 0.25,
+                "coord {i}: delivered {d} vs want {want}"
+            );
+        }
+        // One round's residual is bounded by send threshold + half a scale
+        // step (not accumulating): matches the f32 bound up to quant noise.
+        let r = ef.residual_l2((0, 1));
+        assert!(r.is_finite() && r < 10.0, "residual l2 {r}");
+    }
+
     #[test]
     fn residual_bounded() {
         let mut ef = ErrorFeedback::new(TopK { ratio: 10.0 });

@@ -7,10 +7,12 @@
 
 pub mod adatopk;
 pub mod error_feedback;
+pub mod quant;
 pub mod sparsify;
 
 pub use adatopk::{CompressDirection, CompressPlan};
 pub use error_feedback::ErrorFeedback;
+pub use quant::{Quantized, ValueCodec};
 pub use sparsify::{
     ChunkedTopK, CompressScratch, Compressed, Compressor, Int8Quantizer, NoCompress, RandomK,
     TopK,

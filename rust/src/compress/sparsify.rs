@@ -27,7 +27,10 @@ pub struct Compressed {
 }
 
 impl Compressed {
-    /// Bytes on the wire (paper accounting: f32 values + int64 indices).
+    /// Bytes on the wire. f32-sparse keeps the paper accounting (f32
+    /// values + int64 indices); the int8 encodings are counted at their
+    /// actual packed layout (1 B code + u32 index + f32 scale(s)) so the
+    /// cost model sees the real link cost.
     pub fn wire_bytes(&self) -> f64 {
         match self.cfg {
             CompressCfg::None => 4.0 * self.values.len() as f64,
@@ -35,6 +38,15 @@ impl Compressed {
                 4.0 * self.values.len() as f64 + 8.0 * self.indices.len() as f64
             }
             CompressCfg::Int8 { .. } => self.bytes.len() as f64 + 4.0,
+            CompressCfg::QSparse { .. } => {
+                self.bytes.len() as f64 + 4.0 * self.indices.len() as f64 + 4.0
+            }
+            // Per-row scales ride in `values`.
+            CompressCfg::QSparseRows { .. } => {
+                self.bytes.len() as f64
+                    + 4.0 * self.indices.len() as f64
+                    + 4.0 * self.values.len() as f64
+            }
         }
     }
 
@@ -68,6 +80,8 @@ pub struct CompressScratch {
     select: SelectScratch,
     parts: Vec<PartBuf>,
     sample: HashSet<u32>,
+    /// Per-row absmax buffer for the int8 quantization post-pass.
+    pub(crate) scales: Vec<f32>,
 }
 
 impl Default for CompressScratch {
@@ -85,6 +99,7 @@ impl CompressScratch {
             select: SelectScratch::default(),
             parts: Vec::new(),
             sample: HashSet::new(),
+            scales: Vec::new(),
         }
     }
 }
@@ -472,11 +487,10 @@ pub struct Int8Quantizer;
 
 impl Compressor for Int8Quantizer {
     fn compress_with(&self, data: &[f32], out: &mut Compressed, _scratch: &mut CompressScratch) {
-        let absmax = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        // Shared formula with the sparse int8 encodings (compress::quant).
+        let scale = crate::compress::quant::absmax_scale(data);
         out.reset(CompressCfg::Int8 { scale, total_len: data.len() as u32 });
-        out.bytes
-            .extend(data.iter().map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8 as u8));
+        out.bytes.extend(data.iter().map(|&v| crate::compress::quant::code(v, scale)));
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {

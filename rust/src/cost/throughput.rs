@@ -189,6 +189,27 @@ mod tests {
     }
 
     #[test]
+    fn int8_codec_plan_sees_cheaper_links_than_f32() {
+        // Bytes-per-value awareness: at the same selection ratio, the
+        // int8-sparse encoding (5 B/kept value) must cost the model
+        // 12/5 = 2.4x less communication than f32-sparse (12 B/value).
+        use crate::compress::{CompressKind, CompressPlan, ValueCodec};
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let p = chain_partition(&dag, &[0, 23]);
+        let f32_plan = CompressPlan::uniform(CompressKind::TopK, 100.0, tb.nodes.len());
+        let int8_plan = CompressPlan::uniform(CompressKind::TopK, 100.0, tb.nodes.len())
+            .with_value_codec(ValueCodec::Int8);
+        let params = PipelineParams::default();
+        let ef = evaluate(&dag, &p, &tb, params, &f32_plan.msg_scale());
+        let eq = evaluate(&dag, &p, &tb, params, &int8_plan.msg_scale());
+        let comm = |e: &IterationEstimate| e.per_node.iter().map(|c| c.comm_s).sum::<f64>();
+        let ratio = comm(&ef) / comm(&eq);
+        // α latency terms keep it below exactly 2.4 but it must be close.
+        assert!(ratio > 1.8 && ratio <= 2.4 + 1e-9, "f32/int8 comm ratio {ratio}");
+    }
+
+    #[test]
     fn comm_dominates_on_cross_cluster_gpt2xl() {
         // §7.4: FP+BP < 0.5 s while communication ≈ 20 s on slow links —
         // the bottleneck must be communication for cross-cluster splits.

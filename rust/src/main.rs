@@ -6,6 +6,7 @@
 //!   simulate  — discrete-event iteration-latency simulation (Fig. 10/11)
 //!   train     — end-to-end pipeline training over PJRT artifacts (Fig. 8)
 //!   economics — GPU cost table (Table 1)
+//!   bench-diff — compare two BENCH_micro_hotpath.json files (CI perf gate)
 
 use fusionllm::util::cli::Args;
 
@@ -18,6 +19,7 @@ fn main() {
         "simulate" => fusionllm::cmd::simulate(&args),
         "train" => fusionllm::cmd::train(&args),
         "economics" => fusionllm::cmd::economics(&args),
+        "bench-diff" => fusionllm::cmd::bench_diff(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -47,8 +49,12 @@ fn print_help() {
                                                  iteration-latency simulation (Fig. 10/11)\n\
            train     --config PATH --steps N    real pipeline training over artifacts (Fig. 8)\n\
            economics                             GPU-days table (Table 1)\n\
+           bench-diff OLD.json NEW.json [--max-regress 20]\n\
+                                                 perf gate: fail on median-time regression\n\
          \n\
          Schedulers: opfence | equal-number | equal-compute\n\
-         Compressors: none | topk | adatopk | randomk | int8"
+         Compressors: none | topk | adatopk | randomk | int8\n\
+         Wire codec (--wire-codec): f32 | int8   (int8 = scale+codes per value,\n\
+                                                  ~5 B/kept value vs 8, dense ~1 B)"
     );
 }

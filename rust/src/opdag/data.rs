@@ -30,6 +30,14 @@ pub enum CompressCfg {
     RandomK { ratio: f64, total_len: u32, seed: u64 },
     /// Linear int8 quantization with per-message scale.
     Int8 { scale: f32, total_len: u32 },
+    /// Combined sparse + int8: Top-K/Random-K support in `indices`, values
+    /// as int8 codes in `bytes_payload`, one per-message scale. ~5 B per
+    /// kept element (4 B index + 1 B code) vs 8 B for f32-sparse.
+    QSparse { ratio: f64, total_len: u32, scale: f32 },
+    /// Row-chunked variant of `QSparse` (pairs with `ChunkedTopK`): the
+    /// f32 payload region carries `ceil(total_len / chunk)` per-row scales;
+    /// the entry at dense index i decodes as `code · scale[i / chunk]`.
+    QSparseRows { ratio: f64, total_len: u32, chunk: u32 },
 }
 
 /// Header fields of one OP-Data message (everything but the payload).
@@ -117,7 +125,9 @@ impl OpData {
     /// Bytes this message occupies on the wire. The paper's accounting
     /// (Fig. 6): dense = 4·d; TopK/RandomK = 4·k values + 8·k indices
     /// (indices counted at int64 width like the paper's implementation,
-    /// even though we store u32 in memory).
+    /// even though we store u32 in memory). The int8-sparse encodings are
+    /// counted at their actual packed layout: 1·k codes + 4·k indices +
+    /// the scale(s).
     pub fn wire_bytes(&self) -> f64 {
         let body = match &self.compress {
             CompressCfg::None => 4.0 * self.payload.len() as f64,
@@ -125,6 +135,14 @@ impl OpData {
                 4.0 * self.payload.len() as f64 + 8.0 * self.indices.len() as f64
             }
             CompressCfg::Int8 { .. } => self.bytes_payload.len() as f64 + 4.0,
+            CompressCfg::QSparse { .. } => {
+                self.bytes_payload.len() as f64 + 4.0 * self.indices.len() as f64 + 4.0
+            }
+            CompressCfg::QSparseRows { .. } => {
+                self.bytes_payload.len() as f64
+                    + 4.0 * self.indices.len() as f64
+                    + 4.0 * self.payload.len() as f64
+            }
         };
         WIRE_HEADER_BYTES + body
     }
@@ -198,6 +216,18 @@ pub fn encode_parts_into(
             out.push(3);
             out.extend_from_slice(&scale.to_le_bytes());
             out.extend_from_slice(&total_len.to_le_bytes());
+        }
+        CompressCfg::QSparse { ratio, total_len, scale } => {
+            out.push(4);
+            out.extend_from_slice(&ratio.to_le_bytes());
+            out.extend_from_slice(&total_len.to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+        }
+        CompressCfg::QSparseRows { ratio, total_len, chunk } => {
+            out.push(5);
+            out.extend_from_slice(&ratio.to_le_bytes());
+            out.extend_from_slice(&total_len.to_le_bytes());
+            out.extend_from_slice(&chunk.to_le_bytes());
         }
     }
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -288,6 +318,16 @@ impl<'a> OpDataView<'a> {
                 seed: r.u64()?,
             },
             3 => CompressCfg::Int8 { scale: r.f32()?, total_len: r.u32()? },
+            4 => CompressCfg::QSparse {
+                ratio: r.f64()?,
+                total_len: r.u32()?,
+                scale: r.f32()?,
+            },
+            5 => CompressCfg::QSparseRows {
+                ratio: r.f64()?,
+                total_len: r.u32()?,
+                chunk: r.u32()?,
+            },
             c => anyhow::bail!("bad compress tag {c}"),
         };
         let np = r.u32()? as usize;
@@ -438,6 +478,42 @@ mod tests {
         d.compress = CompressCfg::Int8 { scale: 0.5, total_len: 3 };
         let back = OpData::decode(&d.encode()).unwrap();
         assert_eq!(back.bytes_payload, vec![1, 2, 255]);
+    }
+
+    #[test]
+    fn roundtrip_qsparse_variants() {
+        let mut d = OpData::dense(2, 3, OpDataKind::Gradient, 4, 1, vec![]);
+        d.indices = vec![5, 1700, 3200];
+        d.bytes_payload = vec![127, 129, 0]; // i8 codes as raw bytes
+        d.compress = CompressCfg::QSparse { ratio: 100.0, total_len: 4800, scale: 0.125 };
+        let back = OpData::decode(&d.encode()).unwrap();
+        assert_eq!(back.compress, d.compress);
+        assert_eq!(back.indices, d.indices);
+        assert_eq!(back.bytes_payload, d.bytes_payload);
+
+        // Rows variant: per-row scales travel in the f32 payload region.
+        d.payload = vec![0.5, 0.25, 2.0];
+        d.compress = CompressCfg::QSparseRows { ratio: 100.0, total_len: 4800, chunk: 1600 };
+        let back = OpData::decode(&d.encode()).unwrap();
+        assert_eq!(back.compress, d.compress);
+        assert_eq!(back.payload, vec![0.5, 0.25, 2.0]);
+        let v = OpDataView::parse(&d.encode()).unwrap();
+        assert_eq!(v.compress, d.compress);
+        assert_eq!(v.payload_iter().collect::<Vec<_>>(), d.payload);
+    }
+
+    #[test]
+    fn qsparse_wire_accounting_is_five_bytes_per_value() {
+        let mut d = OpData::dense(0, 1, OpDataKind::Activation, 0, 0, vec![]);
+        d.indices = vec![0; 100];
+        d.bytes_payload = vec![0; 100];
+        d.compress = CompressCfg::QSparse { ratio: 10.0, total_len: 1000, scale: 1.0 };
+        // 100 values at 4 B index + 1 B code, + 4 B scale + header.
+        assert_eq!(d.wire_bytes() as u64, 48 + 500 + 4);
+        // Rows variant: scale overhead is 4 B per row instead.
+        d.payload = vec![1.0; 10];
+        d.compress = CompressCfg::QSparseRows { ratio: 10.0, total_len: 1000, chunk: 100 };
+        assert_eq!(d.wire_bytes() as u64, 48 + 500 + 40);
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub struct TrainReport {
     pub sim_s: Vec<f64>,
     /// Total wire bytes sent per iteration.
     pub wire_bytes: Vec<f64>,
+    /// Achieved wire compression: dense payload bytes / wire bytes sent
+    /// (e.g. ≈ r/3 for f32 Top-K, ≈ 4r/5 for int8-sparse at ratio r).
+    pub wire_shrink: f64,
     /// Stage -> device placement used.
     pub placement: Vec<usize>,
 }
@@ -51,6 +54,7 @@ impl TrainReport {
                 "wire_bytes",
                 arr(self.wire_bytes.iter().map(|&v| n(v)).collect()),
             ),
+            ("wire_shrink", n(self.wire_shrink)),
             (
                 "placement",
                 arr(self.placement.iter().map(|&p| ni(p)).collect()),
@@ -91,6 +95,7 @@ mod tests {
             wall_s: vec![0.1, 0.1, 0.1],
             sim_s: vec![1.0, 1.0, 1.0],
             wire_bytes: vec![100.0, 100.0, 100.0],
+            wire_shrink: 33.3,
             placement: vec![0, 1, 2, 3],
         };
         let csv = r.to_csv();

@@ -11,7 +11,7 @@
 use crate::compress::sparsify::ChunkedTopK;
 use crate::compress::{
     CompressKind, CompressPlan, CompressScratch, Compressed, Compressor, Int8Quantizer,
-    NoCompress, RandomK,
+    NoCompress, Quantized, RandomK, ValueCodec,
 };
 use crate::opdag::data::{
     encode_parts_into, CompressCfg, OpData, OpDataHeader, OpDataKind, OpDataView,
@@ -51,6 +51,9 @@ pub struct WorkerStats {
     pub wait_s: f64,
     /// Wire bytes sent (post-compression, OP-Data accounting).
     pub bytes_sent: f64,
+    /// Dense (pre-compression) payload bytes handed to the encoders —
+    /// `bytes_sent / dense_bytes` is the achieved wire compression.
+    pub dense_bytes: f64,
     /// Messages sent.
     pub msgs_sent: u64,
     /// FLOPs executed (from the cost model) for λ fitting.
@@ -59,21 +62,35 @@ pub struct WorkerStats {
 
 /// Per-link steady-state encoder: owns the compression scratch and the
 /// compressed staging buffers. Top-K variants select per feature row
-/// (`chunk` = d_model), per Fig. 6; ratios <= 1 fall back to dense.
+/// (`chunk` = d_model), per Fig. 6; ratios <= 1 fall back to dense. The
+/// negotiated `ValueCodec` decides how wide each value travels: int8 turns
+/// sparse payloads into `QSparseRows` (per-row scales) and dense fallbacks
+/// into the 1 B/value `Int8` encoding.
 pub struct LinkEncoder {
     kind: CompressKind,
     ratio: f64,
     chunk: usize,
+    codec: ValueCodec,
     comp: Compressed,
     scratch: CompressScratch,
 }
 
 impl LinkEncoder {
     pub fn new(kind: CompressKind, ratio: f64, chunk: usize) -> LinkEncoder {
+        LinkEncoder::with_codec(kind, ratio, chunk, ValueCodec::F32)
+    }
+
+    pub fn with_codec(
+        kind: CompressKind,
+        ratio: f64,
+        chunk: usize,
+        codec: ValueCodec,
+    ) -> LinkEncoder {
         LinkEncoder {
             kind,
             ratio,
             chunk: chunk.max(1),
+            codec,
             comp: Compressed::default(),
             scratch: CompressScratch::default(),
         }
@@ -91,24 +108,37 @@ impl LinkEncoder {
         dense: &[f32],
     ) -> (Vec<u8>, f64) {
         let effective = if self.ratio <= 1.0 { CompressKind::None } else { self.kind };
-        match effective {
-            CompressKind::None => {
-                NoCompress.compress_with(dense, &mut self.comp, &mut self.scratch)
+        let (comp, scratch) = (&mut self.comp, &mut self.scratch);
+        match (effective, self.codec) {
+            (CompressKind::None, ValueCodec::F32) => {
+                NoCompress.compress_with(dense, comp, scratch)
             }
-            CompressKind::TopK | CompressKind::AdaTopK => {
-                ChunkedTopK { ratio: self.ratio, chunk: self.chunk }.compress_with(
-                    dense,
-                    &mut self.comp,
-                    &mut self.scratch,
+            // Dense fallback under the int8 codec: 4 -> ~1 B/value.
+            (CompressKind::None, ValueCodec::Int8) | (CompressKind::Int8, _) => {
+                Int8Quantizer.compress_with(dense, comp, scratch)
+            }
+            (CompressKind::TopK | CompressKind::AdaTopK, ValueCodec::F32) => {
+                ChunkedTopK { ratio: self.ratio, chunk: self.chunk }
+                    .compress_with(dense, comp, scratch)
+            }
+            (CompressKind::TopK | CompressKind::AdaTopK, ValueCodec::Int8) => {
+                Quantized::per_row(
+                    ChunkedTopK { ratio: self.ratio, chunk: self.chunk },
+                    self.chunk,
                 )
+                .compress_with(dense, comp, scratch)
             }
-            CompressKind::RandomK => RandomK {
-                ratio: self.ratio,
-                seed: (iter as u64) << 32 | micro as u64,
-            }
-            .compress_with(dense, &mut self.comp, &mut self.scratch),
-            CompressKind::Int8 => {
-                Int8Quantizer.compress_with(dense, &mut self.comp, &mut self.scratch)
+            (CompressKind::RandomK, codec) => {
+                let rk = RandomK {
+                    ratio: self.ratio,
+                    seed: (iter as u64) << 32 | micro as u64,
+                };
+                match codec {
+                    ValueCodec::F32 => rk.compress_with(dense, comp, scratch),
+                    ValueCodec::Int8 => {
+                        Quantized::per_message(rk).compress_with(dense, comp, scratch)
+                    }
+                }
             }
         }
         let hdr = OpDataHeader {
@@ -152,10 +182,20 @@ impl StageCodec {
     ) -> StageCodec {
         StageCodec {
             fwd: next_device.map(|d| {
-                LinkEncoder::new(plan.kind, plan.ratio_for_kind(d, OpDataKind::Activation), chunk)
+                LinkEncoder::with_codec(
+                    plan.kind,
+                    plan.ratio_for_kind(d, OpDataKind::Activation),
+                    chunk,
+                    plan.codec_for_kind(d, OpDataKind::Activation),
+                )
             }),
             bwd: prev_device.map(|d| {
-                LinkEncoder::new(plan.kind, plan.ratio_for_kind(d, OpDataKind::Gradient), chunk)
+                LinkEncoder::with_codec(
+                    plan.kind,
+                    plan.ratio_for_kind(d, OpDataKind::Gradient),
+                    chunk,
+                    plan.codec_for_kind(d, OpDataKind::Gradient),
+                )
             }),
         }
     }
@@ -169,13 +209,34 @@ pub fn compressor_for(
     chunk: usize,
     seed: u64,
 ) -> Box<dyn Compressor> {
-    match kind {
-        CompressKind::None => Box::new(NoCompress),
-        CompressKind::TopK | CompressKind::AdaTopK => {
-            Box::new(ChunkedTopK { ratio, chunk: chunk.max(1) })
+    compressor_for_codec(kind, ratio, chunk, seed, ValueCodec::F32)
+}
+
+/// `compressor_for` with an explicit value codec (int8 wraps the sparse
+/// selection in `Quantized`, matching what `LinkEncoder` does inline).
+pub fn compressor_for_codec(
+    kind: CompressKind,
+    ratio: f64,
+    chunk: usize,
+    seed: u64,
+    codec: ValueCodec,
+) -> Box<dyn Compressor> {
+    let chunk = chunk.max(1);
+    match (kind, codec) {
+        (CompressKind::None, ValueCodec::F32) => Box::new(NoCompress),
+        (CompressKind::None, ValueCodec::Int8) | (CompressKind::Int8, _) => {
+            Box::new(Int8Quantizer)
         }
-        CompressKind::RandomK => Box::new(RandomK { ratio, seed }),
-        CompressKind::Int8 => Box::new(Int8Quantizer),
+        (CompressKind::TopK | CompressKind::AdaTopK, ValueCodec::F32) => {
+            Box::new(ChunkedTopK { ratio, chunk })
+        }
+        (CompressKind::TopK | CompressKind::AdaTopK, ValueCodec::Int8) => {
+            Box::new(Quantized::per_row(ChunkedTopK { ratio, chunk }, chunk))
+        }
+        (CompressKind::RandomK, ValueCodec::F32) => Box::new(RandomK { ratio, seed }),
+        (CompressKind::RandomK, ValueCodec::Int8) => {
+            Box::new(Quantized::per_message(RandomK { ratio, seed }))
+        }
     }
 }
 
@@ -194,6 +255,25 @@ pub fn encode_payload(
     dense: &[f32],
 ) -> (Vec<u8>, f64) {
     LinkEncoder::new(kind, ratio, chunk).encode(src_op, dst_op, data_kind, iter, micro, dense)
+}
+
+/// `encode_payload` with an explicit value codec (differential oracle for
+/// the codec-negotiating `LinkEncoder`).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_payload_with(
+    codec: ValueCodec,
+    kind: CompressKind,
+    ratio: f64,
+    chunk: usize,
+    src_op: usize,
+    dst_op: usize,
+    data_kind: OpDataKind,
+    iter: u32,
+    micro: u32,
+    dense: &[f32],
+) -> (Vec<u8>, f64) {
+    LinkEncoder::with_codec(kind, ratio, chunk, codec)
+        .encode(src_op, dst_op, data_kind, iter, micro, dense)
 }
 
 /// Decode a packet into a caller-provided dense buffer (its length is the
@@ -228,6 +308,39 @@ fn scatter_view(v: &OpDataView, dense: &mut [f32]) -> anyhow::Result<()> {
             dense.fill(0.0);
             for (d, &b) in dense.iter_mut().zip(v.bytes_payload()) {
                 *d = (b as i8) as f32 * scale;
+            }
+        }
+        CompressCfg::QSparse { scale, total_len, .. } => {
+            anyhow::ensure!(*total_len as usize == n, "qsparse length mismatch");
+            anyhow::ensure!(
+                v.indices_len() == v.bytes_payload().len(),
+                "qsparse codes/indices mismatch"
+            );
+            dense.fill(0.0);
+            for (i, &b) in v.indices_iter().zip(v.bytes_payload()) {
+                anyhow::ensure!((i as usize) < n, "index out of range");
+                dense[i as usize] = (b as i8) as f32 * scale;
+            }
+        }
+        CompressCfg::QSparseRows { chunk, total_len, .. } => {
+            anyhow::ensure!(*total_len as usize == n, "qsparse length mismatch");
+            anyhow::ensure!(
+                v.indices_len() == v.bytes_payload().len(),
+                "qsparse codes/indices mismatch"
+            );
+            let chunk = (*chunk as usize).max(1);
+            // Row scales are the f32 payload region; read them straight
+            // from the borrowed little-endian bytes (alignment-free).
+            let scales = v.payload_le_bytes();
+            dense.fill(0.0);
+            for (i, &b) in v.indices_iter().zip(v.bytes_payload()) {
+                anyhow::ensure!((i as usize) < n, "index out of range");
+                let off = (i as usize / chunk) * 4;
+                let s = scales
+                    .get(off..off + 4)
+                    .ok_or_else(|| anyhow::anyhow!("row scale out of range"))?;
+                dense[i as usize] =
+                    (b as i8) as f32 * f32::from_le_bytes(s.try_into().unwrap());
             }
         }
     }
@@ -316,6 +429,86 @@ mod tests {
                 encode_payload(CompressKind::TopK, 20.0, 128, 1, 2, OpDataKind::Gradient, iter, 0, &dense);
             assert_eq!(reused, oneshot, "iter {iter}");
             assert_eq!(w1, w2);
+        }
+    }
+
+    #[test]
+    fn int8_codec_roundtrip_and_byte_budget() {
+        let mut rng = Rng::new(46);
+        let chunk = 128usize;
+        let n = 64 * chunk;
+        let dense: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let (buf_q, wire_q) = encode_payload_with(
+            ValueCodec::Int8,
+            CompressKind::TopK,
+            16.0,
+            chunk,
+            0,
+            1,
+            OpDataKind::Activation,
+            0,
+            0,
+            &dense,
+        );
+        let (buf_f, wire_f) = encode_payload(
+            CompressKind::TopK,
+            16.0,
+            chunk,
+            0,
+            1,
+            OpDataKind::Activation,
+            0,
+            0,
+            &dense,
+        );
+        // Same support, far fewer bytes on the wire (5ish vs 8 actual).
+        assert!(buf_q.len() * 3 < buf_f.len() * 2, "{} vs {}", buf_q.len(), buf_f.len());
+        assert!(wire_q < wire_f);
+        // Decoded payload within half a row-scale step of the f32 decode.
+        let (od, want) = decode_payload(&buf_f, n).unwrap();
+        assert!(matches!(od.compress, CompressCfg::TopK { .. }));
+        let (od_q, got) = decode_payload(&buf_q, n).unwrap();
+        let scales = match od_q.compress {
+            CompressCfg::QSparseRows { chunk: c, .. } => {
+                assert_eq!(c as usize, chunk);
+                od_q.payload.clone()
+            }
+            other => panic!("expected QSparseRows, got {other:?}"),
+        };
+        for (i, (&w, &g)) in want.iter().zip(&got).enumerate() {
+            let scale = scales[i / chunk];
+            assert!((w - g).abs() <= scale * 0.5 + scale * 1e-4, "idx {i}: {w} vs {g}");
+            if w == 0.0 {
+                assert_eq!(g, 0.0, "support must match at idx {i}");
+            }
+        }
+        // Zero-copy decode agrees with the allocating decode.
+        let mut direct = vec![f32::NAN; n];
+        decode_payload_into(&buf_q, &mut direct).unwrap();
+        assert_eq!(direct, got);
+    }
+
+    #[test]
+    fn int8_codec_dense_fallback_is_one_byte_per_value() {
+        let dense: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let (buf, wire) = encode_payload_with(
+            ValueCodec::Int8,
+            CompressKind::AdaTopK,
+            1.0, // fast link: AdaTopK says dense — codec still quantizes
+            64,
+            0,
+            1,
+            OpDataKind::Gradient,
+            0,
+            0,
+            &dense,
+        );
+        let (od, out) = decode_payload(&buf, 1000).unwrap();
+        assert!(matches!(od.compress, CompressCfg::Int8 { .. }));
+        assert!(buf.len() < 1000 + 96, "dense int8 ≈ 1 B/value, got {}", buf.len());
+        assert!(wire < 4.0 * 1000.0 / 3.0);
+        for (a, b) in dense.iter().zip(&out) {
+            assert!((a - b).abs() <= 1.0 / 127.0 + 1e-6);
         }
     }
 

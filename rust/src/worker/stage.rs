@@ -327,6 +327,7 @@ fn send_act(
             dense,
         );
         stats.bytes_sent += wire;
+        stats.dense_bytes += 4.0 * dense.len() as f64;
         stats.msgs_sent += 1;
         tx.send(Wire::Packet(buf))?;
     }
@@ -350,6 +351,7 @@ fn send_grad(
             dense,
         );
         stats.bytes_sent += wire;
+        stats.dense_bytes += 4.0 * dense.len() as f64;
         stats.msgs_sent += 1;
         tx.send(Wire::Packet(buf))?;
     }

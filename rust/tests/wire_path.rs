@@ -5,17 +5,22 @@
 //!   * `compress_into` ≡ `compress` for every compressor and payload shape
 //!     (0, 1, ragged chunks, all-duplicates, >512-element radix path)
 //!   * the parallel radix select + gather is bit-identical across thread
-//!     counts 1/2/8 (per-thread partitions stitch in index order)
+//!     counts 1/2/8 (per-thread partitions stitch in index order), and so
+//!     is the int8-quantized combined encoding built on top of it
 //!   * `encode_into` ≡ `encode`, and `OpDataView` ≡ `OpData::decode`
 //!   * `LinkEncoder` (steady-state, scratch-reusing) ≡ `encode_payload`
+//!     under both value codecs (f32 and int8)
+//!   * int8+Top-K wire round trip stays within half a scale step of the
+//!     f32 path and costs ≤ 5 B per kept value on the packet
 
 use fusionllm::compress::{
     ChunkedTopK, CompressKind, CompressScratch, Compressed, Compressor, Int8Quantizer,
-    NoCompress, RandomK, TopK,
+    NoCompress, Quantized, RandomK, TopK, ValueCodec,
 };
 use fusionllm::opdag::data::{CompressCfg, OpData, OpDataKind, OpDataView};
 use fusionllm::util::math::kth_largest_abs_threads;
 use fusionllm::util::rng::Rng;
+use fusionllm::worker::messages::encode_payload_with;
 use fusionllm::worker::{decode_payload, decode_payload_into, LinkEncoder};
 
 /// Payload shapes covering every special case in the select/gather paths.
@@ -54,7 +59,7 @@ fn assert_compressed_eq(a: &Compressed, b: &Compressed, ctx: &str) {
 #[test]
 fn prop_compress_into_equals_compress_for_all_impls() {
     let mut rng = Rng::new(0x1A70);
-    let comps: [&dyn Compressor; 7] = [
+    let comps: [&dyn Compressor; 11] = [
         &NoCompress,
         &TopK { ratio: 100.0 },
         &TopK { ratio: 3.0 },
@@ -62,6 +67,10 @@ fn prop_compress_into_equals_compress_for_all_impls() {
         &ChunkedTopK { ratio: 100.0, chunk: 1600 },
         &RandomK { ratio: 50.0, seed: 7 },
         &Int8Quantizer,
+        &Quantized { inner: TopK { ratio: 100.0 }, row: None },
+        &Quantized { inner: ChunkedTopK { ratio: 8.0, chunk: 64 }, row: Some(64) },
+        &Quantized { inner: RandomK { ratio: 50.0, seed: 7 }, row: None },
+        &Quantized { inner: NoCompress, row: None },
     ];
     for data in payload_shapes(&mut rng) {
         for comp in comps {
@@ -95,10 +104,15 @@ fn prop_parallel_compress_deterministic_across_thread_counts() {
             let t8 = kth_largest_abs_threads(&data, k, 8);
             assert_eq!(t1.to_bits(), t2.to_bits(), "n={} r={ratio}", data.len());
             assert_eq!(t1.to_bits(), t8.to_bits(), "n={} r={ratio}", data.len());
-            // ...and so is the full compressed (values, indices) pair.
+            // ...and so is the full compressed (values, indices) pair —
+            // including the int8-quantized post-pass (a sequential pass,
+            // so the combined encoding inherits the determinism).
             for comp in [
                 &ChunkedTopK { ratio, chunk: 1600 } as &dyn Compressor,
                 &topk as &dyn Compressor,
+                &Quantized { inner: ChunkedTopK { ratio, chunk: 1600 }, row: Some(1600) }
+                    as &dyn Compressor,
+                &Quantized { inner: topk, row: None } as &dyn Compressor,
             ] {
                 let mut base = Compressed::default();
                 comp.compress_with(&data, &mut base, &mut CompressScratch::with_threads(1));
@@ -175,6 +189,120 @@ fn prop_encode_into_equals_encode_and_view_equals_decode() {
     }
 }
 
+/// Tentpole precision contract: quantize → encode → view-decode →
+/// dequantize lands within half a scale step (+1 ULP slack) of the direct
+/// f32 compress on every payload shape, with identical support.
+#[test]
+fn prop_quantized_wire_roundtrip_within_one_ulp_of_scale() {
+    let mut rng = Rng::new(0x178_1234);
+    for data in payload_shapes(&mut rng) {
+        if data.is_empty() {
+            continue;
+        }
+        let chunk = 64usize;
+        let plain = ChunkedTopK { ratio: 8.0, chunk };
+        let quant = Quantized { inner: plain, row: Some(chunk) };
+        // Direct f32 compress+decompress (the oracle).
+        let mut want = vec![0.0f32; data.len()];
+        plain.decompress(&plain.compress(&data), &mut want);
+        // Quantized path through the real wire: encode -> view -> scatter.
+        let c = quant.compress(&data);
+        let mut od = OpData::dense(0, 1, OpDataKind::Gradient, 0, 0, c.values.clone());
+        od.indices = c.indices.clone();
+        od.bytes_payload = c.bytes.clone();
+        od.compress = c.cfg.clone();
+        let buf = od.encode();
+        let mut got = vec![f32::NAN; data.len()];
+        decode_payload_into(&buf, &mut got).unwrap();
+        let scales = match &c.cfg {
+            CompressCfg::QSparseRows { .. } => &c.values,
+            other => panic!("expected QSparseRows, got {other:?}"),
+        };
+        for (i, (&w, &g)) in want.iter().zip(&got).enumerate() {
+            if w == 0.0 {
+                assert_eq!(g, 0.0, "support mismatch at {i} (n={})", data.len());
+            } else {
+                let s = scales[i / chunk];
+                assert!(
+                    (w - g).abs() <= s * (0.5 + 1e-4),
+                    "idx {i}: {w} vs {g}, scale {s} (n={})",
+                    data.len()
+                );
+            }
+        }
+        // And the in-memory decompress agrees with the wire decode.
+        let mut mem = vec![0.0f32; data.len()];
+        quant.decompress(&c, &mut mem);
+        assert_eq!(mem, got, "n={}", data.len());
+    }
+}
+
+/// Acceptance: the combined int8+Top-K encoding costs ≤ 5 bytes per kept
+/// value (+ constant header/cfg overhead) on the encoded packet, vs 8 for
+/// the f32-sparse wire layout.
+#[test]
+fn int8_sparse_packet_is_at_most_five_bytes_per_value() {
+    let mut rng = Rng::new(0xB17E);
+    let n = 100_000usize;
+    let data: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+    let k = TopK { ratio: 100.0 }.k_for(n);
+
+    let (q, _) = encode_payload_with(
+        ValueCodec::Int8,
+        CompressKind::TopK,
+        100.0,
+        n, // one row: per-message-equivalent scale overhead
+        0,
+        1,
+        OpDataKind::Activation,
+        0,
+        0,
+        &data,
+    );
+    let (f, _) = encode_payload_with(
+        ValueCodec::F32,
+        CompressKind::TopK,
+        100.0,
+        n,
+        0,
+        1,
+        OpDataKind::Activation,
+        0,
+        0,
+        &data,
+    );
+    const OVERHEAD: usize = 96; // header + cfg + length fields + scale
+    assert!(
+        q.len() <= 5 * k + OVERHEAD,
+        "int8-sparse {} bytes for k={k} (> 5 B/value)",
+        q.len()
+    );
+    assert!(f.len() >= 8 * k, "f32-sparse should cost ≥ 8 B/value, got {}", f.len());
+    // The chunked hot path (per-row scales, d_model=1600) stays under
+    // 5.5 B/value including the scale overhead.
+    let (qc, _) = encode_payload_with(
+        ValueCodec::Int8,
+        CompressKind::AdaTopK,
+        100.0,
+        1600,
+        0,
+        1,
+        OpDataKind::Activation,
+        0,
+        0,
+        &data,
+    );
+    let kc = (0..n).step_by(1600).map(|off| {
+        TopK { ratio: 100.0 }.k_for((n - off).min(1600))
+    });
+    let kc: usize = kc.sum();
+    assert!(
+        (qc.len() as f64) <= 5.5 * kc as f64 + OVERHEAD as f64,
+        "chunked int8-sparse {} bytes for k={kc}",
+        qc.len()
+    );
+}
+
 #[test]
 fn link_encoder_steady_state_equals_oneshot_wrappers() {
     let mut rng = Rng::new(0x11C0);
@@ -186,30 +314,51 @@ fn link_encoder_steady_state_equals_oneshot_wrappers() {
         (CompressKind::Int8, 4.0),
         (CompressKind::None, 1.0),
     ];
-    for (kind, ratio) in kinds {
-        let mut enc = LinkEncoder::new(kind, ratio, 1600);
-        for iter in 0..20u32 {
-            let dense: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
-            let (packet, wire) =
-                enc.encode(3, 4, OpDataKind::Activation, iter, iter % 4, &dense);
-            let (oneshot, wire2) = fusionllm::worker::messages::encode_payload(
-                kind,
-                ratio,
-                1600,
-                3,
-                4,
-                OpDataKind::Activation,
-                iter,
-                iter % 4,
-                &dense,
-            );
-            assert_eq!(packet, oneshot, "{kind:?} iter {iter}");
-            assert_eq!(wire, wire2);
-            // And the zero-copy decode reproduces the allocating decode.
-            let (_od, want) = decode_payload(&packet, n).unwrap();
-            let mut got = vec![f32::NAN; n];
-            decode_payload_into(&packet, &mut got).unwrap();
-            assert_eq!(got, want, "{kind:?} iter {iter}");
+    for codec in [ValueCodec::F32, ValueCodec::Int8] {
+        for (kind, ratio) in kinds {
+            let mut enc = LinkEncoder::with_codec(kind, ratio, 1600, codec);
+            for iter in 0..20u32 {
+                let dense: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+                let (packet, wire) =
+                    enc.encode(3, 4, OpDataKind::Activation, iter, iter % 4, &dense);
+                let (oneshot, wire2) = encode_payload_with(
+                    codec,
+                    kind,
+                    ratio,
+                    1600,
+                    3,
+                    4,
+                    OpDataKind::Activation,
+                    iter,
+                    iter % 4,
+                    &dense,
+                );
+                assert_eq!(packet, oneshot, "{kind:?}/{codec:?} iter {iter}");
+                assert_eq!(wire, wire2);
+                // And the zero-copy decode reproduces the allocating decode.
+                let (_od, want) = decode_payload(&packet, n).unwrap();
+                let mut got = vec![f32::NAN; n];
+                decode_payload_into(&packet, &mut got).unwrap();
+                assert_eq!(got, want, "{kind:?}/{codec:?} iter {iter}");
+            }
         }
     }
+    // The F32-codec `new` constructor stays a differential oracle for the
+    // seed wrapper.
+    let dense: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+    let (a, wa) = LinkEncoder::new(CompressKind::TopK, 20.0, 1600)
+        .encode(1, 2, OpDataKind::Gradient, 0, 0, &dense);
+    let (b, wb) = fusionllm::worker::messages::encode_payload(
+        CompressKind::TopK,
+        20.0,
+        1600,
+        1,
+        2,
+        OpDataKind::Gradient,
+        0,
+        0,
+        &dense,
+    );
+    assert_eq!(a, b);
+    assert_eq!(wa, wb);
 }
