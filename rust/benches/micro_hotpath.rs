@@ -15,8 +15,8 @@
 //! the perf trajectory is tracked across PRs (EXPERIMENTS.md §Perf).
 
 use fusionllm::compress::{
-    ChunkedTopK, CompressPlan, CompressScratch, Compressed, Compressor, Int8Quantizer,
-    Quantized, TopK,
+    ChunkedTopK, CompressKind, CompressPlan, CompressScratch, Compressed, Compressor,
+    Int8Quantizer, Quantized, TopK,
 };
 use fusionllm::cluster::testbed;
 use fusionllm::opdag::builders::{transformer_chain, TransformerSpec};
@@ -28,6 +28,8 @@ use fusionllm::util::benchkit::{bench, BenchResult};
 use fusionllm::util::json::{n, obj, Json};
 use fusionllm::util::math::compress_threads;
 use fusionllm::util::rng::Rng;
+use fusionllm::worker::{run_schedule, LinkEncoder, NullBackend, StageCodec, StageLinks, Wire};
+use std::sync::mpsc::channel;
 
 fn main() {
     let mut results: Vec<(BenchResult, f64)> = Vec::new();
@@ -142,8 +144,59 @@ fn main() {
     });
     run(r, 0.0);
 
+    // Schedule-interpreter dispatch overhead: a middle stage executing
+    // its full GPipe row (8 fwd + 8 bwd + update) over preloaded
+    // channels with the NullBackend and a tiny payload, so the per-task
+    // protocol cost (recv, decode, dispatch, encode, send, profile)
+    // dominates — the steady-state loop the worker refactor must not slow.
+    let disp_sched = PipelineSchedule::new(ScheduleKind::GPipe, 3, 8);
+    let r = bench("interpreter dispatch (17 tasks, n=16)", 10, 200, || {
+        interpreter_dispatch_once(&disp_sched)
+    });
+    run(r, 0.0);
+
     write_json(&results);
     println!("\n(recorded in EXPERIMENTS.md §Perf; machine-readable copy at BENCH_micro_hotpath.json)");
+}
+
+/// One full schedule-row execution of a middle (body) stage on the
+/// production interpreter: channels preloaded with encoded packets in
+/// schedule order, sends drained into held receivers.
+fn interpreter_dispatch_once(sched: &PipelineSchedule) -> u32 {
+    let n = 16usize;
+    let n_micro = sched.n_micro;
+    let plan = CompressPlan::dense(3);
+    let (fwd_in_tx, fwd_in_rx) = channel::<Wire>();
+    let (bwd_in_tx, bwd_in_rx) = channel::<Wire>();
+    let (fwd_out_tx, fwd_out_rx) = channel::<Wire>();
+    let (bwd_out_tx, bwd_out_rx) = channel::<Wire>();
+    let (tx_driver, rx_driver) = channel::<Wire>();
+    let mut enc = LinkEncoder::new(CompressKind::None, 1.0, n);
+    let dense = vec![0.5f32; n];
+    for m in 0..n_micro as u32 {
+        let (buf, _) = enc.encode(0, 1, OpDataKind::Activation, 0, m, &dense);
+        fwd_in_tx.send(Wire::Packet(buf)).unwrap();
+    }
+    for m in (0..n_micro as u32).rev() {
+        let (buf, _) = enc.encode(2, 1, OpDataKind::Gradient, 0, m, &dense);
+        bwd_in_tx.send(Wire::Packet(buf)).unwrap();
+    }
+    let mut links = StageLinks {
+        stage: 1,
+        device: 1,
+        codec: StageCodec::from_plan(&plan, Some(2), Some(0), n),
+        rx_fwd: fwd_in_rx,
+        rx_bwd: Some(bwd_in_rx),
+        tx_fwd: Some(fwd_out_tx),
+        tx_bwd: Some(bwd_out_tx),
+        rx_labels: None,
+        tx_driver,
+    };
+    let mut backend = NullBackend::new(n, n_micro, false);
+    run_schedule(&mut links, &mut backend, &sched.tasks[1], 0, 1).unwrap();
+    // Receivers must outlive the run (sends would error otherwise).
+    drop((fwd_out_rx, bwd_out_rx, rx_driver));
+    backend.updates
 }
 
 /// Emit op -> {median_s, min_s, gb_per_s} to the repo root.

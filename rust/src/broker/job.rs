@@ -3,6 +3,8 @@
 
 use crate::compress::adatopk::CompressDirection;
 use crate::compress::{CompressKind, ValueCodec};
+use crate::pipeline::ScheduleKind;
+use crate::scheduler::replan::ReplanMode;
 use crate::util::cli::Args;
 use std::path::PathBuf;
 
@@ -37,6 +39,19 @@ pub struct Job {
     /// Used to pin stages across clusters, the realistic decentralized
     /// scenario where AdaTopK's per-link ratios differ.
     pub placement: Option<Vec<usize>>,
+    /// Pipeline execution schedule the workers interpret (gpipe | 1f1b).
+    pub pipeline: ScheduleKind,
+    /// Straggler re-planning mode (off | advise | auto).
+    pub replan: ReplanMode,
+    /// Flag stages busier than this multiple of the cluster median.
+    pub straggler_threshold: f64,
+    /// Relative simulated-iteration improvement a candidate plan must
+    /// clear before `--replan auto` migrates (anti-churn margin).
+    pub replan_hysteresis: f64,
+    /// Test hook: make the device initially hosting this stage run its
+    /// compute `slow_factor`× slower (straggler injection).
+    pub slow_stage: Option<usize>,
+    pub slow_factor: f64,
 }
 
 impl Default for Job {
@@ -57,6 +72,12 @@ impl Default for Job {
             value_codec: ValueCodec::F32,
             optimizer: "sgd".into(),
             placement: None,
+            pipeline: ScheduleKind::GPipe,
+            replan: ReplanMode::Off,
+            straggler_threshold: 2.0,
+            replan_hysteresis: 0.10,
+            slow_stage: None,
+            slow_factor: 4.0,
         }
     }
 }
@@ -95,6 +116,14 @@ impl Job {
                     .map(|v| v.parse().expect("--placement expects ids like 0,1,8,20"))
                     .collect()
             }),
+            pipeline: ScheduleKind::parse(&args.str("pipeline", "gpipe"))?,
+            replan: ReplanMode::parse(&args.str("replan", "off"))?,
+            straggler_threshold: args.f64("straggler-threshold", d.straggler_threshold),
+            replan_hysteresis: args.f64("replan-hysteresis", d.replan_hysteresis),
+            slow_stage: args
+                .opt_str("slow-stage")
+                .map(|s| s.parse().expect("--slow-stage expects a stage index")),
+            slow_factor: args.f64("slow-factor", d.slow_factor),
         })
     }
 }
@@ -128,6 +157,29 @@ mod tests {
         );
         assert_eq!(Job::from_args(&args).unwrap().value_codec, ValueCodec::Int8);
         let bad = Args::parse(["--wire-codec", "fp8"].iter().map(|s| s.to_string()));
+        assert!(Job::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn pipeline_and_replan_flags_parse() {
+        let j = Job::from_args(&Args::parse(std::iter::empty::<String>())).unwrap();
+        assert_eq!(j.pipeline, ScheduleKind::GPipe);
+        assert_eq!(j.replan, ReplanMode::Off);
+        assert_eq!(j.slow_stage, None);
+        let args = Args::parse(
+            "train --pipeline 1f1b --replan auto --straggler-threshold 3 --slow-stage 1 --slow-factor 8"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let j = Job::from_args(&args).unwrap();
+        assert_eq!(j.pipeline, ScheduleKind::OneFOneB);
+        assert_eq!(j.replan, ReplanMode::Auto);
+        assert_eq!(j.straggler_threshold, 3.0);
+        assert_eq!(j.slow_stage, Some(1));
+        assert_eq!(j.slow_factor, 8.0);
+        let bad = Args::parse(["--pipeline", "zigzag"].iter().map(|s| s.to_string()));
+        assert!(Job::from_args(&bad).is_err());
+        let bad = Args::parse(["--replan", "maybe"].iter().map(|s| s.to_string()));
         assert!(Job::from_args(&bad).is_err());
     }
 

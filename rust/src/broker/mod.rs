@@ -2,22 +2,201 @@
 //! stage-level OP-DAG, schedules it onto the testbed, derives the
 //! compression plan, spawns the CompNode workers, feeds data, and collects
 //! losses + statistics into a `TrainReport`.
+//!
+//! The runtime is adaptive: workers stream per-iteration `IterProfile`
+//! measurements back to the broker; a `ProfileStore` maintains EWMA
+//! per-stage times; when the straggler detector flags a stage and
+//! `--replan auto` is set, the `Replanner` re-runs the scheduler with
+//! measured (not modeled) compute times and — if the simulated iteration
+//! improves past the hysteresis margin — the broker re-partitions at the
+//! next iteration boundary: workers are stopped, their `StageState`
+//! (params + optimizer moments) is snapshotted, links/codecs are rebuilt
+//! for the new placement, and a fresh worker generation resumes at the
+//! same global iteration.
 
 pub mod job;
 
 pub use job::Job;
 
-use crate::cluster::testbed;
+use crate::cluster::{testbed, Testbed};
 use crate::compress::{CompressKind, CompressPlan};
-use crate::cost::throughput::PipelineParams;
+use crate::cost::{PipelineParams, ProfileStore};
 use crate::opdag::builders::{stage_chain, TransformerSpec};
-use crate::pipeline::{PipelineSchedule, ScheduleKind};
+use crate::opdag::{Dag, Partition};
+use crate::pipeline::PipelineSchedule;
 use crate::runtime::Manifest;
+use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
 use crate::simnet::{simulate_iteration, StagePlan};
-use crate::trainer::{SyntheticCorpus, TrainReport};
-use crate::worker::{spawn_stage, StageCodec, StageCtx, Wire, WorkerStats};
-use std::sync::mpsc;
+use crate::trainer::{ReplanEvent, SyntheticCorpus, TrainReport};
+use crate::worker::{spawn_stage, StageCodec, StageCtx, StageState, Wire, WorkerStats};
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::time::Instant;
+
+/// Iterations of measured profile required before the first replan check.
+const REPLAN_WARMUP_ITERS: usize = 3;
+
+/// One cohort of stage workers sharing a set of channels. Re-partitioning
+/// tears a generation down (collecting state snapshots) and spawns the
+/// next one on the new placement.
+struct Generation {
+    handles: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
+    /// Broker-held senders into every stage's forward input (stage 0 gets
+    /// Data; the rest are reachable for Stop broadcast).
+    fwd_tx: Vec<Sender<Wire>>,
+    label_tx: Sender<Wire>,
+    rx_driver: Receiver<Wire>,
+    /// Stats messages already collected from this generation.
+    stats_seen: usize,
+}
+
+/// Build the compression plan for a (partition, testbed) pair per the
+/// job's knobs — also used by the re-planner to cost candidate plans.
+fn compress_plan_for(
+    job: &Job,
+    micro_size: usize,
+    dag: &Dag,
+    part: &Partition,
+    tb: &Testbed,
+) -> CompressPlan {
+    let params = PipelineParams { n_micro: job.n_micro, micro_size, include_bwd: true };
+    let mut plan = match job.compress {
+        // `--compress none --wire-codec int8` = dense int8 (1 B/value).
+        CompressKind::None => {
+            CompressPlan::dense(tb.nodes.len()).with_value_codec(job.value_codec)
+        }
+        CompressKind::AdaTopK => CompressPlan::adatopk_with_codec(
+            dag,
+            part,
+            tb,
+            params,
+            job.ratio,
+            job.value_codec,
+        ),
+        kind => {
+            CompressPlan::uniform(kind, job.ratio, tb.nodes.len())
+                .with_value_codec(job.value_codec)
+        }
+    };
+    plan.direction = job.direction;
+    plan
+}
+
+/// Spawn one worker generation on `devices`, executing iterations
+/// `[iter0, iter0 + iters)` of `schedule`. `init` entries are taken (and
+/// consumed) as migrated state for the matching stage.
+#[allow(clippy::too_many_arguments)]
+fn spawn_generation(
+    manifest: &Manifest,
+    job: &Job,
+    schedule: &PipelineSchedule,
+    devices: &[usize],
+    plan: &CompressPlan,
+    iter0: u32,
+    iters: usize,
+    init: &mut [Option<StageState>],
+    slow_dev: Option<(usize, f64)>,
+) -> Generation {
+    let s_n = devices.len();
+    let cfg = &manifest.config;
+    let (tx_driver, rx_driver) = mpsc::channel::<Wire>();
+    let mut fwd_tx = Vec::new();
+    let mut fwd_rx = Vec::new();
+    for _ in 0..s_n {
+        let (t, r) = mpsc::channel::<Wire>();
+        fwd_tx.push(t);
+        fwd_rx.push(Some(r));
+    }
+    let mut bwd_tx = Vec::new();
+    let mut bwd_rx = Vec::new();
+    for _ in 0..s_n {
+        let (t, r) = mpsc::channel::<Wire>();
+        bwd_tx.push(t);
+        bwd_rx.push(Some(r));
+    }
+    let (label_tx, label_rx) = mpsc::channel::<Wire>();
+    let mut label_rx = Some(label_rx);
+
+    let mut handles = Vec::new();
+    for s in 0..s_n {
+        let next_device = devices.get(s + 1).copied();
+        let prev_device = if s > 0 { Some(devices[s - 1]) } else { None };
+        let slow_factor = match slow_dev {
+            Some((dev, f)) if dev == devices[s] => f,
+            _ => 1.0,
+        };
+        let ctx = StageCtx {
+            stage: s,
+            n_stages: s_n,
+            device: devices[s],
+            next_device,
+            prev_device,
+            manifest: manifest.clone(),
+            // Per-link wire codecs: ratios keyed by the receiving device
+            // (Eq. 7), scratch owned for the life of the link.
+            codec: StageCodec::from_plan(plan, next_device, prev_device, cfg.d_model),
+            tasks: schedule.tasks[s].clone(),
+            iter0,
+            iters,
+            n_micro: job.n_micro,
+            lr: job.lr,
+            momentum: job.momentum,
+            optimizer: job.optimizer.clone(),
+            param_seed: job.seed.wrapping_add(s as u64),
+            init_state: init[s].take(),
+            slow_factor,
+            rx_fwd: fwd_rx[s].take().unwrap(),
+            rx_bwd: if s + 1 < s_n { bwd_rx[s].take() } else { None },
+            tx_fwd: if s + 1 < s_n { Some(fwd_tx[s + 1].clone()) } else { None },
+            tx_bwd: if s > 0 { Some(bwd_tx[s - 1].clone()) } else { None },
+            rx_labels: if s == s_n - 1 { label_rx.take() } else { None },
+            tx_driver: tx_driver.clone(),
+        };
+        handles.push(spawn_stage(ctx));
+    }
+    // The broker keeps no tx_driver clone: the channel closes when the
+    // last worker of the generation exits.
+    drop(tx_driver);
+    Generation { handles, fwd_tx, label_tx, rx_driver, stats_seen: 0 }
+}
+
+/// Stop a generation at an iteration boundary (workers are blocked on
+/// their first recv of the next iteration), collect state snapshots and
+/// remaining stats, and join the threads. Also used as the end-of-run
+/// drain, where the Stop sends land on already-dropped receivers.
+fn teardown(
+    gen: Generation,
+    s_n: usize,
+    snapshots: &mut [Option<StageState>],
+    all_stats: &mut Vec<WorkerStats>,
+) -> anyhow::Result<()> {
+    for tx in &gen.fwd_tx {
+        let _ = tx.send(Wire::Stop);
+    }
+    let _ = gen.label_tx.send(Wire::Stop);
+    let mut seen = gen.stats_seen;
+    while seen < s_n {
+        match gen.rx_driver.recv() {
+            Ok(Wire::Stats(st)) => {
+                all_stats.push(st);
+                seen += 1;
+            }
+            Ok(Wire::Snapshot { stage, state }) => snapshots[stage] = Some(state),
+            Ok(Wire::Fatal { stage, error }) => {
+                anyhow::bail!("stage {stage} failed: {error}")
+            }
+            Ok(_) => {} // stale losses/profiles from the stopped iteration
+            Err(_) => break, // all workers exited (join reports errors)
+        }
+    }
+    for h in gen.handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => anyhow::bail!("worker failed: {e:#}"),
+            Err(_) => anyhow::bail!("worker panicked"),
+        }
+    }
+    Ok(())
+}
 
 /// Run a full decentralized training job. Returns the report.
 pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
@@ -41,7 +220,7 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
         microbatch: cfg.microbatch,
     };
     let dag = stage_chain(&spec, cfg.n_stages);
-    let part = match &job.placement {
+    let mut part = match &job.placement {
         Some(devs) => {
             anyhow::ensure!(
                 devs.len() == cfg.n_stages,
@@ -66,92 +245,50 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
         None => crate::scheduler::by_name(&job.scheduler)?.schedule(&dag, &tb)?,
     };
     part.validate(&dag)?;
-    let stage_plan = StagePlan::from_partition(&dag, &part, &tb);
+    let mut stage_plan = StagePlan::from_partition(&dag, &part, &tb);
     anyhow::ensure!(
         stage_plan.n_stages() == cfg.n_stages,
         "scheduler merged stages ({} of {})",
         stage_plan.n_stages(),
         cfg.n_stages
     );
-    let devices = stage_plan.devices.clone();
-
-    // Compression plan.
-    let params = PipelineParams {
-        n_micro: job.n_micro,
-        micro_size: cfg.microbatch,
-        include_bwd: true,
-    };
-    let mut plan = match job.compress {
-        // `--compress none --wire-codec int8` = dense int8 (1 B/value).
-        CompressKind::None => {
-            CompressPlan::dense(tb.nodes.len()).with_value_codec(job.value_codec)
-        }
-        CompressKind::AdaTopK => CompressPlan::adatopk_with_codec(
-            &dag,
-            &part,
-            &tb,
-            params,
-            job.ratio,
-            job.value_codec,
-        ),
-        kind => {
-            CompressPlan::uniform(kind, job.ratio, tb.nodes.len())
-                .with_value_codec(job.value_codec)
-        }
-    };
-    plan.direction = job.direction;
-
-    // ---- spawn workers ------------------------------------------------
     let s_n = cfg.n_stages;
-    let (tx_driver, rx_driver) = mpsc::channel::<Wire>();
-    // Forward links: driver->0 is Data; s->s+1 are Packets.
-    let mut fwd_tx = Vec::new();
-    let mut fwd_rx = Vec::new();
-    for _ in 0..s_n {
-        let (t, r) = mpsc::channel::<Wire>();
-        fwd_tx.push(t);
-        fwd_rx.push(Some(r));
-    }
-    let mut bwd_tx = Vec::new();
-    let mut bwd_rx = Vec::new();
-    for _ in 0..s_n {
-        let (t, r) = mpsc::channel::<Wire>();
-        bwd_tx.push(t);
-        bwd_rx.push(Some(r));
-    }
-    let (label_tx, label_rx) = mpsc::channel::<Wire>();
-    let mut label_rx = Some(label_rx);
+    let mut devices = stage_plan.devices.clone();
+    let mut plan = compress_plan_for(job, cfg.microbatch, &dag, &part, &tb);
 
-    let mut handles = Vec::new();
-    for s in 0..s_n {
-        let next_device = devices.get(s + 1).copied();
-        let prev_device = if s > 0 { Some(devices[s - 1]) } else { None };
-        let ctx = StageCtx {
-            stage: s,
-            n_stages: s_n,
-            device: devices[s],
-            next_device,
-            prev_device,
-            manifest: manifest.clone(),
-            // Per-link wire codecs: ratios keyed by the receiving device
-            // (Eq. 7), scratch owned for the life of the link.
-            codec: StageCodec::from_plan(&plan, next_device, prev_device, cfg.d_model),
-            iters: job.iters,
-            n_micro: job.n_micro,
-            lr: job.lr,
-            momentum: job.momentum,
-            optimizer: job.optimizer.clone(),
-            param_seed: job.seed.wrapping_add(s as u64),
-            rx_fwd: fwd_rx[s].take().unwrap(),
-            rx_bwd: if s + 1 < s_n { bwd_rx[s].take() } else { None },
-            tx_fwd: if s + 1 < s_n { Some(fwd_tx[s + 1].clone()) } else { None },
-            tx_bwd: if s > 0 { Some(bwd_tx[s - 1].clone()) } else { None },
-            rx_labels: if s == s_n - 1 { label_rx.take() } else { None },
-            tx_driver: tx_driver.clone(),
-        };
-        handles.push(spawn_stage(ctx));
-    }
-    drop(tx_driver);
+    // The execution schedule both workers and the simulator interpret.
+    let schedule = PipelineSchedule::new(job.pipeline, s_n, job.n_micro);
+    schedule.validate()?;
+
+    // Straggler injection (test hook): the device initially hosting
+    // --slow-stage runs slow for the whole job, wherever stages move.
+    let slow_dev: Option<(usize, f64)> = match job.slow_stage {
+        Some(s) => {
+            anyhow::ensure!(s < s_n, "--slow-stage {s} out of range (stages: {s_n})");
+            Some((devices[s], job.slow_factor.max(1.0)))
+        }
+        None => None,
+    };
+
+    // Profile feedback plane + re-planner.
+    let mut store = ProfileStore::new(s_n, job.n_micro, 0.5);
+    let replanner = Replanner {
+        scheduler: job.scheduler.clone(),
+        threshold: job.straggler_threshold,
+        hysteresis: job.replan_hysteresis,
+        min_samples: REPLAN_WARMUP_ITERS,
+        keep_stage_count: true,
+    };
+    let mut snapshots: Vec<Option<StageState>> = (0..s_n).map(|_| None).collect();
+    let mut all_stats: Vec<WorkerStats> = Vec::new();
+    // Last recommendation that was recorded but not applied — a persistent
+    // straggler would otherwise append a near-duplicate event at every
+    // iteration boundary (advise mode, or auto blocked by hysteresis).
+    let mut last_unapplied: Option<(Vec<usize>, bool)> = None;
+
+    let mut gen = spawn_generation(
+        &manifest, job, &schedule, &devices, &plan, 0, job.iters, &mut snapshots, slow_dev,
+    );
 
     // ---- drive the training loop --------------------------------------
     let mut corpus = SyntheticCorpus::new(cfg.vocab, job.seed ^ 0xDA7A);
@@ -162,31 +299,55 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
             crate::compress::ValueCodec::F32 => job.compress.name().to_string(),
             crate::compress::ValueCodec::Int8 => format!("{}+int8", job.compress.name()),
         },
+        pipeline: job.pipeline.name().to_string(),
         ratio: job.ratio,
         n_micro: job.n_micro,
         placement: devices.clone(),
         ..Default::default()
     };
 
-    let mut stats: Vec<WorkerStats> = Vec::new();
-    let mut bytes_prev = 0.0f64;
-    for iter in 0..job.iters as u32 {
+    for it in 0..job.iters {
+        let iter = it as u32;
         let t0 = Instant::now();
         for micro in 0..job.n_micro as u32 {
             let (tokens, targets) = corpus.next_batch(cfg.microbatch, cfg.seq_len);
-            fwd_tx[0].send(Wire::Data { iter, micro, tokens })?;
-            label_tx.send(Wire::Labels { iter, micro, targets })?;
+            gen.fwd_tx[0].send(Wire::Data { iter, micro, tokens })?;
+            gen.label_tx.send(Wire::Labels { iter, micro, targets })?;
         }
-        // Collect the n_micro losses of this iteration.
+        // Collect this iteration's n_micro losses AND every stage's
+        // IterProfile (sent after its Update). Workers cannot run ahead —
+        // the next iteration's data is only fed after this loop — so all
+        // profiles belong to `iter`.
         let mut sum = 0.0f32;
-        let mut got = 0usize;
-        while got < job.n_micro {
-            match rx_driver.recv()? {
+        let mut got_losses = 0usize;
+        let mut prof = vec![(0.0f64, 0.0f64, 0.0f64, 0.0f64); s_n]; // fwd,bwd,upd,bytes
+        let mut got_prof = vec![false; s_n];
+        let mut n_prof = 0usize;
+        while got_losses < job.n_micro || n_prof < s_n {
+            let msg = gen
+                .rx_driver
+                .recv()
+                .map_err(|_| anyhow::anyhow!("workers exited mid-iteration {it}"))?;
+            match msg {
                 Wire::Loss { loss, .. } => {
                     sum += loss;
-                    got += 1;
+                    got_losses += 1;
                 }
-                Wire::Stats(st) => stats.push(st),
+                Wire::IterProfile { stage, iter: pit, fwd_s, bwd_s, update_s, bytes, .. } => {
+                    anyhow::ensure!(
+                        pit == iter && !got_prof[stage],
+                        "stage {stage}: unexpected profile for iter {pit} during {it}"
+                    );
+                    prof[stage] = (fwd_s, bwd_s, update_s, bytes);
+                    got_prof[stage] = true;
+                    n_prof += 1;
+                }
+                Wire::Stats(st) => {
+                    // Natural end of the final generation overlaps the
+                    // last iteration's drain.
+                    all_stats.push(st);
+                    gen.stats_seen += 1;
+                }
                 Wire::Fatal { stage, error } => {
                     anyhow::bail!("stage {stage} failed: {error}")
                 }
@@ -195,53 +356,97 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
         }
         report.losses.push(sum / job.n_micro as f32);
         report.wall_s.push(t0.elapsed().as_secs_f64());
-        // Wire bytes are reported at the end; estimate per-iteration from
-        // the plan for the running log, corrected after stats arrive.
-        report.wire_bytes.push(bytes_prev);
-        bytes_prev = 0.0;
-    }
+        // Real per-iteration wire bytes, straight from the workers.
+        report.wire_bytes.push(prof.iter().map(|p| p.3).sum());
+        for (s, p) in prof.iter().enumerate() {
+            store.record_iter(s, p.0, p.1, p.2);
+        }
+        // Per-iteration simulated geo latency: the α–β network applied to
+        // the *measured* compute times under the current placement.
+        let measured = store.measured_plan(&stage_plan);
+        report
+            .sim_s
+            .push(simulate_iteration(&measured, &tb, &schedule, &plan).iter_s);
 
-    // ---- drain worker stats --------------------------------------------
-    while stats.len() < s_n {
-        match rx_driver.recv() {
-            Ok(Wire::Stats(st)) => stats.push(st),
-            Ok(_) => {}
-            Err(_) => break,
+        // ---- straggler check at the iteration boundary ----------------
+        if job.replan != ReplanMode::Off && it + 1 < job.iters {
+            let inp = ReplanInput {
+                dag: &dag,
+                testbed: &tb,
+                part: &part,
+                modeled: &stage_plan,
+                store: &store,
+                schedule: job.pipeline,
+                n_micro: job.n_micro,
+                current_compress: &plan,
+            };
+            let decision = replanner
+                .consider(&inp, &|p, t| compress_plan_for(job, cfg.microbatch, &dag, p, t))?;
+            if let Some(d) = decision {
+                let apply = d.adopt && job.replan == ReplanMode::Auto;
+                if !apply {
+                    let key = (d.candidate.plan.devices.clone(), d.adopt);
+                    if last_unapplied.as_ref() == Some(&key) {
+                        continue; // same recommendation as last time
+                    }
+                    last_unapplied = Some(key);
+                } else {
+                    last_unapplied = None;
+                }
+                let mut ev = ReplanEvent {
+                    iter: it + 1,
+                    from: devices.clone(),
+                    to: d.candidate.plan.devices.clone(),
+                    flagged: d.flagged.clone(),
+                    origin: d.candidate.origin.to_string(),
+                    sim_before_s: d.current_sim_s,
+                    sim_after_s: d.candidate_sim_s,
+                    migration_s: d.migration_s,
+                    applied: apply,
+                };
+                if apply {
+                    let t_mig = Instant::now();
+                    teardown(gen, s_n, &mut snapshots, &mut all_stats)?;
+                    part = d.candidate.partition.clone();
+                    stage_plan = StagePlan::from_partition(&dag, &part, &tb);
+                    anyhow::ensure!(
+                        stage_plan.n_stages() == s_n,
+                        "replan changed the stage count"
+                    );
+                    // Measurements for moved stages describe old silicon.
+                    for s in 0..s_n {
+                        if stage_plan.devices[s] != devices[s] {
+                            store.reset_stage(s);
+                        }
+                    }
+                    devices = stage_plan.devices.clone();
+                    plan = compress_plan_for(job, cfg.microbatch, &dag, &part, &tb);
+                    gen = spawn_generation(
+                        &manifest,
+                        job,
+                        &schedule,
+                        &devices,
+                        &plan,
+                        iter + 1,
+                        job.iters - (it + 1),
+                        &mut snapshots,
+                        slow_dev,
+                    );
+                    ev.migration_s = t_mig.elapsed().as_secs_f64();
+                }
+                report.replans.push(ev);
+            }
         }
     }
-    for h in handles {
-        match h.join() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => anyhow::bail!("worker failed: {e:#}"),
-            Err(_) => anyhow::bail!("worker panicked"),
-        }
-    }
 
-    // Actual wire bytes per iteration (uniform across iters by protocol).
-    let total_bytes: f64 = stats.iter().map(|s| s.bytes_sent).sum();
-    let per_iter = total_bytes / job.iters.max(1) as f64;
-    for b in report.wire_bytes.iter_mut() {
-        *b = per_iter;
-    }
+    // ---- drain the final generation ------------------------------------
+    teardown(gen, s_n, &mut snapshots, &mut all_stats)?;
+    report.placement = devices;
+
     // Achieved wire compression (dense payload bytes / wire bytes).
-    let total_dense: f64 = stats.iter().map(|s| s.dense_bytes).sum();
+    let total_bytes: f64 = all_stats.iter().map(|s| s.bytes_sent).sum();
+    let total_dense: f64 = all_stats.iter().map(|s| s.dense_bytes).sum();
     report.wire_shrink = if total_bytes > 0.0 { total_dense / total_bytes } else { 1.0 };
-
-    // ---- post-hoc geo-simulation with measured compute ------------------
-    // Replace the cost-model compute times with measured PJRT wall times
-    // (per microbatch), then run the discrete-event simulator to get the
-    // iteration latency this run WOULD have had on the geo testbed.
-    let mut measured = stage_plan.clone();
-    let denom = (job.iters * job.n_micro) as f64;
-    for st in &stats {
-        let s = st.stage;
-        measured.fwd_s[s] = st.fwd_s / denom;
-        measured.bwd_s[s] = st.bwd_s / denom;
-        measured.update_s[s] = st.update_s / job.iters.max(1) as f64;
-    }
-    let sched = PipelineSchedule::new(ScheduleKind::GPipe, s_n, job.n_micro);
-    let sim = simulate_iteration(&measured, &tb, &sched, &plan);
-    report.sim_s = vec![sim.iter_s; job.iters];
 
     Ok(report)
 }

@@ -5,8 +5,10 @@ use crate::cluster::compnode::{gpu_days_for_gpt3, gpus_to_load_gpt3, GpuModel};
 use crate::cluster::{louvain::louvain, testbed};
 use crate::compress::{CompressKind, CompressPlan, ValueCodec};
 use crate::cost::throughput::{dense_bytes, evaluate, PipelineParams};
+use crate::cost::ProfileStore;
 use crate::opdag::builders::{transformer_chain, TransformerSpec};
 use crate::pipeline::{PipelineSchedule, ScheduleKind};
+use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
 use crate::simnet::{simulate_iteration, StagePlan};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -114,7 +116,15 @@ pub fn schedule(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `fusionllm simulate --testbed N --scheduler S --compress C --ratio R`.
+/// `fusionllm simulate --testbed N --scheduler S --compress C --ratio R
+///  [--pipeline gpipe|1f1b] [--slow-node I --slow-factor F
+///   --replan off|advise|auto [--min-recovery X]]`.
+///
+/// With `--slow-node`, one device's compute runs F× slower than the
+/// scheduler believes (a straggler). `--replan` feeds the slowed times
+/// through the measured-profile re-planner and reports the recovered
+/// throughput; `--min-recovery` turns that into a CI gate (nonzero exit
+/// when static/replanned < X).
 pub fn simulate(args: &Args) -> Result<()> {
     let tb = testbed::by_id(args.usize("testbed", 1), args.u64("seed", 1));
     let dag = transformer_chain(&TransformerSpec::gpt2_xl());
@@ -125,22 +135,25 @@ pub fn simulate(args: &Args) -> Result<()> {
     let ratio = args.f64("ratio", 100.0);
     let codec = ValueCodec::parse(&args.str("wire-codec", "f32"))?;
     let params = PipelineParams { n_micro, micro_size: 3, include_bwd: true };
-    let plan = match kind {
-        CompressKind::None => CompressPlan::dense(tb.nodes.len()).with_value_codec(codec),
+    let plan_for = |p: &crate::opdag::Partition, t: &crate::cluster::Testbed| match kind {
+        CompressKind::None => CompressPlan::dense(t.nodes.len()).with_value_codec(codec),
         CompressKind::AdaTopK => {
-            CompressPlan::adatopk_with_codec(&dag, &part, &tb, params, ratio, codec)
+            CompressPlan::adatopk_with_codec(&dag, p, t, params, ratio, codec)
         }
-        k => CompressPlan::uniform(k, ratio, tb.nodes.len()).with_value_codec(codec),
+        k => CompressPlan::uniform(k, ratio, t.nodes.len()).with_value_codec(codec),
     };
+    let plan = plan_for(&part, &tb);
     let stage_plan = StagePlan::from_partition(&dag, &part, &tb);
     let pipe_kind = ScheduleKind::parse(&args.str("pipeline", "gpipe"))?;
     let sched = PipelineSchedule::new(pipe_kind, stage_plan.n_stages(), n_micro);
     let sim = simulate_iteration(&stage_plan, &tb, &sched, &plan);
     println!(
-        "testbed={} scheduler={sched_name} compress={} ratio={ratio} wire-codec={} n_micro={n_micro}",
+        "testbed={} scheduler={sched_name} compress={} ratio={ratio} wire-codec={} \
+         pipeline={} n_micro={n_micro}",
         tb.name,
         kind.name(),
-        codec.name()
+        codec.name(),
+        pipe_kind.name()
     );
     println!(
         "iteration latency = {}   wire = {}   bubble = {:.1}%",
@@ -148,6 +161,112 @@ pub fn simulate(args: &Args) -> Result<()> {
         fmt_bytes(sim.wire_bytes),
         100.0 * sim.bubble_frac
     );
+
+    // ---- straggler scenario + re-planning smoke -----------------------
+    let slow_node = match args.opt_str("slow-node") {
+        Some(s) => s
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--slow-node expects a device id"))?,
+        None => return Ok(()),
+    };
+    anyhow::ensure!(slow_node < tb.nodes.len(), "--slow-node {slow_node} out of range");
+    let factor = args.f64("slow-factor", 4.0).max(1.0);
+
+    // Ground truth: the node is `factor`× slower than believed. The
+    // "measured" plan is what the profile plane would observe.
+    let mut measured = stage_plan.clone();
+    let mut hosts_stage = false;
+    for s in 0..measured.n_stages() {
+        if measured.devices[s] == slow_node {
+            measured.fwd_s[s] *= factor;
+            measured.bwd_s[s] *= factor;
+            measured.update_s[s] *= factor;
+            hosts_stage = true;
+        }
+    }
+    anyhow::ensure!(
+        hosts_stage,
+        "--slow-node {slow_node} hosts no stage under scheduler `{sched_name}`"
+    );
+    let static_sim = simulate_iteration(&measured, &tb, &sched, &plan);
+    println!(
+        "straggler: node {slow_node} runs {factor}x slower -> static plan iteration = {}  \
+         (was {})",
+        fmt_secs(static_sim.iter_s),
+        fmt_secs(sim.iter_s)
+    );
+
+    let mode = ReplanMode::parse(&args.str("replan", "off"))?;
+    if mode == ReplanMode::Off {
+        return Ok(());
+    }
+    let mut store = ProfileStore::new(measured.n_stages(), n_micro, 1.0);
+    store.seed_from_plan(&measured);
+    let replanner = Replanner {
+        scheduler: sched_name.clone(),
+        threshold: args.f64("straggler-threshold", 2.0),
+        hysteresis: args.f64("replan-hysteresis", 0.10),
+        min_samples: 1,
+        // Simulation has no live worker chain to preserve.
+        keep_stage_count: false,
+    };
+    let inp = ReplanInput {
+        dag: &dag,
+        testbed: &tb,
+        part: &part,
+        modeled: &stage_plan,
+        store: &store,
+        schedule: pipe_kind,
+        n_micro,
+        current_compress: &plan,
+    };
+    let decision = replanner.consider(&inp, &|p, t| plan_for(p, t))?;
+    let d = match decision {
+        None => {
+            println!("re-planner: no straggler flagged / no better partition found");
+            anyhow::ensure!(
+                args.opt_str("min-recovery").is_none(),
+                "--min-recovery set but the re-planner produced no plan"
+            );
+            return Ok(());
+        }
+        Some(d) => d,
+    };
+    println!(
+        "re-planner [{}]: flagged stages {:?}; simulated {} -> {} (predicted), \
+         migration ~{}",
+        d.candidate.origin,
+        d.flagged,
+        fmt_secs(d.current_sim_s),
+        fmt_secs(d.candidate_sim_s),
+        fmt_secs(d.migration_s)
+    );
+
+    // Ground-truth evaluation of the candidate: re-derive its stage times
+    // on a testbed where the slow node *really* is `factor`× slower.
+    let mut tb_truth = tb.clone();
+    tb_truth.nodes[slow_node].lambda =
+        (tb_truth.nodes[slow_node].lambda / factor).max(1e-6);
+    let cand_truth = StagePlan::from_partition(&dag, &d.candidate.partition, &tb_truth);
+    let cand_sched = PipelineSchedule::new(pipe_kind, cand_truth.n_stages(), n_micro);
+    let cand_plan = plan_for(&d.candidate.partition, &tb);
+    let replanned = simulate_iteration(&cand_truth, &tb_truth, &cand_sched, &cand_plan);
+    let recovery = static_sim.iter_s / replanned.iter_s;
+    println!(
+        "re-planned iteration = {}   recovery = {recovery:.2}x   (adopt: {})",
+        fmt_secs(replanned.iter_s),
+        if mode == ReplanMode::Auto && d.adopt { "yes" } else { "advise-only" }
+    );
+    if let Some(min) = args.opt_str("min-recovery") {
+        let min: f64 = min
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--min-recovery expects a number"))?;
+        anyhow::ensure!(
+            recovery >= min,
+            "straggler recovery gate: {recovery:.2}x < required {min}x"
+        );
+        println!("recovery gate OK ({recovery:.2}x >= {min}x)");
+    }
     Ok(())
 }
 
@@ -155,11 +274,13 @@ pub fn simulate(args: &Args) -> Result<()> {
 pub fn train(args: &Args) -> Result<()> {
     let job = Job::from_args(args)?;
     println!(
-        "training config={} scheduler={} compress={} ratio={} steps={}",
+        "training config={} scheduler={} compress={} ratio={} pipeline={} replan={} steps={}",
         job.config,
         job.scheduler,
         job.compress.name(),
         job.ratio,
+        job.pipeline.name(),
+        job.replan.name(),
         job.iters
     );
     let report = broker::run(&job)?;
@@ -172,11 +293,27 @@ pub fn train(args: &Args) -> Result<()> {
             );
         }
     }
+    for ev in &report.replans {
+        println!(
+            "replan [{}{}] @iter {}: stages {:?} flagged; placement {:?} -> {:?}; \
+             simulated {} -> {}; migration {}",
+            ev.origin,
+            if ev.applied { "" } else { ", advised" },
+            ev.iter,
+            ev.flagged,
+            ev.from,
+            ev.to,
+            fmt_secs(ev.sim_before_s),
+            fmt_secs(ev.sim_after_s),
+            fmt_secs(ev.migration_s),
+        );
+    }
     println!(
-        "final loss {:.4}; mean simulated geo-iteration {}; wire shrink {:.1}x",
+        "final loss {:.4}; mean simulated geo-iteration {}; wire shrink {:.1}x; replans {}",
         report.final_loss(),
         fmt_secs(report.mean_sim_latency()),
         report.wire_shrink,
+        report.replans.len(),
     );
     if let Some(path) = args.opt_str("out") {
         std::fs::write(path, report.to_csv())?;

@@ -12,4 +12,5 @@ pub mod profile;
 pub mod throughput;
 
 pub use estimator::Estimator;
+pub use profile::{detect_stragglers, ProfileStore, StragglerReport};
 pub use throughput::{IterationEstimate, PipelineParams};

@@ -32,6 +32,145 @@ pub fn fit_lambda(node: &CompNode, samples: &[CompSample]) -> f64 {
     crate::util::math::median(&ratios).clamp(1e-6, 1.0)
 }
 
+/// EWMA per-stage measured times fed by the worker `IterProfile` stream —
+/// the runtime half of the profiling plane (§3.5). Where `fit_lambda`
+/// calibrates the cost model *before* scheduling, the store tracks what
+/// each stage actually sustains *during* training so the straggler
+/// detector and the re-planner can react to observed device performance.
+#[derive(Debug, Clone)]
+pub struct ProfileStore {
+    /// EWMA weight of a new sample (1.0 = keep only the latest).
+    alpha: f64,
+    n_micro: usize,
+    /// Per-stage EWMA seconds per *microbatch* (fwd/bwd) and per
+    /// *iteration* (update).
+    fwd_s: Vec<f64>,
+    bwd_s: Vec<f64>,
+    update_s: Vec<f64>,
+    samples: Vec<usize>,
+}
+
+impl ProfileStore {
+    pub fn new(n_stages: usize, n_micro: usize, alpha: f64) -> ProfileStore {
+        ProfileStore {
+            alpha: alpha.clamp(0.0, 1.0),
+            n_micro: n_micro.max(1),
+            fwd_s: vec![0.0; n_stages],
+            bwd_s: vec![0.0; n_stages],
+            update_s: vec![0.0; n_stages],
+            samples: vec![0; n_stages],
+        }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.fwd_s.len()
+    }
+
+    /// Record one iteration's measured totals for a stage (`fwd_s`/`bwd_s`
+    /// summed over the iteration's microbatches, as `IterProfile` reports).
+    pub fn record_iter(&mut self, stage: usize, fwd_s: f64, bwd_s: f64, update_s: f64) {
+        if stage >= self.fwd_s.len() {
+            return;
+        }
+        let per_micro = |t: f64| t / self.n_micro as f64;
+        let mix = |old: f64, new: f64, first: bool, a: f64| {
+            if first {
+                new
+            } else {
+                a * new + (1.0 - a) * old
+            }
+        };
+        let first = self.samples[stage] == 0;
+        self.fwd_s[stage] = mix(self.fwd_s[stage], per_micro(fwd_s), first, self.alpha);
+        self.bwd_s[stage] = mix(self.bwd_s[stage], per_micro(bwd_s), first, self.alpha);
+        self.update_s[stage] = mix(self.update_s[stage], update_s, first, self.alpha);
+        self.samples[stage] += 1;
+    }
+
+    pub fn samples(&self, stage: usize) -> usize {
+        self.samples.get(stage).copied().unwrap_or(0)
+    }
+
+    /// Fewest samples across stages (the re-planner's warm-up gate).
+    pub fn min_samples(&self) -> usize {
+        self.samples.iter().copied().min().unwrap_or(0)
+    }
+
+    /// All stages have at least one measurement.
+    pub fn ready(&self) -> bool {
+        !self.samples.is_empty() && self.samples.iter().all(|&s| s > 0)
+    }
+
+    /// Per-iteration busy compute seconds of a stage (the straggler
+    /// metric): n_micro·(fwd+bwd) + update.
+    pub fn busy_s(&self, stage: usize) -> f64 {
+        self.n_micro as f64 * (self.fwd_s[stage] + self.bwd_s[stage]) + self.update_s[stage]
+    }
+
+    /// Invalidate a stage's history (call after migrating it to another
+    /// device — the old EWMA describes the old silicon).
+    pub fn reset_stage(&mut self, stage: usize) {
+        if stage < self.samples.len() {
+            self.samples[stage] = 0;
+            self.fwd_s[stage] = 0.0;
+            self.bwd_s[stage] = 0.0;
+            self.update_s[stage] = 0.0;
+        }
+    }
+
+    /// `base` with modeled compute times replaced by measured EWMAs where
+    /// measurements exist (unmeasured stages keep the model's estimate).
+    pub fn measured_plan(&self, base: &crate::simnet::StagePlan) -> crate::simnet::StagePlan {
+        let mut plan = base.clone();
+        let n = plan.n_stages().min(self.n_stages());
+        for s in 0..n {
+            if self.samples[s] > 0 {
+                plan.fwd_s[s] = self.fwd_s[s];
+                plan.bwd_s[s] = self.bwd_s[s];
+                plan.update_s[s] = self.update_s[s];
+            }
+        }
+        plan
+    }
+
+    /// Treat a plan's times as ground-truth measurements (simulation mode:
+    /// the `simulate --slow-node` straggler smoke seeds the store from the
+    /// slowed plan instead of live workers).
+    pub fn seed_from_plan(&mut self, plan: &crate::simnet::StagePlan) {
+        let n = plan.n_stages().min(self.n_stages());
+        for s in 0..n {
+            self.fwd_s[s] = plan.fwd_s[s];
+            self.bwd_s[s] = plan.bwd_s[s];
+            self.update_s[s] = plan.update_s[s];
+            self.samples[s] = self.samples[s].max(1);
+        }
+    }
+}
+
+/// Straggler detection over the measured per-stage busy times.
+#[derive(Debug, Clone)]
+pub struct StragglerReport {
+    /// Per-iteration busy seconds per stage.
+    pub busy_s: Vec<f64>,
+    pub median_busy_s: f64,
+    /// Stages whose busy time exceeds threshold × median, slowest first.
+    pub flagged: Vec<usize>,
+}
+
+/// Flag stages whose measured busy time exceeds `threshold` × the cluster
+/// median (paper challenge 3: heterogeneous hardware → stragglers).
+pub fn detect_stragglers(store: &ProfileStore, threshold: f64) -> StragglerReport {
+    let busy: Vec<f64> = (0..store.n_stages()).map(|s| store.busy_s(s)).collect();
+    let med = crate::util::math::median(&busy);
+    let mut flagged: Vec<usize> = if store.n_stages() < 2 || med <= 0.0 || !store.ready() {
+        Vec::new()
+    } else {
+        (0..busy.len()).filter(|&s| busy[s] > threshold * med).collect()
+    };
+    flagged.sort_by(|&a, &b| busy[b].partial_cmp(&busy[a]).unwrap());
+    StragglerReport { busy_s: busy, median_busy_s: med, flagged }
+}
+
 /// One link sample: (bytes sent, seconds measured).
 #[derive(Debug, Clone, Copy)]
 pub struct LinkSample {
@@ -86,6 +225,58 @@ mod tests {
         let n = node();
         let samples = [CompSample { flops: 1e15, seconds: 1e-3 }]; // impossible
         assert_eq!(fit_lambda(&n, &samples), 1.0);
+    }
+
+    #[test]
+    fn profile_store_ewma_and_straggler_flagging() {
+        let mut st = ProfileStore::new(4, 2, 0.5);
+        assert!(!st.ready());
+        assert!(detect_stragglers(&st, 2.0).flagged.is_empty());
+        // Stage 2 is ~6x slower than the rest.
+        for _ in 0..3 {
+            st.record_iter(0, 0.2, 0.4, 0.01);
+            st.record_iter(1, 0.2, 0.4, 0.01);
+            st.record_iter(2, 1.2, 2.4, 0.01);
+            st.record_iter(3, 0.2, 0.4, 0.01);
+        }
+        assert!(st.ready());
+        assert_eq!(st.min_samples(), 3);
+        // First sample seeds the EWMA, identical samples keep it fixed.
+        assert!((st.busy_s(0) - 0.61).abs() < 1e-9, "{}", st.busy_s(0));
+        assert!((st.busy_s(2) - 3.61).abs() < 1e-9);
+        let rep = detect_stragglers(&st, 2.0);
+        assert_eq!(rep.flagged, vec![2]);
+        assert!((rep.median_busy_s - 0.61).abs() < 1e-9);
+        // Below threshold: nothing flagged.
+        assert!(detect_stragglers(&st, 10.0).flagged.is_empty());
+        // Migration invalidates the stage's history.
+        st.reset_stage(2);
+        assert!(!st.ready());
+        assert_eq!(st.samples(2), 0);
+    }
+
+    #[test]
+    fn measured_plan_overrides_only_sampled_stages() {
+        use crate::simnet::StagePlan;
+        let base = StagePlan {
+            devices: vec![0, 1],
+            fwd_s: vec![1.0, 1.0],
+            bwd_s: vec![2.0, 2.0],
+            update_s: vec![0.1, 0.1],
+            act_bytes: vec![1e6],
+        };
+        let mut st = ProfileStore::new(2, 4, 1.0);
+        // Stage 1 measured at half the modeled speed; stage 0 unmeasured.
+        st.record_iter(1, 8.0, 16.0, 0.2);
+        let m = st.measured_plan(&base);
+        assert_eq!(m.fwd_s[0], 1.0);
+        assert_eq!(m.fwd_s[1], 2.0); // 8.0 / 4 micros
+        assert_eq!(m.bwd_s[1], 4.0);
+        assert_eq!(m.update_s[1], 0.2);
+        // Seeding marks every stage measured.
+        st.seed_from_plan(&base);
+        assert!(st.ready());
+        assert_eq!(st.busy_s(0), 4.0 * 3.0 + 0.1);
     }
 
     #[test]

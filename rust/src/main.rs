@@ -47,6 +47,8 @@ fn print_help() {
            schedule  --testbed N --scheduler S  partition the model, print the plan\n\
            simulate  --testbed N --scheduler S --compress C --ratio R\n\
                                                  iteration-latency simulation (Fig. 10/11)\n\
+                     [--slow-node I --slow-factor F --replan M [--min-recovery X]]\n\
+                                                 straggler scenario + re-planning smoke\n\
            train     --config PATH --steps N    real pipeline training over artifacts (Fig. 8)\n\
            economics                             GPU-days table (Table 1)\n\
            bench-diff OLD.json NEW.json [--max-regress 20]\n\
@@ -55,6 +57,16 @@ fn print_help() {
          Schedulers: opfence | equal-number | equal-compute\n\
          Compressors: none | topk | adatopk | randomk | int8\n\
          Wire codec (--wire-codec): f32 | int8   (int8 = scale+codes per value,\n\
-                                                  ~5 B/kept value vs 8, dense ~1 B)"
+                                                  ~5 B/kept value vs 8, dense ~1 B)\n\
+         Pipeline (--pipeline): gpipe | 1f1b     both run through the same schedule\n\
+                                                  interpreter; identical losses, 1f1b\n\
+                                                  stashes fewer activations\n\
+         Re-planning (train & simulate):\n\
+           --replan off|advise|auto              react to measured stragglers (default off)\n\
+           --straggler-threshold T               flag stages busier than T x median (2.0)\n\
+           --replan-hysteresis H                 min simulated improvement to migrate (0.10)\n\
+           --slow-stage S / --slow-node I, --slow-factor F\n\
+                                                 straggler injection (train: stage's device;\n\
+                                                  simulate: device id)"
     );
 }

@@ -35,6 +35,13 @@ impl ScheduleKind {
             other => anyhow::bail!("unknown schedule `{other}`"),
         })
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScheduleKind::GPipe => "gpipe",
+            ScheduleKind::OneFOneB => "1f1b",
+        }
+    }
 }
 
 /// Per-device ordered task lists for an S-stage pipeline.

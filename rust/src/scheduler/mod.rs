@@ -9,6 +9,7 @@
 pub mod baselines;
 pub mod dp;
 pub mod opfence;
+pub mod replan;
 
 use crate::cluster::Testbed;
 use crate::opdag::{Dag, OpKind, Partition};

@@ -1,0 +1,431 @@
+//! Straggler-aware re-planning: close the loop between the measured
+//! profile plane and OP-Fence.
+//!
+//! The offline scheduler plans with *believed* per-device λ factors; when
+//! a device underperforms at runtime (thermal throttling, contention,
+//! a co-tenant — paper challenge 3), the measured `ProfileStore` times
+//! diverge from the model. The `Replanner`:
+//!
+//! 1. calibrates per-device λ so the cost model reproduces the
+//!    *measured* stage times,
+//! 2. generates candidate partitions — a full re-run of the configured
+//!    scheduler on the calibrated testbed, plus a targeted swap of the
+//!    worst straggler onto the fastest unused device,
+//! 3. scores candidates with `simnet::simulate_iteration` against the
+//!    simulated iteration time of the *current* plan under measured
+//!    times, and
+//! 4. recommends adoption only when the best candidate beats the current
+//!    plan by more than a hysteresis margin (so noise does not cause
+//!    migration churn).
+//!
+//! The broker applies an adopted decision at the next iteration boundary
+//! (tear down workers, migrate `StageState`, respawn); `simulate` uses the
+//! same machinery for the CI straggler smoke.
+
+use super::Scheduler;
+use crate::cluster::Testbed;
+use crate::compress::CompressPlan;
+use crate::cost::{detect_stragglers, ProfileStore};
+use crate::opdag::{Dag, Partition};
+use crate::pipeline::{PipelineSchedule, ScheduleKind};
+use crate::simnet::{simulate_iteration, StagePlan};
+
+/// What the runtime does with a re-plan recommendation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanMode {
+    /// Never re-plan (static schedule, the seed behavior).
+    Off,
+    /// Detect + log recommendations, but keep the current plan.
+    Advise,
+    /// Apply adopted recommendations at the next iteration boundary.
+    Auto,
+}
+
+impl ReplanMode {
+    pub fn parse(s: &str) -> anyhow::Result<ReplanMode> {
+        Ok(match s {
+            "off" => ReplanMode::Off,
+            "advise" => ReplanMode::Advise,
+            "auto" => ReplanMode::Auto,
+            other => anyhow::bail!("unknown replan mode `{other}` (off|advise|auto)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplanMode::Off => "off",
+            ReplanMode::Advise => "advise",
+            ReplanMode::Auto => "auto",
+        }
+    }
+}
+
+/// A scored candidate re-plan.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub partition: Partition,
+    /// Predicted stage plan (measurement-calibrated times).
+    pub plan: StagePlan,
+    /// How the candidate was generated: "reschedule" or "swap".
+    pub origin: &'static str,
+}
+
+/// The re-planner's verdict for one check.
+#[derive(Debug, Clone)]
+pub struct ReplanDecision {
+    /// Straggler stages that triggered the check, slowest first.
+    pub flagged: Vec<usize>,
+    /// Simulated iteration seconds of the current plan (measured times).
+    pub current_sim_s: f64,
+    /// Simulated iteration seconds of the best candidate.
+    pub candidate_sim_s: f64,
+    /// Modeled parameter-migration time (per-link batched transfers of
+    /// the moved stages' parameters, links in parallel).
+    pub migration_s: f64,
+    /// True when the improvement clears the hysteresis margin.
+    pub adopt: bool,
+    pub candidate: Candidate,
+}
+
+/// Everything `Replanner::consider` needs about the current run.
+pub struct ReplanInput<'a> {
+    pub dag: &'a Dag,
+    pub testbed: &'a Testbed,
+    /// Current partition (op -> device).
+    pub part: &'a Partition,
+    /// Model-estimated stage plan for the current partition on the
+    /// believed testbed (the calibration baseline).
+    pub modeled: &'a StagePlan,
+    pub store: &'a ProfileStore,
+    pub schedule: ScheduleKind,
+    pub n_micro: usize,
+    /// Compression plan in force for the current partition.
+    pub current_compress: &'a CompressPlan,
+}
+
+#[derive(Debug, Clone)]
+pub struct Replanner {
+    /// Scheduler to re-run on the calibrated testbed ("opfence", ...).
+    pub scheduler: String,
+    /// Straggler threshold: flag stages busier than threshold × median.
+    pub threshold: f64,
+    /// Required relative improvement of the simulated iteration before a
+    /// candidate is adopted (0.1 = 10% better).
+    pub hysteresis: f64,
+    /// Minimum measured iterations per stage before the first check.
+    pub min_samples: usize,
+    /// Reject candidates that change the stage count (the live worker
+    /// chain cannot grow/shrink mid-run; `simulate` may relax this).
+    pub keep_stage_count: bool,
+}
+
+impl Default for Replanner {
+    fn default() -> Replanner {
+        Replanner {
+            scheduler: "opfence".into(),
+            threshold: 2.0,
+            hysteresis: 0.10,
+            min_samples: 3,
+            keep_stage_count: true,
+        }
+    }
+}
+
+impl Replanner {
+    /// Calibrate per-device λ so the cost model reproduces the measured
+    /// per-stage busy times: λ' = λ · modeled/measured, clamped to (0, 1].
+    /// Devices without measurements keep their believed λ.
+    pub fn calibrate_testbed(
+        &self,
+        tb: &Testbed,
+        modeled: &StagePlan,
+        measured: &StagePlan,
+    ) -> Testbed {
+        let mut cal = tb.clone();
+        for s in 0..modeled.n_stages().min(measured.n_stages()) {
+            let dev = modeled.devices[s];
+            let t_model = modeled.fwd_s[s] + modeled.bwd_s[s];
+            let t_meas = measured.fwd_s[s] + measured.bwd_s[s];
+            if t_model > 0.0 && t_meas > 0.0 {
+                let l = cal.nodes[dev].lambda * t_model / t_meas;
+                cal.nodes[dev].lambda = l.clamp(1e-6, 1.0);
+            }
+        }
+        cal
+    }
+
+    /// Check the measured profile for stragglers and, if any, search for
+    /// a better partition. Returns None when there is nothing to do
+    /// (insufficient samples, no straggler, or no distinct candidate).
+    pub fn consider(
+        &self,
+        inp: &ReplanInput,
+        rebuild_compress: &dyn Fn(&Partition, &Testbed) -> CompressPlan,
+    ) -> anyhow::Result<Option<ReplanDecision>> {
+        if !inp.store.ready() || inp.store.min_samples() < self.min_samples {
+            return Ok(None);
+        }
+        let report = detect_stragglers(inp.store, self.threshold);
+        if report.flagged.is_empty() {
+            return Ok(None);
+        }
+
+        let measured = inp.store.measured_plan(inp.modeled);
+        let cal_tb = self.calibrate_testbed(inp.testbed, inp.modeled, &measured);
+        let cur_sched =
+            PipelineSchedule::new(inp.schedule, measured.n_stages(), inp.n_micro);
+        let current_sim =
+            simulate_iteration(&measured, &cal_tb, &cur_sched, inp.current_compress).iter_s;
+
+        let mut candidates: Vec<Candidate> = Vec::new();
+        // (a) full re-run of the configured scheduler with calibrated λ.
+        if let Ok(sched) = super::by_name(&self.scheduler) {
+            if let Ok(part) = sched.schedule(inp.dag, &cal_tb) {
+                if part.validate(inp.dag).is_ok() {
+                    let plan = StagePlan::from_partition(inp.dag, &part, &cal_tb);
+                    candidates.push(Candidate { partition: part, plan, origin: "reschedule" });
+                }
+            }
+        }
+        // (b) targeted swap: worst straggler -> fastest unused device.
+        if let Some(c) = self.swap_candidate(inp, &cal_tb, &measured, &report.flagged) {
+            candidates.push(c);
+        }
+
+        let mut best: Option<(f64, Candidate)> = None;
+        for cand in candidates {
+            if self.keep_stage_count && cand.plan.n_stages() != measured.n_stages() {
+                continue;
+            }
+            // Skip identical assignments (device order can be unchanged
+            // while ops still move across split points, so compare per-op).
+            if (0..inp.dag.len())
+                .all(|op| cand.partition.node_of(op) == inp.part.node_of(op))
+            {
+                continue; // nothing would move
+            }
+            let sched =
+                PipelineSchedule::new(inp.schedule, cand.plan.n_stages(), inp.n_micro);
+            let compress = rebuild_compress(&cand.partition, &cal_tb);
+            let sim = simulate_iteration(&cand.plan, &cal_tb, &sched, &compress).iter_s;
+            if best.as_ref().map(|(s, _)| sim < *s).unwrap_or(true) {
+                best = Some((sim, cand));
+            }
+        }
+        let (candidate_sim_s, candidate) = match best {
+            Some(b) => b,
+            None => return Ok(None),
+        };
+
+        let migration_s =
+            migration_time(inp.dag, inp.part, &candidate.partition, inp.testbed);
+        let adopt = candidate_sim_s < current_sim * (1.0 - self.hysteresis);
+        Ok(Some(ReplanDecision {
+            flagged: report.flagged,
+            current_sim_s: current_sim,
+            candidate_sim_s,
+            migration_s,
+            adopt,
+            candidate,
+        }))
+    }
+
+    /// Move the worst straggler stage onto the fastest device not
+    /// currently hosting any stage. Times for the moved stage scale with
+    /// the calibrated speed ratio; everything else keeps its measurement.
+    fn swap_candidate(
+        &self,
+        inp: &ReplanInput,
+        cal_tb: &Testbed,
+        measured: &StagePlan,
+        flagged: &[usize],
+    ) -> Option<Candidate> {
+        let worst = *flagged.first()?;
+        let old_dev = measured.devices[worst];
+        let best_dev = (0..cal_tb.nodes.len())
+            .filter(|d| !measured.devices.contains(d))
+            .max_by(|&a, &b| {
+                cal_tb.nodes[a]
+                    .speed_flops()
+                    .partial_cmp(&cal_tb.nodes[b].speed_flops())
+                    .unwrap()
+            })?;
+        let speed_old = cal_tb.nodes[old_dev].speed_flops();
+        let speed_new = cal_tb.nodes[best_dev].speed_flops();
+        if speed_new <= speed_old {
+            return None;
+        }
+        let assign: Vec<usize> = (0..inp.dag.len())
+            .map(|op| {
+                let d = inp.part.node_of(op);
+                if d == old_dev {
+                    best_dev
+                } else {
+                    d
+                }
+            })
+            .collect();
+        let mut plan = measured.clone();
+        plan.devices[worst] = best_dev;
+        let scale = speed_old / speed_new;
+        plan.fwd_s[worst] *= scale;
+        plan.bwd_s[worst] *= scale;
+        plan.update_s[worst] *= scale;
+        Some(Candidate { partition: Partition::new(assign), plan, origin: "swap" })
+    }
+}
+
+/// Modeled parameter-migration time from `from` to `to`: per-op parameter
+/// bytes batched per (src, dst) link, links transferring in parallel.
+pub fn migration_time(dag: &Dag, from: &Partition, to: &Partition, tb: &Testbed) -> f64 {
+    let mut per_link: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+    for op in &dag.ops {
+        let (a, b) = (from.node_of(op.id), to.node_of(op.id));
+        if a != b && op.param_bytes > 0.0 {
+            *per_link.entry((a, b)).or_insert(0.0) += op.param_bytes;
+        }
+    }
+    per_link
+        .iter()
+        .map(|(&(a, b), &bytes)| tb.net.comm_time(a, b, bytes))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::testbed::testbed1;
+    use crate::opdag::builders::{transformer_chain, TransformerSpec};
+    use crate::scheduler::by_name;
+
+    fn setup() -> (Dag, Testbed, Partition, StagePlan) {
+        let tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec::gpt2_xl());
+        let part = by_name("opfence").unwrap().schedule(&dag, &tb).unwrap();
+        let plan = StagePlan::from_partition(&dag, &part, &tb);
+        (dag, tb, part, plan)
+    }
+
+    fn store_from(plan: &StagePlan, n_micro: usize) -> ProfileStore {
+        let mut st = ProfileStore::new(plan.n_stages(), n_micro, 1.0);
+        st.seed_from_plan(plan);
+        st
+    }
+
+    #[test]
+    fn calibration_recovers_slowdown() {
+        let (_, tb, _, plan) = setup();
+        let mut slowed = plan.clone();
+        let dev = slowed.devices[0];
+        slowed.fwd_s[0] *= 4.0;
+        slowed.bwd_s[0] *= 4.0;
+        let r = Replanner::default();
+        let cal = r.calibrate_testbed(&tb, &plan, &slowed);
+        let ratio = cal.nodes[dev].lambda / tb.nodes[dev].lambda;
+        assert!((ratio - 0.25).abs() < 1e-9, "λ ratio {ratio}");
+        // Everyone else untouched.
+        for n in &tb.nodes {
+            if n.id != dev {
+                assert_eq!(cal.nodes[n.id].lambda, n.lambda);
+            }
+        }
+    }
+
+    #[test]
+    fn healthy_cluster_yields_no_decision() {
+        let (dag, tb, part, plan) = setup();
+        let st = store_from(&plan, 2);
+        let r = Replanner { min_samples: 1, ..Default::default() };
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &plan,
+            store: &st,
+            schedule: ScheduleKind::GPipe,
+            n_micro: 2,
+            current_compress: &dense,
+        };
+        let d = r
+            .consider(&inp, &|_, t| CompressPlan::dense(t.nodes.len()))
+            .unwrap();
+        assert!(d.is_none(), "no straggler must mean no decision");
+    }
+
+    #[test]
+    fn straggler_triggers_adoptable_replan() {
+        let (dag, tb, part, plan) = setup();
+        // One device 6x slower than believed.
+        let slow_stage = plan.n_stages() / 2;
+        let mut st = ProfileStore::new(plan.n_stages(), 2, 1.0);
+        let mut slowed = plan.clone();
+        slowed.fwd_s[slow_stage] *= 6.0;
+        slowed.bwd_s[slow_stage] *= 6.0;
+        st.seed_from_plan(&slowed);
+        let r = Replanner { min_samples: 1, hysteresis: 0.05, ..Default::default() };
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &plan,
+            store: &st,
+            schedule: ScheduleKind::GPipe,
+            n_micro: 2,
+            current_compress: &dense,
+        };
+        let d = r
+            .consider(&inp, &|_, t| CompressPlan::dense(t.nodes.len()))
+            .unwrap()
+            .expect("slowdown must produce a decision");
+        assert_eq!(d.flagged[0], slow_stage);
+        assert!(
+            d.candidate_sim_s < d.current_sim_s,
+            "candidate {} !< current {}",
+            d.candidate_sim_s,
+            d.current_sim_s
+        );
+        assert!(d.adopt, "6x straggler must clear the hysteresis margin");
+        assert!(d.candidate.plan.n_stages() == plan.n_stages());
+        assert!(d.migration_s >= 0.0);
+    }
+
+    #[test]
+    fn hysteresis_blocks_marginal_wins() {
+        let (dag, tb, part, plan) = setup();
+        let slow_stage = plan.n_stages() / 2;
+        let mut st = ProfileStore::new(plan.n_stages(), 2, 1.0);
+        let mut slowed = plan.clone();
+        slowed.fwd_s[slow_stage] *= 6.0;
+        slowed.bwd_s[slow_stage] *= 6.0;
+        st.seed_from_plan(&slowed);
+        // An impossible hysteresis bar: nothing can be 99.99% faster.
+        let r = Replanner { min_samples: 1, hysteresis: 0.9999, ..Default::default() };
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &plan,
+            store: &st,
+            schedule: ScheduleKind::GPipe,
+            n_micro: 2,
+            current_compress: &dense,
+        };
+        let d = r
+            .consider(&inp, &|_, t| CompressPlan::dense(t.nodes.len()))
+            .unwrap()
+            .expect("straggler still flagged");
+        assert!(!d.adopt, "hysteresis must block adoption");
+    }
+
+    #[test]
+    fn replan_mode_parses() {
+        assert_eq!(ReplanMode::parse("off").unwrap(), ReplanMode::Off);
+        assert_eq!(ReplanMode::parse("advise").unwrap(), ReplanMode::Advise);
+        assert_eq!(ReplanMode::parse("auto").unwrap(), ReplanMode::Auto);
+        assert!(ReplanMode::parse("sometimes").is_err());
+        assert_eq!(ReplanMode::Auto.name(), "auto");
+    }
+}

@@ -4,11 +4,52 @@
 
 use crate::util::json::{arr, n, ni, obj, s, Json};
 
+/// One straggler-driven re-partitioning (applied or advised) at an
+/// iteration boundary.
+#[derive(Debug, Clone, Default)]
+pub struct ReplanEvent {
+    /// First iteration executed under the new plan.
+    pub iter: usize,
+    /// Stage -> device placement before / after.
+    pub from: Vec<usize>,
+    pub to: Vec<usize>,
+    /// Straggler stages that triggered the check, slowest first.
+    pub flagged: Vec<usize>,
+    /// Candidate generator ("reschedule" or "swap").
+    pub origin: String,
+    /// Simulated iteration seconds: current plan vs adopted candidate.
+    pub sim_before_s: f64,
+    pub sim_after_s: f64,
+    /// Migration cost: measured teardown+respawn wall time in `train`,
+    /// modeled parameter-transfer time in `simulate`.
+    pub migration_s: f64,
+    /// False under `--replan advise` (recommendation only).
+    pub applied: bool,
+}
+
+impl ReplanEvent {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("iter", ni(self.iter)),
+            ("from", arr(self.from.iter().map(|&d| ni(d)).collect())),
+            ("to", arr(self.to.iter().map(|&d| ni(d)).collect())),
+            ("flagged", arr(self.flagged.iter().map(|&st| ni(st)).collect())),
+            ("origin", s(&self.origin)),
+            ("sim_before_s", n(self.sim_before_s)),
+            ("sim_after_s", n(self.sim_after_s)),
+            ("migration_s", n(self.migration_s)),
+            ("applied", Json::Bool(self.applied)),
+        ])
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct TrainReport {
     pub config: String,
     pub scheduler: String,
     pub compressor: String,
+    /// Pipeline schedule executed by the workers ("gpipe" / "1f1b").
+    pub pipeline: String,
     pub ratio: f64,
     pub n_micro: usize,
     /// Mean loss per iteration (averaged over microbatches).
@@ -23,8 +64,10 @@ pub struct TrainReport {
     /// Achieved wire compression: dense payload bytes / wire bytes sent
     /// (e.g. ≈ r/3 for f32 Top-K, ≈ 4r/5 for int8-sparse at ratio r).
     pub wire_shrink: f64,
-    /// Stage -> device placement used.
+    /// Stage -> device placement used (final placement after any replans).
     pub placement: Vec<usize>,
+    /// Straggler-driven re-partitionings, in iteration order.
+    pub replans: Vec<ReplanEvent>,
 }
 
 impl TrainReport {
@@ -42,6 +85,7 @@ impl TrainReport {
             ("config", s(&self.config)),
             ("scheduler", s(&self.scheduler)),
             ("compressor", s(&self.compressor)),
+            ("pipeline", s(&self.pipeline)),
             ("ratio", n(self.ratio)),
             ("n_micro", ni(self.n_micro)),
             (
@@ -58,6 +102,10 @@ impl TrainReport {
             (
                 "placement",
                 arr(self.placement.iter().map(|&p| ni(p)).collect()),
+            ),
+            (
+                "replans",
+                arr(self.replans.iter().map(|e| e.to_json()).collect()),
             ),
         ])
     }
@@ -89,6 +137,7 @@ mod tests {
             config: "tiny".into(),
             scheduler: "opfence".into(),
             compressor: "adatopk".into(),
+            pipeline: "1f1b".into(),
             ratio: 100.0,
             n_micro: 2,
             losses: vec![5.5, 5.0, 4.5],
@@ -97,13 +146,30 @@ mod tests {
             wire_bytes: vec![100.0, 100.0, 100.0],
             wire_shrink: 33.3,
             placement: vec![0, 1, 2, 3],
+            replans: vec![ReplanEvent {
+                iter: 2,
+                from: vec![0, 1, 2, 3],
+                to: vec![0, 9, 2, 3],
+                flagged: vec![1],
+                origin: "swap".into(),
+                sim_before_s: 2.0,
+                sim_after_s: 1.0,
+                migration_s: 0.3,
+                applied: true,
+            }],
         };
         let csv = r.to_csv();
         assert_eq!(csv.lines().count(), 4);
         assert!(csv.contains("0,5.5"));
         let j = r.to_json();
         assert_eq!(j.get("scheduler").as_str().unwrap(), "opfence");
+        assert_eq!(j.get("pipeline").as_str().unwrap(), "1f1b");
         assert_eq!(j.get("losses").as_arr().unwrap().len(), 3);
+        let reps = j.get("replans").as_arr().unwrap();
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].get("origin").as_str().unwrap(), "swap");
+        assert!(reps[0].get("applied").as_bool().unwrap());
+        assert_eq!(reps[0].get("to").as_arr().unwrap().len(), 4);
         assert!((r.mean_sim_latency() - 1.0).abs() < 1e-12);
     }
 }

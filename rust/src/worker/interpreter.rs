@@ -1,0 +1,424 @@
+//! The schedule interpreter: one loop that executes *any*
+//! `PipelineSchedule` task list (GPipe, 1F1B, or generated variants)
+//! against a pluggable `StageBackend`.
+//!
+//! The interpreter owns everything protocol-shaped — channel receives and
+//! sends, wire decode/encode through the per-link codecs, Stop/teardown
+//! handling, per-message statistics and the per-iteration `IterProfile`
+//! feedback — while the backend owns the math (PJRT execution in
+//! production, trivial arithmetic in tests and benches). This is what
+//! makes `ScheduleKind::OneFOneB` a real execution mode rather than a
+//! sim-only fiction, and what lets the schedule-legality property tests
+//! drive the *production* task loop without artifacts.
+//!
+//! Determinism contract: gradient accumulation order is fixed per micro
+//! (backends stash per-micro parameter gradients and sum them in
+//! ascending micro order at Update), so GPipe and 1F1B produce bitwise
+//! identical loss trajectories.
+
+use super::messages::{decode_payload_into, StageCodec, StageState, Wire, WorkerStats};
+use crate::opdag::data::OpDataKind;
+use crate::pipeline::{Task, TaskKind};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// Channel + codec endpoints for one stage: everything the interpreter
+/// needs to talk to its pipeline neighbors and the driver.
+pub struct StageLinks {
+    pub stage: usize,
+    /// CompNode id hosting this stage (for stats attribution).
+    pub device: usize,
+    /// Per-link wire codecs (compression scratch + staging buffers).
+    pub codec: StageCodec,
+    /// Forward input (Data from the driver for stage 0, Packets otherwise).
+    pub rx_fwd: Receiver<Wire>,
+    /// Backward gradient input (None for the head stage).
+    pub rx_bwd: Option<Receiver<Wire>>,
+    /// Forward output (None for the head stage).
+    pub tx_fwd: Option<Sender<Wire>>,
+    /// Backward gradient output (None for the embed stage).
+    pub tx_bwd: Option<Sender<Wire>>,
+    /// Head only: label stream from the driver.
+    pub rx_labels: Option<Receiver<Wire>>,
+    /// Loss + profile + stats reporting to the driver.
+    pub tx_driver: Sender<Wire>,
+}
+
+/// Forward input handed to the backend. Stage 0 receives raw tokens from
+/// the driver; every other stage receives a decoded dense activation
+/// (ownership transfers so the backend can stash it for its backward).
+pub enum FwdInput {
+    Tokens(Vec<i32>),
+    Act(Vec<f32>),
+}
+
+/// Forward result. `Act` is sent downstream (the buffer is recycled into
+/// the decode pool afterwards); `Loss` goes to the driver. `free` returns
+/// a consumed input buffer to the interpreter's decode pool.
+pub enum FwdOut {
+    Act(Vec<f32>),
+    Loss { loss: f32, free: Option<Vec<f32>> },
+}
+
+/// Backward result: `dx` travels upstream (if a backward link exists),
+/// `free` returns a stashed buffer to the decode pool.
+pub struct BwdOut {
+    pub dx: Option<Vec<f32>>,
+    pub free: Option<Vec<f32>>,
+}
+
+/// The compute side of a stage. Implementations own parameters, optimizer
+/// state and per-micro stashes; the contract that keeps GPipe and 1F1B
+/// bitwise identical is that `update` accumulates the stashed per-micro
+/// parameter gradients in ascending micro order regardless of the order
+/// the schedule executed them in.
+pub trait StageBackend {
+    /// Dense element count of one inter-stage activation (decode buffer
+    /// size for packets and gradients).
+    fn act_elems(&self) -> usize;
+    fn forward(
+        &mut self,
+        iter: u32,
+        micro: usize,
+        input: FwdInput,
+        labels: Option<Vec<i32>>,
+    ) -> anyhow::Result<FwdOut>;
+    /// `grad` is None only on the head stage (it replays its stored dx).
+    fn backward(&mut self, iter: u32, micro: usize, grad: Option<&[f32]>)
+        -> anyhow::Result<BwdOut>;
+    /// Optimizer step closing the iteration.
+    fn update(&mut self, iter: u32) -> anyhow::Result<()>;
+    /// Live-migration snapshot, requested on a mid-run Stop. Backends
+    /// without portable state (mocks) return None.
+    fn snapshot(&self) -> Option<StageState> {
+        None
+    }
+}
+
+/// How a schedule run ended: all iterations done, or a driver Stop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunOutcome {
+    Completed,
+    Stopped,
+}
+
+/// Execute `iters` iterations of this stage's schedule row starting at
+/// global iteration `iter0`. Sends `Wire::IterProfile` after every Update
+/// and `Wire::Stats` (plus `Wire::Snapshot` on Stop) before returning.
+pub fn run_schedule<B: StageBackend>(
+    links: &mut StageLinks,
+    backend: &mut B,
+    tasks: &[Task],
+    iter0: u32,
+    iters: usize,
+) -> anyhow::Result<RunOutcome> {
+    let mut stats = WorkerStats {
+        stage: links.stage,
+        device: links.device,
+        ..Default::default()
+    };
+    let act_n = backend.act_elems();
+    // Decode-buffer pool: buffers cycle recv -> backend stash -> backward
+    // free -> pool, so the steady state allocates nothing on this side.
+    let mut recycle: Vec<Vec<f32>> = Vec::new();
+    let mut grad_buf = vec![0.0f32; act_n];
+
+    for iter in iter0..iter0 + iters as u32 {
+        // Per-iteration profile accumulators (reset every iteration).
+        let (mut p_fwd, mut p_bwd, mut p_upd) = (0.0f64, 0.0f64, 0.0f64);
+        let (mut p_bytes, mut p_msgs) = (0.0f64, 0u64);
+        for t in tasks {
+            debug_assert_eq!(t.stage, links.stage, "task from another stage's row");
+            match t.kind {
+                TaskKind::Forward => {
+                    // Labels first on the head (the driver sends them
+                    // eagerly, in ascending micro order).
+                    let labels = match &links.rx_labels {
+                        Some(rx) => {
+                            let t_wait = Instant::now();
+                            let msg = rx.recv()?;
+                            stats.wait_s += t_wait.elapsed().as_secs_f64();
+                            match msg {
+                                Wire::Labels { micro, targets, .. } => {
+                                    anyhow::ensure!(
+                                        micro as usize == t.micro,
+                                        "stage {}: labels for micro {micro}, schedule expects {}",
+                                        links.stage,
+                                        t.micro
+                                    );
+                                    Some(targets)
+                                }
+                                Wire::Stop => return stop(links, backend, stats),
+                                other => anyhow::bail!(
+                                    "stage {}: unexpected {other:?} on label link",
+                                    links.stage
+                                ),
+                            }
+                        }
+                        None => None,
+                    };
+                    let t_wait = Instant::now();
+                    let msg = links.rx_fwd.recv()?;
+                    stats.wait_s += t_wait.elapsed().as_secs_f64();
+                    let input = match msg {
+                        Wire::Data { micro, tokens, .. } => {
+                            anyhow::ensure!(
+                                micro as usize == t.micro,
+                                "stage {}: data for micro {micro}, schedule expects {}",
+                                links.stage,
+                                t.micro
+                            );
+                            FwdInput::Tokens(tokens)
+                        }
+                        Wire::Packet(buf) => {
+                            let mut x = recycle.pop().unwrap_or_default();
+                            x.resize(act_n, 0.0);
+                            let hdr = decode_payload_into(&buf, &mut x)?;
+                            anyhow::ensure!(
+                                hdr.micro_batch as usize == t.micro,
+                                "stage {}: activation for micro {}, schedule expects {} \
+                                 (cross-stage schedule orders disagree)",
+                                links.stage,
+                                hdr.micro_batch,
+                                t.micro
+                            );
+                            FwdInput::Act(x)
+                        }
+                        Wire::Stop => return stop(links, backend, stats),
+                        other => anyhow::bail!(
+                            "stage {}: unexpected {other:?} on forward link",
+                            links.stage
+                        ),
+                    };
+                    let t0 = Instant::now();
+                    let out = backend.forward(iter, t.micro, input, labels)?;
+                    let dt = t0.elapsed().as_secs_f64();
+                    stats.fwd_s += dt;
+                    p_fwd += dt;
+                    match out {
+                        FwdOut::Act(y) => {
+                            if let (Some(tx), Some(enc)) =
+                                (&links.tx_fwd, links.codec.fwd.as_mut())
+                            {
+                                let (buf, wire) = enc.encode(
+                                    links.stage,
+                                    links.stage + 1,
+                                    OpDataKind::Activation,
+                                    iter,
+                                    t.micro as u32,
+                                    &y,
+                                );
+                                stats.bytes_sent += wire;
+                                stats.dense_bytes += 4.0 * y.len() as f64;
+                                stats.msgs_sent += 1;
+                                p_bytes += wire;
+                                p_msgs += 1;
+                                tx.send(Wire::Packet(buf))?;
+                            }
+                            recycle.push(y);
+                        }
+                        FwdOut::Loss { loss, free } => {
+                            if let Some(b) = free {
+                                recycle.push(b);
+                            }
+                            links.tx_driver.send(Wire::Loss {
+                                iter,
+                                micro: t.micro as u32,
+                                loss,
+                            })?;
+                        }
+                    }
+                }
+                TaskKind::Backward => {
+                    let grad: Option<&[f32]> = match &links.rx_bwd {
+                        Some(rx) => {
+                            let t_wait = Instant::now();
+                            let msg = rx.recv()?;
+                            stats.wait_s += t_wait.elapsed().as_secs_f64();
+                            match msg {
+                                Wire::Packet(buf) => {
+                                    let hdr = decode_payload_into(&buf, &mut grad_buf)?;
+                                    anyhow::ensure!(
+                                        hdr.micro_batch as usize == t.micro,
+                                        "stage {}: gradient for micro {}, schedule expects {} \
+                                         (cross-stage schedule orders disagree)",
+                                        links.stage,
+                                        hdr.micro_batch,
+                                        t.micro
+                                    );
+                                    Some(&grad_buf[..])
+                                }
+                                Wire::Stop => return stop(links, backend, stats),
+                                other => anyhow::bail!(
+                                    "stage {}: unexpected {other:?} on backward link",
+                                    links.stage
+                                ),
+                            }
+                        }
+                        None => None,
+                    };
+                    let t0 = Instant::now();
+                    let out = backend.backward(iter, t.micro, grad)?;
+                    let dt = t0.elapsed().as_secs_f64();
+                    stats.bwd_s += dt;
+                    p_bwd += dt;
+                    if let Some(dx) = out.dx {
+                        if let (Some(tx), Some(enc)) = (&links.tx_bwd, links.codec.bwd.as_mut())
+                        {
+                            let (buf, wire) = enc.encode(
+                                links.stage,
+                                links.stage - 1,
+                                OpDataKind::Gradient,
+                                iter,
+                                t.micro as u32,
+                                &dx,
+                            );
+                            stats.bytes_sent += wire;
+                            stats.dense_bytes += 4.0 * dx.len() as f64;
+                            stats.msgs_sent += 1;
+                            p_bytes += wire;
+                            p_msgs += 1;
+                            tx.send(Wire::Packet(buf))?;
+                        }
+                        recycle.push(dx);
+                    }
+                    if let Some(b) = out.free {
+                        recycle.push(b);
+                    }
+                }
+                TaskKind::Update => {
+                    let t0 = Instant::now();
+                    backend.update(iter)?;
+                    let dt = t0.elapsed().as_secs_f64();
+                    stats.update_s += dt;
+                    p_upd += dt;
+                    links.tx_driver.send(Wire::IterProfile {
+                        stage: links.stage,
+                        iter,
+                        fwd_s: p_fwd,
+                        bwd_s: p_bwd,
+                        update_s: p_upd,
+                        bytes: p_bytes,
+                        msgs: p_msgs,
+                    })?;
+                }
+            }
+        }
+    }
+    let _ = links.tx_driver.send(Wire::Stats(stats));
+    Ok(RunOutcome::Completed)
+}
+
+/// Controlled mid-run teardown: emit the migration snapshot (if the
+/// backend has one) and the accumulated stats, then exit cleanly.
+fn stop<B: StageBackend>(
+    links: &StageLinks,
+    backend: &B,
+    stats: WorkerStats,
+) -> anyhow::Result<RunOutcome> {
+    if let Some(state) = backend.snapshot() {
+        let _ = links.tx_driver.send(Wire::Snapshot { stage: links.stage, state });
+    }
+    let _ = links.tx_driver.send(Wire::Stats(stats));
+    Ok(RunOutcome::Stopped)
+}
+
+/// Trivial arithmetic backend for interpreter tests and the dispatch
+/// bench: embed maps tokens to f32, body adds 1, the head's loss is the
+/// activation sum. Per-micro parameter "gradients" follow the same
+/// fixed-accumulation-order contract as the PJRT backend (a single
+/// scalar parameter), so GPipe/1F1B equality is checkable without
+/// artifacts. Records every executed task for agreement checks.
+pub struct NullBackend {
+    pub n: usize,
+    pub n_micro: usize,
+    pub is_head: bool,
+    /// Scalar "parameter": updated each iteration from the mean of the
+    /// per-micro dp stashes (ascending micro order).
+    pub param: f32,
+    stash: Vec<Option<Vec<f32>>>,
+    dp: Vec<Option<f32>>,
+    /// Executed (kind, micro) log, in execution order.
+    pub log: Vec<(TaskKind, usize)>,
+    pub updates: u32,
+}
+
+impl NullBackend {
+    pub fn new(n: usize, n_micro: usize, is_head: bool) -> NullBackend {
+        NullBackend {
+            n,
+            n_micro,
+            is_head,
+            param: 0.0,
+            stash: (0..n_micro).map(|_| None).collect(),
+            dp: vec![None; n_micro],
+            log: Vec::new(),
+            updates: 0,
+        }
+    }
+}
+
+impl StageBackend for NullBackend {
+    fn act_elems(&self) -> usize {
+        self.n
+    }
+
+    fn forward(
+        &mut self,
+        _iter: u32,
+        micro: usize,
+        input: FwdInput,
+        _labels: Option<Vec<i32>>,
+    ) -> anyhow::Result<FwdOut> {
+        self.log.push((TaskKind::Forward, micro));
+        let x: Vec<f32> = match input {
+            FwdInput::Tokens(t) => t.iter().map(|&v| v as f32 + self.param).collect(),
+            FwdInput::Act(x) => x,
+        };
+        if self.is_head {
+            let loss: f32 = x.iter().sum::<f32>() / x.len().max(1) as f32;
+            self.dp[micro] = Some(loss);
+            self.stash[micro] = Some(x);
+            Ok(FwdOut::Loss { loss, free: None })
+        } else {
+            let y: Vec<f32> = x.iter().map(|v| v + 1.0 + self.param).collect();
+            self.stash[micro] = Some(x);
+            Ok(FwdOut::Act(y))
+        }
+    }
+
+    fn backward(
+        &mut self,
+        _iter: u32,
+        micro: usize,
+        grad: Option<&[f32]>,
+    ) -> anyhow::Result<BwdOut> {
+        self.log.push((TaskKind::Backward, micro));
+        let stashed = self.stash[micro]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("backward micro {micro} before its forward"))?;
+        if self.is_head {
+            // Replay the stored activation as dx (PipeDream-flush replay).
+            Ok(BwdOut { dx: Some(stashed), free: None })
+        } else {
+            let g = grad.ok_or_else(|| anyhow::anyhow!("non-head backward without grad"))?;
+            self.dp[micro] = Some(g.iter().sum::<f32>() / g.len().max(1) as f32);
+            let dx: Vec<f32> = g.iter().map(|v| v * 0.5).collect();
+            Ok(BwdOut { dx: Some(dx), free: Some(stashed) })
+        }
+    }
+
+    fn update(&mut self, _iter: u32) -> anyhow::Result<()> {
+        self.log.push((TaskKind::Update, 0));
+        // Fixed accumulation order: ascending micro, like the PJRT backend.
+        let mut acc = 0.0f32;
+        for m in 0..self.n_micro {
+            acc += self.dp[m]
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("update before backward of micro {m}"))?;
+        }
+        self.param -= 0.01 * acc / self.n_micro as f32;
+        self.updates += 1;
+        Ok(())
+    }
+}

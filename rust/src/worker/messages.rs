@@ -30,12 +30,39 @@ pub enum Wire {
     Packet(Vec<u8>),
     /// Head -> driver: per-microbatch loss.
     Loss { iter: u32, micro: u32, loss: f32 },
+    /// Worker -> driver after each optimizer step: measured per-iteration
+    /// profile (the feedback plane the straggler detector consumes).
+    /// `bytes`/`msgs` are the wire traffic this stage emitted during the
+    /// iteration, so the driver can report real per-iteration wire bytes.
+    IterProfile {
+        stage: usize,
+        iter: u32,
+        fwd_s: f64,
+        bwd_s: f64,
+        update_s: f64,
+        bytes: f64,
+        msgs: u64,
+    },
+    /// Worker -> driver on a mid-run Stop: parameter + optimizer state so
+    /// the broker can re-init the stage on a different device (live
+    /// migration at an iteration boundary).
+    Snapshot { stage: usize, state: StageState },
     /// Worker -> driver on shutdown: accumulated statistics.
     Stats(WorkerStats),
     /// Worker -> driver: unrecoverable error (driver aborts the job).
     Fatal { stage: usize, error: String },
     /// Driver -> workers: clean shutdown.
     Stop,
+}
+
+/// Portable stage training state (flat parameters + optimizer moments),
+/// carried across worker generations when the broker re-partitions.
+#[derive(Debug, Clone, Default)]
+pub struct StageState {
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    /// Adam second moment (empty under SGD).
+    pub second: Vec<f32>,
 }
 
 /// Per-worker accumulated counters (profiling plane, §3.5).

@@ -6,11 +6,20 @@
 //! Messages are OP-Data (§3.4) encoded to flat byte buffers — exactly what
 //! would go on a socket — with compression applied per the broker's
 //! `CompressPlan` before encoding and reversed after decoding.
+//!
+//! Execution is schedule-driven: `interpreter::run_schedule` walks the
+//! stage's `PipelineSchedule` task row (GPipe or 1F1B) against a
+//! `StageBackend` — PJRT in production (`stage::spawn_stage`), trivial
+//! arithmetic in tests/benches (`interpreter::NullBackend`).
 
+pub mod interpreter;
 pub mod messages;
 pub mod stage;
 
+pub use interpreter::{
+    run_schedule, BwdOut, FwdInput, FwdOut, NullBackend, RunOutcome, StageBackend, StageLinks,
+};
 pub use messages::{
-    decode_payload, decode_payload_into, LinkEncoder, StageCodec, Wire, WorkerStats,
+    decode_payload, decode_payload_into, LinkEncoder, StageCodec, StageState, Wire, WorkerStats,
 };
 pub use stage::{spawn_stage, StageCtx};

@@ -1,19 +1,23 @@
 //! Stage worker threads: the per-CompNode executor.
 //!
-//! GPipe iteration protocol (matching `pipeline::ScheduleKind::GPipe`):
-//!   fwd phase: for m in 0..n_micro — recv input, run fwd, send output
-//!   bwd phase: for m in rev      — recv grad, run bwd, send grad back
-//!   update    : scale accumulated grads by 1/n_micro, run SGD artifact
+//! The worker no longer hardcodes a GPipe phase loop: it hands its
+//! `PipelineSchedule` task row to the generic schedule interpreter
+//! (`worker::interpreter::run_schedule`) and supplies a `PjrtBackend`
+//! that owns the PJRT runtime, flat parameters, optimizer state and the
+//! per-micro stashes. GPipe and 1F1B are therefore the *same* execution
+//! path with different task orders.
 //!
-//! The head stage computes loss+gradients in its forward leg
-//! (head_fwd_loss) and replays the stored dx in reverse order during the
-//! bwd phase — a GPipe flush.
+//! Determinism: per-micro parameter gradients are stashed and summed in
+//! ascending micro order at Update, so the loss trajectory is bitwise
+//! identical across schedule kinds (the 1F1B-vs-GPipe differential test
+//! relies on this).
 
-use super::messages::{decode_payload_into, StageCodec, Wire, WorkerStats};
-use crate::opdag::data::OpDataKind;
-use crate::runtime::{Manifest, Runtime, StageKind};
+use super::interpreter::{run_schedule, BwdOut, FwdInput, FwdOut, StageBackend, StageLinks};
+use super::messages::{StageCodec, StageState, Wire};
+use crate::pipeline::Task;
+use crate::runtime::{Manifest, ModelCfg, Runtime, StageKind, StageSpec};
 use std::sync::mpsc::{Receiver, Sender};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Everything a stage worker needs (all Send).
 pub struct StageCtx {
@@ -29,6 +33,12 @@ pub struct StageCtx {
     /// Per-link wire codecs (compression scratch + staging buffers), built
     /// by the broker from the `CompressPlan`.
     pub codec: StageCodec,
+    /// This stage's ordered task row from the `PipelineSchedule`.
+    pub tasks: Vec<Task>,
+    /// First global iteration this generation executes (continues across
+    /// re-partitions so data/optimizer step counts stay aligned).
+    pub iter0: u32,
+    /// Iterations this generation runs (the remaining budget).
     pub iters: usize,
     pub n_micro: usize,
     pub lr: f32,
@@ -36,6 +46,11 @@ pub struct StageCtx {
     /// "sgd" or "adam".
     pub optimizer: String,
     pub param_seed: u64,
+    /// Migrated state from a previous generation (None = fresh init).
+    pub init_state: Option<StageState>,
+    /// Straggler-injection test hook: sleep (factor-1)× the measured
+    /// compute time after each fwd/bwd execution. 1.0 = off.
+    pub slow_factor: f64,
     /// Forward input (None for embed: tokens come from the driver).
     pub rx_fwd: Receiver<Wire>,
     /// Backward gradient input (None for head).
@@ -73,287 +88,298 @@ fn axpy_acc(acc: &mut [f32], x: &[f32]) {
     }
 }
 
-fn run_stage(mut ctx: StageCtx) -> anyhow::Result<()> {
-    let spec = ctx.manifest.stages[ctx.stage].clone();
-    let cfg = ctx.manifest.config.clone();
-    let act_n = cfg.act_elems();
-    let act_dims = [cfg.microbatch as i64, cfg.seq_len as i64, cfg.d_model as i64];
-    let tok_dims = [cfg.microbatch as i64, cfg.seq_len as i64];
+/// The PJRT compute backend: owns the runtime, the flat parameter vector,
+/// optimizer moments and per-micro stashes keyed by microbatch id (so any
+/// legal task interleaving finds its state).
+struct PjrtBackend {
+    spec: StageSpec,
+    cfg: ModelCfg,
+    rt: Runtime,
+    use_adam: bool,
+    opt_entry: String,
+    params: Vec<f32>,
+    momentum: Vec<f32>,
+    second: Vec<f32>,
+    lr: f32,
+    mom: f32,
+    n_micro: usize,
+    act_dims: [i64; 3],
+    tok_dims: [i64; 2],
+    /// Embed: token microbatches awaiting their backward.
+    stash_tokens: Vec<Option<Vec<i32>>>,
+    /// Body: forward inputs awaiting their backward.
+    stash_acts: Vec<Option<Vec<f32>>>,
+    /// Head: loss gradients replayed in the backward task.
+    stash_dx: Vec<Option<Vec<f32>>>,
+    /// Per-micro parameter gradients, summed in ascending micro order at
+    /// Update (the schedule-independence contract).
+    dp: Vec<Option<Vec<f32>>>,
+    /// Straggler-injection factor (>= 1.0; 1.0 = off).
+    slow_factor: f64,
+}
 
-    // Per-thread PJRT runtime with only this stage's entries.
-    let use_adam = ctx.optimizer == "adam";
-    let opt_entry: String = if use_adam {
-        spec.adam_entry().to_string()
-    } else {
-        spec.sgd_entry().to_string()
-    };
-    let mut entries: Vec<&str> = match spec.kind {
-        StageKind::Embed => vec!["embed_fwd", "embed_bwd"],
-        StageKind::Body => vec!["body_fwd", "body_bwd"],
-        StageKind::Head => vec!["head_fwd_loss"],
-    };
-    entries.push(&opt_entry);
-    let mut rt = Runtime::load(&ctx.manifest, Some(&entries))?;
+impl PjrtBackend {
+    fn new(ctx: &StageCtx) -> anyhow::Result<PjrtBackend> {
+        let spec = ctx.manifest.stages[ctx.stage].clone();
+        let cfg = ctx.manifest.config.clone();
+        let use_adam = ctx.optimizer == "adam";
+        let opt_entry: String = if use_adam {
+            spec.adam_entry().to_string()
+        } else {
+            spec.sgd_entry().to_string()
+        };
+        let mut entries: Vec<&str> = match spec.kind {
+            StageKind::Embed => vec!["embed_fwd", "embed_bwd"],
+            StageKind::Body => vec!["body_fwd", "body_bwd"],
+            StageKind::Head => vec!["head_fwd_loss"],
+        };
+        entries.push(&opt_entry);
+        let rt = Runtime::load(&ctx.manifest, Some(&entries))?;
 
-    let mut params = spec.init_params(ctx.param_seed);
-    let mut momentum = vec![0.0f32; spec.param_size];
-    // Second moment buffer (Adam only).
-    let mut second = vec![0.0f32; if use_adam { spec.param_size } else { 0 }];
-    let mut stats = WorkerStats {
-        stage: ctx.stage,
-        device: ctx.device,
-        ..Default::default()
-    };
+        let (params, momentum, second) = match &ctx.init_state {
+            Some(st) => {
+                anyhow::ensure!(
+                    st.params.len() == spec.param_size,
+                    "stage {}: migrated params {} != spec {}",
+                    ctx.stage,
+                    st.params.len(),
+                    spec.param_size
+                );
+                let second = if use_adam && st.second.is_empty() {
+                    vec![0.0f32; spec.param_size]
+                } else {
+                    st.second.clone()
+                };
+                (st.params.clone(), st.momentum.clone(), second)
+            }
+            None => (
+                spec.init_params(ctx.param_seed),
+                vec![0.0f32; spec.param_size],
+                vec![0.0f32; if use_adam { spec.param_size } else { 0 }],
+            ),
+        };
 
-    // Reusable decode buffers: `recycle` feeds the activation stash (bufs
-    // return on the backward pass), `grad_buf` holds transient gradients.
-    let mut recycle: Vec<Vec<f32>> = Vec::new();
-    let mut grad_buf = vec![0.0f32; act_n];
+        Ok(PjrtBackend {
+            act_dims: [cfg.microbatch as i64, cfg.seq_len as i64, cfg.d_model as i64],
+            tok_dims: [cfg.microbatch as i64, cfg.seq_len as i64],
+            spec,
+            cfg,
+            rt,
+            use_adam,
+            opt_entry,
+            params,
+            momentum,
+            second,
+            lr: ctx.lr,
+            mom: ctx.momentum,
+            n_micro: ctx.n_micro,
+            stash_tokens: (0..ctx.n_micro).map(|_| None).collect(),
+            stash_acts: (0..ctx.n_micro).map(|_| None).collect(),
+            stash_dx: (0..ctx.n_micro).map(|_| None).collect(),
+            dp: (0..ctx.n_micro).map(|_| None).collect(),
+            slow_factor: ctx.slow_factor.max(1.0),
+        })
+    }
 
-    for iter in 0..ctx.iters as u32 {
-        // ---------------- forward phase ----------------
-        // Stash: embed keeps tokens; body keeps inputs; head keeps dx.
-        let mut stash_tokens: Vec<Vec<i32>> = Vec::new();
-        let mut stash_acts: Vec<Vec<f32>> = Vec::new();
-        let mut stash_dx: Vec<Vec<f32>> = Vec::new();
-        let mut grad_acc = vec![0.0f32; spec.param_size];
+    /// Straggler injection: stretch the observed compute time.
+    fn drag(&self, t0: Instant) {
+        if self.slow_factor > 1.0 {
+            let extra = t0.elapsed().as_secs_f64() * (self.slow_factor - 1.0);
+            std::thread::sleep(Duration::from_secs_f64(extra));
+        }
+    }
+}
 
-        for micro in 0..ctx.n_micro as u32 {
-            let t_wait = Instant::now();
-            match spec.kind {
-                StageKind::Embed => {
-                    let msg = ctx.rx_fwd.recv()?;
-                    stats.wait_s += t_wait.elapsed().as_secs_f64();
-                    let tokens = match msg {
-                        Wire::Data { tokens, .. } => tokens,
-                        Wire::Stop => return finish(&ctx, stats),
-                        other => anyhow::bail!("embed: unexpected {other:?}"),
-                    };
-                    let t0 = Instant::now();
-                    let out = rt.exec(
-                        "embed_fwd",
-                        &[
-                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
-                            Runtime::i32_tensor(&tokens, &tok_dims)?,
-                        ],
-                    )?;
-                    stats.fwd_s += t0.elapsed().as_secs_f64();
-                    let y = Runtime::to_f32_vec(&out[0])?;
-                    stash_tokens.push(tokens);
-                    send_act(&mut ctx, &mut stats, iter, micro, &y)?;
-                }
-                StageKind::Body => {
-                    let msg = ctx.rx_fwd.recv()?;
-                    stats.wait_s += t_wait.elapsed().as_secs_f64();
-                    let buf = match msg {
-                        Wire::Packet(b) => b,
-                        Wire::Stop => return finish(&ctx, stats),
-                        other => anyhow::bail!("body: unexpected {other:?}"),
-                    };
-                    let mut x = recycle.pop().unwrap_or_default();
-                    x.resize(act_n, 0.0);
-                    decode_payload_into(&buf, &mut x)?;
-                    let t0 = Instant::now();
-                    let out = rt.exec(
-                        "body_fwd",
-                        &[
-                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
-                            Runtime::f32_tensor(&x, &act_dims)?,
-                        ],
-                    )?;
-                    stats.fwd_s += t0.elapsed().as_secs_f64();
-                    let y = Runtime::to_f32_vec(&out[0])?;
-                    stash_acts.push(x);
-                    send_act(&mut ctx, &mut stats, iter, micro, &y)?;
-                }
-                StageKind::Head => {
-                    // Labels first (driver sends them eagerly), then act.
-                    let labels = match ctx.rx_labels.as_ref().unwrap().recv()? {
-                        Wire::Labels { targets, .. } => targets,
-                        Wire::Stop => return finish(&ctx, stats),
-                        other => anyhow::bail!("head labels: unexpected {other:?}"),
-                    };
-                    let buf = match ctx.rx_fwd.recv()? {
-                        Wire::Packet(b) => b,
-                        Wire::Stop => return finish(&ctx, stats),
-                        other => anyhow::bail!("head: unexpected {other:?}"),
-                    };
-                    stats.wait_s += t_wait.elapsed().as_secs_f64();
-                    let mut x = recycle.pop().unwrap_or_default();
-                    x.resize(act_n, 0.0);
-                    decode_payload_into(&buf, &mut x)?;
-                    let t0 = Instant::now();
-                    let out = rt.exec(
-                        "head_fwd_loss",
-                        &[
-                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
-                            Runtime::f32_tensor(&x, &act_dims)?,
-                            Runtime::i32_tensor(&labels, &tok_dims)?,
-                        ],
-                    )?;
-                    recycle.push(x);
-                    stats.fwd_s += t0.elapsed().as_secs_f64();
-                    let loss = Runtime::to_f32_scalar(&out[0])?;
-                    let dx = Runtime::to_f32_vec(&out[1])?;
-                    let dp = Runtime::to_f32_vec(&out[2])?;
-                    axpy_acc(&mut grad_acc, &dp);
-                    stash_dx.push(dx);
-                    ctx.tx_driver.send(Wire::Loss { iter, micro, loss })?;
-                }
+impl StageBackend for PjrtBackend {
+    fn act_elems(&self) -> usize {
+        self.cfg.act_elems()
+    }
+
+    fn forward(
+        &mut self,
+        _iter: u32,
+        micro: usize,
+        input: FwdInput,
+        labels: Option<Vec<i32>>,
+    ) -> anyhow::Result<FwdOut> {
+        let psz = self.spec.param_size as i64;
+        let t0 = Instant::now();
+        match (self.spec.kind, input) {
+            (StageKind::Embed, FwdInput::Tokens(tokens)) => {
+                let out = self.rt.exec(
+                    "embed_fwd",
+                    &[
+                        Runtime::f32_tensor(&self.params, &[psz])?,
+                        Runtime::i32_tensor(&tokens, &self.tok_dims)?,
+                    ],
+                )?;
+                let y = Runtime::to_f32_vec(&out[0])?;
+                self.stash_tokens[micro] = Some(tokens);
+                self.drag(t0);
+                Ok(FwdOut::Act(y))
+            }
+            (StageKind::Body, FwdInput::Act(x)) => {
+                let out = self.rt.exec(
+                    "body_fwd",
+                    &[
+                        Runtime::f32_tensor(&self.params, &[psz])?,
+                        Runtime::f32_tensor(&x, &self.act_dims)?,
+                    ],
+                )?;
+                let y = Runtime::to_f32_vec(&out[0])?;
+                self.stash_acts[micro] = Some(x);
+                self.drag(t0);
+                Ok(FwdOut::Act(y))
+            }
+            (StageKind::Head, FwdInput::Act(x)) => {
+                let targets = labels
+                    .ok_or_else(|| anyhow::anyhow!("head forward without labels"))?;
+                let out = self.rt.exec(
+                    "head_fwd_loss",
+                    &[
+                        Runtime::f32_tensor(&self.params, &[psz])?,
+                        Runtime::f32_tensor(&x, &self.act_dims)?,
+                        Runtime::i32_tensor(&targets, &self.tok_dims)?,
+                    ],
+                )?;
+                let loss = Runtime::to_f32_scalar(&out[0])?;
+                let dx = Runtime::to_f32_vec(&out[1])?;
+                let dp = Runtime::to_f32_vec(&out[2])?;
+                self.dp[micro] = Some(dp);
+                self.stash_dx[micro] = Some(dx);
+                self.drag(t0);
+                Ok(FwdOut::Loss { loss, free: Some(x) })
+            }
+            (kind, _) => anyhow::bail!("{kind:?} stage got a mismatched forward input"),
+        }
+    }
+
+    fn backward(
+        &mut self,
+        _iter: u32,
+        micro: usize,
+        grad: Option<&[f32]>,
+    ) -> anyhow::Result<BwdOut> {
+        let psz = self.spec.param_size as i64;
+        let t0 = Instant::now();
+        match self.spec.kind {
+            StageKind::Head => {
+                // Replay the stored loss gradient (PipeDream-flush).
+                let dx = self.stash_dx[micro]
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("head backward before forward"))?;
+                Ok(BwdOut { dx: Some(dx), free: None })
+            }
+            StageKind::Body => {
+                let g = grad.ok_or_else(|| anyhow::anyhow!("body backward without grad"))?;
+                let x = self.stash_acts[micro]
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("body backward before forward"))?;
+                let out = self.rt.exec(
+                    "body_bwd",
+                    &[
+                        Runtime::f32_tensor(&self.params, &[psz])?,
+                        Runtime::f32_tensor(&x, &self.act_dims)?,
+                        Runtime::f32_tensor(g, &self.act_dims)?,
+                    ],
+                )?;
+                let dx = Runtime::to_f32_vec(&out[0])?;
+                let dp = Runtime::to_f32_vec(&out[1])?;
+                self.dp[micro] = Some(dp);
+                self.drag(t0);
+                Ok(BwdOut { dx: Some(dx), free: Some(x) })
+            }
+            StageKind::Embed => {
+                let g = grad.ok_or_else(|| anyhow::anyhow!("embed backward without grad"))?;
+                let tokens = self.stash_tokens[micro]
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("embed backward before forward"))?;
+                let out = self.rt.exec(
+                    "embed_bwd",
+                    &[
+                        Runtime::f32_tensor(&self.params, &[psz])?,
+                        Runtime::i32_tensor(&tokens, &self.tok_dims)?,
+                        Runtime::f32_tensor(g, &self.act_dims)?,
+                    ],
+                )?;
+                let dp = Runtime::to_f32_vec(&out[0])?;
+                self.dp[micro] = Some(dp);
+                self.drag(t0);
+                Ok(BwdOut { dx: None, free: None })
             }
         }
+    }
 
-        // ---------------- backward phase (reverse microbatch order) ------
-        for micro in (0..ctx.n_micro as u32).rev() {
-            match spec.kind {
-                StageKind::Head => {
-                    // Replay stored dx (GPipe flush).
-                    let dx = stash_dx.pop().expect("head dx stash");
-                    send_grad(&mut ctx, &mut stats, iter, micro, &dx)?;
-                }
-                StageKind::Body => {
-                    let t_wait = Instant::now();
-                    let buf = match ctx.rx_bwd.as_ref().unwrap().recv()? {
-                        Wire::Packet(b) => b,
-                        Wire::Stop => return finish(&ctx, stats),
-                        other => anyhow::bail!("body bwd: unexpected {other:?}"),
-                    };
-                    stats.wait_s += t_wait.elapsed().as_secs_f64();
-                    decode_payload_into(&buf, &mut grad_buf)?;
-                    let x = stash_acts.pop().expect("body act stash");
-                    let t0 = Instant::now();
-                    let out = rt.exec(
-                        "body_bwd",
-                        &[
-                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
-                            Runtime::f32_tensor(&x, &act_dims)?,
-                            Runtime::f32_tensor(&grad_buf, &act_dims)?,
-                        ],
-                    )?;
-                    stats.bwd_s += t0.elapsed().as_secs_f64();
-                    recycle.push(x);
-                    let dx = Runtime::to_f32_vec(&out[0])?;
-                    let dp = Runtime::to_f32_vec(&out[1])?;
-                    axpy_acc(&mut grad_acc, &dp);
-                    send_grad(&mut ctx, &mut stats, iter, micro, &dx)?;
-                }
-                StageKind::Embed => {
-                    let t_wait = Instant::now();
-                    let buf = match ctx.rx_bwd.as_ref().unwrap().recv()? {
-                        Wire::Packet(b) => b,
-                        Wire::Stop => return finish(&ctx, stats),
-                        other => anyhow::bail!("embed bwd: unexpected {other:?}"),
-                    };
-                    stats.wait_s += t_wait.elapsed().as_secs_f64();
-                    decode_payload_into(&buf, &mut grad_buf)?;
-                    let tokens = stash_tokens.pop().expect("embed token stash");
-                    let t0 = Instant::now();
-                    let out = rt.exec(
-                        "embed_bwd",
-                        &[
-                            Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
-                            Runtime::i32_tensor(&tokens, &tok_dims)?,
-                            Runtime::f32_tensor(&grad_buf, &act_dims)?,
-                        ],
-                    )?;
-                    stats.bwd_s += t0.elapsed().as_secs_f64();
-                    let dp = Runtime::to_f32_vec(&out[0])?;
-                    axpy_acc(&mut grad_acc, &dp);
-                }
-            }
+    fn update(&mut self, iter: u32) -> anyhow::Result<()> {
+        let psz = self.spec.param_size as i64;
+        // Fixed accumulation order (ascending micro): schedule-independent.
+        let mut grad_acc = vec![0.0f32; self.spec.param_size];
+        for m in 0..self.n_micro {
+            let dp = self.dp[m]
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("update before backward of micro {m}"))?;
+            axpy_acc(&mut grad_acc, &dp);
         }
-
-        // ---------------- update ----------------
-        let scale = 1.0 / ctx.n_micro as f32;
+        let scale = 1.0 / self.n_micro as f32;
         for g in grad_acc.iter_mut() {
             *g *= scale;
         }
-        let t0 = Instant::now();
-        if use_adam {
-            let out = rt.exec(
-                &opt_entry,
+        if self.use_adam {
+            let out = self.rt.exec(
+                &self.opt_entry,
                 &[
-                    Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
-                    Runtime::f32_tensor(&grad_acc, &[spec.param_size as i64])?,
-                    Runtime::f32_tensor(&momentum, &[spec.param_size as i64])?,
-                    Runtime::f32_tensor(&second, &[spec.param_size as i64])?,
-                    Runtime::f32_scalar(ctx.lr),
+                    Runtime::f32_tensor(&self.params, &[psz])?,
+                    Runtime::f32_tensor(&grad_acc, &[psz])?,
+                    Runtime::f32_tensor(&self.momentum, &[psz])?,
+                    Runtime::f32_tensor(&self.second, &[psz])?,
+                    Runtime::f32_scalar(self.lr),
                     Runtime::f32_scalar((iter + 1) as f32),
                 ],
             )?;
-            stats.update_s += t0.elapsed().as_secs_f64();
-            params = Runtime::to_f32_vec(&out[0])?;
-            momentum = Runtime::to_f32_vec(&out[1])?;
-            second = Runtime::to_f32_vec(&out[2])?;
+            self.params = Runtime::to_f32_vec(&out[0])?;
+            self.momentum = Runtime::to_f32_vec(&out[1])?;
+            self.second = Runtime::to_f32_vec(&out[2])?;
         } else {
-            let out = rt.exec(
-                &opt_entry,
+            let out = self.rt.exec(
+                &self.opt_entry,
                 &[
-                    Runtime::f32_tensor(&params, &[spec.param_size as i64])?,
-                    Runtime::f32_tensor(&grad_acc, &[spec.param_size as i64])?,
-                    Runtime::f32_tensor(&momentum, &[spec.param_size as i64])?,
-                    Runtime::f32_scalar(ctx.lr),
-                    Runtime::f32_scalar(ctx.momentum),
+                    Runtime::f32_tensor(&self.params, &[psz])?,
+                    Runtime::f32_tensor(&grad_acc, &[psz])?,
+                    Runtime::f32_tensor(&self.momentum, &[psz])?,
+                    Runtime::f32_scalar(self.lr),
+                    Runtime::f32_scalar(self.mom),
                 ],
             )?;
-            stats.update_s += t0.elapsed().as_secs_f64();
-            params = Runtime::to_f32_vec(&out[0])?;
-            momentum = Runtime::to_f32_vec(&out[1])?;
+            self.params = Runtime::to_f32_vec(&out[0])?;
+            self.momentum = Runtime::to_f32_vec(&out[1])?;
         }
+        Ok(())
     }
 
-    finish(&ctx, stats)
-}
-
-fn finish(ctx: &StageCtx, stats: WorkerStats) -> anyhow::Result<()> {
-    let _ = ctx.tx_driver.send(Wire::Stats(stats));
-    Ok(())
-}
-
-fn send_act(
-    ctx: &mut StageCtx,
-    stats: &mut WorkerStats,
-    iter: u32,
-    micro: u32,
-    dense: &[f32],
-) -> anyhow::Result<()> {
-    if let (Some(tx), Some(enc)) = (&ctx.tx_fwd, ctx.codec.fwd.as_mut()) {
-        let (buf, wire) = enc.encode(
-            ctx.stage,
-            ctx.stage + 1,
-            OpDataKind::Activation,
-            iter,
-            micro,
-            dense,
-        );
-        stats.bytes_sent += wire;
-        stats.dense_bytes += 4.0 * dense.len() as f64;
-        stats.msgs_sent += 1;
-        tx.send(Wire::Packet(buf))?;
+    fn snapshot(&self) -> Option<StageState> {
+        Some(StageState {
+            params: self.params.clone(),
+            momentum: self.momentum.clone(),
+            second: self.second.clone(),
+        })
     }
-    Ok(())
 }
 
-fn send_grad(
-    ctx: &mut StageCtx,
-    stats: &mut WorkerStats,
-    iter: u32,
-    micro: u32,
-    dense: &[f32],
-) -> anyhow::Result<()> {
-    if let (Some(tx), Some(enc)) = (&ctx.tx_bwd, ctx.codec.bwd.as_mut()) {
-        let (buf, wire) = enc.encode(
-            ctx.stage,
-            ctx.stage - 1,
-            OpDataKind::Gradient,
-            iter,
-            micro,
-            dense,
-        );
-        stats.bytes_sent += wire;
-        stats.dense_bytes += 4.0 * dense.len() as f64;
-        stats.msgs_sent += 1;
-        tx.send(Wire::Packet(buf))?;
-    }
+fn run_stage(ctx: StageCtx) -> anyhow::Result<()> {
+    let mut backend = PjrtBackend::new(&ctx)?;
+    let tasks = ctx.tasks.clone();
+    let (iter0, iters) = (ctx.iter0, ctx.iters);
+    let mut links = StageLinks {
+        stage: ctx.stage,
+        device: ctx.device,
+        codec: ctx.codec,
+        rx_fwd: ctx.rx_fwd,
+        rx_bwd: ctx.rx_bwd,
+        tx_fwd: ctx.tx_fwd,
+        tx_bwd: ctx.tx_bwd,
+        rx_labels: ctx.rx_labels,
+        tx_driver: ctx.tx_driver,
+    };
+    run_schedule(&mut links, &mut backend, &tasks, iter0, iters)?;
     Ok(())
 }

@@ -4,6 +4,8 @@
 
 use fusionllm::broker::{self, Job};
 use fusionllm::compress::CompressKind;
+use fusionllm::pipeline::ScheduleKind;
+use fusionllm::scheduler::replan::ReplanMode;
 
 fn have_artifacts() -> bool {
     Job::default().artifacts_root.join("tiny/manifest.json").exists()
@@ -84,6 +86,106 @@ fn schedulers_produce_different_placements_same_numerics() {
     }
     // But the simulated geo latency differs (placement matters).
     assert_ne!(a.placement, b.placement);
+}
+
+#[test]
+fn one_f_one_b_matches_gpipe_loss_trajectory_exactly() {
+    // The schedule-interpreter differential: both kinds run the same
+    // per-micro computations and accumulate gradients in the same fixed
+    // order, so the trajectories must be *bitwise* identical.
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let gpipe = broker::run(&Job { iters: 20, lr: 0.1, ..Job::default() }).unwrap();
+    let ofob = broker::run(&Job {
+        iters: 20,
+        lr: 0.1,
+        pipeline: ScheduleKind::OneFOneB,
+        ..Job::default()
+    })
+    .unwrap();
+    assert_eq!(gpipe.losses.len(), ofob.losses.len());
+    for (i, (g, o)) in gpipe.losses.iter().zip(&ofob.losses).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            o.to_bits(),
+            "iter {i}: gpipe {g} != 1f1b {o} (accumulation order leaked)"
+        );
+    }
+    assert_eq!(ofob.pipeline, "1f1b");
+    // And 1F1B actually learned (not just matched a broken run).
+    assert!(ofob.final_loss() < ofob.losses[0] - 0.1);
+}
+
+#[test]
+fn replan_auto_migrates_off_injected_straggler() {
+    // Straggler e2e: stage 1's device is forced 30x slower; with
+    // `--replan auto` the broker must re-partition mid-run (recorded in
+    // TrainReport.replans) and keep the loss trajectory intact across the
+    // parameter migration.
+    if !have_artifacts() {
+        return;
+    }
+    let job = Job {
+        iters: 12,
+        lr: 0.1,
+        slow_stage: Some(1),
+        slow_factor: 30.0,
+        replan: ReplanMode::Auto,
+        ..Job::default()
+    };
+    let r = broker::run(&job).unwrap();
+    assert_eq!(r.losses.len(), 12);
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    let applied: Vec<_> = r.replans.iter().filter(|e| e.applied).collect();
+    assert!(
+        !applied.is_empty(),
+        "30x straggler never triggered an applied replan: {:?}",
+        r.replans
+    );
+    let ev = applied[0];
+    assert!(ev.iter >= 1 && ev.iter < 12);
+    assert!(ev.flagged.contains(&1), "stage 1 not flagged: {:?}", ev.flagged);
+    assert_ne!(ev.from, ev.to, "replan event with no movement");
+    assert!(ev.sim_after_s < ev.sim_before_s);
+    // Final placement reflects the migration and training continued.
+    let last_applied = r.replans.iter().rev().find(|e| e.applied).unwrap();
+    assert_eq!(r.placement, last_applied.to);
+    assert!(r.final_loss() < r.losses[0], "migration broke training");
+    // The identical job without replanning must keep the static placement.
+    let static_run = broker::run(&Job {
+        replan: ReplanMode::Off,
+        ..job.clone()
+    })
+    .unwrap();
+    assert!(static_run.replans.is_empty());
+    // Same seed + deterministic numerics: migration must not change the
+    // loss trajectory (placement is numerics-neutral).
+    for (a, b) in r.losses.iter().zip(&static_run.losses) {
+        assert!((a - b).abs() < 1e-4, "replan changed numerics: {a} vs {b}");
+    }
+}
+
+#[test]
+fn replan_advise_logs_without_migrating() {
+    if !have_artifacts() {
+        return;
+    }
+    let r = broker::run(&Job {
+        iters: 8,
+        lr: 0.1,
+        slow_stage: Some(1),
+        slow_factor: 30.0,
+        replan: ReplanMode::Advise,
+        ..Job::default()
+    })
+    .unwrap();
+    // Recommendations recorded, none applied, placement untouched.
+    assert!(!r.replans.is_empty(), "advise mode recorded no recommendation");
+    assert!(r.replans.iter().all(|e| !e.applied));
+    assert_eq!(r.placement.len(), 4);
+    assert_eq!(r.replans[0].from, r.placement);
 }
 
 #[test]
