@@ -6,6 +6,7 @@ use crate::compress::{CompressKind, ValueCodec};
 use crate::pipeline::ScheduleKind;
 use crate::scheduler::replan::ReplanMode;
 use crate::util::cli::Args;
+use crate::worker::BackendKind;
 use std::path::PathBuf;
 
 #[derive(Debug, Clone)]
@@ -52,6 +53,27 @@ pub struct Job {
     /// compute `slow_factor`× slower (straggler injection).
     pub slow_stage: Option<usize>,
     pub slow_factor: f64,
+    /// Compute backend: PJRT artifacts, or the artifact-free Null backend
+    /// (real broker/worker/wire machinery, mocked math).
+    pub backend: BackendKind,
+    /// Liveness beacon interval in seconds (0 = disabled: blocking
+    /// receives, no deadline monitor, no crash recovery).
+    pub heartbeat_s: f64,
+    /// Missed intervals before a silent stage is declared dead
+    /// (deadline = heartbeat_s × heartbeat_timeout). The default 10 s
+    /// deadline leaves room for multi-second PJRT tasks, during which a
+    /// busy stage is legitimately silent.
+    pub heartbeat_timeout: u32,
+    /// Persist a checkpoint every N iterations (0 = disabled).
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: PathBuf,
+    /// Checkpoint versions retained on disk.
+    pub keep_checkpoints: usize,
+    /// Churn injector: the worker on this device vanishes silently at the
+    /// top of `kill_at_iter` (heartbeats stop; the deadline monitor must
+    /// notice and — under `--replan auto` — recover).
+    pub kill_device: Option<usize>,
+    pub kill_at_iter: u32,
 }
 
 impl Default for Job {
@@ -78,6 +100,14 @@ impl Default for Job {
             replan_hysteresis: 0.10,
             slow_stage: None,
             slow_factor: 4.0,
+            backend: BackendKind::Pjrt,
+            heartbeat_s: 0.25,
+            heartbeat_timeout: 40,
+            checkpoint_every: 0,
+            checkpoint_dir: PathBuf::from("checkpoints"),
+            keep_checkpoints: 3,
+            kill_device: None,
+            kill_at_iter: 0,
         }
     }
 }
@@ -124,6 +154,20 @@ impl Job {
                 .opt_str("slow-stage")
                 .map(|s| s.parse().expect("--slow-stage expects a stage index")),
             slow_factor: args.f64("slow-factor", d.slow_factor),
+            backend: BackendKind::parse(&args.str("backend", d.backend.name()))?,
+            heartbeat_s: args.f64("heartbeat-interval", d.heartbeat_s).max(0.0),
+            heartbeat_timeout: args.u64("heartbeat-timeout", d.heartbeat_timeout as u64)
+                as u32,
+            checkpoint_every: args.usize("checkpoint-every", d.checkpoint_every),
+            checkpoint_dir: args
+                .opt_str("checkpoint-dir")
+                .map(PathBuf::from)
+                .unwrap_or(d.checkpoint_dir),
+            keep_checkpoints: args.usize("keep-checkpoints", d.keep_checkpoints).max(1),
+            kill_device: args
+                .opt_str("kill-node")
+                .map(|s| s.parse().expect("--kill-node expects a device id")),
+            kill_at_iter: args.u64("kill-at-iter", d.kill_at_iter as u64) as u32,
         })
     }
 }
@@ -180,6 +224,34 @@ mod tests {
         let bad = Args::parse(["--pipeline", "zigzag"].iter().map(|s| s.to_string()));
         assert!(Job::from_args(&bad).is_err());
         let bad = Args::parse(["--replan", "maybe"].iter().map(|s| s.to_string()));
+        assert!(Job::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_flags_parse() {
+        let j = Job::from_args(&Args::parse(std::iter::empty::<String>())).unwrap();
+        assert_eq!(j.backend, BackendKind::Pjrt);
+        assert_eq!(j.heartbeat_s, 0.25);
+        assert_eq!(j.heartbeat_timeout, 40);
+        assert_eq!(j.checkpoint_every, 0);
+        assert_eq!(j.kill_device, None);
+        let args = Args::parse(
+            "train --backend null --heartbeat-interval 0.05 --heartbeat-timeout 4 \
+             --checkpoint-every 2 --checkpoint-dir /tmp/ck --keep-checkpoints 5 \
+             --kill-node 1 --kill-at-iter 3"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let j = Job::from_args(&args).unwrap();
+        assert_eq!(j.backend, BackendKind::Null);
+        assert_eq!(j.heartbeat_s, 0.05);
+        assert_eq!(j.heartbeat_timeout, 4);
+        assert_eq!(j.checkpoint_every, 2);
+        assert_eq!(j.checkpoint_dir, PathBuf::from("/tmp/ck"));
+        assert_eq!(j.keep_checkpoints, 5);
+        assert_eq!(j.kill_device, Some(1));
+        assert_eq!(j.kill_at_iter, 3);
+        let bad = Args::parse(["--backend", "tpu"].iter().map(|s| s.to_string()));
         assert!(Job::from_args(&bad).is_err());
     }
 

@@ -13,27 +13,44 @@
 //! (params + optimizer moments) is snapshotted, links/codecs are rebuilt
 //! for the new placement, and a fresh worker generation resumes at the
 //! same global iteration.
+//!
+//! The runtime is also churn-tolerant: workers heartbeat on a
+//! configurable interval, a deadline monitor in the broker's event loop
+//! declares a silent stage dead (missed beacons, channel loss, or
+//! `Wire::Fatal`), and — under `--replan auto` — the broker marks the
+//! device failed in the `NetGraph`, re-partitions across survivors with
+//! `Replanner::replan_after_failure`, restores the newest valid
+//! checkpoint (broadcast `Wire::Checkpoint` every `--checkpoint-every`
+//! iterations, persisted via the `checkpoint` module), rewinds the data
+//! loader and resumes. Every event lands in `TrainReport.recoveries`.
 
 pub mod job;
 
 pub use job::Job;
 
+use crate::checkpoint::{self, Checkpoint};
 use crate::cluster::{testbed, Testbed};
 use crate::compress::{CompressKind, CompressPlan};
 use crate::cost::{PipelineParams, ProfileStore};
 use crate::opdag::builders::{stage_chain, TransformerSpec};
 use crate::opdag::{Dag, Partition};
 use crate::pipeline::PipelineSchedule;
-use crate::runtime::Manifest;
+use crate::runtime::{Manifest, ModelCfg};
 use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
 use crate::simnet::{simulate_iteration, StagePlan};
-use crate::trainer::{ReplanEvent, SyntheticCorpus, TrainReport};
-use crate::worker::{spawn_stage, StageCodec, StageCtx, StageState, Wire, WorkerStats};
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::time::Instant;
+use crate::trainer::{RecoveryEvent, ReplanEvent, SyntheticCorpus, TrainReport};
+use crate::worker::{
+    spawn_stage, BackendKind, StageCodec, StageCtx, StageState, Wire, WorkerStats,
+};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 /// Iterations of measured profile required before the first replan check.
 const REPLAN_WARMUP_ITERS: usize = 3;
+
+/// Hard cap on crash recoveries per run (a persistently failing cluster
+/// must eventually surface as an error, not an infinite restart loop).
+const MAX_RECOVERIES: usize = 8;
 
 /// One cohort of stage workers sharing a set of channels. Re-partitioning
 /// tears a generation down (collecting state snapshots) and spawns the
@@ -41,12 +58,143 @@ const REPLAN_WARMUP_ITERS: usize = 3;
 struct Generation {
     handles: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
     /// Broker-held senders into every stage's forward input (stage 0 gets
-    /// Data; the rest are reachable for Stop broadcast).
+    /// Data; the rest are reachable for Stop/Checkpoint broadcast).
     fwd_tx: Vec<Sender<Wire>>,
     label_tx: Sender<Wire>,
     rx_driver: Receiver<Wire>,
     /// Stats messages already collected from this generation.
     stats_seen: usize,
+    /// Device per stage (dead-stage attribution).
+    devices: Vec<usize>,
+    /// Liveness: last instant each stage was heard from (any message).
+    last_seen: Vec<Instant>,
+    /// Whether a stage has sent anything yet — before first contact the
+    /// deadline gets a grace multiplier (backend init may be slow).
+    heard: Vec<bool>,
+}
+
+/// A driver-plane event: a protocol message, or a stage declared dead
+/// (fatal error, channel loss, or heartbeat deadline expiry).
+enum Event {
+    Msg(Wire),
+    Dead { stage: usize, cause: String },
+}
+
+/// Deadline multiplier for stages that have not spoken yet (covers slow
+/// backend initialization before the first beacon).
+const FIRST_CONTACT_GRACE: u32 = 4;
+
+impl Generation {
+    fn note(&mut self, stage: usize) {
+        if stage < self.last_seen.len() {
+            self.last_seen[stage] = Instant::now();
+            self.heard[stage] = true;
+        }
+    }
+
+    /// Stage a message originates from, for liveness attribution.
+    fn stage_of(msg: &Wire, s_n: usize) -> Option<usize> {
+        match msg {
+            Wire::Loss { .. } => Some(s_n - 1),
+            Wire::IterProfile { stage, .. }
+            | Wire::Snapshot { stage, .. }
+            | Wire::Heartbeat { stage, .. }
+            | Wire::Fatal { stage, .. } => Some(*stage),
+            Wire::Stats(st) => Some(st.stage),
+            _ => None,
+        }
+    }
+
+    /// Stage furthest past its (grace-adjusted) deadline, if any.
+    fn expired_stage(&self, dl: Duration) -> Option<(usize, Duration)> {
+        let worst = (0..self.last_seen.len())
+            .map(|s| {
+                let limit = if self.heard[s] { dl } else { dl * FIRST_CONTACT_GRACE };
+                let age = self.last_seen[s].elapsed();
+                (s, age, age.as_secs_f64() - limit.as_secs_f64())
+            })
+            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())?;
+        if worst.2 > 0.0 {
+            Some((worst.0, worst.1))
+        } else {
+            None
+        }
+    }
+
+    /// Next driver-plane message. Heartbeats are swallowed (they only
+    /// refresh deadlines). With a deadline, the receive ticks and the
+    /// per-stage deadlines are checked on *every* pass — before each
+    /// receive, not just on a silent tick, so survivors' beacon traffic
+    /// cannot starve the death check while a dead stage stalls the run.
+    /// Without a deadline this is the PR 3 blocking receive.
+    fn recv_event(&mut self, deadline: Option<Duration>) -> anyhow::Result<Event> {
+        let s_n = self.last_seen.len();
+        loop {
+            let msg = match deadline {
+                None => self
+                    .rx_driver
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("all workers exited unexpectedly"))?,
+                Some(dl) => {
+                    if let Some((stage, age)) = self.expired_stage(dl) {
+                        return Ok(Event::Dead {
+                            stage,
+                            cause: format!("no heartbeat for {:.2}s", age.as_secs_f64()),
+                        });
+                    }
+                    let tick = (dl / 4)
+                        .max(Duration::from_millis(5))
+                        .min(Duration::from_millis(250));
+                    match self.rx_driver.recv_timeout(tick) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            anyhow::bail!("all workers exited unexpectedly")
+                        }
+                        Err(RecvTimeoutError::Timeout) => continue,
+                    }
+                }
+            };
+            if let Some(stage) = Self::stage_of(&msg, s_n) {
+                self.note(stage);
+            }
+            match msg {
+                Wire::Heartbeat { .. } => continue,
+                Wire::Fatal { stage, error } => {
+                    return Ok(Event::Dead { stage, cause: format!("fatal: {error}") })
+                }
+                m => return Ok(Event::Msg(m)),
+            }
+        }
+    }
+}
+
+/// How one iteration's collection ended.
+enum IterOutcome {
+    Done { mean_loss: f32, prof: Vec<(f64, f64, f64, f64)> },
+    Died { stage: usize, cause: String },
+}
+
+/// How a checkpoint snapshot collection ended.
+enum SnapOutcome {
+    Done(Vec<StageState>),
+    Died { stage: usize, cause: String },
+}
+
+/// The model config the Null backend trains (no artifacts on disk): tiny
+/// shapes, 4 stages — enough to exercise every broker/wire code path.
+fn null_model_cfg(name: &str) -> ModelCfg {
+    ModelCfg {
+        name: name.to_string(),
+        vocab: 61,
+        d_model: 8,
+        n_heads: 1,
+        n_layers: 4,
+        seq_len: 8,
+        microbatch: 2,
+        n_stages: 4,
+        compress_ratio: 1.0,
+        topk_k: 0,
+    }
 }
 
 /// Build the compression plan for a (partition, testbed) pair per the
@@ -83,7 +231,7 @@ fn compress_plan_for(
 
 /// Spawn one worker generation on `devices`, executing iterations
 /// `[iter0, iter0 + iters)` of `schedule`. `init` entries are taken (and
-/// consumed) as migrated state for the matching stage.
+/// consumed) as migrated/restored state for the matching stage.
 #[allow(clippy::too_many_arguments)]
 fn spawn_generation(
     manifest: &Manifest,
@@ -95,6 +243,7 @@ fn spawn_generation(
     iters: usize,
     init: &mut [Option<StageState>],
     slow_dev: Option<(usize, f64)>,
+    heartbeat: Option<Duration>,
 ) -> Generation {
     let s_n = devices.len();
     let cfg = &manifest.config;
@@ -124,6 +273,13 @@ fn spawn_generation(
             Some((dev, f)) if dev == devices[s] => f,
             _ => 1.0,
         };
+        // Churn injector: the stage hosted on --kill-node vanishes at the
+        // top of --kill-at-iter (after recovery the failed device hosts
+        // nothing, so the injector cannot re-fire).
+        let kill_at_iter = match job.kill_device {
+            Some(dev) if dev == devices[s] => Some(job.kill_at_iter),
+            _ => None,
+        };
         let ctx = StageCtx {
             stage: s,
             n_stages: s_n,
@@ -144,6 +300,9 @@ fn spawn_generation(
             param_seed: job.seed.wrapping_add(s as u64),
             init_state: init[s].take(),
             slow_factor,
+            backend: job.backend,
+            heartbeat,
+            kill_at_iter,
             rx_fwd: fwd_rx[s].take().unwrap(),
             rx_bwd: if s + 1 < s_n { bwd_rx[s].take() } else { None },
             tx_fwd: if s + 1 < s_n { Some(fwd_tx[s + 1].clone()) } else { None },
@@ -156,24 +315,41 @@ fn spawn_generation(
     // The broker keeps no tx_driver clone: the channel closes when the
     // last worker of the generation exits.
     drop(tx_driver);
-    Generation { handles, fwd_tx, label_tx, rx_driver, stats_seen: 0 }
+    Generation {
+        handles,
+        fwd_tx,
+        label_tx,
+        rx_driver,
+        stats_seen: 0,
+        devices: devices.to_vec(),
+        last_seen: vec![Instant::now(); s_n],
+        heard: vec![false; s_n],
+    }
 }
 
 /// Stop a generation at an iteration boundary (workers are blocked on
 /// their first recv of the next iteration), collect state snapshots and
 /// remaining stats, and join the threads. Also used as the end-of-run
 /// drain, where the Stop sends land on already-dropped receivers.
+///
+/// All threads are joined on every path. Worker errors are reported
+/// *after* the join, so a failing run can no longer leak detached threads
+/// — except when `join_always` is false (heartbeats disabled): a worker
+/// blocked on a dead neighbor cannot observe Stop without ticking
+/// receives, so a Fatal aborts immediately as in PR 3.
 fn teardown(
     gen: Generation,
     s_n: usize,
     snapshots: &mut [Option<StageState>],
     all_stats: &mut Vec<WorkerStats>,
+    join_always: bool,
 ) -> anyhow::Result<()> {
     for tx in &gen.fwd_tx {
         let _ = tx.send(Wire::Stop);
     }
     let _ = gen.label_tx.send(Wire::Stop);
     let mut seen = gen.stats_seen;
+    let mut first_err: Option<String> = None;
     while seen < s_n {
         match gen.rx_driver.recv() {
             Ok(Wire::Stats(st)) => {
@@ -182,27 +358,165 @@ fn teardown(
             }
             Ok(Wire::Snapshot { stage, state }) => snapshots[stage] = Some(state),
             Ok(Wire::Fatal { stage, error }) => {
-                anyhow::bail!("stage {stage} failed: {error}")
+                let msg = format!("stage {stage} failed: {error}");
+                if !join_always {
+                    anyhow::bail!(msg);
+                }
+                if first_err.is_none() {
+                    first_err = Some(msg);
+                }
             }
-            Ok(_) => {} // stale losses/profiles from the stopped iteration
+            Ok(_) => {} // stale losses/profiles/heartbeats from the stopped iteration
             Err(_) => break, // all workers exited (join reports errors)
         }
     }
     for h in gen.handles {
         match h.join() {
             Ok(Ok(())) => {}
-            Ok(Err(e)) => anyhow::bail!("worker failed: {e:#}"),
-            Err(_) => anyhow::bail!("worker panicked"),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(format!("worker failed: {e:#}"));
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some("worker panicked".into());
+                }
+            }
         }
     }
-    Ok(())
+    match first_err {
+        Some(e) => anyhow::bail!(e),
+        None => Ok(()),
+    }
+}
+
+/// Tear down a generation that contains a dead stage: broadcast Stop,
+/// drain whatever the survivors still send (bounded by a drain budget —
+/// the dead stage sends nothing), then join every thread. Survivors
+/// observe Stop even when blocked on a dead neighbor because their
+/// ticking receives poll the forward link, so the join cannot hang.
+fn churn_teardown(
+    gen: Generation,
+    s_n: usize,
+    deadline: Duration,
+    all_stats: &mut Vec<WorkerStats>,
+) {
+    for tx in &gen.fwd_tx {
+        let _ = tx.send(Wire::Stop);
+    }
+    let _ = gen.label_tx.send(Wire::Stop);
+    let want = s_n.saturating_sub(1);
+    let budget = (deadline * 4).max(Duration::from_secs(2));
+    let t0 = Instant::now();
+    let mut seen = gen.stats_seen;
+    while seen < want && t0.elapsed() < budget {
+        match gen.rx_driver.recv_timeout(Duration::from_millis(50)) {
+            Ok(Wire::Stats(st)) => {
+                all_stats.push(st);
+                seen += 1;
+            }
+            Ok(_) => {} // snapshots/heartbeats/losses from the dying cohort
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    for h in gen.handles {
+        let _ = h.join();
+    }
+}
+
+/// Collect one iteration's `n_micro` losses and every stage's
+/// `IterProfile` (sent after its Update). Workers cannot run ahead — the
+/// next iteration's data is only fed after this returns — so all profiles
+/// belong to `iter`.
+fn collect_iteration(
+    gen: &mut Generation,
+    it: usize,
+    iter: u32,
+    s_n: usize,
+    n_micro: usize,
+    deadline: Option<Duration>,
+    all_stats: &mut Vec<WorkerStats>,
+) -> anyhow::Result<IterOutcome> {
+    let mut sum = 0.0f32;
+    let mut got_losses = 0usize;
+    let mut prof = vec![(0.0f64, 0.0f64, 0.0f64, 0.0f64); s_n]; // fwd,bwd,upd,bytes
+    let mut got_prof = vec![false; s_n];
+    let mut n_prof = 0usize;
+    while got_losses < n_micro || n_prof < s_n {
+        match gen.recv_event(deadline)? {
+            Event::Dead { stage, cause } => return Ok(IterOutcome::Died { stage, cause }),
+            Event::Msg(Wire::Loss { loss, .. }) => {
+                sum += loss;
+                got_losses += 1;
+            }
+            Event::Msg(Wire::IterProfile {
+                stage, iter: pit, fwd_s, bwd_s, update_s, bytes, ..
+            }) => {
+                anyhow::ensure!(
+                    pit == iter && !got_prof[stage],
+                    "stage {stage}: unexpected profile for iter {pit} during {it}"
+                );
+                prof[stage] = (fwd_s, bwd_s, update_s, bytes);
+                got_prof[stage] = true;
+                n_prof += 1;
+            }
+            Event::Msg(Wire::Stats(st)) => {
+                // Natural end of the final generation overlaps the last
+                // iteration's drain.
+                all_stats.push(st);
+                gen.stats_seen += 1;
+            }
+            Event::Msg(other) => anyhow::bail!("driver: unexpected {other:?}"),
+        }
+    }
+    Ok(IterOutcome::Done { mean_loss: sum / n_micro as f32, prof })
+}
+
+/// Broadcast `Wire::Checkpoint` at an iteration boundary and collect one
+/// snapshot per stage (workers reply and keep running).
+fn collect_checkpoint_states(
+    gen: &mut Generation,
+    iter: u32,
+    s_n: usize,
+    deadline: Option<Duration>,
+    all_stats: &mut Vec<WorkerStats>,
+) -> anyhow::Result<SnapOutcome> {
+    for tx in &gen.fwd_tx {
+        let _ = tx.send(Wire::Checkpoint { iter });
+    }
+    let mut states: Vec<Option<StageState>> = (0..s_n).map(|_| None).collect();
+    let mut got = 0usize;
+    while got < s_n {
+        match gen.recv_event(deadline)? {
+            Event::Dead { stage, cause } => return Ok(SnapOutcome::Died { stage, cause }),
+            Event::Msg(Wire::Snapshot { stage, state }) => {
+                if states[stage].is_none() {
+                    got += 1;
+                }
+                states[stage] = Some(state);
+            }
+            Event::Msg(Wire::Stats(st)) => {
+                all_stats.push(st);
+                gen.stats_seen += 1;
+            }
+            Event::Msg(other) => anyhow::bail!("checkpoint: unexpected {other:?}"),
+        }
+    }
+    Ok(SnapOutcome::Done(
+        states.into_iter().map(|s| s.expect("counted")).collect(),
+    ))
 }
 
 /// Run a full decentralized training job. Returns the report.
 pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
-    let manifest = Manifest::load(&job.artifacts_root, &job.config)?;
+    let manifest = match job.backend {
+        BackendKind::Pjrt => Manifest::load(&job.artifacts_root, &job.config)?,
+        BackendKind::Null => Manifest::synthetic(null_model_cfg(&job.config)),
+    };
     let cfg = manifest.config.clone();
-    let tb = testbed::by_id(job.testbed, job.seed);
+    let mut tb = testbed::by_id(job.testbed, job.seed);
     anyhow::ensure!(
         cfg.n_stages <= tb.nodes.len(),
         "{} stages > {} devices",
@@ -260,6 +574,21 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
     let schedule = PipelineSchedule::new(job.pipeline, s_n, job.n_micro);
     schedule.validate()?;
 
+    // Liveness plane: beacon interval and the death deadline.
+    let hb = if job.heartbeat_s > 0.0 {
+        Some(Duration::from_secs_f64(job.heartbeat_s))
+    } else {
+        None
+    };
+    let deadline = hb
+        .map(|_| Duration::from_secs_f64(job.heartbeat_s * job.heartbeat_timeout.max(1) as f64));
+    // The head stage answers boundary Checkpoints via its ticking label
+    // receive — without heartbeats it would deadlock on the broadcast.
+    anyhow::ensure!(
+        job.checkpoint_every == 0 || hb.is_some(),
+        "--checkpoint-every requires heartbeats (--heartbeat-interval > 0)"
+    );
+
     // Straggler injection (test hook): the device initially hosting
     // --slow-stage runs slow for the whole job, wherever stages move.
     let slow_dev: Option<(usize, f64)> = match job.slow_stage {
@@ -287,7 +616,7 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
     let mut last_unapplied: Option<(Vec<usize>, bool)> = None;
 
     let mut gen = spawn_generation(
-        &manifest, job, &schedule, &devices, &plan, 0, job.iters, &mut snapshots, slow_dev,
+        &manifest, job, &schedule, &devices, &plan, 0, job.iters, &mut snapshots, slow_dev, hb,
     );
 
     // ---- drive the training loop --------------------------------------
@@ -306,141 +635,282 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
         ..Default::default()
     };
 
-    for it in 0..job.iters {
+    let mut it = 0usize;
+    let mut last_ckpt: Option<usize> = None;
+    while it < job.iters {
         let iter = it as u32;
-        let t0 = Instant::now();
-        for micro in 0..job.n_micro as u32 {
-            let (tokens, targets) = corpus.next_batch(cfg.microbatch, cfg.seq_len);
-            gen.fwd_tx[0].send(Wire::Data { iter, micro, tokens })?;
-            gen.label_tx.send(Wire::Labels { iter, micro, targets })?;
-        }
-        // Collect this iteration's n_micro losses AND every stage's
-        // IterProfile (sent after its Update). Workers cannot run ahead —
-        // the next iteration's data is only fed after this loop — so all
-        // profiles belong to `iter`.
-        let mut sum = 0.0f32;
-        let mut got_losses = 0usize;
-        let mut prof = vec![(0.0f64, 0.0f64, 0.0f64, 0.0f64); s_n]; // fwd,bwd,upd,bytes
-        let mut got_prof = vec![false; s_n];
-        let mut n_prof = 0usize;
-        while got_losses < job.n_micro || n_prof < s_n {
-            let msg = gen
-                .rx_driver
-                .recv()
-                .map_err(|_| anyhow::anyhow!("workers exited mid-iteration {it}"))?;
-            match msg {
-                Wire::Loss { loss, .. } => {
-                    sum += loss;
-                    got_losses += 1;
+        let mut death: Option<(usize, String)> = None;
+
+        // ---- checkpoint at the iteration boundary ---------------------
+        if job.checkpoint_every > 0
+            && it > 0
+            && it % job.checkpoint_every == 0
+            && last_ckpt != Some(it)
+        {
+            match collect_checkpoint_states(&mut gen, iter, s_n, deadline, &mut all_stats)? {
+                SnapOutcome::Died { stage, cause } => death = Some((stage, cause)),
+                SnapOutcome::Done(states) => {
+                    checkpoint::save(
+                        &job.checkpoint_dir,
+                        &Checkpoint {
+                            iter,
+                            corpus_batches: corpus.batches_drawn(),
+                            seed: job.seed,
+                            config: cfg.name.clone(),
+                            placement: devices.clone(),
+                            states,
+                        },
+                        job.keep_checkpoints,
+                    )?;
+                    last_ckpt = Some(it);
                 }
-                Wire::IterProfile { stage, iter: pit, fwd_s, bwd_s, update_s, bytes, .. } => {
-                    anyhow::ensure!(
-                        pit == iter && !got_prof[stage],
-                        "stage {stage}: unexpected profile for iter {pit} during {it}"
-                    );
-                    prof[stage] = (fwd_s, bwd_s, update_s, bytes);
-                    got_prof[stage] = true;
-                    n_prof += 1;
-                }
-                Wire::Stats(st) => {
-                    // Natural end of the final generation overlaps the
-                    // last iteration's drain.
-                    all_stats.push(st);
-                    gen.stats_seen += 1;
-                }
-                Wire::Fatal { stage, error } => {
-                    anyhow::bail!("stage {stage} failed: {error}")
-                }
-                other => anyhow::bail!("driver: unexpected {other:?}"),
             }
         }
-        report.losses.push(sum / job.n_micro as f32);
-        report.wall_s.push(t0.elapsed().as_secs_f64());
-        // Real per-iteration wire bytes, straight from the workers.
-        report.wire_bytes.push(prof.iter().map(|p| p.3).sum());
-        for (s, p) in prof.iter().enumerate() {
-            store.record_iter(s, p.0, p.1, p.2);
+
+        // ---- run one iteration ----------------------------------------
+        if death.is_none() {
+            let t0 = Instant::now();
+            for micro in 0..job.n_micro as u32 {
+                let (tokens, targets) = corpus.next_batch(cfg.microbatch, cfg.seq_len);
+                let r1 = gen.fwd_tx[0].send(Wire::Data { iter, micro, tokens });
+                let r2 = gen.label_tx.send(Wire::Labels { iter, micro, targets });
+                if deadline.is_none() {
+                    // No liveness plane: a closed channel is fatal now.
+                    for r in [r1, r2] {
+                        r.map_err(|_| anyhow::anyhow!("workers exited mid-feed {it}"))?;
+                    }
+                }
+                // Otherwise the deadline monitor identifies the dead stage.
+            }
+            match collect_iteration(
+                &mut gen, it, iter, s_n, job.n_micro, deadline, &mut all_stats,
+            )? {
+                IterOutcome::Died { stage, cause } => death = Some((stage, cause)),
+                IterOutcome::Done { mean_loss, prof } => {
+                    report.losses.push(mean_loss);
+                    report.wall_s.push(t0.elapsed().as_secs_f64());
+                    // Real per-iteration wire bytes from the workers.
+                    report.wire_bytes.push(prof.iter().map(|p| p.3).sum());
+                    for (s, p) in prof.iter().enumerate() {
+                        store.record_iter(s, p.0, p.1, p.2);
+                    }
+                    // Per-iteration simulated geo latency: the α–β network
+                    // applied to the *measured* compute times under the
+                    // current placement.
+                    let measured = store.measured_plan(&stage_plan);
+                    report
+                        .sim_s
+                        .push(simulate_iteration(&measured, &tb, &schedule, &plan).iter_s);
+                }
+            }
         }
-        // Per-iteration simulated geo latency: the α–β network applied to
-        // the *measured* compute times under the current placement.
-        let measured = store.measured_plan(&stage_plan);
-        report
-            .sim_s
-            .push(simulate_iteration(&measured, &tb, &schedule, &plan).iter_s);
 
         // ---- straggler check at the iteration boundary ----------------
-        if job.replan != ReplanMode::Off && it + 1 < job.iters {
-            let inp = ReplanInput {
-                dag: &dag,
-                testbed: &tb,
-                part: &part,
-                modeled: &stage_plan,
-                store: &store,
-                schedule: job.pipeline,
-                n_micro: job.n_micro,
-                current_compress: &plan,
-            };
-            let decision = replanner
-                .consider(&inp, &|p, t| compress_plan_for(job, cfg.microbatch, &dag, p, t))?;
-            if let Some(d) = decision {
-                let apply = d.adopt && job.replan == ReplanMode::Auto;
-                if !apply {
-                    let key = (d.candidate.plan.devices.clone(), d.adopt);
-                    if last_unapplied.as_ref() == Some(&key) {
-                        continue; // same recommendation as last time
-                    }
-                    last_unapplied = Some(key);
-                } else {
-                    last_unapplied = None;
-                }
-                let mut ev = ReplanEvent {
-                    iter: it + 1,
-                    from: devices.clone(),
-                    to: d.candidate.plan.devices.clone(),
-                    flagged: d.flagged.clone(),
-                    origin: d.candidate.origin.to_string(),
-                    sim_before_s: d.current_sim_s,
-                    sim_after_s: d.candidate_sim_s,
-                    migration_s: d.migration_s,
-                    applied: apply,
+        if death.is_none() {
+            if job.replan != ReplanMode::Off && it + 1 < job.iters {
+                let inp = ReplanInput {
+                    dag: &dag,
+                    testbed: &tb,
+                    part: &part,
+                    modeled: &stage_plan,
+                    store: &store,
+                    schedule: job.pipeline,
+                    n_micro: job.n_micro,
+                    current_compress: &plan,
                 };
-                if apply {
-                    let t_mig = Instant::now();
-                    teardown(gen, s_n, &mut snapshots, &mut all_stats)?;
-                    part = d.candidate.partition.clone();
-                    stage_plan = StagePlan::from_partition(&dag, &part, &tb);
+                let decision = replanner
+                    .consider(&inp, &|p, t| compress_plan_for(job, cfg.microbatch, &dag, p, t))?;
+                if let Some(d) = decision {
+                    let apply = d.adopt && job.replan == ReplanMode::Auto;
+                    let skip = if !apply {
+                        let key = (d.candidate.plan.devices.clone(), d.adopt);
+                        let same = last_unapplied.as_ref() == Some(&key);
+                        if !same {
+                            last_unapplied = Some(key);
+                        }
+                        same // same recommendation as last time
+                    } else {
+                        last_unapplied = None;
+                        false
+                    };
+                    if !skip {
+                        let mut ev = ReplanEvent {
+                            iter: it + 1,
+                            from: devices.clone(),
+                            to: d.candidate.plan.devices.clone(),
+                            flagged: d.flagged.clone(),
+                            origin: d.candidate.origin.to_string(),
+                            sim_before_s: d.current_sim_s,
+                            sim_after_s: d.candidate_sim_s,
+                            migration_s: d.migration_s,
+                            applied: apply,
+                        };
+                        if apply {
+                            let t_mig = Instant::now();
+                            teardown(gen, s_n, &mut snapshots, &mut all_stats, hb.is_some())?;
+                            part = d.candidate.partition.clone();
+                            stage_plan = StagePlan::from_partition(&dag, &part, &tb);
+                            anyhow::ensure!(
+                                stage_plan.n_stages() == s_n,
+                                "replan changed the stage count"
+                            );
+                            // Measurements for moved stages describe old
+                            // silicon.
+                            for s in 0..s_n {
+                                if stage_plan.devices[s] != devices[s] {
+                                    store.reset_stage(s);
+                                }
+                            }
+                            devices = stage_plan.devices.clone();
+                            plan = compress_plan_for(job, cfg.microbatch, &dag, &part, &tb);
+                            gen = spawn_generation(
+                                &manifest,
+                                job,
+                                &schedule,
+                                &devices,
+                                &plan,
+                                iter + 1,
+                                job.iters - (it + 1),
+                                &mut snapshots,
+                                slow_dev,
+                                hb,
+                            );
+                            ev.migration_s = t_mig.elapsed().as_secs_f64();
+                        }
+                        report.replans.push(ev);
+                    }
+                }
+            }
+            it += 1;
+            continue;
+        }
+
+        // ---- crash recovery -------------------------------------------
+        let (dead_stage, cause) = death.expect("checked above");
+        let dead_dev = gen.devices[dead_stage];
+        let Some(dl) = deadline else {
+            // No liveness plane (heartbeats disabled): abort as in PR 3.
+            // Workers exit on their own once the broker drops the
+            // generation's channels; they cannot be joined safely here.
+            anyhow::bail!("stage {dead_stage} failed: {cause}");
+        };
+        eprintln!(
+            "broker: stage {dead_stage} (device {dead_dev}) declared dead during \
+             iteration {it}: {cause}"
+        );
+        let t_replan = Instant::now();
+        tb.fail_node(dead_dev);
+        churn_teardown(gen, s_n, dl, &mut all_stats);
+        anyhow::ensure!(
+            job.replan == ReplanMode::Auto,
+            "stage {dead_stage} (device {dead_dev}) died during iteration {it} ({cause}); \
+             crash recovery requires --replan auto"
+        );
+        anyhow::ensure!(
+            report.recoveries.len() < MAX_RECOVERIES,
+            "giving up after {MAX_RECOVERIES} crash recoveries"
+        );
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &stage_plan,
+            store: &store,
+            schedule: job.pipeline,
+            n_micro: job.n_micro,
+            current_compress: &plan,
+        };
+        let cand = replanner.replan_after_failure(&inp, dead_stage)?;
+        anyhow::ensure!(
+            cand.plan.n_stages() == s_n,
+            "failover changed the stage count"
+        );
+        let from = devices.clone();
+        part = cand.partition.clone();
+        stage_plan = cand.plan.clone();
+        devices = stage_plan.devices.clone();
+        plan = compress_plan_for(job, cfg.microbatch, &dag, &part, &tb);
+        for s in 0..s_n {
+            store.reset_stage(s);
+        }
+        let replan_s = t_replan.elapsed().as_secs_f64();
+
+        // Restore the newest valid checkpoint — or restart from scratch.
+        let t_restore = Instant::now();
+        let mut init: Vec<Option<StageState>> = (0..s_n).map(|_| None).collect();
+        let (resume_iter, corpus_batches) = if job.checkpoint_every > 0 {
+            // Only boundaries this run has already passed are restorable;
+            // newer leftovers (a prior completed run sharing the
+            // directory) are skipped by the version walk.
+            match checkpoint::load_latest_at_or_before(&job.checkpoint_dir, iter)? {
+                Some(ck) => {
                     anyhow::ensure!(
-                        stage_plan.n_stages() == s_n,
-                        "replan changed the stage count"
+                        ck.config == cfg.name && ck.seed == job.seed,
+                        "checkpoint belongs to another run (config `{}`, seed {:#x})",
+                        ck.config,
+                        ck.seed
                     );
-                    // Measurements for moved stages describe old silicon.
-                    for s in 0..s_n {
-                        if stage_plan.devices[s] != devices[s] {
-                            store.reset_stage(s);
+                    anyhow::ensure!(
+                        ck.states.len() == s_n && (ck.iter as usize) <= it,
+                        "checkpoint shape/iteration mismatch"
+                    );
+                    for (s, st) in ck.states.into_iter().enumerate() {
+                        if !st.params.is_empty() {
+                            init[s] = Some(st);
                         }
                     }
-                    devices = stage_plan.devices.clone();
-                    plan = compress_plan_for(job, cfg.microbatch, &dag, &part, &tb);
-                    gen = spawn_generation(
-                        &manifest,
-                        job,
-                        &schedule,
-                        &devices,
-                        &plan,
-                        iter + 1,
-                        job.iters - (it + 1),
-                        &mut snapshots,
-                        slow_dev,
-                    );
-                    ev.migration_s = t_mig.elapsed().as_secs_f64();
+                    (ck.iter as usize, ck.corpus_batches)
                 }
-                report.replans.push(ev);
+                None => (0, 0),
             }
+        } else {
+            (0, 0)
+        };
+        // Rewind the data loader to the checkpoint cursor and roll the
+        // report back — the re-run iterations rewrite their entries
+        // deterministically.
+        corpus = SyntheticCorpus::new(cfg.vocab, job.seed ^ 0xDA7A);
+        corpus.advance_to(corpus_batches, cfg.microbatch, cfg.seq_len)?;
+        report.losses.truncate(resume_iter);
+        report.wall_s.truncate(resume_iter);
+        report.sim_s.truncate(resume_iter);
+        report.wire_bytes.truncate(resume_iter);
+        for sn in snapshots.iter_mut() {
+            *sn = None;
         }
+        last_unapplied = None;
+        gen = spawn_generation(
+            &manifest,
+            job,
+            &schedule,
+            &devices,
+            &plan,
+            resume_iter as u32,
+            job.iters - resume_iter,
+            &mut init,
+            slow_dev,
+            hb,
+        );
+        let restore_s = t_restore.elapsed().as_secs_f64();
+        report.recoveries.push(RecoveryEvent {
+            died_iter: it,
+            stage: dead_stage,
+            device: dead_dev,
+            cause,
+            resume_iter,
+            iters_lost: it - resume_iter,
+            from,
+            to: devices.clone(),
+            origin: cand.origin.to_string(),
+            replan_s,
+            restore_s,
+        });
+        last_ckpt = Some(resume_iter);
+        it = resume_iter;
     }
 
     // ---- drain the final generation ------------------------------------
-    teardown(gen, s_n, &mut snapshots, &mut all_stats)?;
+    teardown(gen, s_n, &mut snapshots, &mut all_stats, hb.is_some())?;
     report.placement = devices;
 
     // Achieved wire compression (dense payload bytes / wire bytes).

@@ -1,0 +1,379 @@
+//! Broker-side versioned checkpoints (fault tolerance, churn recovery).
+//!
+//! Every `--checkpoint-every` iterations the broker broadcasts
+//! `Wire::Checkpoint` at an iteration boundary, collects one `StageState`
+//! snapshot per stage, and persists them here: one directory per version
+//! (`ckpt-<iter>`), written to a dot-tmp path and atomically renamed into
+//! place, carrying a `manifest.json` with FNV-1a-64 checksums over every
+//! stage file. Tensor payloads travel through the same `OpData` codec as
+//! the wire hot path — checkpoints exercise the tested encode/decode path
+//! instead of inventing a second serializer.
+//!
+//! `load_latest` walks versions newest-first and falls back past any
+//! version that fails integrity (truncated file, flipped byte, bad
+//! manifest), so a crash mid-write can never leave the run unrecoverable
+//! as long as one older version survives.
+
+use crate::opdag::data::{
+    encode_parts_into, CompressCfg, OpData, OpDataHeader, OpDataKind,
+};
+use crate::util::json::{arr, n, ni, obj, s, Json};
+use crate::worker::StageState;
+use std::path::{Path, PathBuf};
+
+/// Everything needed to resume a run: model state per stage plus the
+/// data-loader cursor and the RNG seed that reproduces the stream.
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    /// Iteration boundary this state belongs to (first iteration to run
+    /// after restoring).
+    pub iter: u32,
+    /// Microbatches drawn from the synthetic corpus before this boundary
+    /// (the data-loader cursor; restore replays the stream up to here).
+    pub corpus_batches: u64,
+    /// Job seed (RNG provenance — restore must verify it matches).
+    pub seed: u64,
+    /// Model config name the states belong to.
+    pub config: String,
+    /// Stage -> device placement when the checkpoint was taken
+    /// (informational; recovery re-plans placement anyway).
+    pub placement: Vec<usize>,
+    /// Per-stage params + optimizer moments, stage order.
+    pub states: Vec<StageState>,
+}
+
+/// FNV-1a 64 over a byte stream (no crypto needed — this guards against
+/// torn writes and bit rot, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn version_dir(dir: &Path, iter: u32) -> PathBuf {
+    dir.join(format!("ckpt-{iter:08}"))
+}
+
+/// Encode one stage: params / momentum / second as three length-prefixed
+/// `OpData` messages (dense f32, micro_batch = tensor index). Encoded
+/// from borrowed slices — no tensor copies on the way to disk.
+fn encode_stage(stage: usize, iter: u32, st: &StageState) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut blob = Vec::new();
+    for (idx, tensor) in [&st.params, &st.momentum, &st.second].into_iter().enumerate() {
+        let hdr = OpDataHeader {
+            src_op: stage,
+            dst_op: stage,
+            actual_user: stage,
+            kind: OpDataKind::Activation,
+            is_loss: false,
+            require_grad: false,
+            local_iter: iter,
+            micro_batch: idx as u32,
+        };
+        blob.clear();
+        encode_parts_into(&hdr, &CompressCfg::None, tensor, &[], &[], &mut blob);
+        out.extend_from_slice(&(blob.len() as u64).to_le_bytes());
+        out.extend_from_slice(&blob);
+    }
+    out
+}
+
+fn decode_stage(stage: usize, iter: u32, mut buf: &[u8]) -> anyhow::Result<StageState> {
+    let mut tensors: Vec<Vec<f32>> = Vec::with_capacity(3);
+    for idx in 0..3u32 {
+        anyhow::ensure!(buf.len() >= 8, "stage {stage}: truncated checkpoint blob");
+        let len = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
+        buf = &buf[8..];
+        anyhow::ensure!(buf.len() >= len, "stage {stage}: truncated checkpoint blob");
+        let msg = OpData::decode(&buf[..len])?;
+        anyhow::ensure!(
+            msg.src_op == stage && msg.local_iter == iter && msg.micro_batch == idx,
+            "stage {stage}: checkpoint blob belongs elsewhere \
+             (op {}, iter {}, tensor {})",
+            msg.src_op,
+            msg.local_iter,
+            msg.micro_batch
+        );
+        tensors.push(msg.payload);
+        buf = &buf[len..];
+    }
+    anyhow::ensure!(buf.is_empty(), "stage {stage}: trailing checkpoint bytes");
+    let mut it = tensors.into_iter();
+    Ok(StageState {
+        params: it.next().unwrap(),
+        momentum: it.next().unwrap(),
+        second: it.next().unwrap(),
+    })
+}
+
+/// Persist a checkpoint version. Stage files + manifest are written into
+/// a dot-tmp directory first and atomically renamed into `ckpt-<iter>`,
+/// then versions beyond the newest `keep` are pruned. Returns the final
+/// version path.
+pub fn save(dir: &Path, ckpt: &Checkpoint, keep: usize) -> anyhow::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!(".tmp-ckpt-{:08}", ckpt.iter));
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp)?;
+    }
+    std::fs::create_dir_all(&tmp)?;
+
+    let mut stage_entries: Vec<Json> = Vec::new();
+    for (stage, st) in ckpt.states.iter().enumerate() {
+        let bytes = encode_stage(stage, ckpt.iter, st);
+        let file = format!("stage-{stage}.bin");
+        std::fs::write(tmp.join(&file), &bytes)?;
+        stage_entries.push(obj(vec![
+            ("file", s(&file)),
+            ("bytes", ni(bytes.len())),
+            ("fnv64", s(&format!("{:016x}", fnv1a64(&bytes)))),
+        ]));
+    }
+    let manifest = obj(vec![
+        ("format", ni(1)),
+        ("iter", ni(ckpt.iter as usize)),
+        ("corpus_batches", ni(ckpt.corpus_batches as usize)),
+        ("seed", s(&format!("{:016x}", ckpt.seed))),
+        ("config", s(&ckpt.config)),
+        (
+            "placement",
+            arr(ckpt.placement.iter().map(|&d| ni(d)).collect()),
+        ),
+        ("stages", arr(stage_entries)),
+        ("n_stages", n(ckpt.states.len() as f64)),
+    ]);
+    // Manifest last: a version without one is never considered valid.
+    std::fs::write(tmp.join("manifest.json"), manifest.dump_pretty() + "\n")?;
+
+    let fin = version_dir(dir, ckpt.iter);
+    if fin.exists() {
+        std::fs::remove_dir_all(&fin)?;
+    }
+    std::fs::rename(&tmp, &fin)?;
+    prune(dir, keep)?;
+    Ok(fin)
+}
+
+/// Version iterations present on disk, oldest first (whether valid or not).
+pub fn versions(dir: &Path) -> Vec<u32> {
+    let mut v: Vec<u32> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                e.file_name()
+                    .to_str()
+                    .and_then(|name| name.strip_prefix("ckpt-").map(String::from))
+                    .and_then(|it| it.parse::<u32>().ok())
+            })
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    v.sort_unstable();
+    v
+}
+
+/// Drop all but the newest `keep` versions (0 = keep everything).
+pub fn prune(dir: &Path, keep: usize) -> anyhow::Result<()> {
+    if keep == 0 {
+        return Ok(());
+    }
+    let vs = versions(dir);
+    for &iter in vs.iter().rev().skip(keep) {
+        let _ = std::fs::remove_dir_all(version_dir(dir, iter));
+    }
+    Ok(())
+}
+
+/// Validate + load one version directory.
+fn load_version(dir: &Path, iter: u32) -> anyhow::Result<Checkpoint> {
+    let vdir = version_dir(dir, iter);
+    let m = Json::parse_file(&vdir.join("manifest.json"))?;
+    anyhow::ensure!(m.req_usize("format")? == 1, "unsupported checkpoint format");
+    anyhow::ensure!(m.req_usize("iter")? as u32 == iter, "manifest iter mismatch");
+    let corpus_batches = m.req_usize("corpus_batches")? as u64;
+    let seed = u64::from_str_radix(m.req_str("seed")?, 16)
+        .map_err(|_| anyhow::anyhow!("bad seed field"))?;
+    let config = m.req_str("config")?.to_string();
+    let placement = m
+        .req_arr("placement")?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad placement entry")))
+        .collect::<anyhow::Result<Vec<usize>>>()?;
+    let mut states = Vec::new();
+    for (stage, entry) in m.req_arr("stages")?.iter().enumerate() {
+        let file = entry.req_str("file")?;
+        let want_bytes = entry.req_usize("bytes")?;
+        let want_fnv = entry.req_str("fnv64")?;
+        let bytes = std::fs::read(vdir.join(file))?;
+        anyhow::ensure!(
+            bytes.len() == want_bytes,
+            "stage {stage}: {} bytes on disk, manifest says {want_bytes}",
+            bytes.len()
+        );
+        let got = format!("{:016x}", fnv1a64(&bytes));
+        anyhow::ensure!(
+            got == want_fnv,
+            "stage {stage}: checksum mismatch ({got} != {want_fnv})"
+        );
+        states.push(decode_stage(stage, iter, &bytes)?);
+    }
+    anyhow::ensure!(!states.is_empty(), "checkpoint has no stages");
+    Ok(Checkpoint { iter, corpus_batches, seed, config, placement, states })
+}
+
+/// Load the newest *valid* checkpoint, walking past corrupt versions
+/// (each skip is reported on stderr). Ok(None) when nothing loads.
+pub fn load_latest(dir: &Path) -> anyhow::Result<Option<Checkpoint>> {
+    load_latest_at_or_before(dir, u32::MAX)
+}
+
+/// `load_latest` restricted to versions with `iter <= max_iter`. Recovery
+/// uses this so a leftover newer checkpoint (e.g. from a previous
+/// completed run sharing the directory) is skipped rather than fatal —
+/// for a deterministic (config, seed) pair an older boundary from either
+/// run restores the identical state.
+pub fn load_latest_at_or_before(
+    dir: &Path,
+    max_iter: u32,
+) -> anyhow::Result<Option<Checkpoint>> {
+    for &iter in versions(dir).iter().rev() {
+        if iter > max_iter {
+            continue;
+        }
+        match load_version(dir, iter) {
+            Ok(c) => return Ok(Some(c)),
+            Err(e) => eprintln!(
+                "checkpoint: skipping corrupt version ckpt-{iter:08}: {e:#}"
+            ),
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "fusionllm-ckpt-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn ckpt(iter: u32, scale: f32) -> Checkpoint {
+        Checkpoint {
+            iter,
+            corpus_batches: iter as u64 * 2,
+            seed: 0xDEAD_BEEF,
+            config: "tiny".into(),
+            placement: vec![0, 1, 2, 3],
+            states: (0..4)
+                .map(|st| StageState {
+                    params: (0..16).map(|i| scale * (st as f32 + i as f32)).collect(),
+                    momentum: vec![0.5 * scale; 16],
+                    second: if st == 0 { Vec::new() } else { vec![scale; 16] },
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // Known FNV-1a 64 vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn save_load_roundtrip_exact() {
+        let dir = tmpdir("roundtrip");
+        let c = ckpt(4, 1.25);
+        let path = save(&dir, &c, 3).unwrap();
+        assert!(path.ends_with("ckpt-00000004"));
+        let back = load_latest(&dir).unwrap().expect("checkpoint present");
+        assert_eq!(back.iter, 4);
+        assert_eq!(back.corpus_batches, 8);
+        assert_eq!(back.seed, 0xDEAD_BEEF);
+        assert_eq!(back.config, "tiny");
+        assert_eq!(back.placement, vec![0, 1, 2, 3]);
+        assert_eq!(back.states.len(), 4);
+        for (a, b) in c.states.iter().zip(&back.states) {
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.momentum, b.momentum);
+            assert_eq!(a.second, b.second);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_previous() {
+        let dir = tmpdir("fallback");
+        save(&dir, &ckpt(2, 1.0), 3).unwrap();
+        save(&dir, &ckpt(4, 2.0), 3).unwrap();
+        assert_eq!(load_latest(&dir).unwrap().unwrap().iter, 4);
+        // Flip one byte in the newest version's last stage file.
+        let victim = version_dir(&dir, 4).join("stage-3.bin");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+        let back = load_latest(&dir).unwrap().expect("older version survives");
+        assert_eq!(back.iter, 2, "must fall back past the corrupt version");
+        assert_eq!(back.states[1].params, ckpt(2, 1.0).states[1].params);
+        // A mangled manifest is also just skipped.
+        std::fs::write(version_dir(&dir, 2).join("manifest.json"), b"{ nope").unwrap();
+        assert!(load_latest(&dir).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn at_or_before_skips_newer_leftovers() {
+        // A stale ckpt-6 from a previous completed run must not shadow
+        // the restorable ckpt-2 when the current run is only at iter 3.
+        let dir = tmpdir("stale");
+        save(&dir, &ckpt(2, 1.0), 3).unwrap();
+        save(&dir, &ckpt(6, 3.0), 3).unwrap();
+        assert_eq!(load_latest(&dir).unwrap().unwrap().iter, 6);
+        let back = load_latest_at_or_before(&dir, 3).unwrap().unwrap();
+        assert_eq!(back.iter, 2);
+        assert!(load_latest_at_or_before(&dir, 1).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_stage_file_is_rejected() {
+        let dir = tmpdir("trunc");
+        save(&dir, &ckpt(1, 1.0), 3).unwrap();
+        let victim = version_dir(&dir, 1).join("stage-0.bin");
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(load_latest(&dir).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_keeps_newest_versions() {
+        let dir = tmpdir("prune");
+        for it in [2u32, 4, 6, 8] {
+            save(&dir, &ckpt(it, it as f32), 3).unwrap();
+        }
+        assert_eq!(versions(&dir), vec![4, 6, 8], "keep=3 prunes the oldest");
+        save(&dir, &ckpt(10, 1.0), 2).unwrap();
+        assert_eq!(versions(&dir), vec![8, 10]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_from_missing_dir_is_none() {
+        let dir = tmpdir("missing");
+        assert!(load_latest(&dir).unwrap().is_none());
+        assert!(versions(&dir).is_empty());
+    }
+}

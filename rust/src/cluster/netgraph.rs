@@ -9,11 +9,15 @@ pub struct NetGraph {
     alpha: Vec<f64>,
     /// Inverse bandwidth β (seconds/byte), row-major n×n. 0 on the diagonal.
     beta: Vec<f64>,
+    /// Nodes declared dead by the liveness monitor (churn, §fault
+    /// tolerance): their links carry no community weight and the
+    /// re-planner must route stages around them.
+    failed: Vec<bool>,
 }
 
 impl NetGraph {
     pub fn new(n: usize) -> NetGraph {
-        NetGraph { n, alpha: vec![0.0; n * n], beta: vec![0.0; n * n] }
+        NetGraph { n, alpha: vec![0.0; n * n], beta: vec![0.0; n * n], failed: vec![false; n] }
     }
 
     pub fn len(&self) -> usize {
@@ -61,11 +65,29 @@ impl NetGraph {
         self.alpha(i, j) + self.beta(i, j) * bytes
     }
 
+    /// Mark a node dead (device churn). Links stay recorded for post-hoc
+    /// accounting, but community detection and the re-planner ignore them.
+    pub fn set_failed(&mut self, i: usize) {
+        if i < self.n {
+            self.failed[i] = true;
+        }
+    }
+
+    pub fn is_failed(&self, i: usize) -> bool {
+        self.failed.get(i).copied().unwrap_or(false)
+    }
+
+    /// Nodes not declared dead.
+    pub fn n_alive(&self) -> usize {
+        self.failed.iter().filter(|&&f| !f).count()
+    }
+
     /// Symmetric weight for community detection: bandwidth in Mbps.
     /// (Louvain clusters "high-bandwidth islands", §4 Observation 2.)
     pub fn louvain_weight(&self, i: usize, j: usize) -> f64 {
         // beta == 0 off the diagonal means "no link" — weight 0, not ∞.
-        if i == j || self.beta(i, j) == 0.0 {
+        // Dead nodes are islands: no weight to or from them.
+        if i == j || self.beta(i, j) == 0.0 || self.failed[i] || self.failed[j] {
             return 0.0;
         }
         self.bandwidth_bps(i, j) / 1e6
@@ -111,6 +133,23 @@ mod tests {
         let mut g = NetGraph::new(2);
         g.set_link(0, 1, 0.0, 1e9);
         assert!((g.bandwidth_bps(0, 1) - 1e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn failed_nodes_drop_out_of_community_weights() {
+        let mut g = NetGraph::new(3);
+        g.set_link(0, 1, 0.01, 1e9);
+        g.set_link(1, 2, 0.01, 1e9);
+        assert!(g.louvain_weight(0, 1) > 0.0);
+        assert_eq!(g.n_alive(), 3);
+        g.set_failed(1);
+        assert!(g.is_failed(1));
+        assert!(!g.is_failed(0));
+        assert_eq!(g.n_alive(), 2);
+        assert_eq!(g.louvain_weight(0, 1), 0.0);
+        assert_eq!(g.louvain_weight(1, 2), 0.0);
+        // The raw α–β record survives for accounting.
+        assert!(g.comm_time(0, 1, 1e6) > 0.0);
     }
 
     #[test]

@@ -97,6 +97,50 @@ impl Testbed {
         (self.nodes[i].cluster.clone(), self.nodes[i].machine)
     }
 
+    /// Declare a device dead (liveness monitor verdict). Schedulers reach
+    /// survivors through `surviving()`; Louvain weights to the node are 0.
+    pub fn fail_node(&mut self, dev: usize) {
+        self.net.set_failed(dev);
+    }
+
+    pub fn is_failed(&self, dev: usize) -> bool {
+        self.net.is_failed(dev)
+    }
+
+    /// Device ids not declared dead.
+    pub fn alive_nodes(&self) -> Vec<usize> {
+        (0..self.nodes.len()).filter(|&i| !self.net.is_failed(i)).collect()
+    }
+
+    /// Compacted view of the surviving devices: a testbed containing only
+    /// alive nodes (renumbered 0..) plus the new-id -> original-id map, so
+    /// any scheduler can re-partition across survivors unchanged and the
+    /// result can be mapped back onto original device ids.
+    pub fn surviving(&self) -> (Testbed, Vec<usize>) {
+        let keep = self.alive_nodes();
+        let mut nodes = Vec::with_capacity(keep.len());
+        for (new_id, &old) in keep.iter().enumerate() {
+            let mut n = self.nodes[old].clone();
+            n.id = new_id;
+            nodes.push(n);
+        }
+        let mut net = NetGraph::new(keep.len());
+        for a in 0..keep.len() {
+            for b in (a + 1)..keep.len() {
+                net.set_link(
+                    a,
+                    b,
+                    self.net.alpha(keep[a], keep[b]),
+                    self.net.bandwidth_bps(keep[a], keep[b]),
+                );
+            }
+        }
+        (
+            Testbed { name: format!("{}-degraded", self.name), nodes, net },
+            keep,
+        )
+    }
+
     /// Aggregate description used by the `testbed` CLI subcommand.
     pub fn summary(&self) -> String {
         let a = self.nodes.iter().filter(|n| n.cluster == "A").count();
@@ -157,6 +201,32 @@ mod tests {
         let b_set: std::collections::BTreeSet<usize> =
             (16..48).map(|i| comm[i]).collect();
         assert!(a_set.is_disjoint(&b_set), "A={a_set:?} B={b_set:?}");
+    }
+
+    #[test]
+    fn surviving_view_compacts_and_maps_back() {
+        let mut t = testbed1(2);
+        t.fail_node(1);
+        t.fail_node(9);
+        assert!(t.is_failed(1) && !t.is_failed(2));
+        assert_eq!(t.alive_nodes().len(), 22);
+        let (sub, map) = t.surviving();
+        assert_eq!(sub.nodes.len(), 22);
+        assert_eq!(map.len(), 22);
+        assert!(!map.contains(&1) && !map.contains(&9));
+        for (new_id, &old) in map.iter().enumerate() {
+            assert_eq!(sub.nodes[new_id].id, new_id);
+            assert_eq!(sub.nodes[new_id].lambda, t.nodes[old].lambda);
+            assert_eq!(sub.nodes[new_id].gpu.name(), t.nodes[old].gpu.name());
+        }
+        // Links survive the renumbering exactly.
+        let (a, b) = (3usize, 15usize);
+        let (na, nb) = (
+            map.iter().position(|&o| o == a).unwrap(),
+            map.iter().position(|&o| o == b).unwrap(),
+        );
+        assert_eq!(sub.net.alpha(na, nb), t.net.alpha(a, b));
+        assert!((sub.net.bandwidth_bps(na, nb) - t.net.bandwidth_bps(a, b)).abs() < 1.0);
     }
 
     #[test]

@@ -10,10 +10,12 @@ use crate::opdag::builders::{transformer_chain, TransformerSpec};
 use crate::pipeline::{PipelineSchedule, ScheduleKind};
 use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
 use crate::simnet::{simulate_iteration, StagePlan};
+use crate::trainer::TrainReport;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::math::{fmt_bytes, fmt_secs};
 use crate::util::table::Table;
+use crate::worker::BackendKind;
 use anyhow::Result;
 
 /// `fusionllm testbed --testbed N [--seed S]` — Fig. 9.
@@ -126,6 +128,13 @@ pub fn schedule(args: &Args) -> Result<()> {
 /// throughput; `--min-recovery` turns that into a CI gate (nonzero exit
 /// when static/replanned < X).
 pub fn simulate(args: &Args) -> Result<()> {
+    // Churn mode: --kill-node runs a *real* (Null-backend) training
+    // pipeline through the broker — heartbeats, checkpoints, death
+    // detection, failover re-plan, checkpoint restore — and gates the
+    // result. See `simulate_churn`.
+    if args.opt_str("kill-node").is_some() {
+        return simulate_churn(args);
+    }
     let tb = testbed::by_id(args.usize("testbed", 1), args.u64("seed", 1));
     let dag = transformer_chain(&TransformerSpec::gpt2_xl());
     let sched_name = args.str("scheduler", "opfence");
@@ -270,6 +279,153 @@ pub fn simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fusionllm simulate --kill-node N [--kill-at-iter K] [--steps I]
+///  [--replan auto] [--checkpoint-every E] [--loss-tol T]` — the churn
+/// smoke / CI gate.
+///
+/// Runs two artifact-free (Null-backend) training jobs through the real
+/// broker: an uninterrupted reference, and one where device N's worker
+/// vanishes at the top of iteration K. The churn run must (a) finish all
+/// requested iterations, (b) record exactly one recovery, and (c) end
+/// with a loss trajectory within `--loss-tol` of the reference — the
+/// checkpoint restore + data-loader rewind make the re-run deterministic.
+/// Nonzero exit on any violation.
+fn simulate_churn(args: &Args) -> Result<()> {
+    let kill_dev: usize = args
+        .opt_str("kill-node")
+        .unwrap()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--kill-node expects a device id"))?;
+    let kill_at = args.u64("kill-at-iter", 3) as u32;
+    let iters = args.usize("steps", 8);
+    let replan = ReplanMode::parse(&args.str("replan", "auto"))?;
+    let loss_tol = args.f64("loss-tol", 1e-5);
+    anyhow::ensure!(
+        (kill_at as usize) < iters,
+        "--kill-at-iter {kill_at} must be < --steps {iters}"
+    );
+
+    // The Null config has 4 stages; pin them to devices 0..4 by default so
+    // --kill-node maps onto a stage deterministically.
+    let placement: Vec<usize> = match args.opt_str("placement") {
+        Some(s) => s
+            .split(',')
+            .map(|v| v.parse().map_err(|_| anyhow::anyhow!("bad --placement entry `{v}`")))
+            .collect::<Result<_>>()?,
+        None => (0..4).collect(),
+    };
+    anyhow::ensure!(
+        placement.contains(&kill_dev),
+        "--kill-node {kill_dev} hosts no stage under placement {placement:?}"
+    );
+
+    let ckpt_dir = std::env::temp_dir().join(format!(
+        "fusionllm-churn-{}-{kill_dev}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let base = Job {
+        config: "sim-churn".into(),
+        backend: BackendKind::Null,
+        testbed: args.usize("testbed", 1),
+        seed: args.u64("seed", 42),
+        iters,
+        n_micro: args.usize("micro", 2),
+        placement: Some(placement),
+        replan,
+        // Crash recovery only — the Null backend's microsecond compute
+        // times are too noisy for meaningful straggler detection.
+        straggler_threshold: args.f64("straggler-threshold", 1e9),
+        // 1 s death deadline: fast enough for a smoke, wide enough that
+        // a descheduled-but-alive worker thread on a loaded CI machine is
+        // not misdeclared dead.
+        heartbeat_s: args.f64("heartbeat-interval", 0.025),
+        heartbeat_timeout: args.u64("heartbeat-timeout", 40) as u32,
+        checkpoint_every: args.usize("checkpoint-every", 2),
+        checkpoint_dir: ckpt_dir.clone(),
+        ..Job::default()
+    };
+    println!(
+        "churn smoke: kill device {kill_dev} at iteration {kill_at} of {iters} \
+         (checkpoint every {}, replan {})",
+        base.checkpoint_every,
+        replan.name()
+    );
+
+    let clean = broker::run(&Job {
+        replan: ReplanMode::Off,
+        checkpoint_every: 0,
+        ..base.clone()
+    })?;
+    let churn_result = broker::run(&Job {
+        kill_device: Some(kill_dev),
+        kill_at_iter: kill_at,
+        ..base.clone()
+    });
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let churn = churn_result?;
+
+    print_recoveries(&churn);
+    anyhow::ensure!(
+        churn.losses.len() == iters,
+        "churn gate: {} of {iters} iterations completed",
+        churn.losses.len()
+    );
+    anyhow::ensure!(
+        churn.recoveries.len() == 1,
+        "churn gate: expected exactly one recovery, got {}",
+        churn.recoveries.len()
+    );
+    let max_diff = clean
+        .losses
+        .iter()
+        .zip(&churn.losses)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    println!(
+        "final loss: uninterrupted {:.6} vs recovered {:.6} (max per-iter |Δ| = {max_diff:.2e})",
+        clean.final_loss(),
+        churn.final_loss()
+    );
+    anyhow::ensure!(
+        max_diff <= loss_tol,
+        "churn gate: recovered loss diverged by {max_diff:.2e} > tolerance {loss_tol:.2e}"
+    );
+    let r = &churn.recoveries[0];
+    println!(
+        "churn gate OK: survived the death of device {} (stage {}), lost {} iteration(s), \
+         replan {} + restore {}",
+        r.device,
+        r.stage,
+        r.iters_lost,
+        fmt_secs(r.replan_s),
+        fmt_secs(r.restore_s)
+    );
+    Ok(())
+}
+
+/// Print `TrainReport.recoveries` (shared by train and the churn smoke).
+fn print_recoveries(report: &TrainReport) {
+    for r in &report.recoveries {
+        println!(
+            "recovery [{}] @iter {}: stage {} on device {} died ({}); resumed from \
+             checkpoint iter {} ({} iteration(s) lost); placement {:?} -> {:?}; \
+             replan {} restore {}",
+            r.origin,
+            r.died_iter,
+            r.stage,
+            r.device,
+            r.cause,
+            r.resume_iter,
+            r.iters_lost,
+            r.from,
+            r.to,
+            fmt_secs(r.replan_s),
+            fmt_secs(r.restore_s),
+        );
+    }
+}
+
 /// `fusionllm train --config C --steps N ...` — real PJRT training.
 pub fn train(args: &Args) -> Result<()> {
     let job = Job::from_args(args)?;
@@ -308,12 +464,15 @@ pub fn train(args: &Args) -> Result<()> {
             fmt_secs(ev.migration_s),
         );
     }
+    print_recoveries(&report);
     println!(
-        "final loss {:.4}; mean simulated geo-iteration {}; wire shrink {:.1}x; replans {}",
+        "final loss {:.4}; mean simulated geo-iteration {}; wire shrink {:.1}x; \
+         replans {}; recoveries {}",
         report.final_loss(),
         fmt_secs(report.mean_sim_latency()),
         report.wire_shrink,
         report.replans.len(),
+        report.recoveries.len(),
     );
     if let Some(path) = args.opt_str("out") {
         std::fs::write(path, report.to_csv())?;

@@ -9,6 +9,7 @@
 #![allow(clippy::manual_div_ceil)]
 
 pub mod broker;
+pub mod checkpoint;
 pub mod cluster;
 pub mod cmd;
 pub mod compress;

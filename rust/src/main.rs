@@ -67,6 +67,17 @@ fn print_help() {
            --replan-hysteresis H                 min simulated improvement to migrate (0.10)\n\
            --slow-stage S / --slow-node I, --slow-factor F\n\
                                                  straggler injection (train: stage's device;\n\
-                                                  simulate: device id)"
+                                                  simulate: device id)\n\
+         Fault tolerance (train & simulate churn mode):\n\
+           --heartbeat-interval S                worker liveness beacon period, sec (0.25;\n\
+                                                  0 disables the liveness plane)\n\
+           --heartbeat-timeout N                 missed intervals before a stage is dead (40)\n\
+           --checkpoint-every K                  broker-side checkpoint every K iters (0=off)\n\
+           --checkpoint-dir DIR                  versioned checkpoint store (checkpoints/)\n\
+           --keep-checkpoints N                  versions retained on disk (3)\n\
+           --kill-node N --kill-at-iter K        churn injector: device N vanishes at iter K\n\
+                                                  (with --replan auto the run must recover;\n\
+                                                  `simulate --kill-node` is the CI churn gate)\n\
+           --backend pjrt|null                   compute backend (null = artifact-free mock)"
     );
 }

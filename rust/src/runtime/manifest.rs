@@ -154,6 +154,19 @@ fn parse_io(list: &[Json]) -> anyhow::Result<Vec<IoSpec>> {
 }
 
 impl Manifest {
+    /// A manifest with no artifacts on disk: config only, no stages or
+    /// entries. Used by the Null compute backend (`simulate --kill-node`,
+    /// churn tests), which mocks the math but runs the real broker /
+    /// worker / wire machinery. Loading a PJRT runtime from it fails.
+    pub fn synthetic(config: ModelCfg) -> Manifest {
+        Manifest {
+            dir: PathBuf::from("<synthetic>"),
+            config,
+            stages: Vec::new(),
+            entries: BTreeMap::new(),
+        }
+    }
+
     /// Load `<root>/<config>/manifest.json`.
     pub fn load(root: &Path, config: &str) -> anyhow::Result<Manifest> {
         let dir = root.join(config);

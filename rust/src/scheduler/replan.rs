@@ -230,6 +230,107 @@ impl Replanner {
         }))
     }
 
+    /// Re-partition around a device declared dead (churn recovery). The
+    /// testbed must already have the device marked failed
+    /// (`Testbed::fail_node`). Candidates, in preference order:
+    ///
+    /// 1. "failover-reschedule" — the configured scheduler re-run on the
+    ///    compacted surviving testbed, mapped back to original ids;
+    /// 2. "failover-swap" — the dead stage alone moves to the fastest
+    ///    surviving device not hosting a stage;
+    /// 3. "failover-cohost" — no free device left: the dead stage joins
+    ///    an adjacent stage's device (the chain stays contiguous), so the
+    ///    run limps on rather than dying.
+    ///
+    /// Unlike the straggler path there is no "keep the current plan"
+    /// option, so the first structurally valid candidate wins.
+    pub fn replan_after_failure(
+        &self,
+        inp: &ReplanInput,
+        dead_stage: usize,
+    ) -> anyhow::Result<Candidate> {
+        let tb = inp.testbed;
+        let s_n = inp.modeled.n_stages();
+        anyhow::ensure!(dead_stage < s_n, "dead stage {dead_stage} out of range");
+        let dead_dev = inp.modeled.devices[dead_stage];
+        anyhow::ensure!(
+            tb.net.is_failed(dead_dev),
+            "device {dead_dev} not marked failed before failover replan"
+        );
+        anyhow::ensure!(tb.net.n_alive() > 0, "no surviving devices");
+        let measured = inp.store.measured_plan(inp.modeled);
+
+        // (1) full re-run of the configured scheduler across survivors.
+        let (sub, map) = tb.surviving();
+        if let Ok(sched) = super::by_name(&self.scheduler) {
+            if let Ok(sub_part) = sched.schedule(inp.dag, &sub) {
+                let assign: Vec<usize> =
+                    (0..inp.dag.len()).map(|op| map[sub_part.node_of(op)]).collect();
+                let part = Partition::new(assign);
+                if part.validate(inp.dag).is_ok() {
+                    let plan = StagePlan::from_partition(inp.dag, &part, tb);
+                    if !self.keep_stage_count || plan.n_stages() == s_n {
+                        return Ok(Candidate {
+                            partition: part,
+                            plan,
+                            origin: "failover-reschedule",
+                        });
+                    }
+                }
+            }
+        }
+
+        // (2) move only the dead stage to the fastest free survivor.
+        let free_best = (0..tb.nodes.len())
+            .filter(|&d| !tb.net.is_failed(d) && !measured.devices.contains(&d))
+            .max_by(|&a, &b| {
+                tb.nodes[a]
+                    .speed_flops()
+                    .partial_cmp(&tb.nodes[b].speed_flops())
+                    .unwrap()
+            });
+        let (new_dev, origin) = match free_best {
+            Some(d) => (d, "failover-swap"),
+            // (3) co-host on the faster surviving *adjacent* stage's
+            // device so the device sequence stays contiguous.
+            None => {
+                let neighbor = [dead_stage.checked_sub(1), Some(dead_stage + 1)]
+                    .into_iter()
+                    .flatten()
+                    .filter(|&s| s < s_n)
+                    .map(|s| measured.devices[s])
+                    .filter(|&d| !tb.net.is_failed(d))
+                    .max_by(|&a, &b| {
+                        tb.nodes[a]
+                            .speed_flops()
+                            .partial_cmp(&tb.nodes[b].speed_flops())
+                            .unwrap()
+                    })
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("no surviving device adjacent to stage {dead_stage}")
+                    })?;
+                (neighbor, "failover-cohost")
+            }
+        };
+        let assign: Vec<usize> = (0..inp.dag.len())
+            .map(|op| {
+                let d = inp.part.node_of(op);
+                if d == dead_dev {
+                    new_dev
+                } else {
+                    d
+                }
+            })
+            .collect();
+        let mut plan = measured.clone();
+        plan.devices[dead_stage] = new_dev;
+        let scale = tb.nodes[dead_dev].speed_flops() / tb.nodes[new_dev].speed_flops();
+        plan.fwd_s[dead_stage] *= scale;
+        plan.bwd_s[dead_stage] *= scale;
+        plan.update_s[dead_stage] *= scale;
+        Ok(Candidate { partition: Partition::new(assign), plan, origin })
+    }
+
     /// Move the worst straggler stage onto the fastest device not
     /// currently hosting any stage. Times for the moved stage scale with
     /// the calibrated speed ratio; everything else keeps its measurement.
@@ -418,6 +519,110 @@ mod tests {
             .unwrap()
             .expect("straggler still flagged");
         assert!(!d.adopt, "hysteresis must block adoption");
+    }
+
+    #[test]
+    fn failover_reschedules_around_dead_device() {
+        // Short chain -> few stages, so survivors can host the same
+        // stage count and the scheduler path wins.
+        let mut tb = testbed1(1);
+        let dag = transformer_chain(&TransformerSpec {
+            vocab: 1000,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 2,
+            seq_len: 64,
+            microbatch: 2,
+        });
+        let part = by_name("opfence").unwrap().schedule(&dag, &tb).unwrap();
+        let plan = StagePlan::from_partition(&dag, &part, &tb);
+        let s_n = plan.n_stages();
+        let dead_stage = s_n / 2;
+        let dead_dev = plan.devices[dead_stage];
+        tb.fail_node(dead_dev);
+        let st = store_from(&plan, 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &plan,
+            store: &st,
+            schedule: ScheduleKind::GPipe,
+            n_micro: 2,
+            current_compress: &dense,
+        };
+        let r = Replanner { min_samples: 1, ..Default::default() };
+        let c = r.replan_after_failure(&inp, dead_stage).unwrap();
+        assert_eq!(c.origin, "failover-reschedule");
+        assert_eq!(c.plan.n_stages(), s_n, "stage count must survive failover");
+        assert!(
+            !c.plan.devices.contains(&dead_dev),
+            "dead device {dead_dev} still hosts a stage: {:?}",
+            c.plan.devices
+        );
+        c.partition.validate(&dag).unwrap();
+        for op in 0..dag.len() {
+            assert_ne!(c.partition.node_of(op), dead_dev);
+        }
+    }
+
+    #[test]
+    fn failover_cohosts_when_no_free_device_remains() {
+        // gpt2-xl uses all 24 devices; killing one leaves 23 survivors
+        // for 24 stages — the dead stage must co-host with a neighbor.
+        let (dag, mut tb, part, plan) = setup();
+        let s_n = plan.n_stages();
+        assert_eq!(s_n, tb.nodes.len(), "precondition: every device hosts a stage");
+        let dead_stage = 5.min(s_n - 1);
+        let dead_dev = plan.devices[dead_stage];
+        tb.fail_node(dead_dev);
+        let st = store_from(&plan, 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &plan,
+            store: &st,
+            schedule: ScheduleKind::GPipe,
+            n_micro: 2,
+            current_compress: &dense,
+        };
+        let r = Replanner { min_samples: 1, ..Default::default() };
+        let c = r.replan_after_failure(&inp, dead_stage).unwrap();
+        assert_eq!(c.origin, "failover-cohost");
+        assert_eq!(c.plan.n_stages(), s_n);
+        let host = c.plan.devices[dead_stage];
+        assert_ne!(host, dead_dev);
+        let neighbors: Vec<usize> = [dead_stage.wrapping_sub(1), dead_stage + 1]
+            .iter()
+            .filter(|&&s| s < s_n)
+            .map(|&s| plan.devices[s])
+            .collect();
+        assert!(neighbors.contains(&host), "{host} not adjacent: {neighbors:?}");
+        for op in 0..dag.len() {
+            assert_ne!(c.partition.node_of(op), dead_dev);
+        }
+    }
+
+    #[test]
+    fn failover_requires_marked_device() {
+        let (dag, tb, part, plan) = setup();
+        let st = store_from(&plan, 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &plan,
+            store: &st,
+            schedule: ScheduleKind::GPipe,
+            n_micro: 2,
+            current_compress: &dense,
+        };
+        let r = Replanner::default();
+        assert!(r.replan_after_failure(&inp, 0).is_err());
     }
 
     #[test]

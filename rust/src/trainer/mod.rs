@@ -4,4 +4,4 @@ pub mod data;
 pub mod report;
 
 pub use data::SyntheticCorpus;
-pub use report::{ReplanEvent, TrainReport};
+pub use report::{RecoveryEvent, ReplanEvent, TrainReport};

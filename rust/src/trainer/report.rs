@@ -43,6 +43,54 @@ impl ReplanEvent {
     }
 }
 
+/// One crash recovery: a stage's device was declared dead (missed
+/// heartbeats, channel loss, or a fatal error), the run re-planned across
+/// survivors, restored the newest valid checkpoint, rewound the data
+/// loader and resumed.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryEvent {
+    /// Iteration in flight when the death was declared.
+    pub died_iter: usize,
+    /// Dead stage and the device it was running on.
+    pub stage: usize,
+    pub device: usize,
+    /// Why the stage was declared dead ("heartbeat", "fatal: ...").
+    pub cause: String,
+    /// Checkpoint boundary the run resumed from (0 = no checkpoint found,
+    /// restarted from initialization).
+    pub resume_iter: usize,
+    /// Completed-then-rewound iterations: died_iter - resume_iter.
+    pub iters_lost: usize,
+    /// Stage -> device placement before / after the failover re-plan.
+    pub from: Vec<usize>,
+    pub to: Vec<usize>,
+    /// Candidate generator ("failover-reschedule" / "failover-swap" /
+    /// "failover-cohost").
+    pub origin: String,
+    /// Wall seconds: declaring + tearing down + re-planning, and
+    /// checkpoint restore + respawn.
+    pub replan_s: f64,
+    pub restore_s: f64,
+}
+
+impl RecoveryEvent {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("died_iter", ni(self.died_iter)),
+            ("stage", ni(self.stage)),
+            ("device", ni(self.device)),
+            ("cause", s(&self.cause)),
+            ("resume_iter", ni(self.resume_iter)),
+            ("iters_lost", ni(self.iters_lost)),
+            ("from", arr(self.from.iter().map(|&d| ni(d)).collect())),
+            ("to", arr(self.to.iter().map(|&d| ni(d)).collect())),
+            ("origin", s(&self.origin)),
+            ("replan_s", n(self.replan_s)),
+            ("restore_s", n(self.restore_s)),
+        ])
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct TrainReport {
     pub config: String,
@@ -68,6 +116,8 @@ pub struct TrainReport {
     pub placement: Vec<usize>,
     /// Straggler-driven re-partitionings, in iteration order.
     pub replans: Vec<ReplanEvent>,
+    /// Crash recoveries (device churn), in occurrence order.
+    pub recoveries: Vec<RecoveryEvent>,
 }
 
 impl TrainReport {
@@ -106,6 +156,10 @@ impl TrainReport {
             (
                 "replans",
                 arr(self.replans.iter().map(|e| e.to_json()).collect()),
+            ),
+            (
+                "recoveries",
+                arr(self.recoveries.iter().map(|e| e.to_json()).collect()),
             ),
         ])
     }
@@ -157,6 +211,19 @@ mod tests {
                 migration_s: 0.3,
                 applied: true,
             }],
+            recoveries: vec![RecoveryEvent {
+                died_iter: 3,
+                stage: 1,
+                device: 9,
+                cause: "heartbeat".into(),
+                resume_iter: 2,
+                iters_lost: 1,
+                from: vec![0, 9, 2, 3],
+                to: vec![0, 7, 2, 3],
+                origin: "failover-reschedule".into(),
+                replan_s: 0.4,
+                restore_s: 0.1,
+            }],
         };
         let csv = r.to_csv();
         assert_eq!(csv.lines().count(), 4);
@@ -170,6 +237,11 @@ mod tests {
         assert_eq!(reps[0].get("origin").as_str().unwrap(), "swap");
         assert!(reps[0].get("applied").as_bool().unwrap());
         assert_eq!(reps[0].get("to").as_arr().unwrap().len(), 4);
+        let recs = j.get("recoveries").as_arr().unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].get("stage").as_usize().unwrap(), 1);
+        assert_eq!(recs[0].get("iters_lost").as_usize().unwrap(), 1);
+        assert_eq!(recs[0].get("origin").as_str().unwrap(), "failover-reschedule");
         assert!((r.mean_sim_latency() - 1.0).abs() < 1e-12);
     }
 }

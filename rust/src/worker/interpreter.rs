@@ -19,8 +19,9 @@
 use super::messages::{decode_payload_into, StageCodec, StageState, Wire, WorkerStats};
 use crate::opdag::data::OpDataKind;
 use crate::pipeline::{Task, TaskKind};
-use std::sync::mpsc::{Receiver, Sender};
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 /// Channel + codec endpoints for one stage: everything the interpreter
 /// needs to talk to its pipeline neighbors and the driver.
@@ -95,11 +96,135 @@ pub trait StageBackend {
     }
 }
 
-/// How a schedule run ended: all iterations done, or a driver Stop.
+/// How a schedule run ended: all iterations done, a driver Stop, or the
+/// churn fault injector firing (the worker vanishes without a trace).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RunOutcome {
     Completed,
     Stopped,
+    Killed,
+}
+
+/// Fault-tolerance knobs for a schedule run. `Default` reproduces the
+/// PR 3 behavior exactly: blocking receives, no beacons, no injector.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunOpts {
+    /// Send `Wire::Heartbeat` at most once per this interval — while
+    /// blocked on a channel and between tasks — so the broker's deadline
+    /// monitor can tell a slow stage from a dead one. None = blocking
+    /// receives (a vanished neighbor then surfaces as an error, not a
+    /// quiesce, exactly as before).
+    pub heartbeat: Option<Duration>,
+    /// Churn injector: exit silently (no Stats, no Snapshot) at the top
+    /// of this global iteration, simulating a device that disappears.
+    pub kill_at_iter: Option<u32>,
+}
+
+/// Heartbeat if the interval elapsed since the last beacon.
+fn beat(
+    tx_driver: &Sender<Wire>,
+    stage: usize,
+    iter: u32,
+    hb: Option<Duration>,
+    last_beat: &mut Instant,
+) {
+    if let Some(int) = hb {
+        if last_beat.elapsed() >= int {
+            let _ = tx_driver.send(Wire::Heartbeat { stage, iter });
+            *last_beat = Instant::now();
+        }
+    }
+}
+
+/// Receive the next message from `rx`, heartbeating on every timeout
+/// tick. When `fwd_ctl` is given (`rx` is NOT the forward link), the
+/// forward link is polled for control messages (Stop / Checkpoint) on
+/// each tick — they are returned as if they arrived on `rx`, and any
+/// early data messages found on the way are stashed into `pending` for
+/// the next forward receive. Returns None when `rx` disconnected.
+#[allow(clippy::too_many_arguments)]
+fn recv_msg(
+    rx: &Receiver<Wire>,
+    fwd_ctl: Option<&Receiver<Wire>>,
+    pending: &mut VecDeque<Wire>,
+    tx_driver: &Sender<Wire>,
+    stage: usize,
+    iter: u32,
+    hb: Option<Duration>,
+    last_beat: &mut Instant,
+) -> anyhow::Result<Option<Wire>> {
+    let Some(int) = hb else {
+        return Ok(rx.recv().ok());
+    };
+    loop {
+        match rx.recv_timeout(int) {
+            Ok(m) => return Ok(Some(m)),
+            Err(RecvTimeoutError::Disconnected) => return Ok(None),
+            Err(RecvTimeoutError::Timeout) => {
+                let _ = tx_driver.send(Wire::Heartbeat { stage, iter });
+                *last_beat = Instant::now();
+                if let Some(f) = fwd_ctl {
+                    loop {
+                        match f.try_recv() {
+                            Ok(m @ (Wire::Stop | Wire::Checkpoint { .. })) => {
+                                return Ok(Some(m))
+                            }
+                            Ok(other) => pending.push_back(other),
+                            Err(_) => break,
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Answer a broadcast `Wire::Checkpoint` with this stage's state (empty
+/// for backends without portable state) and keep running.
+fn checkpoint_reply<B: StageBackend>(links: &StageLinks, backend: &B) {
+    let state = backend.snapshot().unwrap_or_default();
+    let _ = links
+        .tx_driver
+        .send(Wire::Snapshot { stage: links.stage, state });
+}
+
+/// A pipeline neighbor vanished mid-run (send failed or its channel
+/// closed). Park: keep heartbeating, answer boundary Checkpoints, drop
+/// stale data, and exit cleanly (snapshot + stats) on the driver's Stop.
+/// Without heartbeats there is no way to poll, so fail hard as before.
+fn quiesce<B: StageBackend>(
+    links: &StageLinks,
+    backend: &B,
+    stats: WorkerStats,
+    hb: Option<Duration>,
+    iter: u32,
+    pending: &mut VecDeque<Wire>,
+) -> anyhow::Result<RunOutcome> {
+    let Some(int) = hb else {
+        anyhow::bail!("stage {}: pipeline neighbor vanished mid-run", links.stage)
+    };
+    loop {
+        let msg = match pending.pop_front() {
+            Some(m) => Some(m),
+            None => match links.rx_fwd.recv_timeout(int) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("stage {}: driver went away during quiesce", links.stage)
+                }
+            },
+        };
+        match msg {
+            Some(Wire::Stop) => return stop(links, backend, stats),
+            Some(Wire::Checkpoint { .. }) => checkpoint_reply(links, backend),
+            Some(_) => {} // data for the broken pipeline — drop
+            None => {
+                let _ = links
+                    .tx_driver
+                    .send(Wire::Heartbeat { stage: links.stage, iter });
+            }
+        }
+    }
 }
 
 /// Execute `iters` iterations of this stage's schedule row starting at
@@ -112,6 +237,19 @@ pub fn run_schedule<B: StageBackend>(
     iter0: u32,
     iters: usize,
 ) -> anyhow::Result<RunOutcome> {
+    run_schedule_with(links, backend, tasks, iter0, iters, RunOpts::default())
+}
+
+/// `run_schedule` with fault-tolerance options (heartbeats + the churn
+/// fault injector). The schedule/compute semantics are identical.
+pub fn run_schedule_with<B: StageBackend>(
+    links: &mut StageLinks,
+    backend: &mut B,
+    tasks: &[Task],
+    iter0: u32,
+    iters: usize,
+    opts: RunOpts,
+) -> anyhow::Result<RunOutcome> {
     let mut stats = WorkerStats {
         stage: links.stage,
         device: links.device,
@@ -122,8 +260,23 @@ pub fn run_schedule<B: StageBackend>(
     // free -> pool, so the steady state allocates nothing on this side.
     let mut recycle: Vec<Vec<f32>> = Vec::new();
     let mut grad_buf = vec![0.0f32; act_n];
+    let hb = opts.heartbeat;
+    let mut last_beat = Instant::now();
+    // First beacon up front: tells the broker "alive and initialized"
+    // (backend construction happens before this function runs).
+    if hb.is_some() {
+        let _ = links.tx_driver.send(Wire::Heartbeat { stage: links.stage, iter: iter0 });
+    }
+    // Forward-link messages popped early while scanning for control
+    // messages during a blocked backward/label receive.
+    let mut pending: VecDeque<Wire> = VecDeque::new();
 
     for iter in iter0..iter0 + iters as u32 {
+        if opts.kill_at_iter == Some(iter) {
+            // Churn injector: vanish. No Stats, no Snapshot — the broker
+            // must notice via the deadline monitor, like a real death.
+            return Ok(RunOutcome::Killed);
+        }
         // Per-iteration profile accumulators (reset every iteration).
         let (mut p_fwd, mut p_bwd, mut p_upd) = (0.0f64, 0.0f64, 0.0f64);
         let (mut p_bytes, mut p_msgs) = (0.0f64, 0u64);
@@ -136,7 +289,28 @@ pub fn run_schedule<B: StageBackend>(
                     let labels = match &links.rx_labels {
                         Some(rx) => {
                             let t_wait = Instant::now();
-                            let msg = rx.recv()?;
+                            let msg = loop {
+                                match recv_msg(
+                                    rx,
+                                    Some(&links.rx_fwd),
+                                    &mut pending,
+                                    &links.tx_driver,
+                                    links.stage,
+                                    iter,
+                                    hb,
+                                    &mut last_beat,
+                                )? {
+                                    // The label sender is the driver.
+                                    None => anyhow::bail!(
+                                        "stage {}: driver went away mid-run",
+                                        links.stage
+                                    ),
+                                    Some(Wire::Checkpoint { .. }) => {
+                                        checkpoint_reply(links, backend)
+                                    }
+                                    Some(m) => break m,
+                                }
+                            };
                             stats.wait_s += t_wait.elapsed().as_secs_f64();
                             match msg {
                                 Wire::Labels { micro, targets, .. } => {
@@ -158,38 +332,62 @@ pub fn run_schedule<B: StageBackend>(
                         None => None,
                     };
                     let t_wait = Instant::now();
-                    let msg = links.rx_fwd.recv()?;
-                    stats.wait_s += t_wait.elapsed().as_secs_f64();
-                    let input = match msg {
-                        Wire::Data { micro, tokens, .. } => {
-                            anyhow::ensure!(
-                                micro as usize == t.micro,
-                                "stage {}: data for micro {micro}, schedule expects {}",
+                    let input = loop {
+                        let msg = match pending.pop_front() {
+                            Some(m) => Some(m),
+                            None => recv_msg(
+                                &links.rx_fwd,
+                                None,
+                                &mut pending,
+                                &links.tx_driver,
                                 links.stage,
-                                t.micro
-                            );
-                            FwdInput::Tokens(tokens)
+                                iter,
+                                hb,
+                                &mut last_beat,
+                            )?,
+                        };
+                        match msg {
+                            // rx_fwd's senders include the driver; a close
+                            // means the whole run is gone.
+                            None => anyhow::bail!(
+                                "stage {}: forward link closed (driver went away)",
+                                links.stage
+                            ),
+                            Some(Wire::Checkpoint { .. }) => checkpoint_reply(links, backend),
+                            Some(Wire::Data { micro, tokens, .. }) => {
+                                anyhow::ensure!(
+                                    micro as usize == t.micro,
+                                    "stage {}: data for micro {micro}, schedule expects {}",
+                                    links.stage,
+                                    t.micro
+                                );
+                                break FwdInput::Tokens(tokens);
+                            }
+                            Some(Wire::Packet(buf)) => {
+                                let mut x = recycle.pop().unwrap_or_default();
+                                x.resize(act_n, 0.0);
+                                let hdr = decode_payload_into(&buf, &mut x)?;
+                                anyhow::ensure!(
+                                    hdr.micro_batch as usize == t.micro,
+                                    "stage {}: activation for micro {}, schedule expects {} \
+                                     (cross-stage schedule orders disagree)",
+                                    links.stage,
+                                    hdr.micro_batch,
+                                    t.micro
+                                );
+                                break FwdInput::Act(x);
+                            }
+                            Some(Wire::Stop) => {
+                                stats.wait_s += t_wait.elapsed().as_secs_f64();
+                                return stop(links, backend, stats);
+                            }
+                            Some(other) => anyhow::bail!(
+                                "stage {}: unexpected {other:?} on forward link",
+                                links.stage
+                            ),
                         }
-                        Wire::Packet(buf) => {
-                            let mut x = recycle.pop().unwrap_or_default();
-                            x.resize(act_n, 0.0);
-                            let hdr = decode_payload_into(&buf, &mut x)?;
-                            anyhow::ensure!(
-                                hdr.micro_batch as usize == t.micro,
-                                "stage {}: activation for micro {}, schedule expects {} \
-                                 (cross-stage schedule orders disagree)",
-                                links.stage,
-                                hdr.micro_batch,
-                                t.micro
-                            );
-                            FwdInput::Act(x)
-                        }
-                        Wire::Stop => return stop(links, backend, stats),
-                        other => anyhow::bail!(
-                            "stage {}: unexpected {other:?} on forward link",
-                            links.stage
-                        ),
                     };
+                    stats.wait_s += t_wait.elapsed().as_secs_f64();
                     let t0 = Instant::now();
                     let out = backend.forward(iter, t.micro, input, labels)?;
                     let dt = t0.elapsed().as_secs_f64();
@@ -208,12 +406,17 @@ pub fn run_schedule<B: StageBackend>(
                                     t.micro as u32,
                                     &y,
                                 );
+                                if tx.send(Wire::Packet(buf)).is_err() {
+                                    // Downstream vanished: park for Stop.
+                                    return quiesce(
+                                        links, backend, stats, hb, iter, &mut pending,
+                                    );
+                                }
                                 stats.bytes_sent += wire;
                                 stats.dense_bytes += 4.0 * y.len() as f64;
                                 stats.msgs_sent += 1;
                                 p_bytes += wire;
                                 p_msgs += 1;
-                                tx.send(Wire::Packet(buf))?;
                             }
                             recycle.push(y);
                         }
@@ -233,7 +436,31 @@ pub fn run_schedule<B: StageBackend>(
                     let grad: Option<&[f32]> = match &links.rx_bwd {
                         Some(rx) => {
                             let t_wait = Instant::now();
-                            let msg = rx.recv()?;
+                            let msg = loop {
+                                match recv_msg(
+                                    rx,
+                                    Some(&links.rx_fwd),
+                                    &mut pending,
+                                    &links.tx_driver,
+                                    links.stage,
+                                    iter,
+                                    hb,
+                                    &mut last_beat,
+                                )? {
+                                    // rx_bwd's only sender is the next
+                                    // stage — a close means it died.
+                                    None => {
+                                        stats.wait_s += t_wait.elapsed().as_secs_f64();
+                                        return quiesce(
+                                            links, backend, stats, hb, iter, &mut pending,
+                                        );
+                                    }
+                                    Some(Wire::Checkpoint { .. }) => {
+                                        checkpoint_reply(links, backend)
+                                    }
+                                    Some(m) => break m,
+                                }
+                            };
                             stats.wait_s += t_wait.elapsed().as_secs_f64();
                             match msg {
                                 Wire::Packet(buf) => {
@@ -273,12 +500,15 @@ pub fn run_schedule<B: StageBackend>(
                                 t.micro as u32,
                                 &dx,
                             );
+                            if tx.send(Wire::Packet(buf)).is_err() {
+                                // Upstream vanished: park for Stop.
+                                return quiesce(links, backend, stats, hb, iter, &mut pending);
+                            }
                             stats.bytes_sent += wire;
                             stats.dense_bytes += 4.0 * dx.len() as f64;
                             stats.msgs_sent += 1;
                             p_bytes += wire;
                             p_msgs += 1;
-                            tx.send(Wire::Packet(buf))?;
                         }
                         recycle.push(dx);
                     }
@@ -303,6 +533,8 @@ pub fn run_schedule<B: StageBackend>(
                     })?;
                 }
             }
+            // Long compute sequences must not starve the liveness plane.
+            beat(&links.tx_driver, links.stage, iter, hb, &mut last_beat);
         }
     }
     let _ = links.tx_driver.send(Wire::Stats(stats));
@@ -341,6 +573,10 @@ pub struct NullBackend {
     /// Executed (kind, micro) log, in execution order.
     pub log: Vec<(TaskKind, usize)>,
     pub updates: u32,
+    /// When set, `snapshot` exports the scalar parameter as a one-element
+    /// `StageState` — the churn/checkpoint tests run killed-and-recovered
+    /// pipelines without artifacts and still restore exact state.
+    pub stateful: bool,
 }
 
 impl NullBackend {
@@ -354,6 +590,20 @@ impl NullBackend {
             dp: vec![None; n_micro],
             log: Vec::new(),
             updates: 0,
+            stateful: false,
+        }
+    }
+
+    /// A `NullBackend` whose scalar parameter snapshots and restores (the
+    /// sim-churn training backend).
+    pub fn stateful(n: usize, n_micro: usize, is_head: bool) -> NullBackend {
+        NullBackend { stateful: true, ..NullBackend::new(n, n_micro, is_head) }
+    }
+
+    /// Restore a `snapshot` taken from another stateful instance.
+    pub fn restore(&mut self, state: &StageState) {
+        if let Some(&p) = state.params.first() {
+            self.param = p;
         }
     }
 }
@@ -420,5 +670,16 @@ impl StageBackend for NullBackend {
         self.param -= 0.01 * acc / self.n_micro as f32;
         self.updates += 1;
         Ok(())
+    }
+
+    fn snapshot(&self) -> Option<StageState> {
+        if !self.stateful {
+            return None;
+        }
+        Some(StageState {
+            params: vec![self.param],
+            momentum: Vec::new(),
+            second: Vec::new(),
+        })
     }
 }

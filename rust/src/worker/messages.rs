@@ -47,9 +47,19 @@ pub enum Wire {
     /// the broker can re-init the stage on a different device (live
     /// migration at an iteration boundary).
     Snapshot { stage: usize, state: StageState },
+    /// Worker -> driver: liveness beacon, sent at most once per heartbeat
+    /// interval (while blocked on a channel or between tasks). The
+    /// broker's deadline monitor declares a stage dead when its beacons —
+    /// and all other traffic — go stale.
+    Heartbeat { stage: usize, iter: u32 },
+    /// Driver -> workers (broadcast at an iteration boundary): reply with
+    /// a `Snapshot` of the current training state, then keep running. The
+    /// broker persists the collected snapshots as a versioned checkpoint.
+    Checkpoint { iter: u32 },
     /// Worker -> driver on shutdown: accumulated statistics.
     Stats(WorkerStats),
-    /// Worker -> driver: unrecoverable error (driver aborts the job).
+    /// Worker -> driver: unrecoverable error (driver aborts the job, or —
+    /// with recovery enabled — treats the stage as dead and re-plans).
     Fatal { stage: usize, error: String },
     /// Driver -> workers: clean shutdown.
     Stop,

@@ -17,9 +17,10 @@ pub mod messages;
 pub mod stage;
 
 pub use interpreter::{
-    run_schedule, BwdOut, FwdInput, FwdOut, NullBackend, RunOutcome, StageBackend, StageLinks,
+    run_schedule, run_schedule_with, BwdOut, FwdInput, FwdOut, NullBackend, RunOpts, RunOutcome,
+    StageBackend, StageLinks,
 };
 pub use messages::{
     decode_payload, decode_payload_into, LinkEncoder, StageCodec, StageState, Wire, WorkerStats,
 };
-pub use stage::{spawn_stage, StageCtx};
+pub use stage::{spawn_stage, BackendKind, StageCtx};

@@ -12,12 +12,42 @@
 //! identical across schedule kinds (the 1F1B-vs-GPipe differential test
 //! relies on this).
 
-use super::interpreter::{run_schedule, BwdOut, FwdInput, FwdOut, StageBackend, StageLinks};
+use super::interpreter::{
+    run_schedule_with, BwdOut, FwdInput, FwdOut, NullBackend, RunOpts, StageBackend, StageLinks,
+};
 use super::messages::{StageCodec, StageState, Wire};
 use crate::pipeline::Task;
 use crate::runtime::{Manifest, ModelCfg, Runtime, StageKind, StageSpec};
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::{Duration, Instant};
+
+/// Which compute backend a stage worker runs. `Null` is the artifact-free
+/// arithmetic backend (`interpreter::NullBackend`, stateful flavor) used
+/// by `simulate --kill-node` and the churn tests: the full broker —
+/// channels, codecs, heartbeats, checkpoints, recovery — runs for real,
+/// only the math is mocked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Pjrt,
+    Null,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<BackendKind> {
+        Ok(match s {
+            "pjrt" => BackendKind::Pjrt,
+            "null" => BackendKind::Null,
+            other => anyhow::bail!("unknown backend `{other}` (pjrt|null)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Null => "null",
+        }
+    }
+}
 
 /// Everything a stage worker needs (all Send).
 pub struct StageCtx {
@@ -51,6 +81,14 @@ pub struct StageCtx {
     /// Straggler-injection test hook: sleep (factor-1)× the measured
     /// compute time after each fwd/bwd execution. 1.0 = off.
     pub slow_factor: f64,
+    /// Compute backend (PJRT in production, Null for artifact-free runs).
+    pub backend: BackendKind,
+    /// Liveness beacon interval (None = blocking receives, no beacons).
+    pub heartbeat: Option<Duration>,
+    /// Churn injector: vanish silently at the top of this global
+    /// iteration (set by the broker when this stage's device matches
+    /// `--kill-node` and the generation covers `--kill-at-iter`).
+    pub kill_at_iter: Option<u32>,
     /// Forward input (None for embed: tokens come from the driver).
     pub rx_fwd: Receiver<Wire>,
     /// Backward gradient input (None for head).
@@ -366,10 +404,35 @@ impl StageBackend for PjrtBackend {
 }
 
 fn run_stage(ctx: StageCtx) -> anyhow::Result<()> {
-    let mut backend = PjrtBackend::new(&ctx)?;
+    let kind = ctx.backend;
     let tasks = ctx.tasks.clone();
     let (iter0, iters) = (ctx.iter0, ctx.iters);
-    let mut links = StageLinks {
+    let opts = RunOpts { heartbeat: ctx.heartbeat, kill_at_iter: ctx.kill_at_iter };
+    match kind {
+        BackendKind::Pjrt => {
+            let mut backend = PjrtBackend::new(&ctx)?;
+            let mut links = links_from_ctx(ctx);
+            run_schedule_with(&mut links, &mut backend, &tasks, iter0, iters, opts)?;
+        }
+        BackendKind::Null => {
+            // Activation payload = one f32 per token (no artifacts, no
+            // d_model blow-up); the embed stage maps tokens 1:1.
+            let cfg = &ctx.manifest.config;
+            let n = (cfg.microbatch * cfg.seq_len).max(1);
+            let is_head = ctx.stage + 1 == ctx.n_stages;
+            let mut backend = NullBackend::stateful(n, ctx.n_micro, is_head);
+            if let Some(st) = &ctx.init_state {
+                backend.restore(st);
+            }
+            let mut links = links_from_ctx(ctx);
+            run_schedule_with(&mut links, &mut backend, &tasks, iter0, iters, opts)?;
+        }
+    }
+    Ok(())
+}
+
+fn links_from_ctx(ctx: StageCtx) -> StageLinks {
+    StageLinks {
         stage: ctx.stage,
         device: ctx.device,
         codec: ctx.codec,
@@ -379,7 +442,5 @@ fn run_stage(ctx: StageCtx) -> anyhow::Result<()> {
         tx_bwd: ctx.tx_bwd,
         rx_labels: ctx.rx_labels,
         tx_driver: ctx.tx_driver,
-    };
-    run_schedule(&mut links, &mut backend, &tasks, iter0, iters)?;
-    Ok(())
+    }
 }

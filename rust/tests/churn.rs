@@ -1,0 +1,226 @@
+//! Churn-tolerance integration tests — no PJRT artifacts needed: the
+//! Null compute backend mocks the math while the *real* broker runs
+//! heartbeats, the deadline monitor, boundary checkpoints, the churn
+//! injector, failover re-planning and checkpoint restore over real
+//! threads and channels.
+
+use fusionllm::broker::{self, Job};
+use fusionllm::checkpoint;
+use fusionllm::scheduler::replan::ReplanMode;
+use fusionllm::worker::BackendKind;
+use std::path::PathBuf;
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fusionllm-churn-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A fast artifact-free job: 4 Null stages pinned to devices 0..4,
+/// 20 ms heartbeats with a 1 s death deadline.
+fn null_job(tag: &str) -> Job {
+    Job {
+        config: "churn-test".into(),
+        backend: BackendKind::Null,
+        iters: 8,
+        n_micro: 2,
+        placement: Some(vec![0, 1, 2, 3]),
+        // Crash recovery only; Null compute times are too noisy for
+        // meaningful straggler detection.
+        straggler_threshold: 1e9,
+        // 1 s death deadline: tests run in parallel; a descheduled live
+        // thread must not be misdeclared dead.
+        heartbeat_s: 0.02,
+        heartbeat_timeout: 50,
+        checkpoint_every: 2,
+        checkpoint_dir: ckpt_dir(tag),
+        ..Job::default()
+    }
+}
+
+#[test]
+fn killed_run_recovers_and_matches_unkilled() {
+    // Device 1 (stage 1) vanishes at the top of iteration 3. The broker
+    // must detect the death, re-plan around the device, restore the
+    // iteration-2 checkpoint, rewind the data loader, and finish all 8
+    // iterations with a loss trajectory bitwise-equal to an uninterrupted
+    // run (determinism satellite).
+    let base = null_job("determinism");
+    let clean = broker::run(&Job {
+        checkpoint_every: 0,
+        ..base.clone()
+    })
+    .unwrap();
+    let churn = broker::run(&Job {
+        kill_device: Some(1),
+        kill_at_iter: 3,
+        replan: ReplanMode::Auto,
+        ..base.clone()
+    })
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+
+    assert_eq!(churn.losses.len(), 8, "all iterations must complete");
+    assert_eq!(churn.recoveries.len(), 1, "{:?}", churn.recoveries);
+    let r = &churn.recoveries[0];
+    assert_eq!(r.stage, 1);
+    assert_eq!(r.device, 1);
+    assert_eq!(r.died_iter, 3);
+    assert_eq!(r.resume_iter, 2, "newest checkpoint is the iter-2 boundary");
+    assert_eq!(r.iters_lost, 1);
+    assert_eq!(r.from, vec![0, 1, 2, 3]);
+    assert!(!r.to.contains(&1), "dead device still placed: {:?}", r.to);
+    assert!(r.replan_s >= 0.0 && r.restore_s >= 0.0);
+    // Final placement reflects the failover.
+    assert_eq!(churn.placement, r.to);
+    // Kill-and-recover must not change the numbers: checkpoint restore +
+    // corpus rewind re-run iterations 2..8 deterministically.
+    assert_eq!(clean.losses.len(), churn.losses.len());
+    for (i, (a, b)) in clean.losses.iter().zip(&churn.losses).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "iter {i}: clean {a} != recovered {b}"
+        );
+    }
+}
+
+#[test]
+fn recovery_without_checkpoints_restarts_from_scratch() {
+    // No checkpointing: recovery still works, resuming from iteration 0
+    // with fresh state — losing more work but staying deterministic.
+    let base = null_job("nockpt");
+    let clean = broker::run(&Job {
+        checkpoint_every: 0,
+        ..base.clone()
+    })
+    .unwrap();
+    let churn = broker::run(&Job {
+        checkpoint_every: 0,
+        iters: 5,
+        kill_device: Some(2),
+        kill_at_iter: 2,
+        replan: ReplanMode::Auto,
+        ..base.clone()
+    })
+    .unwrap();
+    assert_eq!(churn.losses.len(), 5);
+    assert_eq!(churn.recoveries.len(), 1);
+    let r = &churn.recoveries[0];
+    assert_eq!((r.resume_iter, r.died_iter, r.iters_lost), (0, 2, 2));
+    for (a, b) in clean.losses.iter().zip(&churn.losses) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn death_without_replan_auto_aborts_with_joined_threads() {
+    // replan off: the death must surface as an error (pointing at
+    // --replan auto), not a hang — and the generation's threads are
+    // joined before the error returns.
+    let base = null_job("abort");
+    let err = broker::run(&Job {
+        kill_device: Some(1),
+        kill_at_iter: 3,
+        replan: ReplanMode::Off,
+        ..base.clone()
+    })
+    .unwrap_err();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("crash recovery requires --replan auto"),
+        "unexpected error: {msg}"
+    );
+}
+
+#[test]
+fn on_disk_checkpoints_version_and_fall_back_when_corrupted() {
+    // A healthy run leaves versioned checkpoints behind; corrupting the
+    // newest stage file makes restore fall back to the previous version
+    // (manifest integrity end-to-end, on files the broker really wrote).
+    let base = null_job("fallback");
+    let report = broker::run(&base).unwrap();
+    assert_eq!(report.losses.len(), 8);
+    assert!(report.recoveries.is_empty());
+    let vs = checkpoint::versions(&base.checkpoint_dir);
+    assert_eq!(vs, vec![2, 4, 6], "boundary checkpoints at 2/4/6: {vs:?}");
+    assert_eq!(
+        checkpoint::load_latest(&base.checkpoint_dir).unwrap().unwrap().iter,
+        6
+    );
+    // Corrupt the newest version's stage-2 payload.
+    let victim = base.checkpoint_dir.join("ckpt-00000006/stage-2.bin");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x5A;
+    std::fs::write(&victim, &bytes).unwrap();
+    let ck = checkpoint::load_latest(&base.checkpoint_dir)
+        .unwrap()
+        .expect("previous version survives");
+    assert_eq!(ck.iter, 4, "restore must fall back past the corrupt version");
+    assert_eq!(ck.config, "churn-test");
+    assert_eq!(ck.placement, vec![0, 1, 2, 3]);
+    assert_eq!(ck.states.len(), 4);
+    // Null stages snapshot a single scalar parameter.
+    assert!(ck.states.iter().all(|s| s.params.len() == 1));
+    assert_eq!(ck.corpus_batches, 8, "4 iterations x 2 microbatches fed");
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+}
+
+#[test]
+fn null_backend_runs_clean_without_liveness_plane() {
+    // Heartbeats off (the PR 3 blocking path) must still work for a
+    // healthy run — and checkpointing without heartbeats is rejected
+    // rather than deadlocking.
+    let base = null_job("nohb");
+    let r = broker::run(&Job {
+        heartbeat_s: 0.0,
+        checkpoint_every: 0,
+        ..base.clone()
+    })
+    .unwrap();
+    assert_eq!(r.losses.len(), 8);
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    let err = broker::run(&Job {
+        heartbeat_s: 0.0,
+        ..base.clone()
+    })
+    .unwrap_err();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+    assert!(format!("{err:#}").contains("requires heartbeats"));
+}
+
+#[test]
+fn head_stage_death_recovers_from_late_checkpoint() {
+    // Killing the *head* stage exercises the harder detection path: its
+    // upstream neighbor quiesces on a failed send, the driver stops
+    // receiving losses, and the deadline monitor must still attribute the
+    // death to the right stage. A later kill also verifies restore picks
+    // the newest of several checkpoint versions.
+    let base = null_job("late");
+    let clean = broker::run(&Job {
+        checkpoint_every: 0,
+        iters: 12,
+        ..base.clone()
+    })
+    .unwrap();
+    let churn = broker::run(&Job {
+        iters: 12,
+        kill_device: Some(3),
+        kill_at_iter: 9,
+        replan: ReplanMode::Auto,
+        ..base.clone()
+    })
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+    assert_eq!(churn.losses.len(), 12);
+    assert_eq!(churn.recoveries.len(), 1);
+    let r = &churn.recoveries[0];
+    assert_eq!(r.resume_iter, 8, "newest boundary before the death");
+    assert_eq!(r.iters_lost, 1);
+    assert_eq!(r.stage, 3, "head stage death must also recover");
+    for (a, b) in clean.losses.iter().zip(&churn.losses) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
