@@ -24,6 +24,8 @@ use fusionllm::opdag::data::{OpData, OpDataKind, OpDataView};
 use fusionllm::pipeline::{PipelineSchedule, ScheduleKind};
 use fusionllm::scheduler::{self, Scheduler};
 use fusionllm::simnet::{simulate_iteration, StagePlan};
+use fusionllm::transport::frame::{encode_frame, FrameKind, Framer, Lane};
+use fusionllm::transport::{chan, PacketPool};
 use fusionllm::util::benchkit::{bench, BenchResult};
 use fusionllm::util::json::{n, obj, Json};
 use fusionllm::util::math::compress_threads;
@@ -128,6 +130,24 @@ fn main() {
     });
     run(r, msg_bytes);
 
+    // Socket frame codec (tcp transport): checksum + header around a
+    // 64 KiB Packet body, encoded and incrementally re-decoded. This is
+    // the per-message overhead the transport adds on top of the OP-Data
+    // payload codec; bench-diff gates it like every other hot-path op.
+    let frame_body = vec![0x5Au8; 64 * 1024];
+    let mut frame_buf = Vec::new();
+    let frame_pool = PacketPool::new();
+    let mut framer = Framer::with_pool(frame_pool.clone());
+    let r = bench("frame encode/decode (64KiB packet)", 4, 50, || {
+        encode_frame(Lane::Fwd, FrameKind::Packet, &frame_body, &mut frame_buf);
+        framer.push(&frame_buf);
+        let f = framer.next().unwrap().unwrap();
+        let n = f.body.len();
+        frame_pool.give(f.body);
+        n
+    });
+    run(r, frame_body.len() as f64);
+
     let tb = testbed::testbed2(1);
     let dag = transformer_chain(&TransformerSpec::gpt2_xl());
     let r = bench("OP-Fence schedule (48 devices)", 1, 10, || {
@@ -185,12 +205,15 @@ fn interpreter_dispatch_once(sched: &PipelineSchedule) -> u32 {
         stage: 1,
         device: 1,
         codec: StageCodec::from_plan(&plan, Some(2), Some(0), n),
-        rx_fwd: fwd_in_rx,
-        rx_bwd: Some(bwd_in_rx),
-        tx_fwd: Some(fwd_out_tx),
-        tx_bwd: Some(bwd_out_tx),
+        rx_fwd: chan::endpoint(fwd_in_rx),
+        rx_bwd: Some(chan::endpoint(bwd_in_rx)),
+        tx_fwd: Some(chan::link(fwd_out_tx)),
+        tx_bwd: Some(chan::link(bwd_out_tx)),
         rx_labels: None,
-        tx_driver,
+        tx_driver: chan::link(tx_driver),
+        // Drained packet buffers cycle back to the preloading encoder.
+        fwd_return: Some(enc.pool()),
+        bwd_return: Some(enc.pool()),
     };
     let mut backend = NullBackend::new(n, n_micro, false);
     run_schedule(&mut links, &mut backend, &sched.tasks[1], 0, 1).unwrap();

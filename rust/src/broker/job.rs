@@ -5,6 +5,7 @@ use crate::compress::adatopk::CompressDirection;
 use crate::compress::{CompressKind, ValueCodec};
 use crate::pipeline::ScheduleKind;
 use crate::scheduler::replan::ReplanMode;
+use crate::transport::TransportKind;
 use crate::util::cli::Args;
 use crate::worker::BackendKind;
 use std::path::PathBuf;
@@ -64,6 +65,23 @@ pub struct Job {
     /// deadline leaves room for multi-second PJRT tasks, during which a
     /// busy stage is legitimately silent.
     pub heartbeat_timeout: u32,
+    /// Deadline multiplier before a stage's first message of a generation
+    /// (`--heartbeat-grace`): multi-second PJRT compiles on slow hosts
+    /// must not trip the monitor during backend init.
+    pub heartbeat_grace: u32,
+    /// Broker↔worker transport: in-process channels (chan, default) or
+    /// TCP sockets with `fusionllm worker --connect` processes.
+    pub transport: TransportKind,
+    /// TCP listen address (`--listen host:port`).
+    pub listen: String,
+    /// Shared-secret handshake token for TCP workers.
+    pub token: String,
+    /// TCP worker pool size (None = one per stage; start one extra so
+    /// crash recovery has a free device to fail over to).
+    pub workers: Option<usize>,
+    /// Artificial seconds per Null forward (`--pace`): paces otherwise
+    /// instant Null runs for multi-process demos and the CI kill smoke.
+    pub pace_s: f64,
     /// Persist a checkpoint every N iterations (0 = disabled).
     pub checkpoint_every: usize,
     pub checkpoint_dir: PathBuf,
@@ -103,6 +121,12 @@ impl Default for Job {
             backend: BackendKind::Pjrt,
             heartbeat_s: 0.25,
             heartbeat_timeout: 40,
+            heartbeat_grace: 4,
+            transport: TransportKind::Chan,
+            listen: "127.0.0.1:4471".into(),
+            token: "fusionllm".into(),
+            workers: None,
+            pace_s: 0.0,
             checkpoint_every: 0,
             checkpoint_dir: PathBuf::from("checkpoints"),
             keep_checkpoints: 3,
@@ -158,6 +182,15 @@ impl Job {
             heartbeat_s: args.f64("heartbeat-interval", d.heartbeat_s).max(0.0),
             heartbeat_timeout: args.u64("heartbeat-timeout", d.heartbeat_timeout as u64)
                 as u32,
+            heartbeat_grace: args.u64("heartbeat-grace", d.heartbeat_grace as u64).max(1)
+                as u32,
+            transport: TransportKind::parse(&args.str("transport", d.transport.name()))?,
+            listen: args.str("listen", &d.listen),
+            token: args.str("token", &d.token),
+            workers: args.opt_str("workers").map(|s| {
+                s.parse().expect("--workers expects a count")
+            }),
+            pace_s: args.f64("pace", d.pace_s).max(0.0),
             checkpoint_every: args.usize("checkpoint-every", d.checkpoint_every),
             checkpoint_dir: args
                 .opt_str("checkpoint-dir")
@@ -252,6 +285,32 @@ mod tests {
         assert_eq!(j.kill_device, Some(1));
         assert_eq!(j.kill_at_iter, 3);
         let bad = Args::parse(["--backend", "tpu"].iter().map(|s| s.to_string()));
+        assert!(Job::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn transport_flags_parse() {
+        let j = Job::from_args(&Args::parse(std::iter::empty::<String>())).unwrap();
+        assert_eq!(j.transport, TransportKind::Chan);
+        assert_eq!(j.listen, "127.0.0.1:4471");
+        assert_eq!(j.token, "fusionllm");
+        assert_eq!(j.workers, None);
+        assert_eq!(j.heartbeat_grace, 4);
+        assert_eq!(j.pace_s, 0.0);
+        let args = Args::parse(
+            "train --transport tcp --listen 0.0.0.0:9000 --token s3cret --workers 5 \
+             --heartbeat-grace 8 --pace 0.1"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let j = Job::from_args(&args).unwrap();
+        assert_eq!(j.transport, TransportKind::Tcp);
+        assert_eq!(j.listen, "0.0.0.0:9000");
+        assert_eq!(j.token, "s3cret");
+        assert_eq!(j.workers, Some(5));
+        assert_eq!(j.heartbeat_grace, 8);
+        assert_eq!(j.pace_s, 0.1);
+        let bad = Args::parse(["--transport", "udp"].iter().map(|s| s.to_string()));
         assert!(Job::from_args(&bad).is_err());
     }
 

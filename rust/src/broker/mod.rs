@@ -23,6 +23,13 @@
 //! checkpoint (broadcast `Wire::Checkpoint` every `--checkpoint-every`
 //! iterations, persisted via the `checkpoint` module), rewinds the data
 //! loader and resumes. Every event lands in `TrainReport.recoveries`.
+//!
+//! The worker plane is transport-pluggable (`--transport chan|tcp`):
+//! chan spawns in-process threads over mpsc lanes; tcp listens, accepts
+//! an authenticated pool of `fusionllm worker` processes, ships each
+//! generation as serialized `StageAssign`s (ready-barrier handshake) and
+//! relays inter-stage packets between connections — with per-connection
+//! socket read deadlines feeding the same death/recovery machinery.
 
 pub mod job;
 
@@ -39,10 +46,14 @@ use crate::runtime::{Manifest, ModelCfg};
 use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
 use crate::simnet::{simulate_iteration, StagePlan};
 use crate::trainer::{RecoveryEvent, ReplanEvent, SyntheticCorpus, TrainReport};
+use crate::transport::tcp::{MonitorCfg, StageAssign, TcpPlane};
+use crate::transport::{chan, Link, PacketPool, TransportKind};
 use crate::worker::{
-    spawn_stage, BackendKind, StageCodec, StageCtx, StageState, Wire, WorkerStats,
+    spawn_stage, BackendKind, LinkSpec, StageCodec, StageCtx, StageState, Wire, WorkerStats,
 };
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use crate::opdag::data::OpDataKind;
+use std::net::TcpListener;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
 /// Iterations of measured profile required before the first replan check.
@@ -52,15 +63,24 @@ const REPLAN_WARMUP_ITERS: usize = 3;
 /// must eventually surface as an error, not an infinite restart loop).
 const MAX_RECOVERIES: usize = 8;
 
-/// One cohort of stage workers sharing a set of channels. Re-partitioning
-/// tears a generation down (collecting state snapshots) and spawns the
-/// next one on the new placement.
+/// Where a stage of the current generation executes.
+enum Port {
+    /// In-process worker thread (`ChanTransport`).
+    Thread(std::thread::JoinHandle<anyhow::Result<()>>),
+    /// Remote worker process over a TCP connection.
+    Remote,
+}
+
+/// One cohort of stage workers sharing a set of transport lanes.
+/// Re-partitioning tears a generation down (collecting state snapshots)
+/// and starts the next one on the new placement — spawning threads in
+/// chan mode, shipping `StageAssign`s to worker processes in tcp mode.
 struct Generation {
-    handles: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
-    /// Broker-held senders into every stage's forward input (stage 0 gets
+    ports: Vec<Port>,
+    /// Broker-held links into every stage's forward input (stage 0 gets
     /// Data; the rest are reachable for Stop/Checkpoint broadcast).
-    fwd_tx: Vec<Sender<Wire>>,
-    label_tx: Sender<Wire>,
+    fwd_tx: Vec<Box<dyn Link>>,
+    label_tx: Box<dyn Link>,
     rx_driver: Receiver<Wire>,
     /// Stats messages already collected from this generation.
     stats_seen: usize,
@@ -71,18 +91,20 @@ struct Generation {
     /// Whether a stage has sent anything yet — before first contact the
     /// deadline gets a grace multiplier (backend init may be slow).
     heard: Vec<bool>,
+    /// First-contact deadline multiplier (`--heartbeat-grace`).
+    grace: u32,
+    /// Any stage runs out-of-process (bounds the teardown drains: remote
+    /// driver lanes never disconnect on their own).
+    remote: bool,
 }
 
 /// A driver-plane event: a protocol message, or a stage declared dead
-/// (fatal error, channel loss, or heartbeat deadline expiry).
+/// (fatal error, channel loss, socket read deadline, or heartbeat
+/// deadline expiry).
 enum Event {
     Msg(Wire),
     Dead { stage: usize, cause: String },
 }
-
-/// Deadline multiplier for stages that have not spoken yet (covers slow
-/// backend initialization before the first beacon).
-const FIRST_CONTACT_GRACE: u32 = 4;
 
 impl Generation {
     fn note(&mut self, stage: usize) {
@@ -109,7 +131,7 @@ impl Generation {
     fn expired_stage(&self, dl: Duration) -> Option<(usize, Duration)> {
         let worst = (0..self.last_seen.len())
             .map(|s| {
-                let limit = if self.heard[s] { dl } else { dl * FIRST_CONTACT_GRACE };
+                let limit = if self.heard[s] { dl } else { dl * self.grace.max(1) };
                 let age = self.last_seen[s].elapsed();
                 (s, age, age.as_secs_f64() - limit.as_secs_f64())
             })
@@ -154,7 +176,14 @@ impl Generation {
                     }
                 }
             };
+            // Over TCP the stage field is network input: an out-of-range
+            // value (version skew, buggy worker) must not index-panic the
+            // broker — drop the message instead.
             if let Some(stage) = Self::stage_of(&msg, s_n) {
+                if stage >= s_n {
+                    eprintln!("broker: dropping message with out-of-range stage {stage}");
+                    continue;
+                }
                 self.note(stage);
             }
             match msg {
@@ -180,21 +209,11 @@ enum SnapOutcome {
     Died { stage: usize, cause: String },
 }
 
-/// The model config the Null backend trains (no artifacts on disk): tiny
-/// shapes, 4 stages — enough to exercise every broker/wire code path.
-fn null_model_cfg(name: &str) -> ModelCfg {
-    ModelCfg {
-        name: name.to_string(),
-        vocab: 61,
-        d_model: 8,
-        n_heads: 1,
-        n_layers: 4,
-        seq_len: 8,
-        microbatch: 2,
-        n_stages: 4,
-        compress_ratio: 1.0,
-        topk_k: 0,
-    }
+/// The transport plane a run executes over: in-process threads + mpsc
+/// lanes, or the TCP listener with its accepted worker-process pool.
+enum Plane {
+    Chan,
+    Tcp(TcpPlane),
 }
 
 /// Build the compression plan for a (partition, testbed) pair per the
@@ -229,9 +248,51 @@ fn compress_plan_for(
     plan
 }
 
-/// Spawn one worker generation on `devices`, executing iterations
-/// `[iter0, iter0 + iters)` of `schedule`. `init` entries are taken (and
-/// consumed) as migrated/restored state for the matching stage.
+/// Per-stage knobs for one generation. Both generation builders (chan
+/// threads and tcp `StageAssign`s) MUST derive these identically — the
+/// chan-vs-tcp bitwise differential rests on it — so there is exactly
+/// one derivation.
+struct StageParams {
+    next_device: Option<usize>,
+    prev_device: Option<usize>,
+    /// Straggler injection factor (1.0 = off).
+    slow_factor: f64,
+    /// Null-backend pacing (`--pace`).
+    pace_s: f64,
+    /// Churn injector: the stage hosted on --kill-node vanishes at the
+    /// top of --kill-at-iter (after recovery the failed device hosts
+    /// nothing, so the injector cannot re-fire).
+    kill_at_iter: Option<u32>,
+    param_seed: u64,
+}
+
+fn stage_params(
+    job: &Job,
+    devices: &[usize],
+    s: usize,
+    slow_dev: Option<(usize, f64)>,
+) -> StageParams {
+    let device = devices[s];
+    StageParams {
+        next_device: devices.get(s + 1).copied(),
+        prev_device: if s > 0 { Some(devices[s - 1]) } else { None },
+        slow_factor: match slow_dev {
+            Some((dev, f)) if dev == device => f,
+            _ => 1.0,
+        },
+        pace_s: job.pace_s.max(0.0),
+        kill_at_iter: match job.kill_device {
+            Some(dev) if dev == device => Some(job.kill_at_iter),
+            _ => None,
+        },
+        param_seed: job.seed.wrapping_add(s as u64),
+    }
+}
+
+/// Spawn one in-process (chan transport) worker generation on `devices`,
+/// executing iterations `[iter0, iter0 + iters)` of `schedule`. `init`
+/// entries are taken (and consumed) as migrated/restored state for the
+/// matching stage.
 #[allow(clippy::too_many_arguments)]
 fn spawn_generation(
     manifest: &Manifest,
@@ -265,31 +326,37 @@ fn spawn_generation(
     let (label_tx, label_rx) = mpsc::channel::<Wire>();
     let mut label_rx = Some(label_rx);
 
-    let mut handles = Vec::new();
+    // Per-link wire codecs: ratios keyed by the receiving device (Eq. 7),
+    // scratch owned for the life of the link. Built up front so each
+    // receiving stage can hold its upstream encoder's packet free-list
+    // (drained buffers cycle back — the zero-allocation send path).
+    let mut codecs: Vec<Option<StageCodec>> = (0..s_n)
+        .map(|s| {
+            let next_device = devices.get(s + 1).copied();
+            let prev_device = if s > 0 { Some(devices[s - 1]) } else { None };
+            Some(StageCodec::from_plan(plan, next_device, prev_device, cfg.d_model))
+        })
+        .collect();
+    let fwd_pools: Vec<Option<PacketPool>> = codecs
+        .iter()
+        .map(|c| c.as_ref().unwrap().fwd.as_ref().map(|e| e.pool()))
+        .collect();
+    let bwd_pools: Vec<Option<PacketPool>> = codecs
+        .iter()
+        .map(|c| c.as_ref().unwrap().bwd.as_ref().map(|e| e.pool()))
+        .collect();
+
+    let mut ports = Vec::new();
     for s in 0..s_n {
-        let next_device = devices.get(s + 1).copied();
-        let prev_device = if s > 0 { Some(devices[s - 1]) } else { None };
-        let slow_factor = match slow_dev {
-            Some((dev, f)) if dev == devices[s] => f,
-            _ => 1.0,
-        };
-        // Churn injector: the stage hosted on --kill-node vanishes at the
-        // top of --kill-at-iter (after recovery the failed device hosts
-        // nothing, so the injector cannot re-fire).
-        let kill_at_iter = match job.kill_device {
-            Some(dev) if dev == devices[s] => Some(job.kill_at_iter),
-            _ => None,
-        };
+        let p = stage_params(job, devices, s, slow_dev);
         let ctx = StageCtx {
             stage: s,
             n_stages: s_n,
             device: devices[s],
-            next_device,
-            prev_device,
+            next_device: p.next_device,
+            prev_device: p.prev_device,
             manifest: manifest.clone(),
-            // Per-link wire codecs: ratios keyed by the receiving device
-            // (Eq. 7), scratch owned for the life of the link.
-            codec: StageCodec::from_plan(plan, next_device, prev_device, cfg.d_model),
+            codec: codecs[s].take().unwrap(),
             tasks: schedule.tasks[s].clone(),
             iter0,
             iters,
@@ -297,26 +364,103 @@ fn spawn_generation(
             lr: job.lr,
             momentum: job.momentum,
             optimizer: job.optimizer.clone(),
-            param_seed: job.seed.wrapping_add(s as u64),
+            param_seed: p.param_seed,
             init_state: init[s].take(),
-            slow_factor,
+            slow_factor: p.slow_factor,
+            pace_s: p.pace_s,
             backend: job.backend,
             heartbeat,
-            kill_at_iter,
-            rx_fwd: fwd_rx[s].take().unwrap(),
-            rx_bwd: if s + 1 < s_n { bwd_rx[s].take() } else { None },
-            tx_fwd: if s + 1 < s_n { Some(fwd_tx[s + 1].clone()) } else { None },
-            tx_bwd: if s > 0 { Some(bwd_tx[s - 1].clone()) } else { None },
-            rx_labels: if s == s_n - 1 { label_rx.take() } else { None },
-            tx_driver: tx_driver.clone(),
+            kill_at_iter: p.kill_at_iter,
+            rx_fwd: chan::endpoint(fwd_rx[s].take().unwrap()),
+            rx_bwd: if s + 1 < s_n {
+                bwd_rx[s].take().map(chan::endpoint)
+            } else {
+                None
+            },
+            tx_fwd: if s + 1 < s_n { Some(chan::link(fwd_tx[s + 1].clone())) } else { None },
+            tx_bwd: if s > 0 { Some(chan::link(bwd_tx[s - 1].clone())) } else { None },
+            rx_labels: if s == s_n - 1 {
+                label_rx.take().map(chan::endpoint)
+            } else {
+                None
+            },
+            tx_driver: chan::link(tx_driver.clone()),
+            fwd_return: if s > 0 { fwd_pools[s - 1].clone() } else { None },
+            bwd_return: if s + 1 < s_n { bwd_pools[s + 1].clone() } else { None },
         };
-        handles.push(spawn_stage(ctx));
+        ports.push(Port::Thread(spawn_stage(ctx)));
     }
     // The broker keeps no tx_driver clone: the channel closes when the
     // last worker of the generation exits.
     drop(tx_driver);
     Generation {
-        handles,
+        ports,
+        fwd_tx: fwd_tx.into_iter().map(chan::link).collect(),
+        label_tx: chan::link(label_tx),
+        rx_driver,
+        stats_seen: 0,
+        devices: devices.to_vec(),
+        last_seen: vec![Instant::now(); s_n],
+        heard: vec![false; s_n],
+        grace: job.heartbeat_grace.max(1),
+        remote: false,
+    }
+}
+
+/// Start one generation on remote worker processes: build each stage's
+/// `StageAssign` (the serialized `StagePlan` + `StageCodec` config of the
+/// handshake), route it to the worker connection owning the device, and
+/// pass the ready barrier. The interpreter running in those processes is
+/// the same one the chan path runs in threads.
+#[allow(clippy::too_many_arguments)]
+fn assign_generation(
+    plane: &mut TcpPlane,
+    manifest: &Manifest,
+    job: &Job,
+    schedule: &PipelineSchedule,
+    devices: &[usize],
+    plan: &CompressPlan,
+    iter0: u32,
+    iters: usize,
+    init: &mut [Option<StageState>],
+    slow_dev: Option<(usize, f64)>,
+    deadline: Duration,
+) -> anyhow::Result<Generation> {
+    let s_n = devices.len();
+    let cfg = &manifest.config;
+    let mut assigns = Vec::with_capacity(s_n);
+    for s in 0..s_n {
+        let p = stage_params(job, devices, s, slow_dev);
+        assigns.push(StageAssign {
+            stage: s,
+            n_stages: s_n,
+            device: devices[s],
+            next_device: p.next_device,
+            prev_device: p.prev_device,
+            config: cfg.name.clone(),
+            backend: job.backend,
+            optimizer: job.optimizer.clone(),
+            chunk: cfg.d_model,
+            fwd: p.next_device.map(|d| LinkSpec::from_plan(plan, d, OpDataKind::Activation)),
+            bwd: p.prev_device.map(|d| LinkSpec::from_plan(plan, d, OpDataKind::Gradient)),
+            tasks: schedule.tasks[s].clone(),
+            iter0,
+            iters,
+            n_micro: job.n_micro,
+            lr: job.lr,
+            momentum: job.momentum,
+            param_seed: p.param_seed,
+            slow_factor: p.slow_factor,
+            pace_s: p.pace_s,
+            heartbeat_s: job.heartbeat_s,
+            kill_at_iter: p.kill_at_iter,
+            init_state: init[s].take(),
+        });
+    }
+    let ready_timeout = (deadline * job.heartbeat_grace.max(1)).max(Duration::from_secs(5));
+    let (rx_driver, fwd_tx, label_tx) = plane.begin_generation(devices, assigns, ready_timeout)?;
+    Ok(Generation {
+        ports: (0..s_n).map(|_| Port::Remote).collect(),
         fwd_tx,
         label_tx,
         rx_driver,
@@ -324,13 +468,53 @@ fn spawn_generation(
         devices: devices.to_vec(),
         last_seen: vec![Instant::now(); s_n],
         heard: vec![false; s_n],
+        grace: job.heartbeat_grace.max(1),
+        remote: true,
+    })
+}
+
+/// Start a generation over whichever plane the job runs on.
+#[allow(clippy::too_many_arguments)]
+fn start_generation(
+    plane: &mut Plane,
+    manifest: &Manifest,
+    job: &Job,
+    schedule: &PipelineSchedule,
+    devices: &[usize],
+    plan: &CompressPlan,
+    iter0: u32,
+    iters: usize,
+    init: &mut [Option<StageState>],
+    slow_dev: Option<(usize, f64)>,
+    hb: Option<Duration>,
+    deadline: Option<Duration>,
+) -> anyhow::Result<Generation> {
+    match plane {
+        Plane::Chan => Ok(spawn_generation(
+            manifest, job, schedule, devices, plan, iter0, iters, init, slow_dev, hb,
+        )),
+        Plane::Tcp(p) => assign_generation(
+            p,
+            manifest,
+            job,
+            schedule,
+            devices,
+            plan,
+            iter0,
+            iters,
+            init,
+            slow_dev,
+            deadline.expect("tcp transport requires heartbeats"),
+        ),
     }
 }
 
 /// Stop a generation at an iteration boundary (workers are blocked on
 /// their first recv of the next iteration), collect state snapshots and
-/// remaining stats, and join the threads. Also used as the end-of-run
-/// drain, where the Stop sends land on already-dropped receivers.
+/// remaining stats, and join the threads (chan) / leave the worker
+/// processes idling for the next Assign (tcp). Also used as the
+/// end-of-run drain, where the Stop sends land on already-dropped
+/// receivers.
 ///
 /// All threads are joined on every path. Worker errors are reported
 /// *after* the join, so a failing run can no longer leak detached threads
@@ -338,25 +522,62 @@ fn spawn_generation(
 /// blocked on a dead neighbor cannot observe Stop without ticking
 /// receives, so a Fatal aborts immediately as in PR 3.
 fn teardown(
+    plane: &mut Plane,
     gen: Generation,
     s_n: usize,
     snapshots: &mut [Option<StageState>],
     all_stats: &mut Vec<WorkerStats>,
     join_always: bool,
+    deadline: Option<Duration>,
 ) -> anyhow::Result<()> {
+    // Between generations remote workers are legitimately silent: disarm
+    // the socket deadline monitors before they misread the quiet.
+    if let Plane::Tcp(p) = plane {
+        p.monitor_off();
+    }
     for tx in &gen.fwd_tx {
         let _ = tx.send(Wire::Stop);
     }
     let _ = gen.label_tx.send(Wire::Stop);
     let mut seen = gen.stats_seen;
     let mut first_err: Option<String> = None;
+    // Remote driver lanes never disconnect on their own (the plane holds
+    // a sender), so the drain is budgeted instead of open-ended.
+    let budget = gen
+        .remote
+        .then(|| (deadline.unwrap_or_default() * 4).max(Duration::from_secs(10)));
+    let t0 = Instant::now();
     while seen < s_n {
-        match gen.rx_driver.recv() {
+        let msg = match budget {
+            None => gen.rx_driver.recv().map_err(|_| ()),
+            Some(b) => match gen.rx_driver.recv_timeout(Duration::from_millis(100)) {
+                Ok(m) => Ok(m),
+                Err(RecvTimeoutError::Disconnected) => Err(()),
+                Err(RecvTimeoutError::Timeout) => {
+                    if t0.elapsed() > b {
+                        if first_err.is_none() {
+                            first_err = Some(format!(
+                                "teardown drain: {seen}/{s_n} worker stats after {:.1}s",
+                                b.as_secs_f64()
+                            ));
+                        }
+                        break;
+                    }
+                    continue;
+                }
+            },
+        };
+        match msg {
             Ok(Wire::Stats(st)) => {
                 all_stats.push(st);
                 seen += 1;
             }
-            Ok(Wire::Snapshot { stage, state }) => snapshots[stage] = Some(state),
+            Ok(Wire::Snapshot { stage, state }) => {
+                // `stage` is network input over TCP: bounds-check it.
+                if let Some(slot) = snapshots.get_mut(stage) {
+                    *slot = Some(state);
+                }
+            }
             Ok(Wire::Fatal { stage, error }) => {
                 let msg = format!("stage {stage} failed: {error}");
                 if !join_always {
@@ -367,10 +588,15 @@ fn teardown(
                 }
             }
             Ok(_) => {} // stale losses/profiles/heartbeats from the stopped iteration
-            Err(_) => break, // all workers exited (join reports errors)
+            Err(()) => break, // all workers exited (join reports errors)
         }
     }
-    for h in gen.handles {
+    if let Plane::Tcp(p) = plane {
+        // Post-drain stragglers must not leak into the next generation.
+        p.clear_driver();
+    }
+    for p in gen.ports {
+        let Port::Thread(h) = p else { continue };
         match h.join() {
             Ok(Ok(())) => {}
             Ok(Err(e)) => {
@@ -396,12 +622,17 @@ fn teardown(
 /// the dead stage sends nothing), then join every thread. Survivors
 /// observe Stop even when blocked on a dead neighbor because their
 /// ticking receives poll the forward link, so the join cannot hang.
+/// Remote survivors park awaiting the recovery generation's Assign.
 fn churn_teardown(
+    plane: &mut Plane,
     gen: Generation,
     s_n: usize,
     deadline: Duration,
     all_stats: &mut Vec<WorkerStats>,
 ) {
+    if let Plane::Tcp(p) = plane {
+        p.monitor_off();
+    }
     for tx in &gen.fwd_tx {
         let _ = tx.send(Wire::Stop);
     }
@@ -421,8 +652,13 @@ fn churn_teardown(
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    for h in gen.handles {
-        let _ = h.join();
+    if let Plane::Tcp(p) = plane {
+        p.clear_driver();
+    }
+    for p in gen.ports {
+        if let Port::Thread(h) = p {
+            let _ = h.join();
+        }
     }
 }
 
@@ -511,11 +747,31 @@ fn collect_checkpoint_states(
 
 /// Run a full decentralized training job. Returns the report.
 pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
+    run_with_listener(job, None)
+}
+
+/// `run` over an externally bound TCP listener (tests bind port 0 and
+/// must know the address before workers can connect; ignored — and
+/// rejected — under the chan transport).
+pub fn run_with_listener(
+    job: &Job,
+    listener: Option<TcpListener>,
+) -> anyhow::Result<TrainReport> {
     let manifest = match job.backend {
         BackendKind::Pjrt => Manifest::load(&job.artifacts_root, &job.config)?,
-        BackendKind::Null => Manifest::synthetic(null_model_cfg(&job.config)),
+        BackendKind::Null => Manifest::synthetic(ModelCfg::null_sim(&job.config)),
     };
     let cfg = manifest.config.clone();
+
+    // Liveness plane: beacon interval and the death deadline.
+    let hb = if job.heartbeat_s > 0.0 {
+        Some(Duration::from_secs_f64(job.heartbeat_s))
+    } else {
+        None
+    };
+    let deadline = hb
+        .map(|_| Duration::from_secs_f64(job.heartbeat_s * job.heartbeat_timeout.max(1) as f64));
+
     let mut tb = testbed::by_id(job.testbed, job.seed);
     anyhow::ensure!(
         cfg.n_stages <= tb.nodes.len(),
@@ -523,6 +779,62 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
         cfg.n_stages,
         tb.nodes.len()
     );
+
+    // Transport plane. The TCP plane accepts the worker-process pool up
+    // front: scheduling below only places stages on connected devices.
+    let mut plane = match job.transport {
+        TransportKind::Chan => {
+            anyhow::ensure!(
+                listener.is_none(),
+                "a TCP listener was provided but the transport is chan"
+            );
+            Plane::Chan
+        }
+        TransportKind::Tcp => {
+            let dl = deadline.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--transport tcp requires the liveness plane (--heartbeat-interval > 0)"
+                )
+            })?;
+            let n_workers = job.workers.unwrap_or(cfg.n_stages);
+            anyhow::ensure!(
+                n_workers >= cfg.n_stages,
+                "--workers {n_workers} < {} pipeline stages",
+                cfg.n_stages
+            );
+            anyhow::ensure!(
+                n_workers <= tb.nodes.len(),
+                "--workers {n_workers} > {} testbed devices",
+                tb.nodes.len()
+            );
+            Plane::Tcp(TcpPlane::start(
+                &job.listen,
+                listener,
+                &job.token,
+                n_workers,
+                tb.nodes.len(),
+                MonitorCfg { deadline: dl, grace: job.heartbeat_grace.max(1) },
+            )?)
+        }
+    };
+
+    // TCP: a device is only real if a worker process owns it — fail every
+    // other testbed node so schedulers and the failover re-planner never
+    // place a stage where no process can run it.
+    if let Plane::Tcp(p) = &plane {
+        let live = p.live_devices();
+        for d in 0..tb.nodes.len() {
+            if !live.contains(&d) {
+                tb.fail_node(d);
+            }
+        }
+        anyhow::ensure!(
+            tb.alive_nodes().len() >= cfg.n_stages,
+            "{} connected workers < {} stages",
+            tb.alive_nodes().len(),
+            cfg.n_stages
+        );
+    }
 
     // Stage-level OP-DAG for scheduling.
     let spec = TransformerSpec {
@@ -541,6 +853,12 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
                 "--placement needs {} device ids",
                 cfg.n_stages
             );
+            for &d in devs {
+                anyhow::ensure!(
+                    d < tb.nodes.len() && !tb.is_failed(d),
+                    "--placement device {d} has no live worker"
+                );
+            }
             let chain = dag.compute_chain();
             let assign: Vec<usize> = {
                 let mut a = vec![usize::MAX; dag.len()];
@@ -556,7 +874,18 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
             };
             crate::opdag::Partition::new(assign)
         }
-        None => crate::scheduler::by_name(&job.scheduler)?.schedule(&dag, &tb)?,
+        None if tb.alive_nodes().len() == tb.nodes.len() => {
+            crate::scheduler::by_name(&job.scheduler)?.schedule(&dag, &tb)?
+        }
+        None => {
+            // Schedule on the surviving view (only connected devices) and
+            // map the partition back to original device ids.
+            let (sub, map) = tb.surviving();
+            let sub_part = crate::scheduler::by_name(&job.scheduler)?.schedule(&dag, &sub)?;
+            let assign: Vec<usize> =
+                (0..dag.len()).map(|op| map[sub_part.node_of(op)]).collect();
+            Partition::new(assign)
+        }
     };
     part.validate(&dag)?;
     let mut stage_plan = StagePlan::from_partition(&dag, &part, &tb);
@@ -574,14 +903,6 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
     let schedule = PipelineSchedule::new(job.pipeline, s_n, job.n_micro);
     schedule.validate()?;
 
-    // Liveness plane: beacon interval and the death deadline.
-    let hb = if job.heartbeat_s > 0.0 {
-        Some(Duration::from_secs_f64(job.heartbeat_s))
-    } else {
-        None
-    };
-    let deadline = hb
-        .map(|_| Duration::from_secs_f64(job.heartbeat_s * job.heartbeat_timeout.max(1) as f64));
     // The head stage answers boundary Checkpoints via its ticking label
     // receive — without heartbeats it would deadlock on the broadcast.
     anyhow::ensure!(
@@ -615,9 +936,20 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
     // iteration boundary (advise mode, or auto blocked by hysteresis).
     let mut last_unapplied: Option<(Vec<usize>, bool)> = None;
 
-    let mut gen = spawn_generation(
-        &manifest, job, &schedule, &devices, &plan, 0, job.iters, &mut snapshots, slow_dev, hb,
-    );
+    let mut gen = start_generation(
+        &mut plane,
+        &manifest,
+        job,
+        &schedule,
+        &devices,
+        &plan,
+        0,
+        job.iters,
+        &mut snapshots,
+        slow_dev,
+        hb,
+        deadline,
+    )?;
 
     // ---- drive the training loop --------------------------------------
     let mut corpus = SyntheticCorpus::new(cfg.vocab, job.seed ^ 0xDA7A);
@@ -708,6 +1040,15 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
         // ---- straggler check at the iteration boundary ----------------
         if death.is_none() {
             if job.replan != ReplanMode::Off && it + 1 < job.iters {
+                // A silently-dead idle connection (e.g. a spare worker
+                // that crashed) must never be a migration candidate.
+                if let Plane::Tcp(p) = &plane {
+                    for d in p.dead_devices() {
+                        if !tb.is_failed(d) {
+                            tb.fail_node(d);
+                        }
+                    }
+                }
                 let inp = ReplanInput {
                     dag: &dag,
                     testbed: &tb,
@@ -747,7 +1088,15 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
                         };
                         if apply {
                             let t_mig = Instant::now();
-                            teardown(gen, s_n, &mut snapshots, &mut all_stats, hb.is_some())?;
+                            teardown(
+                                &mut plane,
+                                gen,
+                                s_n,
+                                &mut snapshots,
+                                &mut all_stats,
+                                hb.is_some(),
+                                deadline,
+                            )?;
                             part = d.candidate.partition.clone();
                             stage_plan = StagePlan::from_partition(&dag, &part, &tb);
                             anyhow::ensure!(
@@ -763,7 +1112,8 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
                             }
                             devices = stage_plan.devices.clone();
                             plan = compress_plan_for(job, cfg.microbatch, &dag, &part, &tb);
-                            gen = spawn_generation(
+                            gen = start_generation(
+                                &mut plane,
                                 &manifest,
                                 job,
                                 &schedule,
@@ -774,7 +1124,8 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
                                 &mut snapshots,
                                 slow_dev,
                                 hb,
-                            );
+                                deadline,
+                            )?;
                             ev.migration_s = t_mig.elapsed().as_secs_f64();
                         }
                         report.replans.push(ev);
@@ -800,7 +1151,14 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
         );
         let t_replan = Instant::now();
         tb.fail_node(dead_dev);
-        churn_teardown(gen, s_n, dl, &mut all_stats);
+        // Other silently-dead worker connections (e.g. an idle spare that
+        // vanished) must not receive stages either.
+        if let Plane::Tcp(p) = &plane {
+            for d in p.dead_devices() {
+                tb.fail_node(d);
+            }
+        }
+        churn_teardown(&mut plane, gen, s_n, dl, &mut all_stats);
         anyhow::ensure!(
             job.replan == ReplanMode::Auto,
             "stage {dead_stage} (device {dead_dev}) died during iteration {it} ({cause}); \
@@ -879,7 +1237,8 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
             *sn = None;
         }
         last_unapplied = None;
-        gen = spawn_generation(
+        gen = start_generation(
+            &mut plane,
             &manifest,
             job,
             &schedule,
@@ -890,7 +1249,8 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
             &mut init,
             slow_dev,
             hb,
-        );
+            deadline,
+        )?;
         let restore_s = t_restore.elapsed().as_secs_f64();
         report.recoveries.push(RecoveryEvent {
             died_iter: it,
@@ -910,7 +1270,10 @@ pub fn run(job: &Job) -> anyhow::Result<TrainReport> {
     }
 
     // ---- drain the final generation ------------------------------------
-    teardown(gen, s_n, &mut snapshots, &mut all_stats, hb.is_some())?;
+    teardown(&mut plane, gen, s_n, &mut snapshots, &mut all_stats, hb.is_some(), deadline)?;
+    if let Plane::Tcp(p) = &plane {
+        p.shutdown();
+    }
     report.placement = devices;
 
     // Achieved wire compression (dense payload bytes / wire bytes).

@@ -11,6 +11,7 @@ use crate::pipeline::{PipelineSchedule, ScheduleKind};
 use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
 use crate::simnet::{simulate_iteration, StagePlan};
 use crate::trainer::TrainReport;
+use crate::transport::TransportKind;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::math::{fmt_bytes, fmt_secs};
@@ -324,6 +325,11 @@ fn simulate_churn(args: &Args) -> Result<()> {
         std::process::id()
     ));
     let _ = std::fs::remove_dir_all(&ckpt_dir);
+    // Transport knobs pass through: with `--transport tcp` the *churn*
+    // run executes over real sockets and worker processes while the
+    // clean reference stays in-process — the loss gate below then proves
+    // chan ≡ tcp bitwise on top of the recovery gate.
+    let parsed = Job::from_args(args)?;
     let base = Job {
         config: "sim-churn".into(),
         backend: BackendKind::Null,
@@ -341,20 +347,30 @@ fn simulate_churn(args: &Args) -> Result<()> {
         // not misdeclared dead.
         heartbeat_s: args.f64("heartbeat-interval", 0.025),
         heartbeat_timeout: args.u64("heartbeat-timeout", 40) as u32,
+        heartbeat_grace: parsed.heartbeat_grace,
+        transport: parsed.transport,
+        listen: parsed.listen,
+        token: parsed.token,
+        workers: parsed.workers,
+        pace_s: parsed.pace_s,
         checkpoint_every: args.usize("checkpoint-every", 2),
         checkpoint_dir: ckpt_dir.clone(),
         ..Job::default()
     };
     println!(
         "churn smoke: kill device {kill_dev} at iteration {kill_at} of {iters} \
-         (checkpoint every {}, replan {})",
+         (checkpoint every {}, replan {}, transport {})",
         base.checkpoint_every,
-        replan.name()
+        replan.name(),
+        base.transport.name()
     );
 
+    // The reference run is always in-process (chan): over tcp the same
+    // worker pool cannot serve two broker lifetimes back-to-back.
     let clean = broker::run(&Job {
         replan: ReplanMode::Off,
         checkpoint_every: 0,
+        transport: TransportKind::Chan,
         ..base.clone()
     })?;
     let churn_result = broker::run(&Job {
@@ -426,17 +442,45 @@ fn print_recoveries(report: &TrainReport) {
     }
 }
 
+/// `fusionllm worker --connect HOST:PORT [--token T] [--device D]
+///  [--artifacts ROOT] [--retry-secs S]` — a remote stage executor: one
+/// OS process hosting one pipeline stage per generation, assigned by the
+/// broker over the TCP transport.
+pub fn worker(args: &Args) -> Result<()> {
+    let usage = "usage: fusionllm worker --connect HOST:PORT [--token T] [--device D] \
+                 [--artifacts ROOT] [--retry-secs S]";
+    let connect = args
+        .opt_str("connect")
+        .ok_or_else(|| anyhow::anyhow!(usage))?
+        .to_string();
+    let opts = crate::worker::WorkerOpts {
+        connect,
+        token: args.str("token", "fusionllm"),
+        device: args
+            .opt_str("device")
+            .map(|s| s.parse().expect("--device expects a device id")),
+        artifacts: args
+            .opt_str("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(crate::broker::job::default_artifacts_root),
+        retry: std::time::Duration::from_secs_f64(args.f64("retry-secs", 10.0).max(0.0)),
+    };
+    crate::worker::run_worker(&opts)
+}
+
 /// `fusionllm train --config C --steps N ...` — real PJRT training.
 pub fn train(args: &Args) -> Result<()> {
     let job = Job::from_args(args)?;
     println!(
-        "training config={} scheduler={} compress={} ratio={} pipeline={} replan={} steps={}",
+        "training config={} scheduler={} compress={} ratio={} pipeline={} replan={} \
+         transport={} steps={}",
         job.config,
         job.scheduler,
         job.compress.name(),
         job.ratio,
         job.pipeline.name(),
         job.replan.name(),
+        job.transport.name(),
         job.iters
     );
     let report = broker::run(&job)?;

@@ -20,5 +20,6 @@ pub mod runtime;
 pub mod scheduler;
 pub mod simnet;
 pub mod trainer;
+pub mod transport;
 pub mod util;
 pub mod worker;

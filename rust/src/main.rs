@@ -5,6 +5,7 @@
 //!   schedule  — partition a model DAG onto a testbed and print the plan
 //!   simulate  — discrete-event iteration-latency simulation (Fig. 10/11)
 //!   train     — end-to-end pipeline training over PJRT artifacts (Fig. 8)
+//!   worker    — remote stage executor (`--connect` to a tcp-transport broker)
 //!   economics — GPU cost table (Table 1)
 //!   bench-diff — compare two BENCH_micro_hotpath.json files (CI perf gate)
 
@@ -18,6 +19,7 @@ fn main() {
         "schedule" => fusionllm::cmd::schedule(&args),
         "simulate" => fusionllm::cmd::simulate(&args),
         "train" => fusionllm::cmd::train(&args),
+        "worker" => fusionllm::cmd::worker(&args),
         "economics" => fusionllm::cmd::economics(&args),
         "bench-diff" => fusionllm::cmd::bench_diff(&args),
         "help" | "--help" | "-h" => {
@@ -50,6 +52,8 @@ fn print_help() {
                      [--slow-node I --slow-factor F --replan M [--min-recovery X]]\n\
                                                  straggler scenario + re-planning smoke\n\
            train     --config PATH --steps N    real pipeline training over artifacts (Fig. 8)\n\
+           worker    --connect HOST:PORT        remote stage executor for a tcp-transport\n\
+                     [--token T --device D]      broker (one process = one device)\n\
            economics                             GPU-days table (Table 1)\n\
            bench-diff OLD.json NEW.json [--max-regress 20]\n\
                                                  perf gate: fail on median-time regression\n\
@@ -68,10 +72,21 @@ fn print_help() {
            --slow-stage S / --slow-node I, --slow-factor F\n\
                                                  straggler injection (train: stage's device;\n\
                                                   simulate: device id)\n\
+         Transport (train & simulate churn mode):\n\
+           --transport chan|tcp                  worker plane: in-process channels (default)\n\
+                                                  or TCP sockets + worker processes\n\
+           --listen HOST:PORT                    tcp: broker listen address (127.0.0.1:4471)\n\
+           --token T                             tcp: shared handshake secret (fusionllm)\n\
+           --workers N                           tcp: worker pool size (default = stages;\n\
+                                                  start one spare so failover has a device)\n\
+           --pace S                              Null backend: sleep S sec per forward\n\
+                                                  (paces demos so kills land mid-run)\n\
          Fault tolerance (train & simulate churn mode):\n\
            --heartbeat-interval S                worker liveness beacon period, sec (0.25;\n\
                                                   0 disables the liveness plane)\n\
            --heartbeat-timeout N                 missed intervals before a stage is dead (40)\n\
+           --heartbeat-grace G                   first-contact deadline multiplier (4):\n\
+                                                  covers slow PJRT compiles before beacon 1\n\
            --checkpoint-every K                  broker-side checkpoint every K iters (0=off)\n\
            --checkpoint-dir DIR                  versioned checkpoint store (checkpoints/)\n\
            --keep-checkpoints N                  versions retained on disk (3)\n\

@@ -25,6 +25,25 @@ impl ModelCfg {
     pub fn act_elems(&self) -> usize {
         self.microbatch * self.seq_len * self.d_model
     }
+
+    /// The config the Null backend trains (no artifacts on disk): tiny
+    /// shapes, 4 stages — enough to exercise every broker/wire code
+    /// path. Shared by the broker and remote worker processes so both
+    /// sides of a TCP handshake derive identical shapes from the name.
+    pub fn null_sim(name: &str) -> ModelCfg {
+        ModelCfg {
+            name: name.to_string(),
+            vocab: 61,
+            d_model: 8,
+            n_heads: 1,
+            n_layers: 4,
+            seq_len: 8,
+            microbatch: 2,
+            n_stages: 4,
+            compress_ratio: 1.0,
+            topk_k: 0,
+        }
+    }
 }
 
 /// Parameter initialization spec.

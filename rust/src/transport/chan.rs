@@ -1,0 +1,78 @@
+//! `ChanTransport`: the in-process mpsc implementation of the transport
+//! traits — today's default path, kept verbatim as the differential
+//! oracle for `TcpTransport` (the e2e tests require bitwise-identical
+//! loss trajectories across the two).
+
+use crate::transport::{Endpoint, Link, LinkClosed, RecvError};
+use crate::worker::messages::Wire;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::Duration;
+
+/// Sending half of an in-process lane.
+pub struct ChanLink(pub Sender<Wire>);
+
+impl Link for ChanLink {
+    fn send(&self, w: Wire) -> Result<(), LinkClosed> {
+        self.0.send(w).map_err(|_| LinkClosed)
+    }
+
+    fn clone_link(&self) -> Box<dyn Link> {
+        Box::new(ChanLink(self.0.clone()))
+    }
+}
+
+/// Receiving half of an in-process lane.
+pub struct ChanEndpoint(pub Receiver<Wire>);
+
+impl Endpoint for ChanEndpoint {
+    fn recv(&self) -> Result<Wire, RecvError> {
+        self.0.recv().map_err(|_| RecvError::Closed)
+    }
+
+    fn recv_deadline(&self, d: Duration) -> Result<Wire, RecvError> {
+        self.0.recv_timeout(d).map_err(|e| match e {
+            RecvTimeoutError::Timeout => RecvError::Timeout,
+            RecvTimeoutError::Disconnected => RecvError::Closed,
+        })
+    }
+
+    fn try_recv(&self) -> Result<Wire, RecvError> {
+        self.0.try_recv().map_err(|e| match e {
+            TryRecvError::Empty => RecvError::Timeout,
+            TryRecvError::Disconnected => RecvError::Closed,
+        })
+    }
+}
+
+/// Box an mpsc sender as a transport link.
+pub fn link(tx: Sender<Wire>) -> Box<dyn Link> {
+    Box::new(ChanLink(tx))
+}
+
+/// Box an mpsc receiver as a transport endpoint.
+pub fn endpoint(rx: Receiver<Wire>) -> Box<dyn Endpoint> {
+    Box::new(ChanEndpoint(rx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn chan_semantics_map_onto_the_traits() {
+        let (tx, rx) = channel::<Wire>();
+        let l = link(tx);
+        let e = endpoint(rx);
+        l.send(Wire::Stop).unwrap();
+        assert_eq!(e.recv().unwrap(), Wire::Stop);
+        assert_eq!(e.try_recv().unwrap_err(), RecvError::Timeout);
+        assert_eq!(
+            e.recv_deadline(Duration::from_millis(1)).unwrap_err(),
+            RecvError::Timeout
+        );
+        let l2 = l.clone_link();
+        drop((l, l2));
+        assert_eq!(e.recv().unwrap_err(), RecvError::Closed);
+    }
+}

@@ -1,0 +1,700 @@
+//! Compact binary bodies for control-plane frames: every `Wire` variant
+//! plus the connection handshake (`Hello` → `StageAssign` → `Ready`).
+//!
+//! `Wire::Packet` bodies are the existing OP-Data wire encoding verbatim
+//! (this layer adds nothing on top of the payload hot path); everything
+//! else is flat little-endian fields behind the frame checksum. Decoding
+//! never panics: a truncated or trailing-garbage body is a clean error,
+//! and the property tests in `rust/tests/transport.rs` fuzz exactly that.
+
+use crate::compress::{CompressKind, ValueCodec};
+use crate::pipeline::{Task, TaskKind};
+use crate::transport::frame::FrameKind;
+use crate::worker::messages::{LinkSpec, StageState, Wire, WorkerStats};
+use crate::worker::BackendKind;
+
+// ---- primitive writers -------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// usize as u64 (wire-portable across word sizes).
+fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+/// Option<usize> as i64 (-1 = None).
+fn put_opt_usize(out: &mut Vec<u8>, v: Option<usize>) {
+    let enc: i64 = v.map(|x| x as i64).unwrap_or(-1);
+    out.extend_from_slice(&enc.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_i32s(out: &mut Vec<u8>, xs: &[i32]) {
+    put_u64(out, xs.len() as u64);
+    for v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ---- primitive reader --------------------------------------------------
+
+/// Cursor over an untrusted body; every read is bounds-checked.
+pub struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    pub fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| anyhow::anyhow!("frame body truncated"))?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> anyhow::Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn opt_usize(&mut self) -> anyhow::Result<Option<usize>> {
+        let v = i64::from_le_bytes(self.take(8)?.try_into().unwrap());
+        Ok(if v < 0 { None } else { Some(v as usize) })
+    }
+
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("length overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i32s(&mut self) -> anyhow::Result<Vec<i32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("length overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// The whole body must be consumed — trailing bytes mean the peer and
+    /// this build disagree about the message layout.
+    fn finish(self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.b.len(),
+            "{} trailing bytes after message body",
+            self.b.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---- small enum tags ---------------------------------------------------
+
+fn compress_kind_u8(k: CompressKind) -> u8 {
+    match k {
+        CompressKind::None => 0,
+        CompressKind::TopK => 1,
+        CompressKind::AdaTopK => 2,
+        CompressKind::RandomK => 3,
+        CompressKind::Int8 => 4,
+    }
+}
+
+fn compress_kind_from(b: u8) -> anyhow::Result<CompressKind> {
+    Ok(match b {
+        0 => CompressKind::None,
+        1 => CompressKind::TopK,
+        2 => CompressKind::AdaTopK,
+        3 => CompressKind::RandomK,
+        4 => CompressKind::Int8,
+        other => anyhow::bail!("unknown compress kind tag {other}"),
+    })
+}
+
+fn value_codec_u8(c: ValueCodec) -> u8 {
+    match c {
+        ValueCodec::F32 => 0,
+        ValueCodec::Int8 => 1,
+    }
+}
+
+fn value_codec_from(b: u8) -> anyhow::Result<ValueCodec> {
+    Ok(match b {
+        0 => ValueCodec::F32,
+        1 => ValueCodec::Int8,
+        other => anyhow::bail!("unknown value codec tag {other}"),
+    })
+}
+
+fn backend_u8(b: BackendKind) -> u8 {
+    match b {
+        BackendKind::Pjrt => 0,
+        BackendKind::Null => 1,
+    }
+}
+
+fn backend_from(b: u8) -> anyhow::Result<BackendKind> {
+    Ok(match b {
+        0 => BackendKind::Pjrt,
+        1 => BackendKind::Null,
+        other => anyhow::bail!("unknown backend tag {other}"),
+    })
+}
+
+fn task_kind_u8(k: TaskKind) -> u8 {
+    match k {
+        TaskKind::Forward => 0,
+        TaskKind::Backward => 1,
+        TaskKind::Update => 2,
+    }
+}
+
+fn task_kind_from(b: u8) -> anyhow::Result<TaskKind> {
+    Ok(match b {
+        0 => TaskKind::Forward,
+        1 => TaskKind::Backward,
+        2 => TaskKind::Update,
+        other => anyhow::bail!("unknown task kind tag {other}"),
+    })
+}
+
+// ---- StageState --------------------------------------------------------
+
+fn put_state(out: &mut Vec<u8>, st: &StageState) {
+    put_f32s(out, &st.params);
+    put_f32s(out, &st.momentum);
+    put_f32s(out, &st.second);
+}
+
+fn read_state(rd: &mut Rd) -> anyhow::Result<StageState> {
+    Ok(StageState { params: rd.f32s()?, momentum: rd.f32s()?, second: rd.f32s()? })
+}
+
+// ---- Wire --------------------------------------------------------------
+
+/// Serialize one `Wire` into a frame body (appended to `out`, which the
+/// caller clears) and return the frame kind tag it travels under.
+pub fn encode_wire(w: &Wire, out: &mut Vec<u8>) -> FrameKind {
+    match w {
+        Wire::Data { iter, micro, tokens } => {
+            put_u32(out, *iter);
+            put_u32(out, *micro);
+            put_i32s(out, tokens);
+            FrameKind::Data
+        }
+        Wire::Labels { iter, micro, targets } => {
+            put_u32(out, *iter);
+            put_u32(out, *micro);
+            put_i32s(out, targets);
+            FrameKind::Labels
+        }
+        Wire::Packet(buf) => {
+            out.extend_from_slice(buf);
+            FrameKind::Packet
+        }
+        Wire::Loss { iter, micro, loss } => {
+            put_u32(out, *iter);
+            put_u32(out, *micro);
+            put_f32(out, *loss);
+            FrameKind::Loss
+        }
+        Wire::IterProfile { stage, iter, fwd_s, bwd_s, update_s, bytes, msgs } => {
+            put_usize(out, *stage);
+            put_u32(out, *iter);
+            put_f64(out, *fwd_s);
+            put_f64(out, *bwd_s);
+            put_f64(out, *update_s);
+            put_f64(out, *bytes);
+            put_u64(out, *msgs);
+            FrameKind::IterProfile
+        }
+        Wire::Snapshot { stage, state } => {
+            put_usize(out, *stage);
+            put_state(out, state);
+            FrameKind::Snapshot
+        }
+        Wire::Heartbeat { stage, iter } => {
+            put_usize(out, *stage);
+            put_u32(out, *iter);
+            FrameKind::Heartbeat
+        }
+        Wire::Checkpoint { iter } => {
+            put_u32(out, *iter);
+            FrameKind::Checkpoint
+        }
+        Wire::Stats(st) => {
+            put_usize(out, st.stage);
+            put_usize(out, st.device);
+            put_f64(out, st.fwd_s);
+            put_f64(out, st.bwd_s);
+            put_f64(out, st.update_s);
+            put_f64(out, st.wait_s);
+            put_f64(out, st.bytes_sent);
+            put_f64(out, st.dense_bytes);
+            put_u64(out, st.msgs_sent);
+            put_f64(out, st.flops);
+            FrameKind::Stats
+        }
+        Wire::Fatal { stage, error } => {
+            put_usize(out, *stage);
+            put_str(out, error);
+            FrameKind::Fatal
+        }
+        Wire::Stop => FrameKind::Stop,
+    }
+}
+
+/// Decode a frame body back into a `Wire`. Handshake kinds (Hello /
+/// Assign / Ready / Exit) are not `Wire` messages and error here.
+pub fn decode_wire(kind: FrameKind, body: &[u8]) -> anyhow::Result<Wire> {
+    let mut rd = Rd::new(body);
+    let w = match kind {
+        FrameKind::Data => Wire::Data {
+            iter: rd.u32()?,
+            micro: rd.u32()?,
+            tokens: rd.i32s()?,
+        },
+        FrameKind::Labels => Wire::Labels {
+            iter: rd.u32()?,
+            micro: rd.u32()?,
+            targets: rd.i32s()?,
+        },
+        FrameKind::Packet => {
+            return Ok(Wire::Packet(body.to_vec()));
+        }
+        FrameKind::Loss => Wire::Loss {
+            iter: rd.u32()?,
+            micro: rd.u32()?,
+            loss: rd.f32()?,
+        },
+        FrameKind::IterProfile => Wire::IterProfile {
+            stage: rd.usize()?,
+            iter: rd.u32()?,
+            fwd_s: rd.f64()?,
+            bwd_s: rd.f64()?,
+            update_s: rd.f64()?,
+            bytes: rd.f64()?,
+            msgs: rd.u64()?,
+        },
+        FrameKind::Snapshot => Wire::Snapshot {
+            stage: rd.usize()?,
+            state: read_state(&mut rd)?,
+        },
+        FrameKind::Heartbeat => Wire::Heartbeat { stage: rd.usize()?, iter: rd.u32()? },
+        FrameKind::Checkpoint => Wire::Checkpoint { iter: rd.u32()? },
+        FrameKind::Stats => Wire::Stats(WorkerStats {
+            stage: rd.usize()?,
+            device: rd.usize()?,
+            fwd_s: rd.f64()?,
+            bwd_s: rd.f64()?,
+            update_s: rd.f64()?,
+            wait_s: rd.f64()?,
+            bytes_sent: rd.f64()?,
+            dense_bytes: rd.f64()?,
+            msgs_sent: rd.u64()?,
+            flops: rd.f64()?,
+        }),
+        FrameKind::Fatal => Wire::Fatal { stage: rd.usize()?, error: rd.str()? },
+        FrameKind::Stop => Wire::Stop,
+        FrameKind::Hello | FrameKind::Assign | FrameKind::Ready | FrameKind::Exit => {
+            anyhow::bail!("handshake frame {kind:?} is not a Wire message")
+        }
+    };
+    rd.finish()?;
+    Ok(w)
+}
+
+// ---- handshake ---------------------------------------------------------
+
+/// Worker -> broker on connect.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    /// Shared-secret token; mismatches are rejected before any assignment.
+    pub token: String,
+    /// Requested device id (None = broker assigns the next free one).
+    pub device: Option<usize>,
+}
+
+impl Hello {
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        put_str(out, &self.token);
+        put_opt_usize(out, self.device);
+    }
+
+    pub fn decode(body: &[u8]) -> anyhow::Result<Hello> {
+        let mut rd = Rd::new(body);
+        let h = Hello { token: rd.str()?, device: rd.opt_usize()? };
+        rd.finish()?;
+        Ok(h)
+    }
+}
+
+/// Broker -> worker: everything a remote process needs to run one stage
+/// of one worker generation — the serialized `StagePlan`/`StageCodec`
+/// configuration of the ISSUE handshake. Mirrors the in-process
+/// `StageCtx` minus the channel endpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageAssign {
+    pub stage: usize,
+    pub n_stages: usize,
+    pub device: usize,
+    pub next_device: Option<usize>,
+    pub prev_device: Option<usize>,
+    /// Model/artifact config name; PJRT workers load it from their local
+    /// artifacts root, Null workers synthesize it.
+    pub config: String,
+    pub backend: BackendKind,
+    pub optimizer: String,
+    /// Top-K row chunk (d_model) for the link encoders.
+    pub chunk: usize,
+    pub fwd: Option<LinkSpec>,
+    pub bwd: Option<LinkSpec>,
+    pub tasks: Vec<Task>,
+    pub iter0: u32,
+    pub iters: usize,
+    pub n_micro: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub param_seed: u64,
+    pub slow_factor: f64,
+    /// Artificial per-forward pacing (Null backend demos/CI), seconds.
+    pub pace_s: f64,
+    pub heartbeat_s: f64,
+    pub kill_at_iter: Option<u32>,
+    /// Migrated/restored state (checkpoint recovery, live migration).
+    pub init_state: Option<StageState>,
+}
+
+fn put_link_spec(out: &mut Vec<u8>, spec: &Option<LinkSpec>) {
+    match spec {
+        None => put_u8(out, 0),
+        Some(s) => {
+            put_u8(out, 1);
+            put_u8(out, compress_kind_u8(s.kind));
+            put_f64(out, s.ratio);
+            put_u8(out, value_codec_u8(s.codec));
+        }
+    }
+}
+
+fn read_link_spec(rd: &mut Rd) -> anyhow::Result<Option<LinkSpec>> {
+    Ok(match rd.u8()? {
+        0 => None,
+        1 => Some(LinkSpec {
+            kind: compress_kind_from(rd.u8()?)?,
+            ratio: rd.f64()?,
+            codec: value_codec_from(rd.u8()?)?,
+        }),
+        other => anyhow::bail!("bad link-spec presence tag {other}"),
+    })
+}
+
+impl StageAssign {
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        put_usize(out, self.stage);
+        put_usize(out, self.n_stages);
+        put_usize(out, self.device);
+        put_opt_usize(out, self.next_device);
+        put_opt_usize(out, self.prev_device);
+        put_str(out, &self.config);
+        put_u8(out, backend_u8(self.backend));
+        put_str(out, &self.optimizer);
+        put_usize(out, self.chunk);
+        put_link_spec(out, &self.fwd);
+        put_link_spec(out, &self.bwd);
+        put_u32(out, self.tasks.len() as u32);
+        for t in &self.tasks {
+            put_usize(out, t.stage);
+            put_usize(out, t.micro);
+            put_u8(out, task_kind_u8(t.kind));
+        }
+        put_u32(out, self.iter0);
+        put_usize(out, self.iters);
+        put_usize(out, self.n_micro);
+        put_f32(out, self.lr);
+        put_f32(out, self.momentum);
+        put_u64(out, self.param_seed);
+        put_f64(out, self.slow_factor);
+        put_f64(out, self.pace_s);
+        put_f64(out, self.heartbeat_s);
+        put_opt_usize(out, self.kill_at_iter.map(|k| k as usize));
+        match &self.init_state {
+            None => put_u8(out, 0),
+            Some(st) => {
+                put_u8(out, 1);
+                put_state(out, st);
+            }
+        }
+    }
+
+    pub fn decode(body: &[u8]) -> anyhow::Result<StageAssign> {
+        let mut rd = Rd::new(body);
+        let stage = rd.usize()?;
+        let n_stages = rd.usize()?;
+        let device = rd.usize()?;
+        let next_device = rd.opt_usize()?;
+        let prev_device = rd.opt_usize()?;
+        let config = rd.str()?;
+        let backend = backend_from(rd.u8()?)?;
+        let optimizer = rd.str()?;
+        let chunk = rd.usize()?;
+        let fwd = read_link_spec(&mut rd)?;
+        let bwd = read_link_spec(&mut rd)?;
+        let n_tasks = rd.u32()? as usize;
+        let mut tasks = Vec::with_capacity(n_tasks.min(4096));
+        for _ in 0..n_tasks {
+            tasks.push(Task {
+                stage: rd.usize()?,
+                micro: rd.usize()?,
+                kind: task_kind_from(rd.u8()?)?,
+            });
+        }
+        let a = StageAssign {
+            stage,
+            n_stages,
+            device,
+            next_device,
+            prev_device,
+            config,
+            backend,
+            optimizer,
+            chunk,
+            fwd,
+            bwd,
+            tasks,
+            iter0: rd.u32()?,
+            iters: rd.usize()?,
+            n_micro: rd.usize()?,
+            lr: rd.f32()?,
+            momentum: rd.f32()?,
+            param_seed: rd.u64()?,
+            slow_factor: rd.f64()?,
+            pace_s: rd.f64()?,
+            heartbeat_s: rd.f64()?,
+            kill_at_iter: rd.opt_usize()?.map(|k| k as u32),
+            init_state: match rd.u8()? {
+                0 => None,
+                1 => Some(read_state(&mut rd)?),
+                other => anyhow::bail!("bad init-state presence tag {other}"),
+            },
+        };
+        rd.finish()?;
+        Ok(a)
+    }
+}
+
+/// Worker -> broker: assignment accepted, lanes installed, about to
+/// initialize the backend (the first heartbeat marks init complete).
+pub fn encode_ready(stage: usize, out: &mut Vec<u8>) {
+    put_usize(out, stage);
+}
+
+pub fn decode_ready(body: &[u8]) -> anyhow::Result<usize> {
+    let mut rd = Rd::new(body);
+    let s = rd.usize()?;
+    rd.finish()?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_wire_variant_roundtrips() {
+        let msgs = vec![
+            Wire::Data { iter: 3, micro: 1, tokens: vec![1, -2, 60] },
+            Wire::Labels { iter: 3, micro: 0, targets: vec![5, 6] },
+            Wire::Packet(vec![0xAA; 17]),
+            Wire::Loss { iter: 9, micro: 2, loss: -0.125 },
+            Wire::IterProfile {
+                stage: 2,
+                iter: 7,
+                fwd_s: 0.25,
+                bwd_s: 0.5,
+                update_s: 0.0625,
+                bytes: 1024.0,
+                msgs: 6,
+            },
+            Wire::Snapshot {
+                stage: 1,
+                state: StageState {
+                    params: vec![1.0, -2.5],
+                    momentum: vec![0.5],
+                    second: vec![],
+                },
+            },
+            Wire::Heartbeat { stage: 3, iter: 11 },
+            Wire::Checkpoint { iter: 4 },
+            Wire::Stats(WorkerStats {
+                stage: 1,
+                device: 9,
+                fwd_s: 1.0,
+                bwd_s: 2.0,
+                update_s: 0.5,
+                wait_s: 0.25,
+                bytes_sent: 4096.0,
+                dense_bytes: 8192.0,
+                msgs_sent: 12,
+                flops: 1e9,
+            }),
+            Wire::Fatal { stage: 0, error: "boom: device lost".into() },
+            Wire::Stop,
+        ];
+        for m in msgs {
+            let mut body = Vec::new();
+            let kind = encode_wire(&m, &mut body);
+            let back = decode_wire(kind, &body).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn truncated_bodies_error_cleanly() {
+        let m = Wire::IterProfile {
+            stage: 2,
+            iter: 7,
+            fwd_s: 0.25,
+            bwd_s: 0.5,
+            update_s: 0.0625,
+            bytes: 1024.0,
+            msgs: 6,
+        };
+        let mut body = Vec::new();
+        let kind = encode_wire(&m, &mut body);
+        for cut in 0..body.len() {
+            assert!(decode_wire(kind, &body[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage is rejected too.
+        body.push(0);
+        assert!(decode_wire(kind, &body).is_err());
+    }
+
+    #[test]
+    fn stage_assign_roundtrips() {
+        let a = StageAssign {
+            stage: 1,
+            n_stages: 4,
+            device: 7,
+            next_device: Some(2),
+            prev_device: None,
+            config: "tiny".into(),
+            backend: BackendKind::Null,
+            optimizer: "adam".into(),
+            chunk: 128,
+            fwd: Some(LinkSpec {
+                kind: CompressKind::AdaTopK,
+                ratio: 50.0,
+                codec: ValueCodec::Int8,
+            }),
+            bwd: None,
+            tasks: vec![
+                Task { stage: 1, micro: 0, kind: TaskKind::Forward },
+                Task { stage: 1, micro: 0, kind: TaskKind::Backward },
+                Task { stage: 1, micro: 0, kind: TaskKind::Update },
+            ],
+            iter0: 5,
+            iters: 3,
+            n_micro: 2,
+            lr: 0.05,
+            momentum: 0.9,
+            param_seed: 0xDEAD_BEEF,
+            slow_factor: 1.0,
+            pace_s: 0.0,
+            heartbeat_s: 0.25,
+            kill_at_iter: Some(6),
+            init_state: Some(StageState {
+                params: vec![0.5; 3],
+                momentum: vec![],
+                second: vec![1.0],
+            }),
+        };
+        let mut body = Vec::new();
+        a.encode(&mut body);
+        assert_eq!(StageAssign::decode(&body).unwrap(), a);
+        for cut in 0..body.len() {
+            assert!(StageAssign::decode(&body[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn hello_and_ready_roundtrip() {
+        for h in [
+            Hello { token: "secret".into(), device: Some(4) },
+            Hello { token: String::new(), device: None },
+        ] {
+            let mut b = Vec::new();
+            h.encode(&mut b);
+            assert_eq!(Hello::decode(&b).unwrap(), h);
+        }
+        let mut b = Vec::new();
+        encode_ready(3, &mut b);
+        assert_eq!(decode_ready(&b).unwrap(), 3);
+        assert!(decode_ready(&b[..4]).is_err());
+    }
+}

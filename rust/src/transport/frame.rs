@@ -1,0 +1,330 @@
+//! Low-level frame codec for the socket wire: every message travels as
+//!
+//! ```text
+//! [magic 0xF5][version][lane][kind][body_len u32 LE][body ...][fnv1a64 LE]
+//! ```
+//!
+//! The checksum covers header + body, so a flipped bit anywhere in the
+//! frame is caught before the body is interpreted. `Packet` frames carry
+//! the existing OP-Data wire encoding verbatim as their body (the OP-Data
+//! codec is not re-invented at this layer); control messages get the
+//! compact binary bodies of `transport::codec`.
+//!
+//! Decoding is incremental: a `Framer` accumulates raw socket reads and
+//! yields complete frames, so `SO_RCVTIMEO`-interrupted partial reads can
+//! never lose frame sync. Every malformed input — truncated frame, bad
+//! magic, version mismatch, oversized length, checksum failure, unknown
+//! lane/kind — surfaces as a clean `Err`, never a panic.
+
+use crate::checkpoint::fnv1a64;
+use crate::transport::PacketPool;
+
+/// First byte of every frame.
+pub const FRAME_MAGIC: u8 = 0xF5;
+/// Protocol version; bumped on any incompatible frame/body change.
+pub const FRAME_VERSION: u8 = 1;
+/// Fixed bytes around the body: 8 header + 8 checksum.
+pub const FRAME_OVERHEAD: usize = 16;
+/// Upper bound on one frame body (a corrupt length field must not drive
+/// a multi-gigabyte allocation).
+pub const MAX_BODY: usize = 1 << 30;
+
+const HEADER: usize = 8;
+
+/// Which logical channel a frame belongs to. The star topology routes
+/// everything through the broker, so the lane — not a per-link socket —
+/// is what separates forward data, backward gradients, the label stream,
+/// the driver plane and the control/handshake plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Forward-direction traffic: Data/Packet toward the next stage, plus
+    /// broadcast control (Stop / Checkpoint) from the driver.
+    Fwd,
+    /// Backward-direction gradient packets toward the previous stage.
+    Bwd,
+    /// Driver -> head stage label stream.
+    Labels,
+    /// Worker -> driver reporting (Loss / IterProfile / Heartbeat / ...).
+    Driver,
+    /// Connection control: Hello / Assign / Ready / Exit.
+    Ctl,
+}
+
+impl Lane {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Lane::Fwd => 0,
+            Lane::Bwd => 1,
+            Lane::Labels => 2,
+            Lane::Driver => 3,
+            Lane::Ctl => 4,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> anyhow::Result<Lane> {
+        Ok(match b {
+            0 => Lane::Fwd,
+            1 => Lane::Bwd,
+            2 => Lane::Labels,
+            3 => Lane::Driver,
+            4 => Lane::Ctl,
+            other => anyhow::bail!("unknown frame lane {other}"),
+        })
+    }
+}
+
+/// Frame payload type. One tag per `Wire` variant plus the handshake
+/// messages that never appear on in-process channels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Hello,
+    Assign,
+    Ready,
+    Exit,
+    Data,
+    Labels,
+    Packet,
+    Loss,
+    IterProfile,
+    Snapshot,
+    Heartbeat,
+    Checkpoint,
+    Stats,
+    Fatal,
+    Stop,
+}
+
+impl FrameKind {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::Assign => 2,
+            FrameKind::Ready => 3,
+            FrameKind::Exit => 4,
+            FrameKind::Data => 5,
+            FrameKind::Labels => 6,
+            FrameKind::Packet => 7,
+            FrameKind::Loss => 8,
+            FrameKind::IterProfile => 9,
+            FrameKind::Snapshot => 10,
+            FrameKind::Heartbeat => 11,
+            FrameKind::Checkpoint => 12,
+            FrameKind::Stats => 13,
+            FrameKind::Fatal => 14,
+            FrameKind::Stop => 15,
+        }
+    }
+
+    pub fn from_u8(b: u8) -> anyhow::Result<FrameKind> {
+        Ok(match b {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Assign,
+            3 => FrameKind::Ready,
+            4 => FrameKind::Exit,
+            5 => FrameKind::Data,
+            6 => FrameKind::Labels,
+            7 => FrameKind::Packet,
+            8 => FrameKind::Loss,
+            9 => FrameKind::IterProfile,
+            10 => FrameKind::Snapshot,
+            11 => FrameKind::Heartbeat,
+            12 => FrameKind::Checkpoint,
+            13 => FrameKind::Stats,
+            14 => FrameKind::Fatal,
+            15 => FrameKind::Stop,
+            other => anyhow::bail!("unknown frame kind {other}"),
+        })
+    }
+}
+
+/// Serialize one frame into `out` (cleared first, capacity reused).
+pub fn encode_frame(lane: Lane, kind: FrameKind, body: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(FRAME_OVERHEAD + body.len());
+    out.push(FRAME_MAGIC);
+    out.push(FRAME_VERSION);
+    out.push(lane.to_u8());
+    out.push(kind.to_u8());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    let sum = fnv1a64(out);
+    out.extend_from_slice(&sum.to_le_bytes());
+}
+
+/// One decoded frame. The body `Vec` comes from the framer's pool (if
+/// any); give it back once drained to keep the receive path off malloc.
+#[derive(Debug)]
+pub struct Frame {
+    pub lane: Lane,
+    pub kind: FrameKind,
+    pub body: Vec<u8>,
+    /// The (already validated) checksum of this frame. A relay that
+    /// forwards lane/kind/body unchanged re-emits it verbatim — the
+    /// header bytes it covers are identical — instead of re-hashing a
+    /// multi-KiB body on the hottest broker path.
+    pub sum: u64,
+}
+
+/// Incremental frame decoder over an untrusted byte stream.
+#[derive(Default)]
+pub struct Framer {
+    buf: Vec<u8>,
+    pos: usize,
+    pool: Option<PacketPool>,
+}
+
+impl Framer {
+    pub fn new() -> Framer {
+        Framer::default()
+    }
+
+    /// A framer whose frame bodies are allocated from (and returnable to)
+    /// `pool`.
+    pub fn with_pool(pool: PacketPool) -> Framer {
+        Framer { pool: Some(pool), ..Framer::default() }
+    }
+
+    /// Feed raw bytes from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        // Compact consumed prefix before growing (amortized O(1)/byte).
+        if self.pos > 0 && (self.pos >= self.buf.len() || self.pos > 64 * 1024) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Next complete frame, `None` if more bytes are needed, `Err` on a
+    /// corrupt stream (the connection must be dropped — sync is lost).
+    pub fn next(&mut self) -> anyhow::Result<Option<Frame>> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < HEADER {
+            return Ok(None);
+        }
+        anyhow::ensure!(
+            avail[0] == FRAME_MAGIC,
+            "bad frame magic {:#04x} (expected {FRAME_MAGIC:#04x})",
+            avail[0]
+        );
+        anyhow::ensure!(
+            avail[1] == FRAME_VERSION,
+            "frame version mismatch: peer speaks v{}, this build v{FRAME_VERSION}",
+            avail[1]
+        );
+        let len = u32::from_le_bytes(avail[4..8].try_into().unwrap()) as usize;
+        anyhow::ensure!(len <= MAX_BODY, "frame body of {len} bytes exceeds cap {MAX_BODY}");
+        let total = HEADER + len + 8;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let want = u64::from_le_bytes(avail[HEADER + len..total].try_into().unwrap());
+        let got = fnv1a64(&avail[..HEADER + len]);
+        anyhow::ensure!(got == want, "frame checksum mismatch ({got:#x} != {want:#x})");
+        let lane = Lane::from_u8(avail[2])?;
+        let kind = FrameKind::from_u8(avail[3])?;
+        let mut body = match &self.pool {
+            Some(p) => p.take(),
+            None => Vec::new(),
+        };
+        body.extend_from_slice(&avail[HEADER..HEADER + len]);
+        self.pos += total;
+        Ok(Some(Frame { lane, kind, body, sum: want }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(lane: Lane, kind: FrameKind, body: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_frame(lane, kind, body, &mut out);
+        out
+    }
+
+    #[test]
+    fn roundtrip_across_chunk_boundaries() {
+        let frames = [
+            one(Lane::Fwd, FrameKind::Packet, &[1, 2, 3]),
+            one(Lane::Ctl, FrameKind::Ready, &[]),
+            one(Lane::Driver, FrameKind::Heartbeat, &(0..255u8).collect::<Vec<_>>()),
+        ];
+        let stream: Vec<u8> = frames.concat();
+        // Feed 1 byte at a time: the framer must resync partial reads.
+        let mut fr = Framer::new();
+        let mut got = Vec::new();
+        for b in &stream {
+            fr.push(std::slice::from_ref(b));
+            while let Some(f) = fr.next().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 3);
+        assert_eq!((got[0].lane, got[0].kind), (Lane::Fwd, FrameKind::Packet));
+        assert_eq!(got[0].body, vec![1, 2, 3]);
+        assert_eq!(got[1].body, Vec::<u8>::new());
+        assert_eq!(got[2].body.len(), 255);
+    }
+
+    #[test]
+    fn truncated_frame_is_incomplete_not_error() {
+        let f = one(Lane::Bwd, FrameKind::Packet, &[9; 64]);
+        let mut fr = Framer::new();
+        fr.push(&f[..f.len() - 1]);
+        assert!(fr.next().unwrap().is_none());
+        fr.push(&f[f.len() - 1..]);
+        assert!(fr.next().unwrap().is_some());
+    }
+
+    #[test]
+    fn corruption_errors_cleanly() {
+        // Flipped body byte -> checksum error.
+        let mut f = one(Lane::Fwd, FrameKind::Data, &[7; 32]);
+        f[HEADER + 4] ^= 0x40;
+        let mut fr = Framer::new();
+        fr.push(&f);
+        assert!(fr.next().unwrap_err().to_string().contains("checksum"));
+
+        // Version mismatch.
+        let mut f = one(Lane::Fwd, FrameKind::Data, &[7; 8]);
+        f[1] = FRAME_VERSION + 1;
+        let mut fr = Framer::new();
+        fr.push(&f);
+        assert!(fr.next().unwrap_err().to_string().contains("version"));
+
+        // Bad magic (stream out of sync).
+        let mut f = one(Lane::Fwd, FrameKind::Data, &[7; 8]);
+        f[0] = 0x00;
+        let mut fr = Framer::new();
+        fr.push(&f);
+        assert!(fr.next().unwrap_err().to_string().contains("magic"));
+
+        // Oversized length field must not allocate.
+        let mut f = one(Lane::Fwd, FrameKind::Data, &[]);
+        f[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut fr = Framer::new();
+        fr.push(&f);
+        assert!(fr.next().unwrap_err().to_string().contains("exceeds cap"));
+    }
+
+    #[test]
+    fn unknown_lane_and_kind_rejected() {
+        let mut f = one(Lane::Fwd, FrameKind::Data, &[1]);
+        f[2] = 99;
+        let sum = fnv1a64(&f[..f.len() - 8]);
+        let n = f.len();
+        f[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let mut fr = Framer::new();
+        fr.push(&f);
+        assert!(fr.next().unwrap_err().to_string().contains("lane"));
+
+        let mut f = one(Lane::Fwd, FrameKind::Data, &[1]);
+        f[3] = 200;
+        let sum = fnv1a64(&f[..f.len() - 8]);
+        let n = f.len();
+        f[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let mut fr = Framer::new();
+        fr.push(&f);
+        assert!(fr.next().unwrap_err().to_string().contains("kind"));
+    }
+}

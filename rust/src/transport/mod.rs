@@ -1,0 +1,108 @@
+//! Pluggable broker↔worker transport (the socket plane the paper's
+//! geo-distributed deployment implies).
+//!
+//! Every channel the broker/worker runtime uses is a directed lane behind
+//! the `Link` (send half) / `Endpoint` (receive half) trait pair. Two
+//! implementations exist:
+//!
+//! * `ChanTransport` (`chan`) — in-process mpsc, the default and the
+//!   differential oracle. Zero behavior change from the pre-transport
+//!   code: `ChanLink`/`ChanEndpoint` are transparent wrappers.
+//! * `TcpTransport` (`tcp`) — length-framed binary serialization of every
+//!   `Wire` variant over real sockets (`frame` + `codec`), a star
+//!   topology routed through the broker, `fusionllm worker --connect`
+//!   multi-process workers, and socket read-deadline liveness: a
+//!   `kill -9`'d worker process is declared dead by its connection's
+//!   deadline (or EOF) and recovered through the existing checkpoint /
+//!   re-plan machinery.
+//!
+//! `Packet` payloads reuse the existing zero-copy OP-Data wire format as
+//! the frame body; control messages get the compact codec in `codec`.
+
+pub mod chan;
+pub mod codec;
+pub mod frame;
+pub mod pool;
+pub mod tcp;
+
+pub use pool::PacketPool;
+
+use crate::worker::messages::Wire;
+use std::time::Duration;
+
+/// The send failed because the peer (or its process/socket) is gone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkClosed;
+
+impl std::fmt::Display for LinkClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transport link closed (peer gone)")
+    }
+}
+
+impl std::error::Error for LinkClosed {}
+
+/// Why a receive returned without a message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvError {
+    /// Deadline elapsed / nothing pending; the lane is still alive.
+    Timeout,
+    /// Every sender is gone — no more messages will ever arrive.
+    Closed,
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Timeout => write!(f, "transport receive timed out"),
+            RecvError::Closed => write!(f, "transport endpoint closed (all senders gone)"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// Sending half of one directed lane. Cheap to clone; `send` transfers
+/// ownership of the message (packet buffers are recycled through
+/// `PacketPool` by the receiving side or the transport itself).
+pub trait Link: Send {
+    fn send(&self, w: Wire) -> Result<(), LinkClosed>;
+    fn clone_link(&self) -> Box<dyn Link>;
+}
+
+/// Receiving half of one directed lane.
+pub trait Endpoint: Send {
+    /// Block until a message arrives or the lane closes.
+    fn recv(&self) -> Result<Wire, RecvError>;
+    /// Block at most `d`.
+    fn recv_deadline(&self, d: Duration) -> Result<Wire, RecvError>;
+    /// Non-blocking poll.
+    fn try_recv(&self) -> Result<Wire, RecvError>;
+}
+
+/// Which transport a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels (single OS process; the default).
+    Chan,
+    /// TCP sockets: the broker listens, `fusionllm worker --connect`
+    /// processes run the stages.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> anyhow::Result<TransportKind> {
+        Ok(match s {
+            "chan" => TransportKind::Chan,
+            "tcp" => TransportKind::Tcp,
+            other => anyhow::bail!("unknown transport `{other}` (chan|tcp)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Chan => "chan",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}

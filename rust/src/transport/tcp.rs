@@ -1,0 +1,925 @@
+//! `TcpTransport`: the socket implementation of the transport traits.
+//!
+//! Topology is a star routed through the broker: each worker process
+//! holds exactly one TCP connection, multiplexing its lanes (fwd / bwd /
+//! labels / driver / ctl) with a lane byte in the frame header. The
+//! broker relays inter-stage `Packet` frames between worker connections
+//! without re-encoding the OP-Data body — the bytes produced by the
+//! sending `LinkEncoder` are the bytes the receiving stage decodes.
+//!
+//! Liveness is a *socket read deadline*, not channel-poll heuristics:
+//! every broker-side connection reader runs with `SO_RCVTIMEO`-style read
+//! timeouts, tracks the instant of the last received byte, and — while
+//! the connection hosts a stage of a running generation — declares the
+//! worker dead once the silence exceeds the heartbeat deadline (with the
+//! `--heartbeat-grace` multiplier before first contact, covering slow
+//! backend init). A `kill -9`'d worker process surfaces even earlier as
+//! EOF/ECONNRESET on the same path. Either way the reader synthesizes a
+//! `Wire::Fatal` into the driver plane and the existing checkpoint /
+//! re-plan machinery recovers the run.
+//!
+//! Deadlock freedom: every endpoint has a dedicated, always-draining
+//! reader thread pushing into unbounded local queues, so a blocked
+//! `write_all` on one side always finds a reader on the other.
+
+use crate::transport::codec::{self, Hello, StageAssign};
+use crate::transport::frame::{
+    encode_frame, Frame, FrameKind, Framer, Lane, FRAME_MAGIC, FRAME_OVERHEAD, FRAME_VERSION,
+};
+use crate::transport::{Link, LinkClosed, PacketPool};
+use crate::worker::messages::Wire;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long the broker waits for the full worker pool to connect.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(180);
+/// Socket read timeout tick (granularity of the deadline monitor).
+const READ_TICK: Duration = Duration::from_millis(50);
+
+// ---- shared write half -------------------------------------------------
+
+/// Serialized write half of one connection: owns the frame/body staging
+/// buffers so steady-state sends reuse their capacity.
+pub(crate) struct ConnWriter {
+    stream: TcpStream,
+    frame: Vec<u8>,
+    body: Vec<u8>,
+}
+
+/// Refuse to put an oversized body on the wire: the peer's `Framer`
+/// would reject it (> `MAX_BODY`) — or, past 4 GiB, the u32 length field
+/// would wrap and desync the stream — and either way a *healthy* peer
+/// gets torn down. Failing the send keeps the error at the sender.
+fn check_body(len: usize) -> std::io::Result<()> {
+    if len > crate::transport::frame::MAX_BODY {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("frame body of {len} bytes exceeds cap {}", crate::transport::frame::MAX_BODY),
+        ));
+    }
+    Ok(())
+}
+
+impl ConnWriter {
+    fn new(stream: TcpStream) -> ConnWriter {
+        ConnWriter { stream, frame: Vec::new(), body: Vec::new() }
+    }
+
+    fn write_frame(&mut self, lane: Lane, kind: FrameKind, body: &[u8]) -> std::io::Result<()> {
+        check_body(body.len())?;
+        encode_frame(lane, kind, body, &mut self.frame);
+        self.stream.write_all(&self.frame)
+    }
+
+    fn write_wire(&mut self, lane: Lane, w: &Wire) -> std::io::Result<()> {
+        self.body.clear();
+        let kind = codec::encode_wire(w, &mut self.body);
+        check_body(self.body.len())?;
+        // Split-borrow: stage the frame locally, then write.
+        let Self { stream, frame, body } = self;
+        encode_frame(lane, kind, body, frame);
+        stream.write_all(frame)
+    }
+
+    /// Forward a validated frame unchanged, reusing its checksum: the
+    /// header this rebuilds is byte-identical to the one the checksum
+    /// already covers, so the relay path skips the FNV pass over the
+    /// (potentially multi-MiB) body.
+    fn relay_frame(&mut self, f: &Frame) -> std::io::Result<()> {
+        check_body(f.body.len())?;
+        let out = &mut self.frame;
+        out.clear();
+        out.reserve(FRAME_OVERHEAD + f.body.len());
+        out.push(FRAME_MAGIC);
+        out.push(FRAME_VERSION);
+        out.push(f.lane.to_u8());
+        out.push(f.kind.to_u8());
+        out.extend_from_slice(&(f.body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&f.body);
+        out.extend_from_slice(&f.sum.to_le_bytes());
+        self.stream.write_all(&self.frame)
+    }
+}
+
+type SharedWriter = Arc<Mutex<ConnWriter>>;
+
+/// `Link` over one lane of a TCP connection. Packet buffers are returned
+/// to `pool` right after the socket write — the sender-side half of the
+/// zero-allocation send path.
+pub struct TcpLink {
+    w: SharedWriter,
+    lane: Lane,
+    pool: Option<PacketPool>,
+}
+
+impl Link for TcpLink {
+    fn send(&self, w: Wire) -> Result<(), LinkClosed> {
+        let mut g = self.w.lock().map_err(|_| LinkClosed)?;
+        let r = g.write_wire(self.lane, &w);
+        drop(g);
+        if let (Some(p), Wire::Packet(buf)) = (&self.pool, w) {
+            p.give(buf);
+        }
+        r.map_err(|_| LinkClosed)
+    }
+
+    fn clone_link(&self) -> Box<dyn Link> {
+        Box::new(TcpLink { w: self.w.clone(), lane: self.lane, pool: self.pool.clone() })
+    }
+}
+
+// ---- worker side -------------------------------------------------------
+
+/// Control events the worker main loop consumes.
+#[derive(Debug)]
+pub enum WorkerCtl {
+    /// Run one stage of one generation.
+    Assign(Box<StageAssign>),
+    /// Broker is done; exit the process cleanly.
+    Exit,
+    /// The broker connection died (EOF, error, or corrupt stream).
+    Lost(String),
+}
+
+/// Per-generation lane sinks the demux reader delivers into. Cleared
+/// between generations so stale frames from a torn-down run are dropped.
+#[derive(Default)]
+struct LaneSinks {
+    fwd: Option<Sender<Wire>>,
+    bwd: Option<Sender<Wire>>,
+    labels: Option<Sender<Wire>>,
+}
+
+/// A worker process's connection to the broker: demux reader thread,
+/// shared write half, and the control-event queue.
+pub struct WorkerSession {
+    writer: SharedWriter,
+    sinks: Arc<Mutex<LaneSinks>>,
+    ctl_rx: Receiver<WorkerCtl>,
+    rx_pool: PacketPool,
+    peer: SocketAddr,
+}
+
+impl Drop for WorkerSession {
+    /// Shut the socket down (not just this handle's fd — the demux
+    /// reader holds a duplicate): the broker observes EOF immediately,
+    /// and the reader thread unblocks and exits. A dropped session
+    /// therefore looks exactly like a killed process from outside.
+    fn drop(&mut self) {
+        if let Ok(g) = self.writer.lock() {
+            let _ = g.stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl WorkerSession {
+    /// Connect (retrying `retry` long — the broker may not be up yet),
+    /// send `Hello{token, device}` and start the demux reader.
+    pub fn connect(
+        addr: &str,
+        token: &str,
+        device: Option<usize>,
+        retry: Duration,
+    ) -> anyhow::Result<WorkerSession> {
+        let t0 = Instant::now();
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if t0.elapsed() >= retry {
+                        anyhow::bail!("could not connect to broker at {addr}: {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let peer = stream.peer_addr()?;
+        let reader = stream.try_clone()?;
+        let writer: SharedWriter = Arc::new(Mutex::new(ConnWriter::new(stream)));
+        let sinks: Arc<Mutex<LaneSinks>> = Arc::new(Mutex::new(LaneSinks::default()));
+        let rx_pool = PacketPool::new();
+        let (ctl_tx, ctl_rx) = mpsc::channel();
+        {
+            let sinks = sinks.clone();
+            let pool = rx_pool.clone();
+            std::thread::Builder::new()
+                .name("tcp-demux".into())
+                .spawn(move || worker_reader(reader, sinks, ctl_tx, pool))
+                .expect("spawn worker demux reader");
+        }
+        let mut body = Vec::new();
+        Hello { token: token.to_string(), device }.encode(&mut body);
+        writer
+            .lock()
+            .unwrap()
+            .write_frame(Lane::Ctl, FrameKind::Hello, &body)
+            .map_err(|e| anyhow::anyhow!("hello to broker failed: {e}"))?;
+        Ok(WorkerSession { writer, sinks, ctl_rx, rx_pool, peer })
+    }
+
+    pub fn peer(&self) -> SocketAddr {
+        self.peer
+    }
+
+    /// Control events (Assign / Exit / Lost).
+    pub fn ctl(&self) -> &Receiver<WorkerCtl> {
+        &self.ctl_rx
+    }
+
+    /// Install this generation's lane queues (done before `send_ready`, so
+    /// ordered delivery guarantees no post-Ready frame is dropped).
+    pub fn install_lanes(
+        &self,
+        fwd: Sender<Wire>,
+        bwd: Option<Sender<Wire>>,
+        labels: Option<Sender<Wire>>,
+    ) {
+        if let Ok(mut g) = self.sinks.lock() {
+            g.fwd = Some(fwd);
+            g.bwd = bwd;
+            g.labels = labels;
+        }
+    }
+
+    /// Drop the generation's lane queues (stale frames then fall on the
+    /// floor instead of leaking into the next generation).
+    pub fn clear_lanes(&self) {
+        if let Ok(mut g) = self.sinks.lock() {
+            *g = LaneSinks::default();
+        }
+    }
+
+    /// A send half over one lane of this connection.
+    pub fn link(&self, lane: Lane, pool: Option<PacketPool>) -> Box<dyn Link> {
+        Box::new(TcpLink { w: self.writer.clone(), lane, pool })
+    }
+
+    /// The pool incoming frame bodies are drawn from; the interpreter
+    /// returns drained packet buffers here.
+    pub fn rx_pool(&self) -> PacketPool {
+        self.rx_pool.clone()
+    }
+
+    pub fn send_ready(&self, stage: usize) -> anyhow::Result<()> {
+        let mut body = Vec::new();
+        codec::encode_ready(stage, &mut body);
+        self.writer
+            .lock()
+            .unwrap()
+            .write_frame(Lane::Ctl, FrameKind::Ready, &body)
+            .map_err(|e| anyhow::anyhow!("ready to broker failed: {e}"))
+    }
+}
+
+/// Worker-side demux: every frame from the broker lands in the matching
+/// lane queue (or the ctl queue). Exits — dropping all sinks so blocked
+/// receives observe `Closed` — when the connection dies.
+fn worker_reader(
+    mut stream: TcpStream,
+    sinks: Arc<Mutex<LaneSinks>>,
+    ctl: Sender<WorkerCtl>,
+    pool: PacketPool,
+) {
+    let mut framer = Framer::with_pool(pool.clone());
+    let mut chunk = vec![0u8; 64 * 1024];
+    let lost = |sinks: &Arc<Mutex<LaneSinks>>, ctl: &Sender<WorkerCtl>, why: String| {
+        if let Ok(mut g) = sinks.lock() {
+            *g = LaneSinks::default();
+        }
+        let _ = ctl.send(WorkerCtl::Lost(why));
+    };
+    loop {
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => return lost(&sinks, &ctl, "broker closed the connection".into()),
+            Ok(n) => n,
+            Err(e) => return lost(&sinks, &ctl, format!("read error: {e}")),
+        };
+        framer.push(&chunk[..n]);
+        loop {
+            let f = match framer.next() {
+                Ok(Some(f)) => f,
+                Ok(None) => break,
+                Err(e) => return lost(&sinks, &ctl, format!("corrupt stream: {e:#}")),
+            };
+            match (f.lane, f.kind) {
+                (Lane::Ctl, FrameKind::Assign) => match StageAssign::decode(&f.body) {
+                    Ok(a) => {
+                        pool.give(f.body);
+                        let _ = ctl.send(WorkerCtl::Assign(Box::new(a)));
+                    }
+                    Err(e) => return lost(&sinks, &ctl, format!("bad assign: {e:#}")),
+                },
+                (Lane::Ctl, FrameKind::Exit) => {
+                    let _ = ctl.send(WorkerCtl::Exit);
+                    return;
+                }
+                // Handshake rejection (bad token, duplicate device claim):
+                // surface the broker's reason instead of a generic EOF.
+                (Lane::Ctl, FrameKind::Fatal) => {
+                    let why = match codec::decode_wire(FrameKind::Fatal, &f.body) {
+                        Ok(Wire::Fatal { error, .. }) => format!("rejected by broker: {error}"),
+                        _ => "rejected by broker".to_string(),
+                    };
+                    return lost(&sinks, &ctl, why);
+                }
+                (lane, kind) => {
+                    // Packets hand the frame body over zero-copy (the
+                    // interpreter returns it to `pool` after decode);
+                    // control messages decode then recycle immediately.
+                    let w = if kind == FrameKind::Packet {
+                        Wire::Packet(f.body)
+                    } else {
+                        let w = match codec::decode_wire(kind, &f.body) {
+                            Ok(w) => w,
+                            Err(e) => return lost(&sinks, &ctl, format!("bad frame: {e:#}")),
+                        };
+                        pool.give(f.body);
+                        w
+                    };
+                    let g = match sinks.lock() {
+                        Ok(g) => g,
+                        Err(_) => return,
+                    };
+                    let sink = match lane {
+                        Lane::Fwd => g.fwd.as_ref(),
+                        Lane::Bwd => g.bwd.as_ref(),
+                        Lane::Labels => g.labels.as_ref(),
+                        // No driver/ctl wire traffic flows toward workers.
+                        Lane::Driver | Lane::Ctl => None,
+                    };
+                    if let Some(tx) = sink {
+                        let _ = tx.send(w);
+                    }
+                    // No sink installed (between generations): drop.
+                }
+            }
+        }
+    }
+}
+
+// ---- broker side -------------------------------------------------------
+
+/// Socket deadline configuration (mirrors the channel-plane monitor).
+#[derive(Debug, Clone, Copy)]
+pub struct MonitorCfg {
+    /// Silence past this and a stage-hosting connection is dead.
+    pub deadline: Duration,
+    /// Deadline multiplier before a worker's first driver-plane frame of
+    /// a generation (`--heartbeat-grace`): backend init may be slow.
+    pub grace: u32,
+}
+
+struct Route {
+    stage_of_conn: Vec<Option<usize>>,
+    conn_of_stage: Vec<Option<usize>>,
+    monitored: Vec<bool>,
+    heard: Vec<bool>,
+    alive: Vec<bool>,
+    /// Bumped whenever monitoring is reconfigured; readers reset their
+    /// silence clock on epoch change.
+    epoch: u64,
+}
+
+struct Shared {
+    route: Mutex<Route>,
+    /// Driver-plane sink of the *current* generation.
+    driver: Mutex<Option<Sender<Wire>>>,
+    writers: Mutex<Vec<SharedWriter>>,
+    monitor: MonitorCfg,
+}
+
+impl Shared {
+    fn writer(&self, conn: usize) -> Option<SharedWriter> {
+        self.writers.lock().ok()?.get(conn).cloned()
+    }
+}
+
+enum HsEvent {
+    Hello { conn: usize, hello: Hello },
+    Ready { conn: usize, stage: usize },
+}
+
+/// The broker's TCP plane: the accepted worker pool, the routing table
+/// mapping stages onto connections, and the per-connection deadline
+/// monitors feeding the driver event loop.
+pub struct TcpPlane {
+    shared: Arc<Shared>,
+    hs_rx: Receiver<HsEvent>,
+    /// device id -> connection index (fixed at accept time).
+    device_conn: BTreeMap<usize, usize>,
+    local_addr: SocketAddr,
+}
+
+impl TcpPlane {
+    /// Bind (or adopt `listener`), accept `n_workers` authenticated
+    /// workers and assign their device ids (claims must be below
+    /// `device_cap`, the testbed size — out-of-range claims are turned
+    /// away per-connection, they do not kill the pool). Blocks until the
+    /// pool is complete or `ACCEPT_TIMEOUT` passes.
+    pub fn start(
+        listen: &str,
+        listener: Option<TcpListener>,
+        token: &str,
+        n_workers: usize,
+        device_cap: usize,
+        monitor: MonitorCfg,
+    ) -> anyhow::Result<TcpPlane> {
+        anyhow::ensure!(n_workers > 0, "tcp transport needs at least one worker");
+        let listener = match listener {
+            Some(l) => l,
+            None => TcpListener::bind(listen)
+                .map_err(|e| anyhow::anyhow!("cannot listen on {listen}: {e}"))?,
+        };
+        let local_addr = listener.local_addr()?;
+        eprintln!(
+            "broker: listening on {local_addr}, waiting for {n_workers} worker(s) \
+             (`fusionllm worker --connect {local_addr}`)"
+        );
+        listener.set_nonblocking(true)?;
+        let (hs_tx, hs_rx) = mpsc::channel();
+        let shared = Arc::new(Shared {
+            route: Mutex::new(Route {
+                stage_of_conn: Vec::new(),
+                conn_of_stage: Vec::new(),
+                monitored: Vec::new(),
+                heard: Vec::new(),
+                alive: Vec::new(),
+                epoch: 0,
+            }),
+            driver: Mutex::new(None),
+            writers: Mutex::new(Vec::new()),
+            monitor,
+        });
+        let mut plane = TcpPlane {
+            shared,
+            hs_rx,
+            device_conn: BTreeMap::new(),
+            local_addr,
+        };
+        let mut peers: Vec<SocketAddr> = Vec::new();
+        let t0 = Instant::now();
+        let mut next_device = 0usize;
+        while plane.device_conn.len() < n_workers {
+            anyhow::ensure!(
+                t0.elapsed() < ACCEPT_TIMEOUT,
+                "only {}/{n_workers} workers connected within {}s",
+                plane.device_conn.len(),
+                ACCEPT_TIMEOUT.as_secs()
+            );
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    // Some platforms make accepted sockets inherit the
+                    // listener's nonblocking flag; the reader relies on
+                    // blocking reads with SO_RCVTIMEO.
+                    stream.set_nonblocking(false)?;
+                    let _ = stream.set_nodelay(true);
+                    plane.register(stream, &hs_tx)?;
+                    peers.push(peer);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => anyhow::bail!("accept failed: {e}"),
+            }
+            match plane.hs_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(HsEvent::Hello { conn, hello }) => {
+                    let peer = peers.get(conn).map(|p| p.to_string()).unwrap_or_default();
+                    if hello.token != token {
+                        plane.reject(conn, &peer, "bad token");
+                        continue;
+                    }
+                    let dev = match hello.device {
+                        Some(d) => d,
+                        None => {
+                            while plane.device_conn.contains_key(&next_device) {
+                                next_device += 1;
+                            }
+                            next_device
+                        }
+                    };
+                    // A stray/duplicate/out-of-range claim kills that
+                    // connection, not the pool the other workers formed.
+                    if dev >= device_cap {
+                        plane.reject(
+                            conn,
+                            &peer,
+                            &format!("device {dev} out of range (testbed has {device_cap})"),
+                        );
+                        continue;
+                    }
+                    if plane.device_conn.contains_key(&dev) {
+                        plane.reject(conn, &peer, &format!("device {dev} already claimed"));
+                        continue;
+                    }
+                    plane.device_conn.insert(dev, conn);
+                    eprintln!(
+                        "broker: worker {peer} joined as device {dev} ({}/{n_workers})",
+                        plane.device_conn.len()
+                    );
+                }
+                Ok(HsEvent::Ready { .. }) => {} // cannot happen before assigns
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("handshake plane lost"),
+            }
+        }
+        Ok(plane)
+    }
+
+    /// Turn a connection away during the handshake: tell it why (a Ctl
+    /// `Fatal` frame the worker surfaces in its error), close the socket
+    /// and mark the conn dead. The rest of the pool is unaffected.
+    fn reject(&self, conn: usize, peer: &str, why: &str) {
+        eprintln!("broker: rejecting worker {peer} ({why})");
+        if let Some(w) = self.shared.writer(conn) {
+            let mut body = Vec::new();
+            let k = codec::encode_wire(
+                &Wire::Fatal { stage: usize::MAX, error: why.to_string() },
+                &mut body,
+            );
+            let mut g = w.lock().unwrap();
+            let _ = g.write_frame(Lane::Ctl, k, &body);
+            let _ = g.stream.shutdown(Shutdown::Both);
+        }
+        mark_dead(&self.shared, conn);
+    }
+
+    fn register(&mut self, stream: TcpStream, hs_tx: &Sender<HsEvent>) -> anyhow::Result<usize> {
+        let reader = stream.try_clone()?;
+        let writer: SharedWriter = Arc::new(Mutex::new(ConnWriter::new(stream)));
+        let conn = {
+            let mut ws = self.shared.writers.lock().unwrap();
+            ws.push(writer);
+            ws.len() - 1
+        };
+        {
+            let mut rt = self.shared.route.lock().unwrap();
+            rt.stage_of_conn.push(None);
+            rt.monitored.push(false);
+            rt.heard.push(false);
+            rt.alive.push(true);
+        }
+        let shared = self.shared.clone();
+        let hs = hs_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("tcp-conn{conn}"))
+            .spawn(move || broker_reader(conn, reader, shared, hs))
+            .expect("spawn broker connection reader");
+        Ok(conn)
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Device ids with a live worker connection.
+    pub fn live_devices(&self) -> Vec<usize> {
+        let rt = self.shared.route.lock().unwrap();
+        self.device_conn
+            .iter()
+            .filter(|(_, &c)| rt.alive[c])
+            .map(|(&d, _)| d)
+            .collect()
+    }
+
+    /// Device ids whose worker connection has died.
+    pub fn dead_devices(&self) -> Vec<usize> {
+        let rt = self.shared.route.lock().unwrap();
+        self.device_conn
+            .iter()
+            .filter(|(_, &c)| !rt.alive[c])
+            .map(|(&d, _)| d)
+            .collect()
+    }
+
+    fn conn_of_device(&self, dev: usize) -> anyhow::Result<usize> {
+        let conn = *self
+            .device_conn
+            .get(&dev)
+            .ok_or_else(|| anyhow::anyhow!("no worker connected for device {dev}"))?;
+        let rt = self.shared.route.lock().unwrap();
+        anyhow::ensure!(rt.alive[conn], "worker for device {dev} is gone");
+        Ok(conn)
+    }
+
+    /// A broker-side send half toward the worker hosting `stage`'s conn.
+    fn conn_link(&self, conn: usize, lane: Lane) -> Box<dyn Link> {
+        let w = self.shared.writer(conn).expect("registered conn");
+        Box::new(TcpLink { w, lane, pool: None })
+    }
+
+    /// Start one generation: route stages onto device connections, ship
+    /// the `StageAssign`s, wait for every Ready, arm the deadline
+    /// monitors, and hand back the driver receive queue plus the
+    /// per-stage fwd links and the head's label link.
+    #[allow(clippy::type_complexity)]
+    pub fn begin_generation(
+        &mut self,
+        devices: &[usize],
+        assigns: Vec<StageAssign>,
+        ready_timeout: Duration,
+    ) -> anyhow::Result<(Receiver<Wire>, Vec<Box<dyn Link>>, Box<dyn Link>)> {
+        let s_n = devices.len();
+        anyhow::ensure!(s_n == assigns.len() && s_n > 0, "assignment shape mismatch");
+        {
+            let mut seen = std::collections::BTreeSet::new();
+            for &d in devices {
+                anyhow::ensure!(
+                    seen.insert(d),
+                    "device {d} would host two stages — a worker process runs one stage; \
+                     start a spare worker so failover has a free device"
+                );
+            }
+        }
+        let stage_conns: Vec<usize> = devices
+            .iter()
+            .map(|&d| self.conn_of_device(d))
+            .collect::<anyhow::Result<_>>()?;
+        // No driver sink until the ready barrier passes: anything a
+        // straggling previous generation still sends falls on the floor
+        // instead of leaking into the new generation's queue.
+        self.clear_driver();
+        {
+            let mut rt = self.shared.route.lock().unwrap();
+            for v in rt.stage_of_conn.iter_mut() {
+                *v = None;
+            }
+            rt.conn_of_stage = vec![None; s_n];
+            for (s, &c) in stage_conns.iter().enumerate() {
+                rt.stage_of_conn[c] = Some(s);
+                rt.conn_of_stage[s] = Some(c);
+            }
+            for i in 0..rt.monitored.len() {
+                rt.monitored[i] = rt.stage_of_conn[i].is_some();
+                rt.heard[i] = false;
+            }
+            rt.epoch += 1;
+        }
+        // Drop handshake leftovers from a previous generation.
+        while self.hs_rx.try_recv().is_ok() {}
+        let mut body = Vec::new();
+        for (s, a) in assigns.iter().enumerate() {
+            body.clear();
+            a.encode(&mut body);
+            let w = self.shared.writer(stage_conns[s]).expect("registered conn");
+            w.lock()
+                .unwrap()
+                .write_frame(Lane::Ctl, FrameKind::Assign, &body)
+                .map_err(|e| {
+                    anyhow::anyhow!("assign to stage {s} (device {}) failed: {e}", devices[s])
+                })?;
+        }
+        // Ready barrier.
+        let mut ready = vec![false; s_n];
+        let mut got = 0usize;
+        let t0 = Instant::now();
+        while got < s_n {
+            let left = ready_timeout
+                .checked_sub(t0.elapsed())
+                .filter(|d| !d.is_zero())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "ready barrier timed out: {got}/{s_n} stages ready after {:.1}s",
+                        t0.elapsed().as_secs_f64()
+                    )
+                })?;
+            match self.hs_rx.recv_timeout(left) {
+                Ok(HsEvent::Ready { conn, stage }) => {
+                    if stage < s_n && stage_conns[stage] == conn && !ready[stage] {
+                        ready[stage] = true;
+                        got += 1;
+                    }
+                }
+                Ok(HsEvent::Hello { .. }) => {} // late stray; ignore
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("handshake plane lost"),
+            }
+        }
+        // Barrier passed: per-connection frame ordering guarantees every
+        // driver-lane message from here on belongs to this generation.
+        let (tx, rx) = mpsc::channel();
+        *self.shared.driver.lock().unwrap() = Some(tx);
+        let fwd_tx: Vec<Box<dyn Link>> = stage_conns
+            .iter()
+            .map(|&c| self.conn_link(c, Lane::Fwd))
+            .collect();
+        let label_tx = self.conn_link(stage_conns[s_n - 1], Lane::Labels);
+        Ok((rx, fwd_tx, label_tx))
+    }
+
+    /// Drop the driver-plane sink: subsequent driver-lane frames are
+    /// discarded until the next generation installs a fresh one. Called
+    /// at teardown so a slow straggler cannot pollute the next queue.
+    pub fn clear_driver(&self) {
+        *self.shared.driver.lock().unwrap() = None;
+    }
+
+    /// Disarm every connection's deadline monitor (teardown windows are
+    /// legitimately silent — workers idle between generations).
+    pub fn monitor_off(&self) {
+        let mut rt = self.shared.route.lock().unwrap();
+        for m in rt.monitored.iter_mut() {
+            *m = false;
+        }
+        rt.epoch += 1;
+    }
+
+    /// End of run: tell every surviving worker process to exit.
+    pub fn shutdown(&self) {
+        self.monitor_off();
+        let rt_alive: Vec<bool> = {
+            let rt = self.shared.route.lock().unwrap();
+            rt.alive.clone()
+        };
+        for &conn in self.device_conn.values() {
+            if !rt_alive.get(conn).copied().unwrap_or(false) {
+                continue;
+            }
+            if let Some(w) = self.shared.writer(conn) {
+                let _ = w.lock().unwrap().write_frame(Lane::Ctl, FrameKind::Exit, &[]);
+            }
+        }
+    }
+}
+
+fn mark_dead(shared: &Arc<Shared>, conn: usize) -> (Option<usize>, bool) {
+    let mut rt = shared.route.lock().unwrap();
+    if !rt.alive[conn] {
+        return (None, false);
+    }
+    rt.alive[conn] = false;
+    let stage = rt.stage_of_conn[conn].take();
+    if let Some(s) = stage {
+        rt.conn_of_stage[s] = None;
+    }
+    let monitored = rt.monitored[conn];
+    rt.monitored[conn] = false;
+    (stage, monitored)
+}
+
+/// A connection died (EOF, socket error, protocol corruption, or read
+/// deadline). If it hosted a monitored stage, synthesize the death into
+/// the driver plane so the existing recovery machinery reacts.
+fn declare_dead(shared: &Arc<Shared>, conn: usize, cause: &str) {
+    let (stage, monitored) = mark_dead(shared, conn);
+    if stage.is_none() && !monitored {
+        return; // idle spare or already-dead conn: nothing to report
+    }
+    if let (Some(s), true) = (stage, monitored) {
+        if let Ok(g) = shared.driver.lock() {
+            if let Some(tx) = g.as_ref() {
+                let _ = tx.send(Wire::Fatal { stage: s, error: cause.to_string() });
+            }
+        }
+    }
+}
+
+/// Broker-side per-connection reader: demux + relay + deadline monitor.
+fn broker_reader(
+    conn: usize,
+    mut stream: TcpStream,
+    shared: Arc<Shared>,
+    hs: Sender<HsEvent>,
+) {
+    let pool = PacketPool::new();
+    let mut framer = Framer::with_pool(pool.clone());
+    let mut chunk = vec![0u8; 64 * 1024];
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let mut last_rx = Instant::now();
+    let mut last_epoch = 0u64;
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return declare_dead(&shared, conn, "worker connection closed (EOF)"),
+            Ok(n) => {
+                last_rx = Instant::now();
+                framer.push(&chunk[..n]);
+                loop {
+                    match framer.next() {
+                        Ok(Some(f)) => {
+                            if let Err(e) = handle_frame(conn, f, &shared, &hs, &pool) {
+                                let _ = stream.shutdown(Shutdown::Both);
+                                return declare_dead(
+                                    &shared,
+                                    conn,
+                                    &format!("protocol error: {e:#}"),
+                                );
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            let _ = stream.shutdown(Shutdown::Both);
+                            return declare_dead(&shared, conn, &format!("corrupt stream: {e:#}"));
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // The socket read deadline: the transport-level liveness
+                // plane replacing the channel-poll heuristics.
+                let (monitored, heard, epoch) = {
+                    let rt = shared.route.lock().unwrap();
+                    (rt.monitored[conn], rt.heard[conn], rt.epoch)
+                };
+                if epoch != last_epoch {
+                    last_epoch = epoch;
+                    last_rx = Instant::now();
+                    continue;
+                }
+                if monitored {
+                    let limit = if heard {
+                        shared.monitor.deadline
+                    } else {
+                        shared.monitor.deadline * shared.monitor.grace.max(1)
+                    };
+                    let silent = last_rx.elapsed();
+                    if silent > limit {
+                        let _ = stream.shutdown(Shutdown::Both);
+                        return declare_dead(
+                            &shared,
+                            conn,
+                            &format!(
+                                "socket read deadline: no bytes for {:.2}s (limit {:.2}s)",
+                                silent.as_secs_f64(),
+                                limit.as_secs_f64()
+                            ),
+                        );
+                    }
+                }
+            }
+            Err(e) => return declare_dead(&shared, conn, &format!("socket error: {e}")),
+        }
+    }
+}
+
+fn handle_frame(
+    conn: usize,
+    f: Frame,
+    shared: &Arc<Shared>,
+    hs: &Sender<HsEvent>,
+    pool: &PacketPool,
+) -> anyhow::Result<()> {
+    match (f.lane, f.kind) {
+        (Lane::Ctl, FrameKind::Hello) => {
+            let hello = Hello::decode(&f.body)?;
+            pool.give(f.body);
+            let _ = hs.send(HsEvent::Hello { conn, hello });
+        }
+        (Lane::Ctl, FrameKind::Ready) => {
+            let stage = codec::decode_ready(&f.body)?;
+            pool.give(f.body);
+            let _ = hs.send(HsEvent::Ready { conn, stage });
+        }
+        (Lane::Driver, kind) => {
+            let w = codec::decode_wire(kind, &f.body)?;
+            pool.give(f.body);
+            {
+                let mut rt = shared.route.lock().unwrap();
+                rt.heard[conn] = true;
+            }
+            if let Ok(g) = shared.driver.lock() {
+                if let Some(tx) = g.as_ref() {
+                    let _ = tx.send(w);
+                }
+            }
+        }
+        // Inter-stage packets: relay the frame body verbatim (the OP-Data
+        // bytes the sender's LinkEncoder produced) to the neighbor.
+        (Lane::Fwd, FrameKind::Packet) => relay(conn, 1, f, shared, pool),
+        (Lane::Bwd, FrameKind::Packet) => relay(conn, -1, f, shared, pool),
+        (lane, kind) => anyhow::bail!("unexpected {kind:?} on {lane:?} lane from worker"),
+    }
+    Ok(())
+}
+
+fn relay(conn: usize, dir: i64, f: Frame, shared: &Arc<Shared>, pool: &PacketPool) {
+    let dst = {
+        let rt = shared.route.lock().unwrap();
+        match rt.stage_of_conn[conn] {
+            None => None, // stale frame from a torn-down generation
+            Some(s) => {
+                let d = s as i64 + dir;
+                if d < 0 {
+                    None
+                } else {
+                    rt.conn_of_stage
+                        .get(d as usize)
+                        .and_then(|c| *c)
+                        .filter(|&c| rt.alive[c])
+                }
+            }
+        }
+    };
+    if let Some(dst) = dst {
+        if let Some(w) = shared.writer(dst) {
+            // A failed write is the destination's problem; its own reader
+            // declares the death.
+            let _ = w.lock().unwrap().relay_frame(&f);
+        }
+    }
+    pool.give(f.body);
+}

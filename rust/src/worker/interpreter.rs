@@ -19,12 +19,14 @@
 use super::messages::{decode_payload_into, StageCodec, StageState, Wire, WorkerStats};
 use crate::opdag::data::OpDataKind;
 use crate::pipeline::{Task, TaskKind};
+use crate::transport::{Endpoint, Link, PacketPool, RecvError};
 use std::collections::VecDeque;
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
-/// Channel + codec endpoints for one stage: everything the interpreter
-/// needs to talk to its pipeline neighbors and the driver.
+/// Transport + codec endpoints for one stage: everything the interpreter
+/// needs to talk to its pipeline neighbors and the driver. The lanes are
+/// trait objects, so the same loop runs over in-process channels
+/// (`ChanTransport`) and sockets (`TcpTransport`) unchanged.
 pub struct StageLinks {
     pub stage: usize,
     /// CompNode id hosting this stage (for stats attribution).
@@ -32,17 +34,23 @@ pub struct StageLinks {
     /// Per-link wire codecs (compression scratch + staging buffers).
     pub codec: StageCodec,
     /// Forward input (Data from the driver for stage 0, Packets otherwise).
-    pub rx_fwd: Receiver<Wire>,
+    pub rx_fwd: Box<dyn Endpoint>,
     /// Backward gradient input (None for the head stage).
-    pub rx_bwd: Option<Receiver<Wire>>,
+    pub rx_bwd: Option<Box<dyn Endpoint>>,
     /// Forward output (None for the head stage).
-    pub tx_fwd: Option<Sender<Wire>>,
+    pub tx_fwd: Option<Box<dyn Link>>,
     /// Backward gradient output (None for the embed stage).
-    pub tx_bwd: Option<Sender<Wire>>,
+    pub tx_bwd: Option<Box<dyn Link>>,
     /// Head only: label stream from the driver.
-    pub rx_labels: Option<Receiver<Wire>>,
+    pub rx_labels: Option<Box<dyn Endpoint>>,
     /// Loss + profile + stats reporting to the driver.
-    pub tx_driver: Sender<Wire>,
+    pub tx_driver: Box<dyn Link>,
+    /// Free-list of the *previous* stage's fwd `LinkEncoder`: drained
+    /// activation packet buffers go back to their sender (None when the
+    /// upstream is the driver or out-of-process).
+    pub fwd_return: Option<PacketPool>,
+    /// Free-list of the *next* stage's bwd `LinkEncoder` (gradients).
+    pub bwd_return: Option<PacketPool>,
 }
 
 /// Forward input handed to the backend. Stage 0 receives raw tokens from
@@ -122,7 +130,7 @@ pub struct RunOpts {
 
 /// Heartbeat if the interval elapsed since the last beacon.
 fn beat(
-    tx_driver: &Sender<Wire>,
+    tx_driver: &dyn Link,
     stage: usize,
     iter: u32,
     hb: Option<Duration>,
@@ -144,10 +152,10 @@ fn beat(
 /// the next forward receive. Returns None when `rx` disconnected.
 #[allow(clippy::too_many_arguments)]
 fn recv_msg(
-    rx: &Receiver<Wire>,
-    fwd_ctl: Option<&Receiver<Wire>>,
+    rx: &dyn Endpoint,
+    fwd_ctl: Option<&dyn Endpoint>,
     pending: &mut VecDeque<Wire>,
-    tx_driver: &Sender<Wire>,
+    tx_driver: &dyn Link,
     stage: usize,
     iter: u32,
     hb: Option<Duration>,
@@ -157,10 +165,10 @@ fn recv_msg(
         return Ok(rx.recv().ok());
     };
     loop {
-        match rx.recv_timeout(int) {
+        match rx.recv_deadline(int) {
             Ok(m) => return Ok(Some(m)),
-            Err(RecvTimeoutError::Disconnected) => return Ok(None),
-            Err(RecvTimeoutError::Timeout) => {
+            Err(RecvError::Closed) => return Ok(None),
+            Err(RecvError::Timeout) => {
                 let _ = tx_driver.send(Wire::Heartbeat { stage, iter });
                 *last_beat = Instant::now();
                 if let Some(f) = fwd_ctl {
@@ -206,10 +214,10 @@ fn quiesce<B: StageBackend>(
     loop {
         let msg = match pending.pop_front() {
             Some(m) => Some(m),
-            None => match links.rx_fwd.recv_timeout(int) {
+            None => match links.rx_fwd.recv_deadline(int) {
                 Ok(m) => Some(m),
-                Err(RecvTimeoutError::Timeout) => None,
-                Err(RecvTimeoutError::Disconnected) => {
+                Err(RecvError::Timeout) => None,
+                Err(RecvError::Closed) => {
                     anyhow::bail!("stage {}: driver went away during quiesce", links.stage)
                 }
             },
@@ -291,10 +299,10 @@ pub fn run_schedule_with<B: StageBackend>(
                             let t_wait = Instant::now();
                             let msg = loop {
                                 match recv_msg(
-                                    rx,
-                                    Some(&links.rx_fwd),
+                                    rx.as_ref(),
+                                    Some(links.rx_fwd.as_ref()),
                                     &mut pending,
-                                    &links.tx_driver,
+                                    links.tx_driver.as_ref(),
                                     links.stage,
                                     iter,
                                     hb,
@@ -336,10 +344,10 @@ pub fn run_schedule_with<B: StageBackend>(
                         let msg = match pending.pop_front() {
                             Some(m) => Some(m),
                             None => recv_msg(
-                                &links.rx_fwd,
+                                links.rx_fwd.as_ref(),
                                 None,
                                 &mut pending,
-                                &links.tx_driver,
+                                links.tx_driver.as_ref(),
                                 links.stage,
                                 iter,
                                 hb,
@@ -367,6 +375,11 @@ pub fn run_schedule_with<B: StageBackend>(
                                 let mut x = recycle.pop().unwrap_or_default();
                                 x.resize(act_n, 0.0);
                                 let hdr = decode_payload_into(&buf, &mut x)?;
+                                // Drained packet buffer returns to the
+                                // sender's free-list (zero-alloc sends).
+                                if let Some(p) = &links.fwd_return {
+                                    p.give(buf);
+                                }
                                 anyhow::ensure!(
                                     hdr.micro_batch as usize == t.micro,
                                     "stage {}: activation for micro {}, schedule expects {} \
@@ -438,10 +451,10 @@ pub fn run_schedule_with<B: StageBackend>(
                             let t_wait = Instant::now();
                             let msg = loop {
                                 match recv_msg(
-                                    rx,
-                                    Some(&links.rx_fwd),
+                                    rx.as_ref(),
+                                    Some(links.rx_fwd.as_ref()),
                                     &mut pending,
-                                    &links.tx_driver,
+                                    links.tx_driver.as_ref(),
                                     links.stage,
                                     iter,
                                     hb,
@@ -465,6 +478,9 @@ pub fn run_schedule_with<B: StageBackend>(
                             match msg {
                                 Wire::Packet(buf) => {
                                     let hdr = decode_payload_into(&buf, &mut grad_buf)?;
+                                    if let Some(p) = &links.bwd_return {
+                                        p.give(buf);
+                                    }
                                     anyhow::ensure!(
                                         hdr.micro_batch as usize == t.micro,
                                         "stage {}: gradient for micro {}, schedule expects {} \
@@ -534,7 +550,7 @@ pub fn run_schedule_with<B: StageBackend>(
                 }
             }
             // Long compute sequences must not starve the liveness plane.
-            beat(&links.tx_driver, links.stage, iter, hb, &mut last_beat);
+            beat(links.tx_driver.as_ref(), links.stage, iter, hb, &mut last_beat);
         }
     }
     let _ = links.tx_driver.send(Wire::Stats(stats));
@@ -577,6 +593,10 @@ pub struct NullBackend {
     /// `StageState` — the churn/checkpoint tests run killed-and-recovered
     /// pipelines without artifacts and still restore exact state.
     pub stateful: bool,
+    /// Artificial seconds slept per forward (`--pace`): gives otherwise
+    /// instant Null runs a real duration so multi-process demos and the
+    /// CI `kill -9` smoke can hit a *running* job. Never affects math.
+    pub pace_s: f64,
 }
 
 impl NullBackend {
@@ -591,6 +611,7 @@ impl NullBackend {
             log: Vec::new(),
             updates: 0,
             stateful: false,
+            pace_s: 0.0,
         }
     }
 
@@ -621,6 +642,9 @@ impl StageBackend for NullBackend {
         _labels: Option<Vec<i32>>,
     ) -> anyhow::Result<FwdOut> {
         self.log.push((TaskKind::Forward, micro));
+        if self.pace_s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(self.pace_s));
+        }
         let x: Vec<f32> = match input {
             FwdInput::Tokens(t) => t.iter().map(|&v| v as f32 + self.param).collect(),
             FwdInput::Act(x) => x,

@@ -17,10 +17,13 @@ use crate::opdag::data::{
     encode_parts_into, CompressCfg, OpData, OpDataHeader, OpDataKind, OpDataView,
     WIRE_HEADER_BYTES,
 };
+use crate::transport::PacketPool;
 
 /// Channel message. Activations/gradients travel as *encoded* OP-Data
 /// byte buffers (the socket wire format), everything else is control.
-#[derive(Debug)]
+/// Over `TcpTransport` every variant has a binary frame encoding
+/// (`transport::codec`); `PartialEq` backs the roundtrip tests.
+#[derive(Debug, PartialEq)]
 pub enum Wire {
     /// Driver -> embed worker: token microbatch.
     Data { iter: u32, micro: u32, tokens: Vec<i32> },
@@ -67,7 +70,7 @@ pub enum Wire {
 
 /// Portable stage training state (flat parameters + optimizer moments),
 /// carried across worker generations when the broker re-partitions.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct StageState {
     pub params: Vec<f32>,
     pub momentum: Vec<f32>,
@@ -76,7 +79,7 @@ pub struct StageState {
 }
 
 /// Per-worker accumulated counters (profiling plane, §3.5).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct WorkerStats {
     pub stage: usize,
     pub device: usize,
@@ -110,6 +113,10 @@ pub struct LinkEncoder {
     codec: ValueCodec,
     comp: Compressed,
     scratch: CompressScratch,
+    /// Free-list the packet `Vec`s are drawn from; receivers return the
+    /// drained buffers here (same-process links) or the transport does
+    /// right after the socket write, so steady state allocates nothing.
+    pool: PacketPool,
 }
 
 impl LinkEncoder {
@@ -130,7 +137,18 @@ impl LinkEncoder {
             codec,
             comp: Compressed::default(),
             scratch: CompressScratch::default(),
+            pool: PacketPool::new(),
         }
+    }
+
+    pub fn from_spec(spec: LinkSpec, chunk: usize) -> LinkEncoder {
+        LinkEncoder::with_codec(spec.kind, spec.ratio, chunk, spec.codec)
+    }
+
+    /// Handle to this encoder's packet free-list (hand it to whoever
+    /// drains the packets so the buffers come back).
+    pub fn pool(&self) -> PacketPool {
+        self.pool.clone()
     }
 
     /// Compress + encode one message. Returns the packet and its wire-byte
@@ -189,7 +207,7 @@ impl LinkEncoder {
             micro_batch: micro,
         };
         let wire = WIRE_HEADER_BYTES + self.comp.wire_bytes();
-        let mut buf = Vec::new();
+        let mut buf = self.pool.take();
         encode_parts_into(
             &hdr,
             &self.comp.cfg,
@@ -202,9 +220,34 @@ impl LinkEncoder {
     }
 }
 
+/// The negotiated wire configuration of one directed link: compression
+/// kind, the Eq. 7 ratio keyed by the receiving device, and the value
+/// codec. Serializable (it travels inside the TCP `StageAssign`
+/// handshake), so a remote worker builds byte-identical `LinkEncoder`s
+/// to the in-process path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    pub kind: CompressKind,
+    pub ratio: f64,
+    pub codec: ValueCodec,
+}
+
+impl LinkSpec {
+    /// The spec `CompressPlan` implies for a message of `data_kind` whose
+    /// receiver sits on `dst_device`.
+    pub fn from_plan(plan: &CompressPlan, dst_device: usize, data_kind: OpDataKind) -> LinkSpec {
+        LinkSpec {
+            kind: plan.kind,
+            ratio: plan.ratio_for_kind(dst_device, data_kind),
+            codec: plan.codec_for_kind(dst_device, data_kind),
+        }
+    }
+}
+
 /// Per-stage codec: one `LinkEncoder` per outgoing link. Ratios are keyed
 /// by the *receiving* device (Eq. 7) and gated by the plan's direction
-/// knob; built once by the broker, owned by the stage worker.
+/// knob; built once by the broker (in-process) or from the serialized
+/// `LinkSpec` pair in the `StageAssign` handshake (remote workers).
 pub struct StageCodec {
     pub fwd: Option<LinkEncoder>,
     pub bwd: Option<LinkEncoder>,
@@ -217,23 +260,21 @@ impl StageCodec {
         prev_device: Option<usize>,
         chunk: usize,
     ) -> StageCodec {
+        StageCodec::from_specs(
+            next_device.map(|d| LinkSpec::from_plan(plan, d, OpDataKind::Activation)),
+            prev_device.map(|d| LinkSpec::from_plan(plan, d, OpDataKind::Gradient)),
+            chunk,
+        )
+    }
+
+    pub fn from_specs(
+        fwd: Option<LinkSpec>,
+        bwd: Option<LinkSpec>,
+        chunk: usize,
+    ) -> StageCodec {
         StageCodec {
-            fwd: next_device.map(|d| {
-                LinkEncoder::with_codec(
-                    plan.kind,
-                    plan.ratio_for_kind(d, OpDataKind::Activation),
-                    chunk,
-                    plan.codec_for_kind(d, OpDataKind::Activation),
-                )
-            }),
-            bwd: prev_device.map(|d| {
-                LinkEncoder::with_codec(
-                    plan.kind,
-                    plan.ratio_for_kind(d, OpDataKind::Gradient),
-                    chunk,
-                    plan.codec_for_kind(d, OpDataKind::Gradient),
-                )
-            }),
+            fwd: fwd.map(|s| LinkEncoder::from_spec(s, chunk)),
+            bwd: bwd.map(|s| LinkEncoder::from_spec(s, chunk)),
         }
     }
 }
@@ -467,6 +508,26 @@ mod tests {
             assert_eq!(reused, oneshot, "iter {iter}");
             assert_eq!(w1, w2);
         }
+    }
+
+    #[test]
+    fn packet_pool_reuses_the_drained_buffer() {
+        // Returning a drained packet to the encoder's free-list makes the
+        // next encode reuse the same allocation — and the bytes stay
+        // identical to a fresh encode.
+        let mut rng = Rng::new(47);
+        let dense: Vec<f32> = (0..640).map(|_| rng.f32() - 0.5).collect();
+        let mut enc = LinkEncoder::new(CompressKind::TopK, 20.0, 128);
+        let pool = enc.pool();
+        let (first, _) = enc.encode(1, 2, OpDataKind::Gradient, 0, 0, &dense);
+        let want = first.clone();
+        let ptr = first.as_ptr();
+        pool.give(first);
+        assert_eq!(pool.len(), 1);
+        let (second, _) = enc.encode(1, 2, OpDataKind::Gradient, 0, 0, &dense);
+        assert_eq!(second, want, "pooled buffer must not change the encoding");
+        assert_eq!(second.as_ptr(), ptr, "steady state must reuse the allocation");
+        assert_eq!(pool.len(), 0);
     }
 
     #[test]

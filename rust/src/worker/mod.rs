@@ -14,6 +14,7 @@
 
 pub mod interpreter;
 pub mod messages;
+pub mod remote;
 pub mod stage;
 
 pub use interpreter::{
@@ -21,6 +22,8 @@ pub use interpreter::{
     StageBackend, StageLinks,
 };
 pub use messages::{
-    decode_payload, decode_payload_into, LinkEncoder, StageCodec, StageState, Wire, WorkerStats,
+    decode_payload, decode_payload_into, LinkEncoder, LinkSpec, StageCodec, StageState, Wire,
+    WorkerStats,
 };
-pub use stage::{spawn_stage, BackendKind, StageCtx};
+pub use remote::{run_worker, WorkerOpts};
+pub use stage::{run_stage, spawn_stage, BackendKind, StageCtx};

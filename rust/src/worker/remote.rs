@@ -1,0 +1,162 @@
+//! The `fusionllm worker` process: a remote stage executor.
+//!
+//! Connects to the broker (`--connect host:port`), authenticates with the
+//! shared token, then serves `StageAssign`s until the broker says Exit:
+//! each assignment builds the manifest/backend locally (PJRT artifacts
+//! come from this machine's `--artifacts` root; Null configs are
+//! synthesized from the config name), installs the per-generation lane
+//! queues, answers the ready barrier, and runs the *same* schedule
+//! interpreter the in-process workers run — `stage::run_stage` — over
+//! TCP-backed links. Re-partitions and crash recovery therefore reach
+//! remote workers for free: a new generation is just the next Assign.
+
+use super::messages::{StageCodec, Wire};
+use super::stage::{self, BackendKind, StageCtx};
+use super::RunOutcome;
+use crate::runtime::{Manifest, ModelCfg};
+use crate::transport::chan;
+use crate::transport::frame::Lane;
+use crate::transport::tcp::{StageAssign, WorkerCtl, WorkerSession};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// CLI-level options of one worker process.
+#[derive(Debug, Clone)]
+pub struct WorkerOpts {
+    /// Broker address (`host:port`).
+    pub connect: String,
+    /// Shared-secret token (must match the broker's `--token`).
+    pub token: String,
+    /// Requested device id (None = broker assigns the next free one).
+    pub device: Option<usize>,
+    /// Local PJRT artifacts root (Null assignments ignore it).
+    pub artifacts: PathBuf,
+    /// How long to keep retrying the initial connect (the broker may
+    /// start after the workers).
+    pub retry: Duration,
+}
+
+/// Run the worker process until the broker exits (or the connection is
+/// lost). Returns Ok on a clean broker-initiated Exit.
+pub fn run_worker(opts: &WorkerOpts) -> anyhow::Result<()> {
+    let session = WorkerSession::connect(
+        &opts.connect,
+        &opts.token,
+        opts.device,
+        opts.retry,
+    )?;
+    eprintln!(
+        "worker: connected to broker {} (requested device: {})",
+        session.peer(),
+        opts.device.map(|d| d.to_string()).unwrap_or_else(|| "any".into())
+    );
+    loop {
+        match session.ctl().recv() {
+            Err(_) => anyhow::bail!("broker connection lost"),
+            Ok(WorkerCtl::Lost(why)) => anyhow::bail!("broker connection lost: {why}"),
+            Ok(WorkerCtl::Exit) => {
+                eprintln!("worker: broker finished, exiting");
+                return Ok(());
+            }
+            Ok(WorkerCtl::Assign(a)) => {
+                eprintln!(
+                    "worker: assigned stage {}/{} (device {}, iters {}..{})",
+                    a.stage,
+                    a.n_stages,
+                    a.device,
+                    a.iter0,
+                    a.iter0 as usize + a.iters
+                );
+                if !serve_assignment(&session, *a, &opts.artifacts)? {
+                    // Churn injector fired: vanish like a kill -9 (the
+                    // socket closes when `session` drops).
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// Serve one generation's stage. Returns false when the process should
+/// disappear (fault-injection kill).
+fn serve_assignment(
+    session: &WorkerSession,
+    a: StageAssign,
+    artifacts: &Path,
+) -> anyhow::Result<bool> {
+    let stage = a.stage;
+    let is_head = a.stage + 1 == a.n_stages;
+    let manifest = match a.backend {
+        BackendKind::Pjrt => Manifest::load(artifacts, &a.config)?,
+        BackendKind::Null => Manifest::synthetic(ModelCfg::null_sim(&a.config)),
+    };
+    let codec = StageCodec::from_specs(a.fwd, a.bwd, a.chunk);
+    let fwd_pool = codec.fwd.as_ref().map(|e| e.pool());
+    let bwd_pool = codec.bwd.as_ref().map(|e| e.pool());
+
+    let (fwd_tx, fwd_rx) = mpsc::channel::<Wire>();
+    let (bwd_tx, bwd_rx) = mpsc::channel::<Wire>();
+    let (lbl_tx, lbl_rx) = mpsc::channel::<Wire>();
+    session.install_lanes(
+        fwd_tx,
+        (!is_head).then_some(bwd_tx),
+        is_head.then_some(lbl_tx),
+    );
+
+    let ctx = StageCtx {
+        stage: a.stage,
+        n_stages: a.n_stages,
+        device: a.device,
+        next_device: a.next_device,
+        prev_device: a.prev_device,
+        manifest,
+        codec,
+        tasks: a.tasks,
+        iter0: a.iter0,
+        iters: a.iters,
+        n_micro: a.n_micro,
+        lr: a.lr,
+        momentum: a.momentum,
+        optimizer: a.optimizer,
+        param_seed: a.param_seed,
+        init_state: a.init_state,
+        slow_factor: a.slow_factor,
+        pace_s: a.pace_s,
+        backend: a.backend,
+        heartbeat: (a.heartbeat_s > 0.0).then(|| Duration::from_secs_f64(a.heartbeat_s)),
+        kill_at_iter: a.kill_at_iter,
+        rx_fwd: chan::endpoint(fwd_rx),
+        rx_bwd: (!is_head).then(|| chan::endpoint(bwd_rx)),
+        tx_fwd: (!is_head).then(|| session.link(Lane::Fwd, fwd_pool)),
+        tx_bwd: (a.stage > 0).then(|| session.link(Lane::Bwd, bwd_pool)),
+        rx_labels: is_head.then(|| chan::endpoint(lbl_rx)),
+        tx_driver: session.link(Lane::Driver, None),
+        // Incoming packet bodies come from the demux reader's pool;
+        // drained buffers cycle back to it.
+        fwd_return: Some(session.rx_pool()),
+        bwd_return: Some(session.rx_pool()),
+    };
+
+    // Ready barrier: lanes are installed, the broker may start the
+    // generation (backend init is covered by the first-contact grace).
+    session.send_ready(stage)?;
+    let outcome = stage::run_stage(ctx);
+    session.clear_lanes();
+    match outcome {
+        Ok(RunOutcome::Killed) => {
+            eprintln!("worker: fault injector fired — vanishing (simulated kill -9)");
+            Ok(false)
+        }
+        Ok(_) => Ok(true),
+        Err(e) => {
+            // Report and stay connected: the broker fails this device and
+            // re-plans; this process can still host a later generation.
+            let _ = session
+                .link(Lane::Driver, None)
+                .send(Wire::Fatal { stage, error: format!("{e:#}") });
+            eprintln!("worker: stage {stage} failed: {e:#}");
+            Ok(true)
+        }
+    }
+}

@@ -13,12 +13,13 @@
 //! relies on this).
 
 use super::interpreter::{
-    run_schedule_with, BwdOut, FwdInput, FwdOut, NullBackend, RunOpts, StageBackend, StageLinks,
+    run_schedule_with, BwdOut, FwdInput, FwdOut, NullBackend, RunOpts, RunOutcome, StageBackend,
+    StageLinks,
 };
 use super::messages::{StageCodec, StageState, Wire};
 use crate::pipeline::Task;
 use crate::runtime::{Manifest, ModelCfg, Runtime, StageKind, StageSpec};
-use std::sync::mpsc::{Receiver, Sender};
+use crate::transport::{Endpoint, Link, PacketPool};
 use std::time::{Duration, Instant};
 
 /// Which compute backend a stage worker runs. `Null` is the artifact-free
@@ -81,6 +82,9 @@ pub struct StageCtx {
     /// Straggler-injection test hook: sleep (factor-1)× the measured
     /// compute time after each fwd/bwd execution. 1.0 = off.
     pub slow_factor: f64,
+    /// Artificial seconds per Null forward (`--pace`): pacing for
+    /// multi-process demos and the CI kill smoke. 0 = off.
+    pub pace_s: f64,
     /// Compute backend (PJRT in production, Null for artifact-free runs).
     pub backend: BackendKind,
     /// Liveness beacon interval (None = blocking receives, no beacons).
@@ -89,33 +93,38 @@ pub struct StageCtx {
     /// iteration (set by the broker when this stage's device matches
     /// `--kill-node` and the generation covers `--kill-at-iter`).
     pub kill_at_iter: Option<u32>,
-    /// Forward input (None for embed: tokens come from the driver).
-    pub rx_fwd: Receiver<Wire>,
+    /// Forward input (Data from the driver for stage 0, Packets after).
+    pub rx_fwd: Box<dyn Endpoint>,
     /// Backward gradient input (None for head).
-    pub rx_bwd: Option<Receiver<Wire>>,
+    pub rx_bwd: Option<Box<dyn Endpoint>>,
     /// Forward output (None for head).
-    pub tx_fwd: Option<Sender<Wire>>,
+    pub tx_fwd: Option<Box<dyn Link>>,
     /// Backward gradient output (None for embed).
-    pub tx_bwd: Option<Sender<Wire>>,
+    pub tx_bwd: Option<Box<dyn Link>>,
     /// Head only: label stream from the driver.
-    pub rx_labels: Option<Receiver<Wire>>,
+    pub rx_labels: Option<Box<dyn Endpoint>>,
     /// Loss + stats reporting to the driver.
-    pub tx_driver: Sender<Wire>,
+    pub tx_driver: Box<dyn Link>,
+    /// Return free-lists for drained packet buffers (upstream fwd
+    /// encoder / downstream bwd encoder; None where no packets arrive).
+    pub fwd_return: Option<PacketPool>,
+    pub bwd_return: Option<PacketPool>,
 }
 
-/// Spawn the worker thread for one stage. Errors are reported to the
-/// driver as `Wire::Fatal` so the job aborts instead of hanging.
+/// Spawn the worker thread for one stage (the `ChanTransport` execution
+/// mode). Errors are reported to the driver as `Wire::Fatal` so the job
+/// aborts instead of hanging.
 pub fn spawn_stage(ctx: StageCtx) -> std::thread::JoinHandle<anyhow::Result<()>> {
     std::thread::Builder::new()
         .name(format!("stage{}", ctx.stage))
         .spawn(move || {
             let stage = ctx.stage;
-            let tx = ctx.tx_driver.clone();
+            let tx = ctx.tx_driver.clone_link();
             let r = run_stage(ctx);
             if let Err(e) = &r {
                 let _ = tx.send(Wire::Fatal { stage, error: format!("{e:#}") });
             }
-            r
+            r.map(|_| ())
         })
         .expect("spawn stage worker")
 }
@@ -403,7 +412,11 @@ impl StageBackend for PjrtBackend {
     }
 }
 
-fn run_stage(ctx: StageCtx) -> anyhow::Result<()> {
+/// Execute one stage to completion on the calling thread. This is the
+/// single execution path for both transports: `spawn_stage` wraps it in a
+/// thread (chan mode), `worker::remote::run_worker` calls it directly per
+/// `StageAssign` (one stage of one generation, tcp mode).
+pub fn run_stage(ctx: StageCtx) -> anyhow::Result<RunOutcome> {
     let kind = ctx.backend;
     let tasks = ctx.tasks.clone();
     let (iter0, iters) = (ctx.iter0, ctx.iters);
@@ -412,7 +425,7 @@ fn run_stage(ctx: StageCtx) -> anyhow::Result<()> {
         BackendKind::Pjrt => {
             let mut backend = PjrtBackend::new(&ctx)?;
             let mut links = links_from_ctx(ctx);
-            run_schedule_with(&mut links, &mut backend, &tasks, iter0, iters, opts)?;
+            run_schedule_with(&mut links, &mut backend, &tasks, iter0, iters, opts)
         }
         BackendKind::Null => {
             // Activation payload = one f32 per token (no artifacts, no
@@ -421,14 +434,14 @@ fn run_stage(ctx: StageCtx) -> anyhow::Result<()> {
             let n = (cfg.microbatch * cfg.seq_len).max(1);
             let is_head = ctx.stage + 1 == ctx.n_stages;
             let mut backend = NullBackend::stateful(n, ctx.n_micro, is_head);
+            backend.pace_s = ctx.pace_s.max(0.0);
             if let Some(st) = &ctx.init_state {
                 backend.restore(st);
             }
             let mut links = links_from_ctx(ctx);
-            run_schedule_with(&mut links, &mut backend, &tasks, iter0, iters, opts)?;
+            run_schedule_with(&mut links, &mut backend, &tasks, iter0, iters, opts)
         }
     }
-    Ok(())
 }
 
 fn links_from_ctx(ctx: StageCtx) -> StageLinks {
@@ -442,5 +455,7 @@ fn links_from_ctx(ctx: StageCtx) -> StageLinks {
         tx_bwd: ctx.tx_bwd,
         rx_labels: ctx.rx_labels,
         tx_driver: ctx.tx_driver,
+        fwd_return: ctx.fwd_return,
+        bwd_return: ctx.bwd_return,
     }
 }

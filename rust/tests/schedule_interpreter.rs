@@ -14,6 +14,7 @@
 
 use fusionllm::compress::CompressPlan;
 use fusionllm::pipeline::{PipelineSchedule, ScheduleKind, Task, TaskKind};
+use fusionllm::transport::chan;
 use fusionllm::util::rng::Rng;
 use fusionllm::worker::{run_schedule, NullBackend, StageCodec, StageLinks, Wire};
 use std::sync::mpsc;
@@ -62,12 +63,18 @@ fn run_pipeline(schedule: &PipelineSchedule, iters: usize, n: usize) -> RunResul
             stage: s,
             device: s,
             codec: StageCodec::from_plan(&plan, next, prev, n.max(1)),
-            rx_fwd: fwd_rx[s].take().unwrap(),
-            rx_bwd: if s + 1 < s_n { bwd_rx[s].take() } else { None },
-            tx_fwd: if s + 1 < s_n { Some(fwd_tx[s + 1].clone()) } else { None },
-            tx_bwd: if s > 0 { Some(bwd_tx[s - 1].clone()) } else { None },
-            rx_labels: if s == s_n - 1 { label_rx.take() } else { None },
-            tx_driver: tx_driver.clone(),
+            rx_fwd: chan::endpoint(fwd_rx[s].take().unwrap()),
+            rx_bwd: if s + 1 < s_n {
+                bwd_rx[s].take().map(chan::endpoint)
+            } else {
+                None
+            },
+            tx_fwd: if s + 1 < s_n { Some(chan::link(fwd_tx[s + 1].clone())) } else { None },
+            tx_bwd: if s > 0 { Some(chan::link(bwd_tx[s - 1].clone())) } else { None },
+            rx_labels: if s == s_n - 1 { label_rx.take().map(chan::endpoint) } else { None },
+            tx_driver: chan::link(tx_driver.clone()),
+            fwd_return: None,
+            bwd_return: None,
         };
         let tasks = schedule.tasks[s].clone();
         let is_head = s == s_n - 1;

@@ -1,0 +1,290 @@
+//! Transport-layer integration tests.
+//!
+//!   * Differential e2e: the same tiny Null-backend job over the
+//!     in-process `ChanTransport` and over a loopback `TcpTransport`
+//!     (real sockets, real worker sessions, real handshake) must produce
+//!     bitwise-identical loss trajectories.
+//!   * Churn over TCP: a worker process vanishing mid-run (socket EOF —
+//!     what a `kill -9` looks like from the broker) triggers exactly one
+//!     checkpoint-restore recovery and still matches the chan run
+//!     bitwise.
+//!   * Frame-codec property tests: randomized frame streams survive
+//!     arbitrary read chunking; corrupted streams (truncation, flipped
+//!     bits, version skew) error cleanly and never panic.
+
+use fusionllm::broker::{self, Job};
+use fusionllm::checkpoint::fnv1a64;
+use fusionllm::scheduler::replan::ReplanMode;
+use fusionllm::transport::frame::{encode_frame, FrameKind, Framer, Lane, FRAME_VERSION};
+use fusionllm::transport::TransportKind;
+use fusionllm::util::rng::Rng;
+use fusionllm::worker::{run_worker, BackendKind, WorkerOpts};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::time::Duration;
+
+// ---- helpers -----------------------------------------------------------
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "fusionllm-transport-test-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A fast artifact-free job: 4 Null stages pinned to devices 0..4.
+fn null_job(tag: &str) -> Job {
+    Job {
+        config: "transport-test".into(),
+        backend: BackendKind::Null,
+        iters: 6,
+        n_micro: 2,
+        placement: Some(vec![0, 1, 2, 3]),
+        straggler_threshold: 1e9,
+        // 1 s death deadline (same rationale as the churn tests: loaded
+        // CI machines must not misdeclare a descheduled live worker).
+        heartbeat_s: 0.02,
+        heartbeat_timeout: 50,
+        token: "transport-test-token".into(),
+        checkpoint_dir: ckpt_dir(tag),
+        ..Job::default()
+    }
+}
+
+/// Run `job` over loopback TCP: bind port 0, run one worker session per
+/// entry of `devices` on its own thread (the same code path the
+/// `fusionllm worker` process runs), and drive the broker to completion.
+fn run_tcp(job: &Job, devices: &[usize]) -> anyhow::Result<fusionllm::trainer::TrainReport> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let mut workers = Vec::new();
+    for &d in devices {
+        let opts = WorkerOpts {
+            connect: addr.clone(),
+            token: job.token.clone(),
+            device: Some(d),
+            artifacts: PathBuf::from("<unused-null-backend>"),
+            retry: Duration::from_secs(10),
+        };
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("test-worker-{d}"))
+                .spawn(move || run_worker(&opts))
+                .unwrap(),
+        );
+    }
+    let job = Job {
+        transport: TransportKind::Tcp,
+        workers: Some(devices.len()),
+        ..job.clone()
+    };
+    let report = broker::run_with_listener(&job, Some(listener));
+    for w in workers {
+        w.join()
+            .expect("worker thread panicked")
+            .expect("worker session failed");
+    }
+    report
+}
+
+fn assert_bitwise_equal_losses(a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "loss trajectory lengths differ");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "iter {i}: chan {x} != tcp {y} — the transports diverged"
+        );
+    }
+}
+
+// ---- differential e2e --------------------------------------------------
+
+#[test]
+fn tcp_loopback_matches_chan_bitwise() {
+    // Same job, two transports: in-process channels vs loopback sockets
+    // with 4 worker sessions. Every activation/gradient crosses the
+    // frame codec + broker relay; the losses must not change by a bit.
+    let base = null_job("clean");
+    let chan = broker::run(&base).unwrap();
+    let tcp = run_tcp(&base, &[0, 1, 2, 3]).unwrap();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+
+    assert_eq!(chan.losses.len(), 6);
+    assert_bitwise_equal_losses(&chan.losses, &tcp.losses);
+    assert!(tcp.recoveries.is_empty() && tcp.replans.is_empty());
+    // The wire accounting flows back over the driver lane too.
+    assert!(tcp.wire_bytes.iter().sum::<f64>() > 0.0);
+}
+
+#[test]
+fn tcp_killed_worker_recovers_and_matches_chan() {
+    // Device 1's worker process vanishes at the top of iteration 3 (its
+    // session closes — the broker sees what a kill -9 produces: EOF on
+    // the socket). With a spare worker on device 4, the broker must
+    // fail the device, re-plan onto the survivors, restore the iter-2
+    // checkpoint and finish all 6 iterations — exactly one recovery,
+    // loss trajectory bitwise-equal to an uninterrupted chan run.
+    let base = Job {
+        checkpoint_every: 2,
+        replan: ReplanMode::Auto,
+        ..null_job("churn")
+    };
+    let clean = broker::run(&Job {
+        checkpoint_every: 0,
+        replan: ReplanMode::Off,
+        ..base.clone()
+    })
+    .unwrap();
+    let churn = run_tcp(
+        &Job {
+            kill_device: Some(1),
+            kill_at_iter: 3,
+            ..base.clone()
+        },
+        &[0, 1, 2, 3, 4],
+    )
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+
+    assert_eq!(churn.losses.len(), 6, "all iterations must complete");
+    assert_eq!(churn.recoveries.len(), 1, "{:?}", churn.recoveries);
+    let r = &churn.recoveries[0];
+    assert_eq!((r.stage, r.device, r.died_iter), (1, 1, 3));
+    assert_eq!(r.resume_iter, 2, "newest checkpoint is the iter-2 boundary");
+    assert!(
+        r.cause.contains("EOF")
+            || r.cause.contains("closed")
+            || r.cause.contains("deadline")
+            || r.cause.contains("socket"),
+        "death must be declared by the socket plane, got: {}",
+        r.cause
+    );
+    assert!(!r.to.contains(&1), "dead device still placed: {:?}", r.to);
+    assert!(
+        r.to.iter().all(|d| [0, 2, 3, 4].contains(d)),
+        "recovery placed a stage on a device with no worker: {:?}",
+        r.to
+    );
+    assert_bitwise_equal_losses(&clean.losses, &churn.losses);
+}
+
+#[test]
+fn tcp_without_heartbeats_is_rejected() {
+    // The socket plane IS the deadline monitor — running it without the
+    // liveness plane configured must fail fast, not hang.
+    let job = Job {
+        transport: TransportKind::Tcp,
+        heartbeat_s: 0.0,
+        ..null_job("nohb")
+    };
+    let err = broker::run(&job).unwrap_err().to_string();
+    assert!(err.contains("heartbeat"), "unexpected error: {err}");
+}
+
+// ---- frame codec properties --------------------------------------------
+
+const LANES: [Lane; 5] = [Lane::Fwd, Lane::Bwd, Lane::Labels, Lane::Driver, Lane::Ctl];
+const KINDS: [FrameKind; 6] = [
+    FrameKind::Packet,
+    FrameKind::Data,
+    FrameKind::Heartbeat,
+    FrameKind::Stats,
+    FrameKind::Hello,
+    FrameKind::Stop,
+];
+
+fn random_stream(rng: &mut Rng, n_frames: usize) -> (Vec<u8>, Vec<(Lane, FrameKind, Vec<u8>)>) {
+    let mut stream = Vec::new();
+    let mut want = Vec::new();
+    let mut buf = Vec::new();
+    for _ in 0..n_frames {
+        let lane = LANES[rng.below(LANES.len() as u64) as usize];
+        let kind = KINDS[rng.below(KINDS.len() as u64) as usize];
+        let len = rng.below(300) as usize;
+        let body: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        encode_frame(lane, kind, &body, &mut buf);
+        stream.extend_from_slice(&buf);
+        want.push((lane, kind, body));
+    }
+    (stream, want)
+}
+
+#[test]
+fn frame_stream_survives_arbitrary_chunking() {
+    let mut rng = Rng::new(0xF7A3);
+    for round in 0..50 {
+        let (stream, want) = random_stream(&mut rng, 1 + (round % 7));
+        let mut fr = Framer::new();
+        let mut got = Vec::new();
+        let mut pos = 0usize;
+        while pos < stream.len() {
+            let step = 1 + rng.below(97) as usize;
+            let end = (pos + step).min(stream.len());
+            fr.push(&stream[pos..end]);
+            pos = end;
+            while let Some(f) = fr.next().expect("valid stream must decode") {
+                got.push((f.lane, f.kind, f.body));
+            }
+        }
+        assert_eq!(got, want, "round {round}");
+    }
+}
+
+#[test]
+fn corrupted_streams_error_cleanly_never_panic() {
+    let mut rng = Rng::new(0xBAD5EED);
+    for round in 0..200 {
+        let (mut stream, _) = random_stream(&mut rng, 1 + (round % 3));
+        // Flip one random byte (or truncate): decoding must either yield
+        // complete frames, report "need more bytes", or error — a panic
+        // or a bogus frame count explosion fails the test harness.
+        if rng.below(4) == 0 {
+            let cut = rng.below(stream.len() as u64) as usize;
+            stream.truncate(cut);
+        } else {
+            let i = rng.below(stream.len() as u64) as usize;
+            stream[i] ^= 1 << rng.below(8);
+        }
+        let mut fr = Framer::new();
+        fr.push(&stream);
+        loop {
+            match fr.next() {
+                Ok(Some(_)) => continue, // frames before the corruption
+                Ok(None) => break,       // truncated tail
+                Err(e) => {
+                    let msg = e.to_string();
+                    assert!(!msg.is_empty());
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn version_mismatch_and_checksum_are_both_detected() {
+    let mut buf = Vec::new();
+    encode_frame(Lane::Driver, FrameKind::Heartbeat, &[1, 2, 3, 4], &mut buf);
+
+    // Version skew: flip the version byte and fix the checksum so ONLY
+    // the version check can catch it.
+    let mut skewed = buf.clone();
+    skewed[1] = FRAME_VERSION + 7;
+    let n = skewed.len();
+    let sum = fnv1a64(&skewed[..n - 8]);
+    skewed[n - 8..].copy_from_slice(&sum.to_le_bytes());
+    let mut fr = Framer::new();
+    fr.push(&skewed);
+    assert!(fr.next().unwrap_err().to_string().contains("version"));
+
+    // Checksum: flip a body bit, leave the checksum alone.
+    let mut flipped = buf.clone();
+    let n = flipped.len();
+    flipped[n - 9] ^= 0x80;
+    let mut fr = Framer::new();
+    fr.push(&flipped);
+    assert!(fr.next().unwrap_err().to_string().contains("checksum"));
+}
