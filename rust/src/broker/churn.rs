@@ -1,0 +1,297 @@
+//! Scripted churn traces: ordered membership events the broker drives.
+//!
+//! A trace file holds one event per line —
+//!
+//! ```text
+//! # comments and blank lines are skipped
+//! kill 1 @3      # device 1's worker vanishes at the top of iteration 3
+//! join 5 @5      # brand-new device 5 becomes available at iteration 5
+//! rejoin 1 @7    # previously-killed device 1 reconnects at iteration 7
+//! ```
+//!
+//! Events must be listed in non-decreasing iteration order. `kill` events
+//! reach the workers through the existing fault injector (the worker
+//! vanishes silently and the deadline monitor must notice); `join` and
+//! `rejoin` are handled by the broker at the named iteration boundary:
+//! the device is marked alive, parked as a spare, and folded into the
+//! pipeline only when `Replanner::replan_after_join` predicts a win.
+//!
+//! The legacy `--kill-node N --kill-at-iter K` pair is exactly the
+//! single-event trace `kill N @K`.
+
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnAction {
+    Kill,
+    Join,
+    Rejoin,
+}
+
+impl ChurnAction {
+    pub fn name(self) -> &'static str {
+        match self {
+            ChurnAction::Kill => "kill",
+            ChurnAction::Join => "join",
+            ChurnAction::Rejoin => "rejoin",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub action: ChurnAction,
+    pub device: usize,
+    pub at_iter: u32,
+}
+
+/// An ordered membership script. Parsed once, validated against the
+/// run's initial placement, then interpreted by the broker event loop.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChurnTrace {
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnTrace {
+    /// The trace equivalent of the legacy `--kill-node/--kill-at-iter`
+    /// injector.
+    pub fn single_kill(device: usize, at_iter: u32) -> ChurnTrace {
+        ChurnTrace {
+            events: vec![ChurnEvent { action: ChurnAction::Kill, device, at_iter }],
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the trace-file format. Syntax and ordering only; membership
+    /// legality needs the initial placement (`validate`).
+    pub fn parse(text: &str) -> anyhow::Result<ChurnTrace> {
+        let mut events = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(
+                toks.len() == 3,
+                "churn trace line {}: expected `<kill|join|rejoin> <device> @<iter>`, got `{line}`",
+                lineno + 1
+            );
+            let action = match toks[0] {
+                "kill" => ChurnAction::Kill,
+                "join" => ChurnAction::Join,
+                "rejoin" => ChurnAction::Rejoin,
+                other => anyhow::bail!(
+                    "churn trace line {}: unknown action `{other}` (kill|join|rejoin)",
+                    lineno + 1
+                ),
+            };
+            let device: usize = toks[1].parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "churn trace line {}: bad device id `{}`",
+                    lineno + 1,
+                    toks[1]
+                )
+            })?;
+            let iter_tok = toks[2].strip_prefix('@').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "churn trace line {}: iteration must be written `@N`, got `{}`",
+                    lineno + 1,
+                    toks[2]
+                )
+            })?;
+            let at_iter: u32 = iter_tok.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "churn trace line {}: bad iteration `{}`",
+                    lineno + 1,
+                    toks[2]
+                )
+            })?;
+            events.push(ChurnEvent { action, device, at_iter });
+        }
+        let trace = ChurnTrace { events };
+        anyhow::ensure!(
+            trace.events.windows(2).all(|w| w[0].at_iter <= w[1].at_iter),
+            "churn trace events must be in non-decreasing iteration order"
+        );
+        Ok(trace)
+    }
+
+    pub fn from_file(path: &Path) -> anyhow::Result<ChurnTrace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading churn trace {}: {e}", path.display()))?;
+        ChurnTrace::parse(&text)
+    }
+
+    /// Membership legality against the run's initial member set: kills
+    /// target current members, rejoins target currently-killed devices,
+    /// joins introduce devices never seen before. A kill and a later
+    /// event for the same device must not share an iteration (the order
+    /// of a simultaneous kill+rejoin is ambiguous).
+    pub fn validate(&self, initial_members: &[usize]) -> anyhow::Result<()> {
+        let mut members: Vec<usize> = initial_members.to_vec();
+        let mut killed: Vec<usize> = Vec::new();
+        let mut last_kill_iter: Vec<(usize, u32)> = Vec::new();
+        for ev in &self.events {
+            let d = ev.device;
+            match ev.action {
+                ChurnAction::Kill => {
+                    anyhow::ensure!(
+                        members.contains(&d),
+                        "churn trace: kill {d} @{}: device {d} is not a member there",
+                        ev.at_iter
+                    );
+                    members.retain(|&m| m != d);
+                    killed.push(d);
+                    last_kill_iter.retain(|&(m, _)| m != d);
+                    last_kill_iter.push((d, ev.at_iter));
+                }
+                ChurnAction::Join => {
+                    anyhow::ensure!(
+                        !members.contains(&d) && !killed.contains(&d),
+                        "churn trace: join {d} @{}: device {d} already seen (use rejoin)",
+                        ev.at_iter
+                    );
+                    members.push(d);
+                }
+                ChurnAction::Rejoin => {
+                    anyhow::ensure!(
+                        killed.contains(&d),
+                        "churn trace: rejoin {d} @{}: device {d} was never killed",
+                        ev.at_iter
+                    );
+                    let k = last_kill_iter
+                        .iter()
+                        .find(|&&(m, _)| m == d)
+                        .map(|&(_, i)| i)
+                        .unwrap_or(0);
+                    anyhow::ensure!(
+                        ev.at_iter > k,
+                        "churn trace: rejoin {d} @{} must come strictly after its kill @{k}",
+                        ev.at_iter
+                    );
+                    killed.retain(|&m| m != d);
+                    members.push(d);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Devices introduced by `join` events (unavailable until then: the
+    /// broker pre-fails them so the initial plan cannot use them).
+    pub fn join_devices(&self) -> Vec<usize> {
+        self.events
+            .iter()
+            .filter(|e| e.action == ChurnAction::Join)
+            .map(|e| e.device)
+            .collect()
+    }
+
+    /// Kill events, in order.
+    pub fn kills(&self) -> impl Iterator<Item = &ChurnEvent> {
+        self.events.iter().filter(|e| e.action == ChurnAction::Kill)
+    }
+
+    /// Join + rejoin events, in order (the broker-driven boundary side).
+    pub fn admissions(&self) -> impl Iterator<Item = &ChurnEvent> {
+        self.events.iter().filter(|e| e.action != ChurnAction::Kill)
+    }
+
+    /// The earliest scripted kill for `device` at or after `from_iter` —
+    /// what a generation starting at `from_iter` must arm the worker-side
+    /// fault injector with. Exact-iteration matching in the interpreter
+    /// makes re-arming across restores safe: a kill already fired can
+    /// only re-fire if the run actually rewinds past it, which replays
+    /// the identical death deterministically.
+    pub fn next_kill(&self, device: usize, from_iter: u32) -> Option<u32> {
+        self.kills()
+            .filter(|e| e.device == device && e.at_iter >= from_iter)
+            .map(|e| e.at_iter)
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_format() {
+        let t = ChurnTrace::parse(
+            "# a comment\n\nkill 1 @3   # inline comment\njoin 5 @5\nrejoin 1 @7\n",
+        )
+        .unwrap();
+        assert_eq!(t.events.len(), 3);
+        assert_eq!(
+            t.events[0],
+            ChurnEvent { action: ChurnAction::Kill, device: 1, at_iter: 3 }
+        );
+        assert_eq!(
+            t.events[1],
+            ChurnEvent { action: ChurnAction::Join, device: 5, at_iter: 5 }
+        );
+        assert_eq!(
+            t.events[2],
+            ChurnEvent { action: ChurnAction::Rejoin, device: 1, at_iter: 7 }
+        );
+        assert_eq!(t.join_devices(), vec![5]);
+        assert_eq!(t.kills().count(), 1);
+        assert_eq!(t.admissions().count(), 2);
+        t.validate(&[0, 1, 2, 3]).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        for bad in [
+            "kill 1",              // missing iter
+            "kill 1 3",            // missing @
+            "explode 1 @3",        // unknown action
+            "kill x @3",           // bad device
+            "kill 1 @x",           // bad iter
+            "kill 1 @5\njoin 2 @3", // out of order
+        ] {
+            assert!(ChurnTrace::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn validate_enforces_membership_legality() {
+        let members = [0usize, 1, 2, 3];
+        // Kill of a non-member.
+        let t = ChurnTrace::parse("kill 9 @2").unwrap();
+        assert!(t.validate(&members).is_err());
+        // Double kill without rejoin.
+        let t = ChurnTrace::parse("kill 1 @2\nkill 1 @4").unwrap();
+        assert!(t.validate(&members).is_err());
+        // Join of an existing member.
+        let t = ChurnTrace::parse("join 2 @3").unwrap();
+        assert!(t.validate(&members).is_err());
+        // Rejoin without a kill.
+        let t = ChurnTrace::parse("rejoin 2 @3").unwrap();
+        assert!(t.validate(&members).is_err());
+        // Rejoin at the kill iteration is ambiguous.
+        let t = ChurnTrace::parse("kill 1 @3\nrejoin 1 @3").unwrap();
+        assert!(t.validate(&members).is_err());
+        // Kill -> rejoin -> kill again is legal.
+        let t = ChurnTrace::parse("kill 1 @2\nrejoin 1 @4\nkill 1 @6").unwrap();
+        t.validate(&members).unwrap();
+        // Join -> kill -> rejoin of the joiner is legal.
+        let t = ChurnTrace::parse("join 7 @1\nkill 7 @3\nrejoin 7 @5").unwrap();
+        t.validate(&members).unwrap();
+    }
+
+    #[test]
+    fn next_kill_respects_generation_start() {
+        let t = ChurnTrace::parse("kill 1 @3\nrejoin 1 @5\nkill 1 @7").unwrap();
+        assert_eq!(t.next_kill(1, 0), Some(3));
+        assert_eq!(t.next_kill(1, 3), Some(3));
+        assert_eq!(t.next_kill(1, 4), Some(7));
+        assert_eq!(t.next_kill(1, 8), None);
+        assert_eq!(t.next_kill(2, 0), None);
+        assert_eq!(ChurnTrace::single_kill(1, 3).next_kill(1, 0), Some(3));
+    }
+}

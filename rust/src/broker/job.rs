@@ -1,6 +1,7 @@
 //! Job definition (the IR-plane input, §3.2): which model config, which
 //! testbed, which scheduler/compressor, and the training hyper-parameters.
 
+use super::churn::ChurnTrace;
 use crate::compress::adatopk::CompressDirection;
 use crate::compress::{CompressKind, ValueCodec};
 use crate::pipeline::ScheduleKind;
@@ -92,6 +93,11 @@ pub struct Job {
     /// notice and — under `--replan auto` — recover).
     pub kill_device: Option<usize>,
     pub kill_at_iter: u32,
+    /// Scripted churn (`--churn-trace FILE`): an ordered membership
+    /// script of kill / join / rejoin events the broker drives. The
+    /// legacy `kill_device`/`kill_at_iter` pair is folded in as a
+    /// single-kill trace by `effective_churn`; setting both is an error.
+    pub churn: Option<ChurnTrace>,
 }
 
 impl Default for Job {
@@ -132,6 +138,7 @@ impl Default for Job {
             keep_checkpoints: 3,
             kill_device: None,
             kill_at_iter: 0,
+            churn: None,
         }
     }
 }
@@ -201,7 +208,26 @@ impl Job {
                 .opt_str("kill-node")
                 .map(|s| s.parse().expect("--kill-node expects a device id")),
             kill_at_iter: args.u64("kill-at-iter", d.kill_at_iter as u64) as u32,
+            churn: args
+                .opt_str("churn-trace")
+                .map(|p| ChurnTrace::from_file(std::path::Path::new(p)))
+                .transpose()?,
         })
+    }
+
+    /// The membership script this job runs under: the explicit
+    /// `--churn-trace`, or the legacy single-kill pair folded into one.
+    /// Mixing both is rejected — the trace is the ordered source of truth.
+    pub fn effective_churn(&self) -> anyhow::Result<Option<ChurnTrace>> {
+        match (&self.churn, self.kill_device) {
+            (Some(_), Some(_)) => anyhow::bail!(
+                "--churn-trace and --kill-node are mutually exclusive \
+                 (write the kill as a trace event)"
+            ),
+            (Some(t), None) => Ok(Some(t.clone())),
+            (None, Some(dev)) => Ok(Some(ChurnTrace::single_kill(dev, self.kill_at_iter))),
+            (None, None) => Ok(None),
+        }
     }
 }
 
@@ -312,6 +338,41 @@ mod tests {
         assert_eq!(j.pace_s, 0.1);
         let bad = Args::parse(["--transport", "udp"].iter().map(|s| s.to_string()));
         assert!(Job::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn churn_trace_flag_parses_and_excludes_kill_node() {
+        use crate::broker::churn::{ChurnAction, ChurnTrace};
+        let dir = std::env::temp_dir()
+            .join(format!("fusionllm-jobtrace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("trace.txt");
+        std::fs::write(&file, "kill 1 @3\njoin 5 @5\nrejoin 1 @7\n").unwrap();
+        let args = Args::parse(
+            ["--churn-trace", file.to_str().unwrap()].iter().map(|s| s.to_string()),
+        );
+        let j = Job::from_args(&args).unwrap();
+        let t = j.churn.clone().unwrap();
+        assert_eq!(t.events.len(), 3);
+        assert_eq!(t.events[1].action, ChurnAction::Join);
+        assert_eq!(j.effective_churn().unwrap().unwrap(), t);
+        // Legacy pair folds into a single-kill trace.
+        let legacy = Job { kill_device: Some(2), kill_at_iter: 4, ..Job::default() };
+        assert_eq!(
+            legacy.effective_churn().unwrap().unwrap(),
+            ChurnTrace::single_kill(2, 4)
+        );
+        // No churn at all.
+        assert!(Job::default().effective_churn().unwrap().is_none());
+        // Mixing both is rejected.
+        let both = Job { churn: Some(t), kill_device: Some(1), ..Job::default() };
+        assert!(both.effective_churn().is_err());
+        // A missing trace file is a clean error.
+        let bad = Args::parse(
+            ["--churn-trace", "/nonexistent/trace"].iter().map(|s| s.to_string()),
+        );
+        assert!(Job::from_args(&bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

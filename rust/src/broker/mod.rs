@@ -31,8 +31,10 @@
 //! relays inter-stage packets between connections — with per-connection
 //! socket read deadlines feeding the same death/recovery machinery.
 
+pub mod churn;
 pub mod job;
 
+pub use churn::{ChurnAction, ChurnEvent, ChurnTrace};
 pub use job::Job;
 
 use crate::checkpoint::{self, Checkpoint};
@@ -45,7 +47,7 @@ use crate::pipeline::PipelineSchedule;
 use crate::runtime::{Manifest, ModelCfg};
 use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
 use crate::simnet::{simulate_iteration, StagePlan};
-use crate::trainer::{RecoveryEvent, ReplanEvent, SyntheticCorpus, TrainReport};
+use crate::trainer::{JoinEvent, RecoveryEvent, ReplanEvent, SyntheticCorpus, TrainReport};
 use crate::transport::tcp::{MonitorCfg, StageAssign, TcpPlane};
 use crate::transport::{chan, Link, PacketPool, TransportKind};
 use crate::worker::{
@@ -62,6 +64,10 @@ const REPLAN_WARMUP_ITERS: usize = 3;
 /// Hard cap on crash recoveries per run (a persistently failing cluster
 /// must eventually surface as an error, not an infinite restart loop).
 const MAX_RECOVERIES: usize = 8;
+
+/// How long the broker waits at a scripted join/rejoin boundary for a
+/// worker process to claim the admitted device (tcp transport).
+const ADMIT_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Where a stage of the current generation executes.
 enum Port {
@@ -259,17 +265,21 @@ struct StageParams {
     slow_factor: f64,
     /// Null-backend pacing (`--pace`).
     pace_s: f64,
-    /// Churn injector: the stage hosted on --kill-node vanishes at the
-    /// top of --kill-at-iter (after recovery the failed device hosts
-    /// nothing, so the injector cannot re-fire).
+    /// Churn injector: the earliest scripted kill of this stage's device
+    /// at or after the generation's first iteration. Exact-iteration
+    /// matching in the interpreter makes re-arming across restores a
+    /// deterministic replay — a kill that already fired can only re-fire
+    /// if the run rewinds past it, and then it must.
     kill_at_iter: Option<u32>,
     param_seed: u64,
 }
 
 fn stage_params(
     job: &Job,
+    churn: Option<&ChurnTrace>,
     devices: &[usize],
     s: usize,
+    iter0: u32,
     slow_dev: Option<(usize, f64)>,
 ) -> StageParams {
     let device = devices[s];
@@ -281,10 +291,7 @@ fn stage_params(
             _ => 1.0,
         },
         pace_s: job.pace_s.max(0.0),
-        kill_at_iter: match job.kill_device {
-            Some(dev) if dev == device => Some(job.kill_at_iter),
-            _ => None,
-        },
+        kill_at_iter: churn.and_then(|t| t.next_kill(device, iter0)),
         param_seed: job.seed.wrapping_add(s as u64),
     }
 }
@@ -297,6 +304,7 @@ fn stage_params(
 fn spawn_generation(
     manifest: &Manifest,
     job: &Job,
+    churn: Option<&ChurnTrace>,
     schedule: &PipelineSchedule,
     devices: &[usize],
     plan: &CompressPlan,
@@ -348,7 +356,7 @@ fn spawn_generation(
 
     let mut ports = Vec::new();
     for s in 0..s_n {
-        let p = stage_params(job, devices, s, slow_dev);
+        let p = stage_params(job, churn, devices, s, iter0, slow_dev);
         let ctx = StageCtx {
             stage: s,
             n_stages: s_n,
@@ -417,6 +425,7 @@ fn assign_generation(
     plane: &mut TcpPlane,
     manifest: &Manifest,
     job: &Job,
+    churn: Option<&ChurnTrace>,
     schedule: &PipelineSchedule,
     devices: &[usize],
     plan: &CompressPlan,
@@ -430,7 +439,7 @@ fn assign_generation(
     let cfg = &manifest.config;
     let mut assigns = Vec::with_capacity(s_n);
     for s in 0..s_n {
-        let p = stage_params(job, devices, s, slow_dev);
+        let p = stage_params(job, churn, devices, s, iter0, slow_dev);
         assigns.push(StageAssign {
             stage: s,
             n_stages: s_n,
@@ -479,6 +488,7 @@ fn start_generation(
     plane: &mut Plane,
     manifest: &Manifest,
     job: &Job,
+    churn: Option<&ChurnTrace>,
     schedule: &PipelineSchedule,
     devices: &[usize],
     plan: &CompressPlan,
@@ -491,12 +501,13 @@ fn start_generation(
 ) -> anyhow::Result<Generation> {
     match plane {
         Plane::Chan => Ok(spawn_generation(
-            manifest, job, schedule, devices, plan, iter0, iters, init, slow_dev, hb,
+            manifest, job, churn, schedule, devices, plan, iter0, iters, init, slow_dev, hb,
         )),
         Plane::Tcp(p) => assign_generation(
             p,
             manifest,
             job,
+            churn,
             schedule,
             devices,
             plan,
@@ -617,11 +628,11 @@ fn teardown(
     }
 }
 
-/// Tear down a generation that contains a dead stage: broadcast Stop,
-/// drain whatever the survivors still send (bounded by a drain budget —
-/// the dead stage sends nothing), then join every thread. Survivors
-/// observe Stop even when blocked on a dead neighbor because their
-/// ticking receives poll the forward link, so the join cannot hang.
+/// Tear down a generation that contains `n_dead` dead stages: broadcast
+/// Stop, drain whatever the survivors still send (bounded by a drain
+/// budget — the dead stages send nothing), then join every thread.
+/// Survivors observe Stop even when blocked on a dead neighbor because
+/// their ticking receives poll the forward link, so the join cannot hang.
 /// Remote survivors park awaiting the recovery generation's Assign.
 fn churn_teardown(
     plane: &mut Plane,
@@ -629,6 +640,7 @@ fn churn_teardown(
     s_n: usize,
     deadline: Duration,
     all_stats: &mut Vec<WorkerStats>,
+    n_dead: usize,
 ) {
     if let Plane::Tcp(p) = plane {
         p.monitor_off();
@@ -637,7 +649,7 @@ fn churn_teardown(
         let _ = tx.send(Wire::Stop);
     }
     let _ = gen.label_tx.send(Wire::Stop);
-    let want = s_n.saturating_sub(1);
+    let want = s_n.saturating_sub(n_dead.max(1));
     let budget = (deadline * 4).max(Duration::from_secs(2));
     let t0 = Instant::now();
     let mut seen = gen.stats_seen;
@@ -660,6 +672,31 @@ fn churn_teardown(
             let _ = h.join();
         }
     }
+}
+
+/// A teardown or generation start failed mid-migration. If the failure
+/// traces to dead worker connections, convert it into the churn the
+/// recovery path handles: `(stage, device, cause)` triples against the
+/// placement that was being started. Otherwise propagate the original
+/// error — on the chan plane a teardown with a dead thread succeeds
+/// silently, so an error there is a real worker bug, not churn.
+fn migration_deaths(
+    e: anyhow::Error,
+    plane: &Plane,
+    devices: &[usize],
+) -> anyhow::Result<Vec<(usize, usize, String)>> {
+    let mut dead = Vec::new();
+    if let Plane::Tcp(p) = plane {
+        for d in p.dead_devices() {
+            if let Some(s) = devices.iter().position(|&x| x == d) {
+                dead.push((s, d, format!("died during migration: {e:#}")));
+            }
+        }
+    }
+    if dead.is_empty() {
+        return Err(e);
+    }
+    Ok(dead)
 }
 
 /// Collect one iteration's `n_micro` losses and every stage's
@@ -780,6 +817,33 @@ pub fn run_with_listener(
         tb.nodes.len()
     );
 
+    // Scripted membership: the ordered kill/join/rejoin trace (or the
+    // legacy --kill-node pair folded into one). Scripted joiners are
+    // unavailable until their join iteration — pre-fail them so neither
+    // the initial placement nor the failover re-planner can use them.
+    let churn = job.effective_churn()?;
+    if let Some(t) = &churn {
+        for ev in &t.events {
+            anyhow::ensure!(
+                ev.device < tb.nodes.len(),
+                "churn trace: device {} out of range (testbed has {} nodes)",
+                ev.device,
+                tb.nodes.len()
+            );
+            anyhow::ensure!(
+                (ev.at_iter as usize) < job.iters,
+                "churn trace: `{} {} @{}` is at or past the last iteration ({})",
+                ev.action.name(),
+                ev.device,
+                ev.at_iter,
+                job.iters
+            );
+        }
+        for d in t.join_devices() {
+            tb.fail_node(d);
+        }
+    }
+
     // Transport plane. The TCP plane accepts the worker-process pool up
     // front: scheduling below only places stages on connected devices.
     let mut plane = match job.transport {
@@ -899,6 +963,13 @@ pub fn run_with_listener(
     let mut devices = stage_plan.devices.clone();
     let mut plan = compress_plan_for(job, cfg.microbatch, &dag, &part, &tb);
 
+    // Membership legality is relative to the devices actually hosting
+    // stages: kills must target initially-placed (or later-joined)
+    // devices — the worker-side injector only reaches stage hosts.
+    if let Some(t) = &churn {
+        t.validate(&devices)?;
+    }
+
     // The execution schedule both workers and the simulator interpret.
     let schedule = PipelineSchedule::new(job.pipeline, s_n, job.n_micro);
     schedule.validate()?;
@@ -936,10 +1007,13 @@ pub fn run_with_listener(
     // iteration boundary (advise mode, or auto blocked by hysteresis).
     let mut last_unapplied: Option<(Vec<usize>, bool)> = None;
 
-    let mut gen = start_generation(
+    // `None` only transiently: a failed mid-migration teardown/start
+    // leaves no generation, and the recovery path rebuilds one.
+    let mut gen: Option<Generation> = Some(start_generation(
         &mut plane,
         &manifest,
         job,
+        churn.as_ref(),
         &schedule,
         &devices,
         &plan,
@@ -949,7 +1023,16 @@ pub fn run_with_listener(
         slow_dev,
         hb,
         deadline,
-    )?;
+    )?);
+
+    // Broker-driven side of the trace: join/rejoin admissions at
+    // iteration boundaries. The cursor is monotonic and never rewinds on
+    // recovery — an admission is a physical event, not replayable state.
+    let admissions: Vec<ChurnEvent> = churn
+        .as_ref()
+        .map(|t| t.admissions().copied().collect())
+        .unwrap_or_default();
+    let mut next_admission = 0usize;
 
     // ---- drive the training loop --------------------------------------
     let mut corpus = SyntheticCorpus::new(cfg.vocab, job.seed ^ 0xDA7A);
@@ -972,14 +1055,142 @@ pub fn run_with_listener(
     while it < job.iters {
         let iter = it as u32;
         let mut death: Option<(usize, String)> = None;
+        // Deaths already attributed when no generation is live (a failed
+        // mid-migration teardown/start): (stage, device, cause).
+        let mut pending_dead: Vec<(usize, usize, String)> = Vec::new();
+
+        // ---- scripted admissions at the iteration boundary ------------
+        while next_admission < admissions.len()
+            && admissions[next_admission].at_iter as usize <= it
+            && death.is_none()
+        {
+            let ev = admissions[next_admission];
+            next_admission += 1;
+            let dev = ev.device;
+            let kind = ev.action.name();
+            eprintln!("broker: churn trace: awaiting {kind} of device {dev} at iteration {it}");
+            if let Plane::Tcp(p) = &mut plane {
+                p.await_device(dev, ADMIT_TIMEOUT)?;
+            }
+            // Back in the pool — but with no reputation: the next
+            // generation's first-contact grace applies to its connection,
+            // and any stage folded onto it gets a fresh EWMA entry below.
+            tb.unfail_node(dev);
+            let mut jev = JoinEvent {
+                iter: it,
+                device: dev,
+                kind: kind.to_string(),
+                adopted: false,
+                from: devices.clone(),
+                to: devices.clone(),
+                sim_before_s: 0.0,
+                sim_after_s: 0.0,
+            };
+            if job.replan != ReplanMode::Off && it < job.iters {
+                let inp = ReplanInput {
+                    dag: &dag,
+                    testbed: &tb,
+                    part: &part,
+                    modeled: &stage_plan,
+                    store: &store,
+                    schedule: job.pipeline,
+                    n_micro: job.n_micro,
+                    current_compress: &plan,
+                };
+                let decision = replanner.replan_after_join(&inp, dev, &|p, t| {
+                    compress_plan_for(job, cfg.microbatch, &dag, p, t)
+                })?;
+                if let Some(d) = decision {
+                    jev.sim_before_s = d.current_sim_s;
+                    jev.sim_after_s = d.candidate_sim_s;
+                    if d.adopt && job.replan == ReplanMode::Auto {
+                        eprintln!(
+                            "broker: folding device {dev} into the pipeline at iteration {it} \
+                             ({} -> {:?})",
+                            d.candidate.origin, d.candidate.plan.devices
+                        );
+                        let old = gen.take().expect("generation live at the boundary");
+                        match teardown(
+                            &mut plane,
+                            old,
+                            s_n,
+                            &mut snapshots,
+                            &mut all_stats,
+                            hb.is_some(),
+                            deadline,
+                        ) {
+                            Err(e) => {
+                                pending_dead = migration_deaths(e, &plane, &devices)?;
+                                death = Some((
+                                    pending_dead[0].0,
+                                    pending_dead[0].2.clone(),
+                                ));
+                            }
+                            Ok(()) => {
+                                part = d.candidate.partition.clone();
+                                stage_plan = StagePlan::from_partition(&dag, &part, &tb);
+                                anyhow::ensure!(
+                                    stage_plan.n_stages() == s_n,
+                                    "join replan changed the stage count"
+                                );
+                                // Measurements for moved stages describe
+                                // old silicon; the newcomer has none.
+                                for s in 0..s_n {
+                                    if stage_plan.devices[s] != devices[s] {
+                                        store.reset_stage(s);
+                                    }
+                                }
+                                devices = stage_plan.devices.clone();
+                                plan = compress_plan_for(job, cfg.microbatch, &dag, &part, &tb);
+                                match start_generation(
+                                    &mut plane,
+                                    &manifest,
+                                    job,
+                                    churn.as_ref(),
+                                    &schedule,
+                                    &devices,
+                                    &plan,
+                                    iter,
+                                    job.iters - it,
+                                    &mut snapshots,
+                                    slow_dev,
+                                    hb,
+                                    deadline,
+                                ) {
+                                    Ok(g) => {
+                                        gen = Some(g);
+                                        jev.adopted = true;
+                                        jev.to = devices.clone();
+                                        last_unapplied = None;
+                                    }
+                                    Err(e) => {
+                                        if let Plane::Tcp(p) = &plane {
+                                            p.abort_generation();
+                                        }
+                                        pending_dead = migration_deaths(e, &plane, &devices)?;
+                                        death = Some((
+                                            pending_dead[0].0,
+                                            pending_dead[0].2.clone(),
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            report.joins.push(jev);
+        }
 
         // ---- checkpoint at the iteration boundary ---------------------
-        if job.checkpoint_every > 0
+        if death.is_none()
+            && job.checkpoint_every > 0
             && it > 0
             && it % job.checkpoint_every == 0
             && last_ckpt != Some(it)
         {
-            match collect_checkpoint_states(&mut gen, iter, s_n, deadline, &mut all_stats)? {
+            let g = gen.as_mut().expect("generation live");
+            match collect_checkpoint_states(g, iter, s_n, deadline, &mut all_stats)? {
                 SnapOutcome::Died { stage, cause } => death = Some((stage, cause)),
                 SnapOutcome::Done(states) => {
                     checkpoint::save(
@@ -1001,11 +1212,12 @@ pub fn run_with_listener(
 
         // ---- run one iteration ----------------------------------------
         if death.is_none() {
+            let g = gen.as_mut().expect("generation live");
             let t0 = Instant::now();
             for micro in 0..job.n_micro as u32 {
                 let (tokens, targets) = corpus.next_batch(cfg.microbatch, cfg.seq_len);
-                let r1 = gen.fwd_tx[0].send(Wire::Data { iter, micro, tokens });
-                let r2 = gen.label_tx.send(Wire::Labels { iter, micro, targets });
+                let r1 = g.fwd_tx[0].send(Wire::Data { iter, micro, tokens });
+                let r2 = g.label_tx.send(Wire::Labels { iter, micro, targets });
                 if deadline.is_none() {
                     // No liveness plane: a closed channel is fatal now.
                     for r in [r1, r2] {
@@ -1014,11 +1226,12 @@ pub fn run_with_listener(
                 }
                 // Otherwise the deadline monitor identifies the dead stage.
             }
-            match collect_iteration(
-                &mut gen, it, iter, s_n, job.n_micro, deadline, &mut all_stats,
-            )? {
+            match collect_iteration(g, it, iter, s_n, job.n_micro, deadline, &mut all_stats)? {
                 IterOutcome::Died { stage, cause } => death = Some((stage, cause)),
                 IterOutcome::Done { mean_loss, prof } => {
+                    // Progress to stderr (unbuffered): CI churn smokes pace
+                    // scripted join/rejoin worker starts off these lines.
+                    eprintln!("broker: iteration {it} complete (loss {mean_loss:.4})");
                     report.losses.push(mean_loss);
                     report.wall_s.push(t0.elapsed().as_secs_f64());
                     // Real per-iteration wire bytes from the workers.
@@ -1088,81 +1301,196 @@ pub fn run_with_listener(
                         };
                         if apply {
                             let t_mig = Instant::now();
-                            teardown(
+                            let old = gen.take().expect("generation live");
+                            match teardown(
                                 &mut plane,
-                                gen,
+                                old,
                                 s_n,
                                 &mut snapshots,
                                 &mut all_stats,
                                 hb.is_some(),
                                 deadline,
-                            )?;
-                            part = d.candidate.partition.clone();
-                            stage_plan = StagePlan::from_partition(&dag, &part, &tb);
-                            anyhow::ensure!(
-                                stage_plan.n_stages() == s_n,
-                                "replan changed the stage count"
-                            );
-                            // Measurements for moved stages describe old
-                            // silicon.
-                            for s in 0..s_n {
-                                if stage_plan.devices[s] != devices[s] {
-                                    store.reset_stage(s);
+                            ) {
+                                Err(e) => {
+                                    // A device died while the migration was
+                                    // in flight: hand it to crash recovery.
+                                    pending_dead = migration_deaths(e, &plane, &devices)?;
+                                    death = Some((
+                                        pending_dead[0].0,
+                                        pending_dead[0].2.clone(),
+                                    ));
+                                }
+                                Ok(()) => {
+                                    part = d.candidate.partition.clone();
+                                    stage_plan = StagePlan::from_partition(&dag, &part, &tb);
+                                    anyhow::ensure!(
+                                        stage_plan.n_stages() == s_n,
+                                        "replan changed the stage count"
+                                    );
+                                    // Measurements for moved stages describe
+                                    // old silicon.
+                                    for s in 0..s_n {
+                                        if stage_plan.devices[s] != devices[s] {
+                                            store.reset_stage(s);
+                                        }
+                                    }
+                                    devices = stage_plan.devices.clone();
+                                    plan = compress_plan_for(
+                                        job,
+                                        cfg.microbatch,
+                                        &dag,
+                                        &part,
+                                        &tb,
+                                    );
+                                    match start_generation(
+                                        &mut plane,
+                                        &manifest,
+                                        job,
+                                        churn.as_ref(),
+                                        &schedule,
+                                        &devices,
+                                        &plan,
+                                        iter + 1,
+                                        job.iters - (it + 1),
+                                        &mut snapshots,
+                                        slow_dev,
+                                        hb,
+                                        deadline,
+                                    ) {
+                                        Ok(g) => {
+                                            gen = Some(g);
+                                            ev.migration_s = t_mig.elapsed().as_secs_f64();
+                                        }
+                                        Err(e) => {
+                                            if let Plane::Tcp(p) = &plane {
+                                                p.abort_generation();
+                                            }
+                                            pending_dead =
+                                                migration_deaths(e, &plane, &devices)?;
+                                            death = Some((
+                                                pending_dead[0].0,
+                                                pending_dead[0].2.clone(),
+                                            ));
+                                        }
+                                    }
                                 }
                             }
-                            devices = stage_plan.devices.clone();
-                            plan = compress_plan_for(job, cfg.microbatch, &dag, &part, &tb);
-                            gen = start_generation(
-                                &mut plane,
-                                &manifest,
-                                job,
-                                &schedule,
-                                &devices,
-                                &plan,
-                                iter + 1,
-                                job.iters - (it + 1),
-                                &mut snapshots,
-                                slow_dev,
-                                hb,
-                                deadline,
-                            )?;
-                            ev.migration_s = t_mig.elapsed().as_secs_f64();
                         }
-                        report.replans.push(ev);
+                        if death.is_none() {
+                            report.replans.push(ev);
+                        }
                     }
                 }
             }
-            it += 1;
-            continue;
+            if death.is_none() {
+                it += 1;
+                continue;
+            }
         }
 
         // ---- crash recovery -------------------------------------------
-        let (dead_stage, cause) = death.expect("checked above");
-        let dead_dev = gen.devices[dead_stage];
+        let (first_stage, first_cause) = death.expect("checked above");
         let Some(dl) = deadline else {
             // No liveness plane (heartbeats disabled): abort as in PR 3.
             // Workers exit on their own once the broker drops the
             // generation's channels; they cannot be joined safely here.
-            anyhow::bail!("stage {dead_stage} failed: {cause}");
+            anyhow::bail!("stage {first_stage} failed: {first_cause}");
         };
-        eprintln!(
-            "broker: stage {dead_stage} (device {dead_dev}) declared dead during \
-             iteration {it}: {cause}"
-        );
         let t_replan = Instant::now();
-        tb.fail_node(dead_dev);
-        // Other silently-dead worker connections (e.g. an idle spare that
-        // vanished) must not receive stages either.
-        if let Plane::Tcp(p) = &plane {
-            for d in p.dead_devices() {
-                tb.fail_node(d);
+        // Collect the FULL dead set before tearing down: the declared
+        // stage, any concurrently queued Fatals, and stages whose own
+        // deadline expires inside a short settle window — N simultaneous
+        // deaths then recover in ONE teardown + replan + restore pass.
+        let mut dead_devs: Vec<(usize, usize, String)> = pending_dead;
+        if let Some(mut old) = gen.take() {
+            dead_devs.push((first_stage, old.devices[first_stage], first_cause));
+            let settle = (dl / 2).min(Duration::from_secs(2));
+            let t0 = Instant::now();
+            loop {
+                while let Ok(msg) = old.rx_driver.try_recv() {
+                    if let Some(s) = Generation::stage_of(&msg, s_n) {
+                        if s < s_n {
+                            old.note(s);
+                        }
+                    }
+                    match msg {
+                        Wire::Fatal { stage, error } if stage < s_n => {
+                            if !dead_devs.iter().any(|d| d.0 == stage) {
+                                dead_devs.push((
+                                    stage,
+                                    old.devices[stage],
+                                    format!("fatal: {error}"),
+                                ));
+                            }
+                        }
+                        Wire::Stats(st) => {
+                            all_stats.push(st);
+                            old.stats_seen += 1;
+                        }
+                        _ => {} // losses/profiles of the aborted iteration
+                    }
+                }
+                for s in 0..s_n {
+                    if dead_devs.iter().any(|d| d.0 == s) {
+                        continue;
+                    }
+                    let limit =
+                        if old.heard[s] { dl } else { dl * old.grace.max(1) };
+                    let age = old.last_seen[s].elapsed();
+                    if age > limit {
+                        dead_devs.push((
+                            s,
+                            old.devices[s],
+                            format!("no heartbeat for {:.2}s", age.as_secs_f64()),
+                        ));
+                    }
+                }
+                if t0.elapsed() >= settle {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            for (s, dev, cause) in &dead_devs {
+                eprintln!(
+                    "broker: stage {s} (device {dev}) declared dead during \
+                     iteration {it}: {cause}"
+                );
+            }
+            for &(_, dev, _) in &dead_devs {
+                tb.fail_node(dev);
+            }
+            // Other silently-dead worker connections (e.g. an idle spare
+            // that vanished) must not receive stages either.
+            if let Plane::Tcp(p) = &plane {
+                for d in p.dead_devices() {
+                    tb.fail_node(d);
+                }
+            }
+            churn_teardown(&mut plane, old, s_n, dl, &mut all_stats, dead_devs.len());
+        } else {
+            // The generation was already consumed by a failed migration;
+            // the deaths were attributed there.
+            for (s, dev, cause) in &dead_devs {
+                eprintln!(
+                    "broker: stage {s} (device {dev}) lost mid-migration at \
+                     iteration {it}: {cause}"
+                );
+            }
+            for &(_, dev, _) in &dead_devs {
+                tb.fail_node(dev);
+            }
+            if let Plane::Tcp(p) = &plane {
+                for d in p.dead_devices() {
+                    tb.fail_node(d);
+                }
             }
         }
-        churn_teardown(&mut plane, gen, s_n, dl, &mut all_stats);
+        let (dead_stage, dead_dev) = (dead_devs[0].0, dead_devs[0].1);
         anyhow::ensure!(
             job.replan == ReplanMode::Auto,
-            "stage {dead_stage} (device {dead_dev}) died during iteration {it} ({cause}); \
-             crash recovery requires --replan auto"
+            "stage {dead_stage} (device {dead_dev}) died during iteration {it} ({}); \
+             crash recovery requires --replan auto",
+            dead_devs[0].2
         );
         anyhow::ensure!(
             report.recoveries.len() < MAX_RECOVERIES,
@@ -1182,6 +1510,13 @@ pub fn run_with_listener(
         anyhow::ensure!(
             cand.plan.n_stages() == s_n,
             "failover changed the stage count"
+        );
+        // The failover generators reason about the *primary* dead stage;
+        // with concurrent deaths the candidate must dodge every one.
+        anyhow::ensure!(
+            cand.plan.devices.iter().all(|&d| !tb.is_failed(d)),
+            "failover placement {:?} still uses a dead device",
+            cand.plan.devices
         );
         let from = devices.clone();
         part = cand.partition.clone();
@@ -1237,10 +1572,11 @@ pub fn run_with_listener(
             *sn = None;
         }
         last_unapplied = None;
-        gen = start_generation(
+        gen = Some(start_generation(
             &mut plane,
             &manifest,
             job,
+            churn.as_ref(),
             &schedule,
             &devices,
             &plan,
@@ -1250,27 +1586,32 @@ pub fn run_with_listener(
             slow_dev,
             hb,
             deadline,
-        )?;
+        )?);
         let restore_s = t_restore.elapsed().as_secs_f64();
-        report.recoveries.push(RecoveryEvent {
-            died_iter: it,
-            stage: dead_stage,
-            device: dead_dev,
-            cause,
-            resume_iter,
-            iters_lost: it - resume_iter,
-            from,
-            to: devices.clone(),
-            origin: cand.origin.to_string(),
-            replan_s,
-            restore_s,
-        });
+        // One event per dead device; the pass-level numbers (resume point,
+        // placements, timings) are shared across the concurrent set.
+        for (s, dev, cause) in dead_devs {
+            report.recoveries.push(RecoveryEvent {
+                died_iter: it,
+                stage: s,
+                device: dev,
+                cause,
+                resume_iter,
+                iters_lost: it - resume_iter,
+                from: from.clone(),
+                to: devices.clone(),
+                origin: cand.origin.to_string(),
+                replan_s,
+                restore_s,
+            });
+        }
         last_ckpt = Some(resume_iter);
         it = resume_iter;
     }
 
     // ---- drain the final generation ------------------------------------
-    teardown(&mut plane, gen, s_n, &mut snapshots, &mut all_stats, hb.is_some(), deadline)?;
+    let last = gen.take().expect("generation live at end of run");
+    teardown(&mut plane, last, s_n, &mut snapshots, &mut all_stats, hb.is_some(), deadline)?;
     if let Plane::Tcp(p) = &plane {
         p.shutdown();
     }

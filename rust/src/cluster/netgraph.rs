@@ -77,6 +77,35 @@ impl NetGraph {
         self.failed.get(i).copied().unwrap_or(false)
     }
 
+    /// Clear a node's failed mark (elastic membership: the device came
+    /// back). Its pre-failure links are still recorded and become live
+    /// again immediately.
+    pub fn clear_failed(&mut self, i: usize) {
+        if i < self.n {
+            self.failed[i] = false;
+        }
+    }
+
+    /// Append one node with no links (callers wire it up via `set_link`).
+    /// Returns the new node's id.
+    pub fn grow(&mut self) -> usize {
+        let n = self.n;
+        let m = n + 1;
+        let mut alpha = vec![0.0; m * m];
+        let mut beta = vec![0.0; m * m];
+        for i in 0..n {
+            for j in 0..n {
+                alpha[i * m + j] = self.alpha[i * n + j];
+                beta[i * m + j] = self.beta[i * n + j];
+            }
+        }
+        self.alpha = alpha;
+        self.beta = beta;
+        self.failed.push(false);
+        self.n = m;
+        n
+    }
+
     /// Nodes not declared dead.
     pub fn n_alive(&self) -> usize {
         self.failed.iter().filter(|&&f| !f).count()
@@ -150,6 +179,40 @@ mod tests {
         assert_eq!(g.louvain_weight(1, 2), 0.0);
         // The raw α–β record survives for accounting.
         assert!(g.comm_time(0, 1, 1e6) > 0.0);
+    }
+
+    #[test]
+    fn clear_failed_restores_membership_and_links() {
+        let mut g = NetGraph::new(3);
+        g.set_link(0, 1, 0.01, 1e9);
+        g.set_failed(1);
+        assert_eq!(g.n_alive(), 2);
+        assert_eq!(g.louvain_weight(0, 1), 0.0);
+        g.clear_failed(1);
+        assert!(!g.is_failed(1));
+        assert_eq!(g.n_alive(), 3);
+        // Pre-failure links are live again, untouched.
+        assert!(g.louvain_weight(0, 1) > 0.0);
+        assert!((g.bandwidth_bps(0, 1) - 1e9).abs() < 1.0);
+        // Out-of-range clear is a no-op, not a panic.
+        g.clear_failed(99);
+    }
+
+    #[test]
+    fn grow_appends_a_node_and_keeps_old_links() {
+        let mut g = NetGraph::new(2);
+        g.set_link(0, 1, 0.02, 1e8);
+        let id = g.grow();
+        assert_eq!(id, 2);
+        assert_eq!(g.len(), 3);
+        assert!(!g.is_failed(2));
+        // Existing links survive the matrix reshape exactly.
+        assert_eq!(g.alpha(0, 1), 0.02);
+        assert!((g.bandwidth_bps(0, 1) - 1e8).abs() < 1.0);
+        // The new node starts unlinked until set_link wires it.
+        assert_eq!(g.beta(0, 2), 0.0);
+        g.set_link(0, 2, 0.01, 1e7);
+        assert!((g.bandwidth_bps(0, 2) - 1e7).abs() < 1.0);
     }
 
     #[test]

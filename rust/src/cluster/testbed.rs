@@ -107,6 +107,28 @@ impl Testbed {
         self.net.is_failed(dev)
     }
 
+    /// Re-admit a previously failed device (elastic membership: a killed
+    /// or partitioned machine rejoined the pool). Its pre-failure links
+    /// come back as recorded; its *profile* must not — the broker resets
+    /// the device's EWMA entries so it re-earns its speed reputation.
+    pub fn unfail_node(&mut self, dev: usize) {
+        self.net.clear_failed(dev);
+    }
+
+    /// Add a brand-new device mid-run (elastic membership: join). The
+    /// broker only knows coarse reachability for a fresh volunteer, so
+    /// every link to the existing pool starts in one uniform class;
+    /// warm-up profiling refines α/β afterwards. Returns the new id.
+    pub fn add_node(&mut self, mut node: CompNode, alpha_s: f64, bw_bps: f64) -> usize {
+        let id = self.net.grow();
+        node.id = id;
+        self.nodes.push(node);
+        for i in 0..id {
+            self.net.set_link(i, id, alpha_s, bw_bps);
+        }
+        id
+    }
+
     /// Device ids not declared dead.
     pub fn alive_nodes(&self) -> Vec<usize> {
         (0..self.nodes.len()).filter(|&i| !self.net.is_failed(i)).collect()
@@ -227,6 +249,52 @@ mod tests {
         );
         assert_eq!(sub.net.alpha(na, nb), t.net.alpha(a, b));
         assert!((sub.net.bandwidth_bps(na, nb) - t.net.bandwidth_bps(a, b)).abs() < 1.0);
+    }
+
+    #[test]
+    fn unfail_node_round_trips_membership() {
+        let mut t = testbed1(4);
+        t.fail_node(2);
+        t.fail_node(5);
+        assert_eq!(t.alive_nodes().len(), 22);
+        t.unfail_node(2);
+        assert!(!t.is_failed(2) && t.is_failed(5));
+        assert_eq!(t.alive_nodes().len(), 23);
+        // The rejoined node's links are exactly the pre-failure record.
+        let fresh = testbed1(4);
+        assert_eq!(t.net.alpha(0, 2), fresh.net.alpha(0, 2));
+        assert_eq!(t.net.beta(0, 2), fresh.net.beta(0, 2));
+    }
+
+    #[test]
+    fn add_node_joins_with_uniform_links() {
+        let mut t = testbed1(6);
+        let before = t.nodes.len();
+        let id = t.add_node(
+            CompNode {
+                id: 0, // overwritten by add_node
+                name: "B/joiner/gpu0".into(),
+                gpu: GpuModel::Rtx2080,
+                lambda: 0.45,
+                cluster: "B".into(),
+                machine: 99,
+            },
+            0.020,
+            50e6,
+        );
+        assert_eq!(id, before);
+        assert_eq!(t.nodes.len(), before + 1);
+        assert_eq!(t.nodes[id].id, id);
+        assert!(!t.is_failed(id));
+        assert!(t.alive_nodes().contains(&id));
+        for i in 0..id {
+            assert_eq!(t.net.alpha(i, id), 0.020);
+            assert!((t.net.bandwidth_bps(i, id) - 50e6).abs() < 1.0);
+        }
+        // Survivor compaction includes the newcomer and maps back.
+        let (sub, map) = t.surviving();
+        assert_eq!(sub.nodes.len(), before + 1);
+        assert_eq!(map[map.len() - 1], id);
     }
 
     #[test]

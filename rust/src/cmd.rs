@@ -129,10 +129,14 @@ pub fn schedule(args: &Args) -> Result<()> {
 /// throughput; `--min-recovery` turns that into a CI gate (nonzero exit
 /// when static/replanned < X).
 pub fn simulate(args: &Args) -> Result<()> {
-    // Churn mode: --kill-node runs a *real* (Null-backend) training
-    // pipeline through the broker — heartbeats, checkpoints, death
-    // detection, failover re-plan, checkpoint restore — and gates the
-    // result. See `simulate_churn`.
+    // Churn modes run a *real* (Null-backend) training pipeline through
+    // the broker — heartbeats, checkpoints, death detection, failover
+    // re-plan, checkpoint restore, elastic membership — and gate the
+    // result. `--churn-trace` drives a full membership script
+    // (kill/join/rejoin); `--kill-node` is the legacy single-kill form.
+    if args.opt_str("churn-trace").is_some() {
+        return simulate_churn_trace(args);
+    }
     if args.opt_str("kill-node").is_some() {
         return simulate_churn(args);
     }
@@ -420,6 +424,159 @@ fn simulate_churn(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fusionllm simulate --churn-trace FILE [--steps I] [--replan auto]
+///  [--loss-tol T]` — the scripted elastic-membership smoke / CI gate.
+///
+/// Runs the ordered membership script (kill / join / rejoin events, see
+/// `broker::churn`) against a real Null-backend broker run and gates the
+/// outcome against an uninterrupted in-process reference: (a) every
+/// requested iteration completes, (b) exactly one recovery per scripted
+/// kill, (c) the membership events in `TrainReport.joins` match the
+/// scripted admissions one-for-one, and (d) the loss trajectory is
+/// bitwise-identical (default `--loss-tol 0`) — any trace whose
+/// survivors can host the pipeline must not change the math. Transport
+/// knobs pass through, so the same gate runs over real TCP workers in
+/// CI. Nonzero exit on any violation.
+fn simulate_churn_trace(args: &Args) -> Result<()> {
+    let iters = args.usize("steps", 8);
+    let replan = ReplanMode::parse(&args.str("replan", "auto"))?;
+    let loss_tol = args.f64("loss-tol", 0.0);
+
+    // The Null config has 4 stages; pin them to devices 0..4 by default
+    // so trace events map onto stages deterministically.
+    let placement: Vec<usize> = match args.opt_str("placement") {
+        Some(s) => s
+            .split(',')
+            .map(|v| v.parse().map_err(|_| anyhow::anyhow!("bad --placement entry `{v}`")))
+            .collect::<Result<_>>()?,
+        None => (0..4).collect(),
+    };
+
+    let parsed = Job::from_args(args)?;
+    let trace = parsed
+        .effective_churn()?
+        .ok_or_else(|| anyhow::anyhow!("--churn-trace file holds no events"))?;
+    trace.validate(&placement)?;
+    for ev in &trace.events {
+        anyhow::ensure!(
+            (ev.at_iter as usize) < iters,
+            "churn trace: {} {} @{} is at/after the last iteration (--steps {iters})",
+            ev.action.name(),
+            ev.device,
+            ev.at_iter
+        );
+    }
+    let n_kills = trace.kills().count();
+    let admissions: Vec<crate::broker::ChurnEvent> = trace.admissions().copied().collect();
+
+    let ckpt_dir = std::env::temp_dir()
+        .join(format!("fusionllm-trace-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let base = Job {
+        config: "sim-churn".into(),
+        backend: BackendKind::Null,
+        testbed: args.usize("testbed", 1),
+        seed: args.u64("seed", 42),
+        iters,
+        n_micro: args.usize("micro", 2),
+        placement: Some(placement),
+        replan,
+        // Membership churn only — the Null backend's microsecond compute
+        // times are too noisy for meaningful straggler detection.
+        straggler_threshold: args.f64("straggler-threshold", 1e9),
+        heartbeat_s: args.f64("heartbeat-interval", 0.025),
+        heartbeat_timeout: args.u64("heartbeat-timeout", 40) as u32,
+        heartbeat_grace: parsed.heartbeat_grace,
+        transport: parsed.transport,
+        listen: parsed.listen,
+        token: parsed.token,
+        workers: parsed.workers,
+        pace_s: parsed.pace_s,
+        checkpoint_every: args.usize("checkpoint-every", 2),
+        checkpoint_dir: ckpt_dir.clone(),
+        ..Job::default()
+    };
+    println!(
+        "churn trace: {} event(s) ({} kill(s), {} admission(s)) over {iters} iterations \
+         (checkpoint every {}, replan {}, transport {})",
+        trace.events.len(),
+        n_kills,
+        admissions.len(),
+        base.checkpoint_every,
+        replan.name(),
+        base.transport.name()
+    );
+    for ev in &trace.events {
+        println!("  {} {} @{}", ev.action.name(), ev.device, ev.at_iter);
+    }
+
+    // The reference run is always in-process (chan), uninterrupted, and
+    // replan-free: the determinism gate below says churn must not move
+    // the losses at all.
+    let clean = broker::run(&Job {
+        replan: ReplanMode::Off,
+        checkpoint_every: 0,
+        transport: TransportKind::Chan,
+        ..base.clone()
+    })?;
+    let churn_result = broker::run(&Job { churn: Some(trace.clone()), ..base.clone() });
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let churn = churn_result?;
+
+    print_recoveries(&churn);
+    print_joins(&churn);
+    anyhow::ensure!(
+        churn.losses.len() == iters,
+        "churn gate: {} of {iters} iterations completed",
+        churn.losses.len()
+    );
+    anyhow::ensure!(
+        churn.recoveries.len() == n_kills,
+        "churn gate: expected {n_kills} recovery(ies) for {n_kills} scripted kill(s), got {}",
+        churn.recoveries.len()
+    );
+    anyhow::ensure!(
+        churn.joins.len() == admissions.len(),
+        "churn gate: expected {} membership event(s), got {}",
+        admissions.len(),
+        churn.joins.len()
+    );
+    for (got, want) in churn.joins.iter().zip(&admissions) {
+        anyhow::ensure!(
+            got.device == want.device && got.kind == want.action.name(),
+            "churn gate: membership mismatch: report says {} of device {}, \
+             script says {} {} @{}",
+            got.kind,
+            got.device,
+            want.action.name(),
+            want.device,
+            want.at_iter
+        );
+    }
+    let max_diff = clean
+        .losses
+        .iter()
+        .zip(&churn.losses)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+    println!(
+        "final loss: uninterrupted {:.6} vs churned {:.6} (max per-iter |Δ| = {max_diff:.2e})",
+        clean.final_loss(),
+        churn.final_loss()
+    );
+    anyhow::ensure!(
+        max_diff <= loss_tol,
+        "churn gate: churned loss diverged by {max_diff:.2e} > tolerance {loss_tol:.2e}"
+    );
+    println!(
+        "churn gate OK: survived {} kill(s) and {} admission(s) with an identical \
+         loss trajectory",
+        n_kills,
+        admissions.len()
+    );
+    Ok(())
+}
+
 /// Print `TrainReport.recoveries` (shared by train and the churn smoke).
 fn print_recoveries(report: &TrainReport) {
     for r in &report.recoveries {
@@ -438,6 +595,24 @@ fn print_recoveries(report: &TrainReport) {
             r.to,
             fmt_secs(r.replan_s),
             fmt_secs(r.restore_s),
+        );
+    }
+}
+
+/// Print `TrainReport.joins` (shared by train and the churn-trace smoke).
+fn print_joins(report: &TrainReport) {
+    for j in &report.joins {
+        println!(
+            "join [{}] @iter {}: device {} admitted, {}; placement {:?} -> {:?}; \
+             simulated {} -> {}",
+            j.kind,
+            j.iter,
+            j.device,
+            if j.adopted { "folded into the pipeline" } else { "parked as a spare" },
+            j.from,
+            j.to,
+            fmt_secs(j.sim_before_s),
+            fmt_secs(j.sim_after_s),
         );
     }
 }
@@ -509,14 +684,16 @@ pub fn train(args: &Args) -> Result<()> {
         );
     }
     print_recoveries(&report);
+    print_joins(&report);
     println!(
         "final loss {:.4}; mean simulated geo-iteration {}; wire shrink {:.1}x; \
-         replans {}; recoveries {}",
+         replans {}; recoveries {}; joins {}",
         report.final_loss(),
         fmt_secs(report.mean_sim_latency()),
         report.wire_shrink,
         report.replans.len(),
         report.recoveries.len(),
+        report.joins.len(),
     );
     if let Some(path) = args.opt_str("out") {
         std::fs::write(path, report.to_csv())?;

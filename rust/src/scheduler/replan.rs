@@ -331,6 +331,141 @@ impl Replanner {
         Ok(Candidate { partition: Partition::new(assign), plan, origin })
     }
 
+    /// Consider folding a newly admitted (joined or rejoined) device into
+    /// the pipeline. The testbed must already have the device marked
+    /// alive (`Testbed::unfail_node` / `add_node`). Candidates that do
+    /// not *use* the newcomer are discarded — reshuffles among incumbents
+    /// belong to the straggler path — and adoption is hysteresis-gated
+    /// exactly like `consider`, so a slow joiner stays parked as a spare
+    /// instead of causing migration churn. Returns None when there is no
+    /// candidate that exploits the newcomer.
+    pub fn replan_after_join(
+        &self,
+        inp: &ReplanInput,
+        joined_dev: usize,
+        rebuild_compress: &dyn Fn(&Partition, &Testbed) -> CompressPlan,
+    ) -> anyhow::Result<Option<ReplanDecision>> {
+        let tb = inp.testbed;
+        anyhow::ensure!(
+            joined_dev < tb.nodes.len(),
+            "joined device {joined_dev} out of range"
+        );
+        anyhow::ensure!(
+            !tb.net.is_failed(joined_dev),
+            "device {joined_dev} still marked failed after admission"
+        );
+        // A fresh joiner has no measurements yet; fall back to the model.
+        let measured = if inp.store.ready() && inp.store.min_samples() >= 1 {
+            inp.store.measured_plan(inp.modeled)
+        } else {
+            inp.modeled.clone()
+        };
+        if measured.devices.contains(&joined_dev) {
+            return Ok(None); // already hosting a stage; nothing to fold in
+        }
+        let cal_tb = self.calibrate_testbed(tb, inp.modeled, &measured);
+        let cur_sched =
+            PipelineSchedule::new(inp.schedule, measured.n_stages(), inp.n_micro);
+        let current_sim =
+            simulate_iteration(&measured, &cal_tb, &cur_sched, inp.current_compress).iter_s;
+
+        let mut candidates: Vec<Candidate> = Vec::new();
+        // (a) full re-run of the configured scheduler across the alive
+        // view (newcomer included), mapped back to original ids.
+        let (sub, map) = cal_tb.surviving();
+        if let Ok(sched) = super::by_name(&self.scheduler) {
+            if let Ok(sub_part) = sched.schedule(inp.dag, &sub) {
+                let assign: Vec<usize> =
+                    (0..inp.dag.len()).map(|op| map[sub_part.node_of(op)]).collect();
+                let part = Partition::new(assign);
+                if part.validate(inp.dag).is_ok() {
+                    let plan = StagePlan::from_partition(inp.dag, &part, &cal_tb);
+                    candidates.push(Candidate {
+                        partition: part,
+                        plan,
+                        origin: "join-reschedule",
+                    });
+                }
+            }
+        }
+        // (b) targeted: the slowest stage moves onto the newcomer, if the
+        // newcomer is faster than that stage's current host.
+        if let Some(c) = self.join_swap_candidate(inp, &cal_tb, &measured, joined_dev) {
+            candidates.push(c);
+        }
+
+        let mut best: Option<(f64, Candidate)> = None;
+        for cand in candidates {
+            if self.keep_stage_count && cand.plan.n_stages() != measured.n_stages() {
+                continue;
+            }
+            if !cand.plan.devices.contains(&joined_dev) {
+                continue; // must exploit the newcomer
+            }
+            let sched =
+                PipelineSchedule::new(inp.schedule, cand.plan.n_stages(), inp.n_micro);
+            let compress = rebuild_compress(&cand.partition, &cal_tb);
+            let sim = simulate_iteration(&cand.plan, &cal_tb, &sched, &compress).iter_s;
+            if best.as_ref().map(|(s, _)| sim < *s).unwrap_or(true) {
+                best = Some((sim, cand));
+            }
+        }
+        let (candidate_sim_s, candidate) = match best {
+            Some(b) => b,
+            None => return Ok(None),
+        };
+        let migration_s =
+            migration_time(inp.dag, inp.part, &candidate.partition, tb);
+        let adopt = candidate_sim_s < current_sim * (1.0 - self.hysteresis);
+        Ok(Some(ReplanDecision {
+            flagged: Vec::new(),
+            current_sim_s: current_sim,
+            candidate_sim_s,
+            migration_s,
+            adopt,
+            candidate,
+        }))
+    }
+
+    /// Move the slowest stage (by measured fwd+bwd) onto the freshly
+    /// joined device, if the newcomer out-runs that stage's current host.
+    fn join_swap_candidate(
+        &self,
+        inp: &ReplanInput,
+        cal_tb: &Testbed,
+        measured: &StagePlan,
+        new_dev: usize,
+    ) -> Option<Candidate> {
+        let worst = (0..measured.n_stages()).max_by(|&a, &b| {
+            (measured.fwd_s[a] + measured.bwd_s[a])
+                .partial_cmp(&(measured.fwd_s[b] + measured.bwd_s[b]))
+                .unwrap()
+        })?;
+        let old_dev = measured.devices[worst];
+        let speed_old = cal_tb.nodes[old_dev].speed_flops();
+        let speed_new = cal_tb.nodes[new_dev].speed_flops();
+        if speed_new <= speed_old {
+            return None;
+        }
+        let assign: Vec<usize> = (0..inp.dag.len())
+            .map(|op| {
+                let d = inp.part.node_of(op);
+                if d == old_dev {
+                    new_dev
+                } else {
+                    d
+                }
+            })
+            .collect();
+        let mut plan = measured.clone();
+        plan.devices[worst] = new_dev;
+        let scale = speed_old / speed_new;
+        plan.fwd_s[worst] *= scale;
+        plan.bwd_s[worst] *= scale;
+        plan.update_s[worst] *= scale;
+        Some(Candidate { partition: Partition::new(assign), plan, origin: "join-swap" })
+    }
+
     /// Move the worst straggler stage onto the fastest device not
     /// currently hosting any stage. Times for the moved stage scale with
     /// the calibrated speed ratio; everything else keeps its measurement.
@@ -623,6 +758,141 @@ mod tests {
         };
         let r = Replanner::default();
         assert!(r.replan_after_failure(&inp, 0).is_err());
+    }
+
+    /// 3 slow RTX 2080s + 1 fast RTX 4090, uniform fast links. The fast
+    /// device starts failed so the plan lands on the slow trio.
+    fn tiny_join_setup() -> (Dag, Testbed, Partition, StagePlan) {
+        use crate::cluster::{CompNode, GpuModel, NetGraph};
+        let mut nodes = Vec::new();
+        for i in 0..4 {
+            nodes.push(CompNode {
+                id: i,
+                name: format!("n{i}"),
+                gpu: if i == 3 { GpuModel::Rtx4090 } else { GpuModel::Rtx2080 },
+                lambda: 0.5,
+                cluster: "A".into(),
+                machine: i,
+            });
+        }
+        let mut net = NetGraph::new(4);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                net.set_link(i, j, 1e-4, 1e9);
+            }
+        }
+        let mut tb = Testbed { name: "tiny".into(), nodes, net };
+        tb.fail_node(3);
+        let dag = transformer_chain(&TransformerSpec {
+            vocab: 1000,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 2,
+            seq_len: 64,
+            microbatch: 2,
+        });
+        let (sub, map) = tb.surviving();
+        let sub_part = by_name("opfence").unwrap().schedule(&dag, &sub).unwrap();
+        let assign: Vec<usize> =
+            (0..dag.len()).map(|op| map[sub_part.node_of(op)]).collect();
+        let part = Partition::new(assign);
+        let plan = StagePlan::from_partition(&dag, &part, &tb);
+        (dag, tb, part, plan)
+    }
+
+    #[test]
+    fn join_replan_exploits_a_faster_newcomer() {
+        let (dag, mut tb, part, plan) = tiny_join_setup();
+        assert!(!plan.devices.contains(&3), "precondition: spare not hosting");
+        tb.unfail_node(3);
+        let st = store_from(&plan, 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &plan,
+            store: &st,
+            schedule: ScheduleKind::GPipe,
+            n_micro: 2,
+            current_compress: &dense,
+        };
+        let r = Replanner { min_samples: 1, hysteresis: 0.01, ..Default::default() };
+        let d = r
+            .replan_after_join(&inp, 3, &|_, t| CompressPlan::dense(t.nodes.len()))
+            .unwrap()
+            .expect("a strictly faster newcomer must yield a candidate");
+        assert!(
+            d.candidate.plan.devices.contains(&3),
+            "candidate must use the newcomer: {:?}",
+            d.candidate.plan.devices
+        );
+        assert!(d.candidate.origin.starts_with("join-"), "{}", d.candidate.origin);
+        assert_eq!(d.candidate.plan.n_stages(), plan.n_stages());
+        assert!(
+            d.candidate_sim_s < d.current_sim_s,
+            "candidate {} !< current {}",
+            d.candidate_sim_s,
+            d.current_sim_s
+        );
+        assert!(d.adopt, "a 4090 joining a 2080 trio must clear 1% hysteresis");
+        assert!(d.migration_s >= 0.0);
+        d.candidate.partition.validate(&dag).unwrap();
+    }
+
+    #[test]
+    fn join_replan_hysteresis_parks_the_spare() {
+        let (dag, mut tb, part, plan) = tiny_join_setup();
+        tb.unfail_node(3);
+        let st = store_from(&plan, 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &plan,
+            store: &st,
+            schedule: ScheduleKind::GPipe,
+            n_micro: 2,
+            current_compress: &dense,
+        };
+        let r =
+            Replanner { min_samples: 1, hysteresis: 0.9999, ..Default::default() };
+        let d = r
+            .replan_after_join(&inp, 3, &|_, t| CompressPlan::dense(t.nodes.len()))
+            .unwrap()
+            .expect("candidate still generated");
+        assert!(!d.adopt, "impossible hysteresis bar must park the joiner");
+    }
+
+    #[test]
+    fn join_replan_rejects_failed_or_hosting_devices() {
+        let (dag, tb, part, plan) = tiny_join_setup();
+        let st = store_from(&plan, 2);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let inp = ReplanInput {
+            dag: &dag,
+            testbed: &tb,
+            part: &part,
+            modeled: &plan,
+            store: &st,
+            schedule: ScheduleKind::GPipe,
+            n_micro: 2,
+            current_compress: &dense,
+        };
+        let r = Replanner { min_samples: 1, ..Default::default() };
+        // Still marked failed -> error (broker must unfail first).
+        assert!(r
+            .replan_after_join(&inp, 3, &|_, t| CompressPlan::dense(t.nodes.len()))
+            .is_err());
+        // Already hosting a stage -> no-op.
+        let hosted = plan.devices[0];
+        let d = r
+            .replan_after_join(&inp, hosted, &|_, t| {
+                CompressPlan::dense(t.nodes.len())
+            })
+            .unwrap();
+        assert!(d.is_none());
     }
 
     #[test]

@@ -4,4 +4,4 @@ pub mod data;
 pub mod report;
 
 pub use data::SyntheticCorpus;
-pub use report::{RecoveryEvent, ReplanEvent, TrainReport};
+pub use report::{JoinEvent, RecoveryEvent, ReplanEvent, TrainReport};

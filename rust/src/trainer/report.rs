@@ -91,6 +91,44 @@ impl RecoveryEvent {
     }
 }
 
+/// One elastic-membership admission: a device joined (brand new) or
+/// rejoined (came back after a failure) at an iteration boundary. The
+/// broker parks it as a spare either way; `adopted` says whether the
+/// re-planner folded it into the pipeline immediately.
+#[derive(Debug, Clone, Default)]
+pub struct JoinEvent {
+    /// Iteration boundary at which the device was admitted.
+    pub iter: usize,
+    pub device: usize,
+    /// "join" (never seen before) or "rejoin" (previously failed).
+    pub kind: String,
+    /// True if `replan_after_join` predicted a win and the pipeline was
+    /// re-partitioned onto the newcomer at this boundary.
+    pub adopted: bool,
+    /// Stage -> device placement before / after (equal when not adopted).
+    pub from: Vec<usize>,
+    pub to: Vec<usize>,
+    /// Simulated iteration seconds: current plan vs the candidate that
+    /// uses the newcomer (sim_after_s == sim_before_s when not adopted).
+    pub sim_before_s: f64,
+    pub sim_after_s: f64,
+}
+
+impl JoinEvent {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("iter", ni(self.iter)),
+            ("device", ni(self.device)),
+            ("kind", s(&self.kind)),
+            ("adopted", Json::Bool(self.adopted)),
+            ("from", arr(self.from.iter().map(|&d| ni(d)).collect())),
+            ("to", arr(self.to.iter().map(|&d| ni(d)).collect())),
+            ("sim_before_s", n(self.sim_before_s)),
+            ("sim_after_s", n(self.sim_after_s)),
+        ])
+    }
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct TrainReport {
     pub config: String,
@@ -118,6 +156,8 @@ pub struct TrainReport {
     pub replans: Vec<ReplanEvent>,
     /// Crash recoveries (device churn), in occurrence order.
     pub recoveries: Vec<RecoveryEvent>,
+    /// Elastic-membership admissions (join/rejoin), in occurrence order.
+    pub joins: Vec<JoinEvent>,
 }
 
 impl TrainReport {
@@ -160,6 +200,10 @@ impl TrainReport {
             (
                 "recoveries",
                 arr(self.recoveries.iter().map(|e| e.to_json()).collect()),
+            ),
+            (
+                "joins",
+                arr(self.joins.iter().map(|e| e.to_json()).collect()),
             ),
         ])
     }
@@ -224,6 +268,16 @@ mod tests {
                 replan_s: 0.4,
                 restore_s: 0.1,
             }],
+            joins: vec![JoinEvent {
+                iter: 5,
+                device: 24,
+                kind: "join".into(),
+                adopted: true,
+                from: vec![0, 7, 2, 3],
+                to: vec![0, 7, 24, 3],
+                sim_before_s: 2.0,
+                sim_after_s: 1.5,
+            }],
         };
         let csv = r.to_csv();
         assert_eq!(csv.lines().count(), 4);
@@ -242,6 +296,11 @@ mod tests {
         assert_eq!(recs[0].get("stage").as_usize().unwrap(), 1);
         assert_eq!(recs[0].get("iters_lost").as_usize().unwrap(), 1);
         assert_eq!(recs[0].get("origin").as_str().unwrap(), "failover-reschedule");
+        let joins = j.get("joins").as_arr().unwrap();
+        assert_eq!(joins.len(), 1);
+        assert_eq!(joins[0].get("device").as_usize().unwrap(), 24);
+        assert_eq!(joins[0].get("kind").as_str().unwrap(), "join");
+        assert!(joins[0].get("adopted").as_bool().unwrap());
         assert!((r.mean_sim_latency() - 1.0).abs() < 1e-12);
     }
 }

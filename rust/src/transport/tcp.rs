@@ -406,11 +406,24 @@ enum HsEvent {
 
 /// The broker's TCP plane: the accepted worker pool, the routing table
 /// mapping stages onto connections, and the per-connection deadline
-/// monitors feeding the driver event loop.
+/// monitors feeding the driver event loop. The listener stays open for
+/// the whole run: workers may arrive (join) or come back (rejoin) long
+/// after the initial pool formed, and `admit_pending` folds them in.
 pub struct TcpPlane {
     shared: Arc<Shared>,
     hs_rx: Receiver<HsEvent>,
-    /// device id -> connection index (fixed at accept time).
+    hs_tx: Sender<HsEvent>,
+    listener: TcpListener,
+    token: String,
+    device_cap: usize,
+    /// Peer address per connection index (diagnostics).
+    peers: Vec<String>,
+    /// Hello claims observed while another routine owned `hs_rx` (e.g.
+    /// a generation's ready barrier); processed on the next admission
+    /// sweep instead of being dropped.
+    pending_hellos: Vec<(usize, Hello)>,
+    /// device id -> connection index (most recent claim wins; a dead
+    /// device's id can be reclaimed by a fresh connection — a rejoin).
     device_conn: BTreeMap<usize, usize>,
     local_addr: SocketAddr,
 }
@@ -458,12 +471,16 @@ impl TcpPlane {
         let mut plane = TcpPlane {
             shared,
             hs_rx,
+            hs_tx,
+            listener,
+            token: token.to_string(),
+            device_cap,
+            peers: Vec::new(),
+            pending_hellos: Vec::new(),
             device_conn: BTreeMap::new(),
             local_addr,
         };
-        let mut peers: Vec<SocketAddr> = Vec::new();
         let t0 = Instant::now();
-        let mut next_device = 0usize;
         while plane.device_conn.len() < n_workers {
             anyhow::ensure!(
                 t0.elapsed() < ACCEPT_TIMEOUT,
@@ -471,54 +488,28 @@ impl TcpPlane {
                 plane.device_conn.len(),
                 ACCEPT_TIMEOUT.as_secs()
             );
-            match listener.accept() {
+            match plane.listener.accept() {
                 Ok((stream, peer)) => {
                     // Some platforms make accepted sockets inherit the
                     // listener's nonblocking flag; the reader relies on
                     // blocking reads with SO_RCVTIMEO.
                     stream.set_nonblocking(false)?;
                     let _ = stream.set_nodelay(true);
-                    plane.register(stream, &hs_tx)?;
-                    peers.push(peer);
+                    plane.register(stream)?;
+                    plane.peers.push(peer.to_string());
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
                 Err(e) => anyhow::bail!("accept failed: {e}"),
             }
             match plane.hs_rx.recv_timeout(Duration::from_millis(50)) {
                 Ok(HsEvent::Hello { conn, hello }) => {
-                    let peer = peers.get(conn).map(|p| p.to_string()).unwrap_or_default();
-                    if hello.token != token {
-                        plane.reject(conn, &peer, "bad token");
-                        continue;
-                    }
-                    let dev = match hello.device {
-                        Some(d) => d,
-                        None => {
-                            while plane.device_conn.contains_key(&next_device) {
-                                next_device += 1;
-                            }
-                            next_device
-                        }
-                    };
-                    // A stray/duplicate/out-of-range claim kills that
-                    // connection, not the pool the other workers formed.
-                    if dev >= device_cap {
-                        plane.reject(
-                            conn,
-                            &peer,
-                            &format!("device {dev} out of range (testbed has {device_cap})"),
+                    if let Some(dev) = plane.admit_hello(conn, hello) {
+                        let peer = plane.peers.get(conn).cloned().unwrap_or_default();
+                        eprintln!(
+                            "broker: worker {peer} joined as device {dev} ({}/{n_workers})",
+                            plane.device_conn.len()
                         );
-                        continue;
                     }
-                    if plane.device_conn.contains_key(&dev) {
-                        plane.reject(conn, &peer, &format!("device {dev} already claimed"));
-                        continue;
-                    }
-                    plane.device_conn.insert(dev, conn);
-                    eprintln!(
-                        "broker: worker {peer} joined as device {dev} ({}/{n_workers})",
-                        plane.device_conn.len()
-                    );
                 }
                 Ok(HsEvent::Ready { .. }) => {} // cannot happen before assigns
                 Err(RecvTimeoutError::Timeout) => {}
@@ -526,6 +517,117 @@ impl TcpPlane {
             }
         }
         Ok(plane)
+    }
+
+    /// Process one Hello claim: authenticate, resolve the device id (an
+    /// explicit claim or the lowest never-claimed id) and bind it to
+    /// `conn`. A claim on a device whose previous connection has *died*
+    /// reclaims the id — that is a rejoin; the fresh connection starts
+    /// with `heard = false`, so it re-earns liveness under the
+    /// first-contact grace when the next generation monitors it. A claim
+    /// on a live device, a bad token, or an out-of-range id turns that
+    /// connection away without touching the rest of the pool. Returns the
+    /// admitted device id.
+    fn admit_hello(&mut self, conn: usize, hello: Hello) -> Option<usize> {
+        let peer = self.peers.get(conn).cloned().unwrap_or_default();
+        if hello.token != self.token {
+            self.reject(conn, &peer, "bad token");
+            return None;
+        }
+        let dev = match hello.device {
+            Some(d) => d,
+            None => {
+                let mut d = 0usize;
+                while self.device_conn.contains_key(&d) {
+                    d += 1;
+                }
+                d
+            }
+        };
+        if dev >= self.device_cap {
+            self.reject(
+                conn,
+                &peer,
+                &format!("device {dev} out of range (testbed has {})", self.device_cap),
+            );
+            return None;
+        }
+        if let Some(&old) = self.device_conn.get(&dev) {
+            let old_alive = {
+                let rt = self.shared.route.lock().unwrap();
+                rt.alive.get(old).copied().unwrap_or(false)
+            };
+            if old_alive {
+                self.reject(conn, &peer, &format!("device {dev} already claimed"));
+                return None;
+            }
+            // Previous worker for this device is gone: reclaim (rejoin).
+        }
+        self.device_conn.insert(dev, conn);
+        Some(dev)
+    }
+
+    /// Accept and authenticate any workers that connected after the pool
+    /// formed (elastic membership). Non-blocking: sweeps the listener's
+    /// accept queue, then the buffered + freshly arrived Hello claims.
+    /// Returns the device ids admitted by this sweep.
+    pub fn admit_pending(&mut self) -> Vec<usize> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let p = peer.to_string();
+                    if self.register(stream).is_ok() {
+                        self.peers.push(p);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        let mut claims = std::mem::take(&mut self.pending_hellos);
+        while let Ok(ev) = self.hs_rx.try_recv() {
+            if let HsEvent::Hello { conn, hello } = ev {
+                claims.push((conn, hello));
+            }
+            // Stray Ready from a torn-down generation: drop.
+        }
+        let mut admitted = Vec::new();
+        for (conn, hello) in claims {
+            if let Some(dev) = self.admit_hello(conn, hello) {
+                let peer = self.peers.get(conn).cloned().unwrap_or_default();
+                eprintln!("broker: worker {peer} admitted mid-run as device {dev}");
+                admitted.push(dev);
+            }
+        }
+        admitted
+    }
+
+    /// Block until a live worker connection claims `dev` (a scripted join
+    /// or rejoin boundary), sweeping the accept queue while waiting.
+    pub fn await_device(&mut self, dev: usize, timeout: Duration) -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        loop {
+            self.admit_pending();
+            if let Some(&conn) = self.device_conn.get(&dev) {
+                let alive = {
+                    let rt = self.shared.route.lock().unwrap();
+                    rt.alive.get(conn).copied().unwrap_or(false)
+                };
+                if alive {
+                    return Ok(());
+                }
+            }
+            anyhow::ensure!(
+                t0.elapsed() < timeout,
+                "no worker claimed device {dev} within {:.0}s",
+                timeout.as_secs_f64()
+            );
+            std::thread::sleep(Duration::from_millis(25));
+        }
     }
 
     /// Turn a connection away during the handshake: tell it why (a Ctl
@@ -546,7 +648,7 @@ impl TcpPlane {
         mark_dead(&self.shared, conn);
     }
 
-    fn register(&mut self, stream: TcpStream, hs_tx: &Sender<HsEvent>) -> anyhow::Result<usize> {
+    fn register(&mut self, stream: TcpStream) -> anyhow::Result<usize> {
         let reader = stream.try_clone()?;
         let writer: SharedWriter = Arc::new(Mutex::new(ConnWriter::new(stream)));
         let conn = {
@@ -562,7 +664,7 @@ impl TcpPlane {
             rt.alive.push(true);
         }
         let shared = self.shared.clone();
-        let hs = hs_tx.clone();
+        let hs = self.hs_tx.clone();
         std::thread::Builder::new()
             .name(format!("tcp-conn{conn}"))
             .spawn(move || broker_reader(conn, reader, shared, hs))
@@ -657,8 +759,15 @@ impl TcpPlane {
             }
             rt.epoch += 1;
         }
-        // Drop handshake leftovers from a previous generation.
-        while self.hs_rx.try_recv().is_ok() {}
+        // Drop stale Readys from a previous generation, but KEEP Hello
+        // claims: a joiner that connected during the last generation must
+        // not be silently discarded — it is admitted at the next
+        // `admit_pending` sweep.
+        while let Ok(ev) = self.hs_rx.try_recv() {
+            if let HsEvent::Hello { conn, hello } = ev {
+                self.pending_hellos.push((conn, hello));
+            }
+        }
         let mut body = Vec::new();
         for (s, a) in assigns.iter().enumerate() {
             body.clear();
@@ -692,7 +801,10 @@ impl TcpPlane {
                         got += 1;
                     }
                 }
-                Ok(HsEvent::Hello { .. }) => {} // late stray; ignore
+                // A joiner arriving during the barrier: buffer its claim.
+                Ok(HsEvent::Hello { conn, hello }) => {
+                    self.pending_hellos.push((conn, hello))
+                }
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => anyhow::bail!("handshake plane lost"),
             }
@@ -707,6 +819,30 @@ impl TcpPlane {
             .collect();
         let label_tx = self.conn_link(stage_conns[s_n - 1], Lane::Labels);
         Ok((rx, fwd_tx, label_tx))
+    }
+
+    /// Best-effort abort of a generation start that failed partway (some
+    /// workers may have accepted their Assign and be waiting for data):
+    /// send Stop on the data lanes of every live connection so they park,
+    /// disarm the monitors, and drop any driver sink. Whatever Snapshot /
+    /// Stats they emit in response falls on the floor.
+    pub fn abort_generation(&self) {
+        self.monitor_off();
+        self.clear_driver();
+        let alive: Vec<bool> = {
+            let rt = self.shared.route.lock().unwrap();
+            rt.alive.clone()
+        };
+        for &conn in self.device_conn.values() {
+            if !alive.get(conn).copied().unwrap_or(false) {
+                continue;
+            }
+            if let Some(w) = self.shared.writer(conn) {
+                let mut g = w.lock().unwrap();
+                let _ = g.write_wire(Lane::Fwd, &Wire::Stop);
+                let _ = g.write_wire(Lane::Labels, &Wire::Stop);
+            }
+        }
     }
 
     /// Drop the driver-plane sink: subsequent driver-lane frames are

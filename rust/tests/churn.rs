@@ -4,7 +4,7 @@
 //! injector, failover re-planning and checkpoint restore over real
 //! threads and channels.
 
-use fusionllm::broker::{self, Job};
+use fusionllm::broker::{self, ChurnTrace, Job};
 use fusionllm::checkpoint;
 use fusionllm::scheduler::replan::ReplanMode;
 use fusionllm::worker::BackendKind;
@@ -82,6 +82,164 @@ fn killed_run_recovers_and_matches_unkilled() {
             b.to_bits(),
             "iter {i}: clean {a} != recovered {b}"
         );
+    }
+}
+
+#[test]
+fn two_concurrent_kills_recover_in_one_pass() {
+    // Devices 1 and 2 vanish at the top of the same iteration. The
+    // deadline monitor declares the first death, the settle window sweeps
+    // up the second, and a single failover re-plan dodges *both* corpses
+    // — two RecoveryEvents, one restore, all iterations, bitwise losses
+    // (the pinned cascading-failure case).
+    let base = null_job("twokill");
+    let clean = broker::run(&Job {
+        checkpoint_every: 0,
+        ..base.clone()
+    })
+    .unwrap();
+    let churn = broker::run(&Job {
+        churn: Some(ChurnTrace::parse("kill 1 @3\nkill 2 @3").unwrap()),
+        replan: ReplanMode::Auto,
+        ..base.clone()
+    })
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+
+    assert_eq!(churn.losses.len(), 8, "all iterations must complete");
+    assert_eq!(churn.recoveries.len(), 2, "{:?}", churn.recoveries);
+    let devs: Vec<usize> = churn.recoveries.iter().map(|r| r.device).collect();
+    assert!(devs.contains(&1) && devs.contains(&2), "wrong corpses: {devs:?}");
+    for r in &churn.recoveries {
+        assert_eq!(r.died_iter, 3);
+        assert_eq!(r.resume_iter, 2, "both resume from the iter-2 boundary");
+        assert!(
+            !r.to.contains(&1) && !r.to.contains(&2),
+            "failover placement still uses a dead device: {:?}",
+            r.to
+        );
+    }
+    assert!(churn.joins.is_empty());
+    for (i, (a, b)) in clean.losses.iter().zip(&churn.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "iter {i}: clean {a} != recovered {b}");
+    }
+}
+
+#[test]
+fn death_at_checkpoint_boundary_discards_partial_snapshot() {
+    // Device 1 dies exactly at the iter-4 checkpoint boundary: its stage
+    // never answers the `Wire::Checkpoint` broadcast, so the collection
+    // must abort, DISCARD the partial snapshot (no ckpt-00000004 from the
+    // doomed pass, no .tmp- residue), and recover from the intact iter-2
+    // version.
+    let base = null_job("ckptdeath");
+    let clean = broker::run(&Job {
+        checkpoint_every: 0,
+        ..base.clone()
+    })
+    .unwrap();
+    let churn = broker::run(&Job {
+        kill_device: Some(1),
+        kill_at_iter: 4,
+        replan: ReplanMode::Auto,
+        ..base.clone()
+    })
+    .unwrap();
+    assert_eq!(churn.losses.len(), 8);
+    assert_eq!(churn.recoveries.len(), 1, "{:?}", churn.recoveries);
+    let r = &churn.recoveries[0];
+    assert_eq!(r.died_iter, 4);
+    assert_eq!(
+        r.resume_iter, 2,
+        "the interrupted iter-4 snapshot must be discarded, not restored"
+    );
+    assert_eq!(r.iters_lost, 2);
+    // Only complete, atomically-renamed versions on disk — the re-run
+    // after recovery rewrites boundaries 4 and 6 cleanly.
+    let entries: Vec<String> = std::fs::read_dir(&base.checkpoint_dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert!(
+        entries.iter().all(|n| n.starts_with("ckpt-")),
+        "partial checkpoint residue: {entries:?}"
+    );
+    assert_eq!(checkpoint::versions(&base.checkpoint_dir), vec![2, 4, 6]);
+    for (a, b) in clean.losses.iter().zip(&churn.losses) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+}
+
+#[test]
+fn mid_run_join_is_admitted_at_the_scripted_boundary() {
+    // A brand-new device (9: an Rtx2080, strictly slower than the four
+    // Rtx4090s already hosting stages) becomes available at iteration 5.
+    // It must be admitted and recorded; the re-planner only folds it in
+    // when the simnet predicts a win, so a slower newcomer stays parked
+    // and the placement is untouched. Either way the math cannot move.
+    let base = null_job("join");
+    let clean = broker::run(&Job {
+        checkpoint_every: 0,
+        ..base.clone()
+    })
+    .unwrap();
+    let churn = broker::run(&Job {
+        churn: Some(ChurnTrace::parse("join 9 @5").unwrap()),
+        replan: ReplanMode::Auto,
+        ..base.clone()
+    })
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+
+    assert_eq!(churn.losses.len(), 8);
+    assert!(churn.recoveries.is_empty(), "{:?}", churn.recoveries);
+    assert_eq!(churn.joins.len(), 1, "{:?}", churn.joins);
+    let j = &churn.joins[0];
+    assert_eq!((j.device, j.kind.as_str(), j.iter), (9, "join", 5));
+    if !j.adopted {
+        assert_eq!(j.from, j.to, "a parked spare must not move the placement");
+        assert_eq!(j.sim_before_s.to_bits(), j.sim_after_s.to_bits());
+    }
+    for (a, b) in clean.losses.iter().zip(&churn.losses) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn killed_device_rejoins_after_recovery() {
+    // kill 1 @3, rejoin 1 @5: the device dies, the run recovers onto
+    // survivors, then the same device reconnects two iterations later.
+    // The rejoin is admitted as a fresh spare (liveness re-earned) and —
+    // because device 1 is an Rtx4090 displaced by a slower survivor —
+    // typically re-adopted by the join re-planner. Losses stay bitwise
+    // either way.
+    let base = null_job("rejoin");
+    let clean = broker::run(&Job {
+        checkpoint_every: 0,
+        ..base.clone()
+    })
+    .unwrap();
+    let churn = broker::run(&Job {
+        churn: Some(ChurnTrace::parse("kill 1 @3\nrejoin 1 @5").unwrap()),
+        replan: ReplanMode::Auto,
+        ..base.clone()
+    })
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+
+    assert_eq!(churn.losses.len(), 8);
+    assert_eq!(churn.recoveries.len(), 1, "{:?}", churn.recoveries);
+    assert_eq!(churn.recoveries[0].device, 1);
+    assert_eq!(churn.joins.len(), 1, "{:?}", churn.joins);
+    let j = &churn.joins[0];
+    assert_eq!((j.device, j.kind.as_str()), (1, "rejoin"));
+    assert!(j.iter >= 5, "admitted at the first boundary >= the scripted iter");
+    if j.adopted {
+        assert!(j.to.contains(&1), "adopted rejoin must host a stage: {:?}", j.to);
+    }
+    for (i, (a, b)) in clean.losses.iter().zip(&churn.losses).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "iter {i}: clean {a} != churned {b}");
     }
 }
 
