@@ -6,7 +6,7 @@ use crate::compress::adatopk::CompressDirection;
 use crate::compress::{CompressKind, ValueCodec};
 use crate::pipeline::ScheduleKind;
 use crate::scheduler::replan::ReplanMode;
-use crate::transport::TransportKind;
+use crate::transport::{DataPlane, TransportKind};
 use crate::util::cli::Args;
 use crate::worker::BackendKind;
 use std::path::PathBuf;
@@ -73,6 +73,9 @@ pub struct Job {
     /// Broker↔worker transport: in-process channels (chan, default) or
     /// TCP sockets with `fusionllm worker --connect` processes.
     pub transport: TransportKind,
+    /// Where packet lanes travel under tcp: relayed through the broker
+    /// (relay, default) or direct worker↔worker connections (mesh).
+    pub data_plane: DataPlane,
     /// TCP listen address (`--listen host:port`).
     pub listen: String,
     /// Shared-secret handshake token for TCP workers.
@@ -129,6 +132,7 @@ impl Default for Job {
             heartbeat_timeout: 40,
             heartbeat_grace: 4,
             transport: TransportKind::Chan,
+            data_plane: DataPlane::Relay,
             listen: "127.0.0.1:4471".into(),
             token: "fusionllm".into(),
             workers: None,
@@ -192,6 +196,7 @@ impl Job {
             heartbeat_grace: args.u64("heartbeat-grace", d.heartbeat_grace as u64).max(1)
                 as u32,
             transport: TransportKind::parse(&args.str("transport", d.transport.name()))?,
+            data_plane: DataPlane::parse(&args.str("data-plane", d.data_plane.name()))?,
             listen: args.str("listen", &d.listen),
             token: args.str("token", &d.token),
             workers: args.opt_str("workers").map(|s| {
@@ -318,25 +323,29 @@ mod tests {
     fn transport_flags_parse() {
         let j = Job::from_args(&Args::parse(std::iter::empty::<String>())).unwrap();
         assert_eq!(j.transport, TransportKind::Chan);
+        assert_eq!(j.data_plane, DataPlane::Relay);
         assert_eq!(j.listen, "127.0.0.1:4471");
         assert_eq!(j.token, "fusionllm");
         assert_eq!(j.workers, None);
         assert_eq!(j.heartbeat_grace, 4);
         assert_eq!(j.pace_s, 0.0);
         let args = Args::parse(
-            "train --transport tcp --listen 0.0.0.0:9000 --token s3cret --workers 5 \
-             --heartbeat-grace 8 --pace 0.1"
+            "train --transport tcp --data-plane mesh --listen 0.0.0.0:9000 --token s3cret \
+             --workers 5 --heartbeat-grace 8 --pace 0.1"
                 .split_whitespace()
                 .map(String::from),
         );
         let j = Job::from_args(&args).unwrap();
         assert_eq!(j.transport, TransportKind::Tcp);
+        assert_eq!(j.data_plane, DataPlane::Mesh);
         assert_eq!(j.listen, "0.0.0.0:9000");
         assert_eq!(j.token, "s3cret");
         assert_eq!(j.workers, Some(5));
         assert_eq!(j.heartbeat_grace, 8);
         assert_eq!(j.pace_s, 0.1);
         let bad = Args::parse(["--transport", "udp"].iter().map(|s| s.to_string()));
+        assert!(Job::from_args(&bad).is_err());
+        let bad = Args::parse(["--data-plane", "ring"].iter().map(|s| s.to_string()));
         assert!(Job::from_args(&bad).is_err());
     }
 

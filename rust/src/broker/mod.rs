@@ -49,7 +49,7 @@ use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
 use crate::simnet::{simulate_iteration, StagePlan};
 use crate::trainer::{JoinEvent, RecoveryEvent, ReplanEvent, SyntheticCorpus, TrainReport};
 use crate::transport::tcp::{MonitorCfg, StageAssign, TcpPlane};
-use crate::transport::{chan, Link, PacketPool, TransportKind};
+use crate::transport::{chan, DataPlane, Link, PacketPool, TransportKind};
 use crate::worker::{
     spawn_stage, BackendKind, LinkSpec, StageCodec, StageCtx, StageState, Wire, WorkerStats,
 };
@@ -437,6 +437,26 @@ fn assign_generation(
 ) -> anyhow::Result<Generation> {
     let s_n = devices.len();
     let cfg = &manifest.config;
+    // Mesh data plane: snapshot each placed worker's advertised peer
+    // listener into this generation's route table, stamped with a fresh
+    // generation id so stale dials from torn-down generations are
+    // rejected at the peer listener. Replan/join/rejoin boundaries pass
+    // through here, so membership changes re-issue routes automatically.
+    let (mesh_gen, peers) = if job.data_plane == DataPlane::Mesh {
+        let mut peers = Vec::with_capacity(s_n);
+        for (s, &dev) in devices.iter().enumerate() {
+            let addr = plane.peer_addr(dev).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "mesh data plane: device {dev} advertised no peer listener \
+                     (start its worker with --peer-listen)"
+                )
+            })?;
+            peers.push((s, addr));
+        }
+        (plane.next_mesh_gen(), peers)
+    } else {
+        (0, Vec::new())
+    };
     let mut assigns = Vec::with_capacity(s_n);
     for s in 0..s_n {
         let p = stage_params(job, churn, devices, s, iter0, slow_dev);
@@ -464,6 +484,8 @@ fn assign_generation(
             heartbeat_s: job.heartbeat_s,
             kill_at_iter: p.kill_at_iter,
             init_state: init[s].take(),
+            mesh_gen,
+            peers: peers.clone(),
         });
     }
     let ready_timeout = (deadline * job.heartbeat_grace.max(1)).max(Duration::from_secs(5));
@@ -851,6 +873,11 @@ pub fn run_with_listener(
             anyhow::ensure!(
                 listener.is_none(),
                 "a TCP listener was provided but the transport is chan"
+            );
+            anyhow::ensure!(
+                job.data_plane == DataPlane::Relay,
+                "--data-plane mesh requires --transport tcp \
+                 (chan lanes are already direct in-process channels)"
             );
             Plane::Chan
         }
@@ -1614,6 +1641,14 @@ pub fn run_with_listener(
     teardown(&mut plane, last, s_n, &mut snapshots, &mut all_stats, hb.is_some(), deadline)?;
     if let Plane::Tcp(p) = &plane {
         p.shutdown();
+        // Data-plane accounting: bytes the broker relayed worker→worker
+        // (frame-level, counted at the relay hop) vs stage payload bytes
+        // that traveled direct peer links. Under mesh the former must be
+        // ~0 — the CI mesh smokes grep for exactly that.
+        report.relayed_packet_bytes = p.relayed_packet_bytes() as f64;
+        if job.data_plane == DataPlane::Mesh {
+            report.peer_packet_bytes = all_stats.iter().map(|s| s.bytes_sent).sum();
+        }
     }
     report.placement = devices;
 

@@ -11,7 +11,7 @@ use crate::pipeline::{PipelineSchedule, ScheduleKind};
 use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
 use crate::simnet::{simulate_iteration, StagePlan};
 use crate::trainer::TrainReport;
-use crate::transport::TransportKind;
+use crate::transport::{DataPlane, TransportKind};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::math::{fmt_bytes, fmt_secs};
@@ -357,16 +357,18 @@ fn simulate_churn(args: &Args) -> Result<()> {
         token: parsed.token,
         workers: parsed.workers,
         pace_s: parsed.pace_s,
+        data_plane: parsed.data_plane,
         checkpoint_every: args.usize("checkpoint-every", 2),
         checkpoint_dir: ckpt_dir.clone(),
         ..Job::default()
     };
     println!(
         "churn smoke: kill device {kill_dev} at iteration {kill_at} of {iters} \
-         (checkpoint every {}, replan {}, transport {})",
+         (checkpoint every {}, replan {}, transport {}, data plane {})",
         base.checkpoint_every,
         replan.name(),
-        base.transport.name()
+        base.transport.name(),
+        base.data_plane.name()
     );
 
     // The reference run is always in-process (chan): over tcp the same
@@ -375,6 +377,7 @@ fn simulate_churn(args: &Args) -> Result<()> {
         replan: ReplanMode::Off,
         checkpoint_every: 0,
         transport: TransportKind::Chan,
+        data_plane: DataPlane::Relay,
         ..base.clone()
     })?;
     let churn_result = broker::run(&Job {
@@ -385,6 +388,7 @@ fn simulate_churn(args: &Args) -> Result<()> {
     let _ = std::fs::remove_dir_all(&ckpt_dir);
     let churn = churn_result?;
 
+    print_data_plane(&churn, &base);
     print_recoveries(&churn);
     anyhow::ensure!(
         churn.losses.len() == iters,
@@ -492,19 +496,21 @@ fn simulate_churn_trace(args: &Args) -> Result<()> {
         token: parsed.token,
         workers: parsed.workers,
         pace_s: parsed.pace_s,
+        data_plane: parsed.data_plane,
         checkpoint_every: args.usize("checkpoint-every", 2),
         checkpoint_dir: ckpt_dir.clone(),
         ..Job::default()
     };
     println!(
         "churn trace: {} event(s) ({} kill(s), {} admission(s)) over {iters} iterations \
-         (checkpoint every {}, replan {}, transport {})",
+         (checkpoint every {}, replan {}, transport {}, data plane {})",
         trace.events.len(),
         n_kills,
         admissions.len(),
         base.checkpoint_every,
         replan.name(),
-        base.transport.name()
+        base.transport.name(),
+        base.data_plane.name()
     );
     for ev in &trace.events {
         println!("  {} {} @{}", ev.action.name(), ev.device, ev.at_iter);
@@ -517,12 +523,14 @@ fn simulate_churn_trace(args: &Args) -> Result<()> {
         replan: ReplanMode::Off,
         checkpoint_every: 0,
         transport: TransportKind::Chan,
+        data_plane: DataPlane::Relay,
         ..base.clone()
     })?;
     let churn_result = broker::run(&Job { churn: Some(trace.clone()), ..base.clone() });
     let _ = std::fs::remove_dir_all(&ckpt_dir);
     let churn = churn_result?;
 
+    print_data_plane(&churn, &base);
     print_recoveries(&churn);
     print_joins(&churn);
     anyhow::ensure!(
@@ -577,6 +585,21 @@ fn simulate_churn_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Print the data-plane byte accounting of a tcp run (shared by train and
+/// the churn smokes). The CI mesh gates grep this line to assert the
+/// broker relayed ~no packet bytes while peer links carried the traffic.
+fn print_data_plane(report: &TrainReport, job: &Job) {
+    if job.transport != TransportKind::Tcp {
+        return;
+    }
+    println!(
+        "data plane {}: broker-relayed packet bytes {:.0}; peer-direct packet bytes {:.0}",
+        job.data_plane.name(),
+        report.relayed_packet_bytes,
+        report.peer_packet_bytes
+    );
+}
+
 /// Print `TrainReport.recoveries` (shared by train and the churn smoke).
 fn print_recoveries(report: &TrainReport) {
     for r in &report.recoveries {
@@ -618,12 +641,15 @@ fn print_joins(report: &TrainReport) {
 }
 
 /// `fusionllm worker --connect HOST:PORT [--token T] [--device D]
-///  [--artifacts ROOT] [--retry-secs S]` — a remote stage executor: one
-/// OS process hosting one pipeline stage per generation, assigned by the
-/// broker over the TCP transport.
+///  [--artifacts ROOT] [--retry-secs S] [--peer-listen HOST:PORT]` — a
+/// remote stage executor: one OS process hosting one pipeline stage per
+/// generation, assigned by the broker over the TCP transport. With
+/// `--peer-listen` the worker also binds a mesh endpoint (port 0 = any
+/// free port) so `--data-plane mesh` brokers can route packet lanes
+/// directly between neighboring workers.
 pub fn worker(args: &Args) -> Result<()> {
     let usage = "usage: fusionllm worker --connect HOST:PORT [--token T] [--device D] \
-                 [--artifacts ROOT] [--retry-secs S]";
+                 [--artifacts ROOT] [--retry-secs S] [--peer-listen HOST:PORT]";
     let connect = args
         .opt_str("connect")
         .ok_or_else(|| anyhow::anyhow!(usage))?
@@ -639,6 +665,7 @@ pub fn worker(args: &Args) -> Result<()> {
             .map(std::path::PathBuf::from)
             .unwrap_or_else(crate::broker::job::default_artifacts_root),
         retry: std::time::Duration::from_secs_f64(args.f64("retry-secs", 10.0).max(0.0)),
+        peer_listen: args.opt_str("peer-listen").map(String::from),
     };
     crate::worker::run_worker(&opts)
 }
@@ -659,6 +686,7 @@ pub fn train(args: &Args) -> Result<()> {
         job.iters
     );
     let report = broker::run(&job)?;
+    print_data_plane(&report, &job);
     for (i, loss) in report.losses.iter().enumerate() {
         if i % 10 == 0 || i + 1 == report.losses.len() {
             println!(

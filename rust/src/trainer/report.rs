@@ -150,6 +150,13 @@ pub struct TrainReport {
     /// Achieved wire compression: dense payload bytes / wire bytes sent
     /// (e.g. ≈ r/3 for f32 Top-K, ≈ 4r/5 for int8-sparse at ratio r).
     pub wire_shrink: f64,
+    /// Frame bytes the broker relayed worker→worker over the tcp
+    /// transport (0 under chan; ≈0 under `--data-plane mesh`, where only
+    /// a stray pre-teardown frame could ever transit the broker).
+    pub relayed_packet_bytes: f64,
+    /// Stage payload bytes that traveled direct worker↔worker peer links
+    /// (non-zero only under `--data-plane mesh`).
+    pub peer_packet_bytes: f64,
     /// Stage -> device placement used (final placement after any replans).
     pub placement: Vec<usize>,
     /// Straggler-driven re-partitionings, in iteration order.
@@ -189,6 +196,8 @@ impl TrainReport {
                 arr(self.wire_bytes.iter().map(|&v| n(v)).collect()),
             ),
             ("wire_shrink", n(self.wire_shrink)),
+            ("relayed_packet_bytes", n(self.relayed_packet_bytes)),
+            ("peer_packet_bytes", n(self.peer_packet_bytes)),
             (
                 "placement",
                 arr(self.placement.iter().map(|&p| ni(p)).collect()),
@@ -243,6 +252,8 @@ mod tests {
             sim_s: vec![1.0, 1.0, 1.0],
             wire_bytes: vec![100.0, 100.0, 100.0],
             wire_shrink: 33.3,
+            relayed_packet_bytes: 0.0,
+            peer_packet_bytes: 4096.0,
             placement: vec![0, 1, 2, 3],
             replans: vec![ReplanEvent {
                 iter: 2,
@@ -286,6 +297,8 @@ mod tests {
         assert_eq!(j.get("scheduler").as_str().unwrap(), "opfence");
         assert_eq!(j.get("pipeline").as_str().unwrap(), "1f1b");
         assert_eq!(j.get("losses").as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("relayed_packet_bytes").as_f64().unwrap(), 0.0);
+        assert_eq!(j.get("peer_packet_bytes").as_f64().unwrap(), 4096.0);
         let reps = j.get("replans").as_arr().unwrap();
         assert_eq!(reps.len(), 1);
         assert_eq!(reps[0].get("origin").as_str().unwrap(), "swap");

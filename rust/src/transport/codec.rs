@@ -361,7 +361,11 @@ pub fn decode_wire(kind: FrameKind, body: &[u8]) -> anyhow::Result<Wire> {
         }),
         FrameKind::Fatal => Wire::Fatal { stage: rd.usize()?, error: rd.str()? },
         FrameKind::Stop => Wire::Stop,
-        FrameKind::Hello | FrameKind::Assign | FrameKind::Ready | FrameKind::Exit => {
+        FrameKind::Hello
+        | FrameKind::Assign
+        | FrameKind::Ready
+        | FrameKind::Exit
+        | FrameKind::Credit => {
             anyhow::bail!("handshake frame {kind:?} is not a Wire message")
         }
     };
@@ -378,20 +382,61 @@ pub struct Hello {
     pub token: String,
     /// Requested device id (None = broker assigns the next free one).
     pub device: Option<usize>,
+    /// Address (`host:port`) where this worker's peer listener accepts
+    /// direct mesh connections from pipeline neighbors (None = relay-only
+    /// worker; the broker excludes it from mesh route tables).
+    pub peer_listen: Option<String>,
 }
 
 impl Hello {
     pub fn encode(&self, out: &mut Vec<u8>) {
         put_str(out, &self.token);
         put_opt_usize(out, self.device);
+        match &self.peer_listen {
+            None => put_u8(out, 0),
+            Some(addr) => {
+                put_u8(out, 1);
+                put_str(out, addr);
+            }
+        }
     }
 
     pub fn decode(body: &[u8]) -> anyhow::Result<Hello> {
         let mut rd = Rd::new(body);
-        let h = Hello { token: rd.str()?, device: rd.opt_usize()? };
+        let h = Hello {
+            token: rd.str()?,
+            device: rd.opt_usize()?,
+            peer_listen: match rd.u8()? {
+                0 => None,
+                1 => Some(rd.str()?),
+                other => anyhow::bail!("bad peer-listen presence tag {other}"),
+            },
+        };
         rd.finish()?;
         Ok(h)
     }
+}
+
+// ---- peer handshake (mesh data plane) ----------------------------------
+
+/// Dialer -> acceptor on a fresh peer connection: authenticate and bind
+/// the socket to (stage, generation). The acceptor validates the token,
+/// that the dialer is its pipeline predecessor, and that the generation
+/// matches — stale dials from a torn-down generation are dropped.
+pub(crate) fn encode_peer_hello(token: &str, stage: usize, gen: u64, out: &mut Vec<u8>) {
+    put_str(out, token);
+    put_usize(out, stage);
+    put_u64(out, gen);
+}
+
+/// Decode a peer hello body into (token, dialer stage, mesh generation).
+pub(crate) fn decode_peer_hello(body: &[u8]) -> anyhow::Result<(String, usize, u64)> {
+    let mut rd = Rd::new(body);
+    let token = rd.str()?;
+    let stage = rd.usize()?;
+    let gen = rd.u64()?;
+    rd.finish()?;
+    Ok((token, stage, gen))
 }
 
 /// Broker -> worker: everything a remote process needs to run one stage
@@ -428,6 +473,15 @@ pub struct StageAssign {
     pub kill_at_iter: Option<u32>,
     /// Migrated/restored state (checkpoint recovery, live migration).
     pub init_state: Option<StageState>,
+    /// Mesh generation this assignment belongs to: a broker-monotonic
+    /// counter peer hellos carry, so a listener can drop stale dials left
+    /// over from a torn-down generation. Meaningful only when `peers` is
+    /// non-empty.
+    pub mesh_gen: u64,
+    /// Mesh route table: (stage, peer-listener `host:port`) for every
+    /// stage of this generation. Empty = relay data plane (all packets
+    /// through the broker, the pre-mesh wire behavior).
+    pub peers: Vec<(usize, String)>,
 }
 
 fn put_link_spec(out: &mut Vec<u8>, spec: &Option<LinkSpec>) {
@@ -490,6 +544,12 @@ impl StageAssign {
                 put_state(out, st);
             }
         }
+        put_u64(out, self.mesh_gen);
+        put_u32(out, self.peers.len() as u32);
+        for (stage, addr) in &self.peers {
+            put_usize(out, *stage);
+            put_str(out, addr);
+        }
     }
 
     pub fn decode(body: &[u8]) -> anyhow::Result<StageAssign> {
@@ -541,6 +601,15 @@ impl StageAssign {
                 0 => None,
                 1 => Some(read_state(&mut rd)?),
                 other => anyhow::bail!("bad init-state presence tag {other}"),
+            },
+            mesh_gen: rd.u64()?,
+            peers: {
+                let n = rd.u32()? as usize;
+                let mut peers = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    peers.push((rd.usize()?, rd.str()?));
+                }
+                peers
             },
         };
         rd.finish()?;
@@ -673,6 +742,8 @@ mod tests {
                 momentum: vec![],
                 second: vec![1.0],
             }),
+            mesh_gen: 9,
+            peers: vec![(0, "10.0.0.1:4501".into()), (1, "10.0.0.2:4501".into())],
         };
         let mut body = Vec::new();
         a.encode(&mut body);
@@ -685,8 +756,12 @@ mod tests {
     #[test]
     fn hello_and_ready_roundtrip() {
         for h in [
-            Hello { token: "secret".into(), device: Some(4) },
-            Hello { token: String::new(), device: None },
+            Hello {
+                token: "secret".into(),
+                device: Some(4),
+                peer_listen: Some("127.0.0.1:4501".into()),
+            },
+            Hello { token: String::new(), device: None, peer_listen: None },
         ] {
             let mut b = Vec::new();
             h.encode(&mut b);
@@ -696,5 +771,22 @@ mod tests {
         encode_ready(3, &mut b);
         assert_eq!(decode_ready(&b).unwrap(), 3);
         assert!(decode_ready(&b[..4]).is_err());
+    }
+
+    #[test]
+    fn peer_hello_roundtrips_and_rejects_cuts() {
+        let mut b = Vec::new();
+        encode_peer_hello("mesh-token", 2, 17, &mut b);
+        assert_eq!(decode_peer_hello(&b).unwrap(), ("mesh-token".to_string(), 2, 17));
+        for cut in 0..b.len() {
+            assert!(decode_peer_hello(&b[..cut]).is_err(), "cut at {cut}");
+        }
+        b.push(0);
+        assert!(decode_peer_hello(&b).is_err());
+    }
+
+    #[test]
+    fn credit_is_not_a_wire_message() {
+        assert!(decode_wire(FrameKind::Credit, &4u32.to_le_bytes()).is_err());
     }
 }

@@ -92,6 +92,10 @@ pub enum FrameKind {
     Stats,
     Fatal,
     Stop,
+    /// Peer-link flow control: the receiver returns `n` credits for the
+    /// frame's lane (body = u32 LE count). Never crosses the broker and
+    /// never surfaces as a `Wire` message — the mesh demux consumes it.
+    Credit,
 }
 
 impl FrameKind {
@@ -112,6 +116,7 @@ impl FrameKind {
             FrameKind::Stats => 13,
             FrameKind::Fatal => 14,
             FrameKind::Stop => 15,
+            FrameKind::Credit => 16,
         }
     }
 
@@ -132,6 +137,7 @@ impl FrameKind {
             13 => FrameKind::Stats,
             14 => FrameKind::Fatal,
             15 => FrameKind::Stop,
+            16 => FrameKind::Credit,
             other => anyhow::bail!("unknown frame kind {other}"),
         })
     }

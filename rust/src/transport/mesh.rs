@@ -1,0 +1,755 @@
+//! Mesh data plane: direct worker↔worker `Packet` lanes.
+//!
+//! The star topology (`tcp.rs`) relays every fwd/bwd packet through the
+//! broker, so broker NIC bandwidth caps the cluster. Under
+//! `--data-plane mesh` the broker stays control-only (hello / assign /
+//! heartbeat / checkpoint / replan) and each adjacent stage pair holds
+//! one direct TCP connection carrying the high-volume packet lanes:
+//!
+//! * Stage `s` **dials** stage `s+1`'s peer listener (every worker binds
+//!   one at process startup and advertises it in its broker `Hello`; the
+//!   broker snapshots the addresses into each generation's `StageAssign`
+//!   route table). Fwd packets flow dialer→acceptor and bwd packets
+//!   acceptor→dialer on the *same* socket, so per-lane FIFO order — the
+//!   property the chan/tcp bitwise differential rests on — is preserved.
+//! * A dialed connection opens with a `(Ctl, Hello)` frame carrying
+//!   `(token, dialer stage, mesh generation)`. The acceptor drops
+//!   anything with a bad token, the wrong predecessor stage, or a stale
+//!   generation (a dial left in the backlog by a torn-down generation)
+//!   and keeps accepting — replan/join/rejoin boundaries simply re-issue
+//!   route tables with a fresh generation id.
+//!
+//! **Backpressure** is credit-based: each direction of a peer connection
+//! has a window of `MESH_WINDOW` in-flight packets. A sender takes one
+//! credit per packet and blocks at the cap; the receiver returns a
+//! `(lane, Credit)` frame — the lane byte in the frame header names
+//! which window — after delivering each packet into its stage queue. So
+//! a slow consumer stalls its producer at a bounded number of in-flight
+//! packets instead of filling unbounded socket buffers.
+//!
+//! **Deadlock freedom**: each connection end has an always-draining
+//! reader thread and a dedicated writer thread fed by an in-process
+//! queue. Senders never block on the socket (only on the credit window),
+//! credit returns never block behind a half-written multi-MiB packet,
+//! and queue memory is bounded by the credit windows.
+//!
+//! **Death**: a dying neighbor surfaces here as EOF/write failure; the
+//! windows close so every subsequent send fails with `LinkClosed` and
+//! the interpreter quiesces (ticking heartbeats, exactly as on a dead
+//! chan lane). Death *authority* stays with the broker — the dead
+//! worker's own broker connection trips EOF or the socket read deadline
+//! there, which synthesizes the one `Wire::Fatal` recovery event.
+
+use crate::transport::codec::{self, StageAssign};
+use crate::transport::frame::{FrameKind, Framer, Lane};
+use crate::transport::tcp::ConnWriter;
+use crate::transport::{Link, LinkClosed, PacketPool};
+use crate::worker::messages::Wire;
+use std::io::Read;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Per-lane in-flight packet cap on a peer connection. Small enough to
+/// bound memory on both ends, large enough to keep the pipe busy while
+/// credits are in flight.
+pub const MESH_WINDOW: usize = 8;
+
+/// How long a dialer retries connecting to a neighbor's peer listener
+/// (the listener is bound at worker startup, so this only covers slow
+/// process scheduling, not a worker that is still booting).
+const PEER_DIAL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long an acceptor waits for its predecessor's (validated) dial
+/// before giving up — the safety valve that turns a vanished neighbor
+/// into a normal `Fatal` → recovery instead of a hang.
+const PEER_ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Per-connection read timeout while validating a freshly accepted
+/// dial's hello frame (garbage connections must not stall the sweep).
+const PEER_HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+
+// ---- credit window -----------------------------------------------------
+
+/// A bounded in-flight window: `acquire` takes one credit (blocking at
+/// zero), `release` returns credits as the receiver drains, `close`
+/// fails all current and future acquires (peer gone).
+pub struct CreditWindow {
+    state: Mutex<WindowState>,
+    cv: Condvar,
+    cap: usize,
+}
+
+struct WindowState {
+    available: usize,
+    closed: bool,
+}
+
+impl CreditWindow {
+    pub fn new(cap: usize) -> Arc<CreditWindow> {
+        Arc::new(CreditWindow {
+            state: Mutex::new(WindowState { available: cap.max(1), closed: false }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        })
+    }
+
+    /// Take one credit, blocking while the window is exhausted. Errors
+    /// once the window is closed (the connection died).
+    pub fn acquire(&self) -> Result<(), LinkClosed> {
+        let mut g = self.state.lock().map_err(|_| LinkClosed)?;
+        loop {
+            if g.closed {
+                return Err(LinkClosed);
+            }
+            if g.available > 0 {
+                g.available -= 1;
+                return Ok(());
+            }
+            g = self.cv.wait(g).map_err(|_| LinkClosed)?;
+        }
+    }
+
+    /// Return `n` credits (clamped at the cap: a buggy or malicious peer
+    /// cannot inflate the window past its bound).
+    pub fn release(&self, n: usize) {
+        if let Ok(mut g) = self.state.lock() {
+            g.available = (g.available + n).min(self.cap);
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Fail every blocked and future `acquire` (the peer is gone).
+    pub fn close(&self) {
+        if let Ok(mut g) = self.state.lock() {
+            g.closed = true;
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Packets currently in flight (sent but not yet credited back).
+    pub fn in_flight(&self) -> usize {
+        self.state.lock().map(|g| self.cap - g.available).unwrap_or(0)
+    }
+}
+
+// ---- outbound queue ----------------------------------------------------
+
+/// One message for a peer connection's writer thread.
+enum PeerOut {
+    /// OP-Data packet body for the connection's outbound packet lane
+    /// (a credit was already taken).
+    Packet(Vec<u8>),
+    /// Credit return for `lane` (the reader delivered a packet).
+    Credit(Lane, u32),
+    /// Defensive escape hatch: a non-packet `Wire` sent down a peer
+    /// link (none flow today — the broker keeps the control plane).
+    Control(FrameKind, Vec<u8>),
+}
+
+/// `Link` over the outbound packet lane of one peer connection.
+pub struct PeerLink {
+    q: Sender<PeerOut>,
+    window: Arc<CreditWindow>,
+}
+
+impl Link for PeerLink {
+    fn send(&self, w: Wire) -> Result<(), LinkClosed> {
+        match w {
+            Wire::Packet(buf) => {
+                self.window.acquire()?;
+                self.q.send(PeerOut::Packet(buf)).map_err(|_| LinkClosed)
+            }
+            other => {
+                let mut body = Vec::new();
+                let kind = codec::encode_wire(&other, &mut body);
+                self.q.send(PeerOut::Control(kind, body)).map_err(|_| LinkClosed)
+            }
+        }
+    }
+
+    fn clone_link(&self) -> Box<dyn Link> {
+        Box::new(PeerLink { q: self.q.clone(), window: self.window.clone() })
+    }
+}
+
+// ---- connection threads ------------------------------------------------
+
+/// Writer half: drains the outbound queue onto the socket. Packet buffers
+/// recycle into `give_pool` (the sending `LinkEncoder`'s free-list) after
+/// the write, exactly like the star path. Exits — closing the send window
+/// so blocked senders observe `LinkClosed` — on any write failure or once
+/// every queue sender is gone.
+fn peer_writer(
+    mut w: ConnWriter,
+    rx: Receiver<PeerOut>,
+    out_lane: Lane,
+    window: Arc<CreditWindow>,
+    give_pool: Option<PacketPool>,
+) {
+    for msg in rx {
+        let r = match msg {
+            PeerOut::Packet(buf) => {
+                let r = w.write_frame(out_lane, FrameKind::Packet, &buf);
+                if let Some(p) = &give_pool {
+                    p.give(buf);
+                }
+                r
+            }
+            PeerOut::Credit(lane, n) => {
+                w.write_frame(lane, FrameKind::Credit, &n.to_le_bytes())
+            }
+            PeerOut::Control(kind, body) => w.write_frame(out_lane, kind, &body),
+        };
+        if r.is_err() {
+            break;
+        }
+    }
+    window.close();
+}
+
+/// Reader half: incoming packets on `in_lane` land in `sink` (the same
+/// per-generation stage queue the broker demux feeds) and a credit goes
+/// straight back; incoming credits on `out_lane` release the local send
+/// window. Exits on EOF, socket error, or stream corruption — closing
+/// the send window, but *not* tearing down `sink`: the broker session
+/// holds the other sender, and death authority stays with the broker's
+/// deadline monitor.
+#[allow(clippy::too_many_arguments)]
+fn peer_reader(
+    mut stream: TcpStream,
+    mut framer: Framer,
+    q: Sender<PeerOut>,
+    window: Arc<CreditWindow>,
+    in_lane: Lane,
+    out_lane: Lane,
+    sink: Sender<Wire>,
+    pool: PacketPool,
+) {
+    let mut chunk = vec![0u8; 64 * 1024];
+    loop {
+        // Drain buffered frames first: the accept-side framer may hold
+        // bytes that arrived with the hello.
+        loop {
+            let f = match framer.next() {
+                Ok(Some(f)) => f,
+                Ok(None) => break,
+                Err(_) => {
+                    window.close();
+                    return;
+                }
+            };
+            match (f.lane, f.kind) {
+                (lane, FrameKind::Packet) if lane == in_lane => {
+                    // Zero-copy handoff; the interpreter recycles the
+                    // body into `pool` after decoding.
+                    let _ = sink.send(Wire::Packet(f.body));
+                    if q.send(PeerOut::Credit(in_lane, 1)).is_err() {
+                        window.close();
+                        return;
+                    }
+                }
+                (lane, FrameKind::Credit) if lane == out_lane => {
+                    let Ok(raw) = <[u8; 4]>::try_from(&f.body[..]) else {
+                        window.close();
+                        return;
+                    };
+                    window.release(u32::from_le_bytes(raw) as usize);
+                    pool.give(f.body);
+                }
+                _ => {
+                    // Protocol violation: drop the connection.
+                    window.close();
+                    return;
+                }
+            }
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) | Err(_) => {
+                window.close();
+                return;
+            }
+            Ok(n) => framer.push(&chunk[..n]),
+        }
+    }
+}
+
+/// One live peer connection: the outbound queue + send window the links
+/// use, the thread handles, and a socket clone for teardown.
+struct PeerConn {
+    q: Sender<PeerOut>,
+    window: Arc<CreditWindow>,
+    stream: TcpStream,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl PeerConn {
+    #[allow(clippy::too_many_arguments)]
+    fn spawn(
+        stream: TcpStream,
+        framer: Framer,
+        out_lane: Lane,
+        in_lane: Lane,
+        sink: Sender<Wire>,
+        rx_pool: PacketPool,
+        give_pool: Option<PacketPool>,
+        label: &str,
+    ) -> anyhow::Result<PeerConn> {
+        let (q_tx, q_rx) = mpsc::channel();
+        let window = CreditWindow::new(MESH_WINDOW);
+        let writer = ConnWriter::new(stream.try_clone()?);
+        let reader_stream = stream.try_clone()?;
+        let mut threads = Vec::with_capacity(2);
+        {
+            let window = window.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("mesh-tx-{label}"))
+                    .spawn(move || peer_writer(writer, q_rx, out_lane, window, give_pool))?,
+            );
+        }
+        {
+            let window = window.clone();
+            let q = q_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("mesh-rx-{label}"))
+                    .spawn(move || {
+                        peer_reader(
+                            reader_stream,
+                            framer,
+                            q,
+                            window,
+                            in_lane,
+                            out_lane,
+                            sink,
+                            rx_pool,
+                        )
+                    })?,
+            );
+        }
+        Ok(PeerConn { q: q_tx, window, stream, threads })
+    }
+
+    fn link(&self) -> Box<dyn Link> {
+        Box::new(PeerLink { q: self.q.clone(), window: self.window.clone() })
+    }
+}
+
+/// One generation's peer connections for one stage. Dropping it tears
+/// the mesh down: windows close (failing any straggling send), sockets
+/// shut (unblocking the readers), threads join.
+pub struct MeshGen {
+    /// Connection to stage `s+1` (we dialed): fwd packets out, bwd in.
+    next: Option<PeerConn>,
+    /// Connection from stage `s-1` (we accepted): fwd in, bwd out.
+    prev: Option<PeerConn>,
+}
+
+impl MeshGen {
+    /// Send half toward the successor stage (None on the last stage).
+    pub fn fwd_link(&self) -> Option<Box<dyn Link>> {
+        self.next.as_ref().map(|c| c.link())
+    }
+
+    /// Send half toward the predecessor stage (None on stage 0).
+    pub fn bwd_link(&self) -> Option<Box<dyn Link>> {
+        self.prev.as_ref().map(|c| c.link())
+    }
+}
+
+impl Drop for MeshGen {
+    fn drop(&mut self) {
+        for conn in [self.next.take(), self.prev.take()].into_iter().flatten() {
+            conn.window.close();
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            drop(conn.q);
+            for t in conn.threads {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+// ---- the per-worker peer node ------------------------------------------
+
+/// A worker process's persistent mesh endpoint: the listener neighbors
+/// dial, bound once at startup, its advertised address carried in the
+/// broker `Hello`. Each generation calls `establish` with that
+/// generation's `StageAssign` route table.
+pub struct PeerNode {
+    listener: TcpListener,
+    advert: String,
+    token: String,
+}
+
+impl PeerNode {
+    /// Bind the peer listener (`--peer-listen`; port 0 picks an
+    /// ephemeral port, and the bound address is what gets advertised —
+    /// use an externally reachable host for multi-machine runs).
+    pub fn bind(spec: &str, token: &str) -> anyhow::Result<PeerNode> {
+        let listener = TcpListener::bind(spec)
+            .map_err(|e| anyhow::anyhow!("cannot bind peer listener on {spec}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let advert = listener.local_addr()?.to_string();
+        Ok(PeerNode { listener, advert, token: token.to_string() })
+    }
+
+    /// The address neighbors dial (sent to the broker in the Hello).
+    pub fn advert(&self) -> &str {
+        &self.advert
+    }
+
+    /// Build this stage's peer connections for one generation: dial the
+    /// successor's listener (never blocks on the successor's accept —
+    /// its listener backlog holds the connection), then accept and
+    /// validate the predecessor's dial. Packets received from peers
+    /// land in `fwd_sink` / `bwd_sink`, the same queues the broker
+    /// demux feeds, so the interpreter sees one identical stream.
+    pub fn establish(
+        &self,
+        a: &StageAssign,
+        fwd_sink: Sender<Wire>,
+        bwd_sink: Option<Sender<Wire>>,
+        rx_pool: PacketPool,
+        fwd_give: Option<PacketPool>,
+        bwd_give: Option<PacketPool>,
+    ) -> anyhow::Result<MeshGen> {
+        anyhow::ensure!(!a.peers.is_empty(), "establish called without a mesh route table");
+        let addr_of = |stage: usize| {
+            a.peers
+                .iter()
+                .find(|(s, _)| *s == stage)
+                .map(|(_, addr)| addr.clone())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("mesh route table has no peer address for stage {stage}")
+                })
+        };
+        let next = if a.stage + 1 < a.n_stages {
+            let addr = addr_of(a.stage + 1)?;
+            let stream = dial_peer(&addr)?;
+            let mut w = ConnWriter::new(stream.try_clone()?);
+            let mut body = Vec::new();
+            codec::encode_peer_hello(&self.token, a.stage, a.mesh_gen, &mut body);
+            w.write_frame(Lane::Ctl, FrameKind::Hello, &body)
+                .map_err(|e| anyhow::anyhow!("peer hello to {addr} failed: {e}"))?;
+            let sink = bwd_sink
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("stage below head has no bwd sink"))?;
+            Some(PeerConn::spawn(
+                stream,
+                Framer::with_pool(rx_pool.clone()),
+                Lane::Fwd,
+                Lane::Bwd,
+                sink,
+                rx_pool.clone(),
+                fwd_give,
+                &format!("next{}", a.stage + 1),
+            )?)
+        } else {
+            None
+        };
+        let prev = if a.stage > 0 {
+            let (stream, framer) = self.accept_predecessor(a.stage, a.mesh_gen, &rx_pool)?;
+            Some(PeerConn::spawn(
+                stream,
+                framer,
+                Lane::Bwd,
+                Lane::Fwd,
+                fwd_sink,
+                rx_pool,
+                bwd_give,
+                &format!("prev{}", a.stage - 1),
+            )?)
+        } else {
+            None
+        };
+        Ok(MeshGen { next, prev })
+    }
+
+    /// Accept connections until one presents a valid hello for this
+    /// (stage, generation). Invalid or stale dials — wrong token, wrong
+    /// stage, a backlog leftover from a torn-down generation — are
+    /// dropped and the sweep continues.
+    fn accept_predecessor(
+        &self,
+        my_stage: usize,
+        gen: u64,
+        pool: &PacketPool,
+    ) -> anyhow::Result<(TcpStream, Framer)> {
+        let t0 = Instant::now();
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    match validate_peer_hello(stream, &self.token, my_stage, gen, pool) {
+                        Ok(accepted) => return Ok(accepted),
+                        Err(e) => {
+                            eprintln!(
+                                "worker: dropping peer dial at stage {my_stage}: {e:#}"
+                            );
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    anyhow::ensure!(
+                        t0.elapsed() < PEER_ACCEPT_TIMEOUT,
+                        "no valid peer dial for stage {my_stage} within {:.0}s",
+                        PEER_ACCEPT_TIMEOUT.as_secs_f64()
+                    );
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => anyhow::bail!("peer accept failed: {e}"),
+            }
+        }
+    }
+}
+
+fn dial_peer(addr: &str) -> anyhow::Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                return Ok(s);
+            }
+            Err(e) => {
+                anyhow::ensure!(
+                    t0.elapsed() < PEER_DIAL_TIMEOUT,
+                    "could not dial peer {addr}: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Read and validate the opening hello of an accepted dial. Returns the
+/// stream plus the framer (it may already hold bytes that arrived after
+/// the hello — the reader thread picks them up, losing nothing).
+fn validate_peer_hello(
+    mut stream: TcpStream,
+    token: &str,
+    my_stage: usize,
+    gen: u64,
+    pool: &PacketPool,
+) -> anyhow::Result<(TcpStream, Framer)> {
+    stream.set_read_timeout(Some(PEER_HELLO_TIMEOUT))?;
+    let mut framer = Framer::with_pool(pool.clone());
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(f) = framer.next()? {
+            anyhow::ensure!(
+                f.lane == Lane::Ctl && f.kind == FrameKind::Hello,
+                "peer sent {:?}/{:?} before hello",
+                f.lane,
+                f.kind
+            );
+            let (tok, stage, g) = codec::decode_peer_hello(&f.body)?;
+            anyhow::ensure!(tok == token, "bad peer token");
+            anyhow::ensure!(
+                stage + 1 == my_stage,
+                "peer claims stage {stage}, expected predecessor {}",
+                my_stage - 1
+            );
+            anyhow::ensure!(g == gen, "stale peer generation {g} (current {gen})");
+            pool.give(f.body);
+            stream.set_read_timeout(None)?;
+            return Ok((stream, framer));
+        }
+        let n = stream.read(&mut chunk)?;
+        anyhow::ensure!(n > 0, "peer closed before hello");
+        framer.push(&chunk[..n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::encode_frame;
+    use std::io::Write;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    #[test]
+    fn credit_window_blocks_at_cap_and_resumes_on_release() {
+        let w = CreditWindow::new(2);
+        w.acquire().unwrap();
+        w.acquire().unwrap();
+        assert_eq!(w.in_flight(), 2);
+        // Third acquire must block until a credit returns.
+        let acquired = Arc::new(AtomicBool::new(false));
+        let h = {
+            let w = w.clone();
+            let acquired = acquired.clone();
+            std::thread::spawn(move || {
+                w.acquire().unwrap();
+                acquired.store(true, Ordering::SeqCst);
+            })
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!acquired.load(Ordering::SeqCst), "sender ran past the in-flight cap");
+        w.release(1);
+        h.join().unwrap();
+        assert!(acquired.load(Ordering::SeqCst));
+        assert_eq!(w.in_flight(), 2);
+    }
+
+    #[test]
+    fn credit_window_close_fails_blocked_and_future_acquires() {
+        let w = CreditWindow::new(1);
+        w.acquire().unwrap();
+        let h = {
+            let w = w.clone();
+            std::thread::spawn(move || w.acquire())
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        w.close();
+        assert_eq!(h.join().unwrap(), Err(LinkClosed));
+        assert_eq!(w.acquire(), Err(LinkClosed));
+    }
+
+    #[test]
+    fn credit_release_clamps_at_cap() {
+        let w = CreditWindow::new(3);
+        w.release(100);
+        assert_eq!(w.in_flight(), 0);
+        w.acquire().unwrap();
+        w.release(100);
+        assert_eq!(w.in_flight(), 0);
+    }
+
+    /// End-to-end over a loopback socket pair: packets flow dialer →
+    /// acceptor, credits flow back, and the window returns to empty.
+    #[test]
+    fn peer_conn_roundtrip_returns_credits() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dialer = TcpStream::connect(addr).unwrap();
+        let (acceptor, _) = listener.accept().unwrap();
+
+        let (fwd_tx, fwd_rx) = mpsc::channel::<Wire>();
+        let (bwd_tx, _bwd_rx) = mpsc::channel::<Wire>();
+        // Dialer end: fwd out / bwd in. Acceptor end: bwd out / fwd in.
+        let d = PeerConn::spawn(
+            dialer,
+            Framer::new(),
+            Lane::Fwd,
+            Lane::Bwd,
+            bwd_tx,
+            PacketPool::new(),
+            None,
+            "t-dial",
+        )
+        .unwrap();
+        let a = PeerConn::spawn(
+            acceptor,
+            Framer::new(),
+            Lane::Bwd,
+            Lane::Fwd,
+            fwd_tx,
+            PacketPool::new(),
+            None,
+            "t-accept",
+        )
+        .unwrap();
+
+        let link = d.link();
+        for i in 0..(MESH_WINDOW * 3) {
+            link.send(Wire::Packet(vec![i as u8; 100])).unwrap();
+        }
+        for i in 0..(MESH_WINDOW * 3) {
+            match fwd_rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                Wire::Packet(b) => assert_eq!(b, vec![i as u8; 100]),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // All credits come home once the receiver has drained.
+        let t0 = Instant::now();
+        while d.window.in_flight() > 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "credits never returned");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let gen = MeshGen { next: Some(d), prev: None };
+        drop(gen);
+        let gen = MeshGen { next: None, prev: Some(a) };
+        drop(gen);
+    }
+
+    /// A dead neighbor closes the window: blocked senders fail with
+    /// `LinkClosed` instead of hanging (the interpreter's quiesce path).
+    #[test]
+    fn peer_socket_death_closes_window() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dialer = TcpStream::connect(addr).unwrap();
+        let (victim, _) = listener.accept().unwrap();
+
+        let (bwd_tx, _bwd_rx) = mpsc::channel::<Wire>();
+        let d = PeerConn::spawn(
+            dialer,
+            Framer::new(),
+            Lane::Fwd,
+            Lane::Bwd,
+            bwd_tx,
+            PacketPool::new(),
+            None,
+            "t-death",
+        )
+        .unwrap();
+        // Neighbor dies without a word.
+        victim.shutdown(Shutdown::Both).unwrap();
+        drop(victim);
+        let link = d.link();
+        // No credits ever return, so at most MESH_WINDOW sends can pass
+        // before acquire blocks — and the closed window must fail it.
+        let t0 = Instant::now();
+        loop {
+            if link.send(Wire::Packet(vec![0u8; 64])).is_err() {
+                break; // LinkClosed observed
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "send never failed after peer death"
+            );
+        }
+        drop(MeshGen { next: Some(d), prev: None });
+    }
+
+    /// A stale dial (wrong generation) is rejected; the matching one is
+    /// accepted with its post-hello bytes preserved in the framer.
+    #[test]
+    fn stale_peer_dials_are_dropped_fresh_ones_accepted() {
+        let node = PeerNode::bind("127.0.0.1:0", "tok").unwrap();
+        let addr = node.advert().to_string();
+
+        // Stale: generation 1 (current is 2).
+        let mut stale = TcpStream::connect(&addr).unwrap();
+        let mut body = Vec::new();
+        codec::encode_peer_hello("tok", 0, 1, &mut body);
+        let mut frame = Vec::new();
+        encode_frame(Lane::Ctl, FrameKind::Hello, &body, &mut frame);
+        stale.write_all(&frame).unwrap();
+
+        // Fresh: generation 2, with a packet right behind the hello.
+        let mut fresh = TcpStream::connect(&addr).unwrap();
+        body.clear();
+        codec::encode_peer_hello("tok", 0, 2, &mut body);
+        encode_frame(Lane::Ctl, FrameKind::Hello, &body, &mut frame);
+        fresh.write_all(&frame).unwrap();
+        encode_frame(Lane::Fwd, FrameKind::Packet, &[7; 16], &mut frame);
+        fresh.write_all(&frame).unwrap();
+
+        let pool = PacketPool::new();
+        let (_stream, mut framer) = node.accept_predecessor(1, 2, &pool).unwrap();
+        let f = framer.next().unwrap().expect("post-hello packet survives the handoff");
+        assert_eq!((f.lane, f.kind), (Lane::Fwd, FrameKind::Packet));
+        assert_eq!(f.body, vec![7; 16]);
+    }
+}

@@ -22,6 +22,7 @@
 pub mod chan;
 pub mod codec;
 pub mod frame;
+pub mod mesh;
 pub mod pool;
 pub mod tcp;
 
@@ -103,6 +104,34 @@ impl TransportKind {
         match self {
             TransportKind::Chan => "chan",
             TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Where high-volume `Packet` lanes travel under the tcp transport.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPlane {
+    /// Star topology: every fwd/bwd packet is relayed through the broker
+    /// (the pre-mesh wire behavior, and the only option under chan).
+    Relay,
+    /// Direct worker↔worker peer connections carry the packet lanes; the
+    /// broker keeps only control (hello/assign/heartbeat/checkpoint).
+    Mesh,
+}
+
+impl DataPlane {
+    pub fn parse(s: &str) -> anyhow::Result<DataPlane> {
+        Ok(match s {
+            "relay" => DataPlane::Relay,
+            "mesh" => DataPlane::Mesh,
+            other => anyhow::bail!("unknown data plane `{other}` (relay|mesh)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DataPlane::Relay => "relay",
+            DataPlane::Mesh => "mesh",
         }
     }
 }

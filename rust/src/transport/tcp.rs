@@ -31,6 +31,7 @@ use crate::worker::messages::Wire;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -65,17 +66,22 @@ fn check_body(len: usize) -> std::io::Result<()> {
 }
 
 impl ConnWriter {
-    fn new(stream: TcpStream) -> ConnWriter {
+    pub(crate) fn new(stream: TcpStream) -> ConnWriter {
         ConnWriter { stream, frame: Vec::new(), body: Vec::new() }
     }
 
-    fn write_frame(&mut self, lane: Lane, kind: FrameKind, body: &[u8]) -> std::io::Result<()> {
+    pub(crate) fn write_frame(
+        &mut self,
+        lane: Lane,
+        kind: FrameKind,
+        body: &[u8],
+    ) -> std::io::Result<()> {
         check_body(body.len())?;
         encode_frame(lane, kind, body, &mut self.frame);
         self.stream.write_all(&self.frame)
     }
 
-    fn write_wire(&mut self, lane: Lane, w: &Wire) -> std::io::Result<()> {
+    pub(crate) fn write_wire(&mut self, lane: Lane, w: &Wire) -> std::io::Result<()> {
         self.body.clear();
         let kind = codec::encode_wire(w, &mut self.body);
         check_body(self.body.len())?;
@@ -105,7 +111,7 @@ impl ConnWriter {
     }
 }
 
-type SharedWriter = Arc<Mutex<ConnWriter>>;
+pub(crate) type SharedWriter = Arc<Mutex<ConnWriter>>;
 
 /// `Link` over one lane of a TCP connection. Packet buffers are returned
 /// to `pool` right after the socket write — the sender-side half of the
@@ -178,11 +184,14 @@ impl Drop for WorkerSession {
 
 impl WorkerSession {
     /// Connect (retrying `retry` long — the broker may not be up yet),
-    /// send `Hello{token, device}` and start the demux reader.
+    /// send `Hello{token, device, peer_listen}` and start the demux
+    /// reader. `peer_listen` is the advertised mesh peer-listener
+    /// address (None = this worker only serves the relay data plane).
     pub fn connect(
         addr: &str,
         token: &str,
         device: Option<usize>,
+        peer_listen: Option<String>,
         retry: Duration,
     ) -> anyhow::Result<WorkerSession> {
         let t0 = Instant::now();
@@ -213,7 +222,7 @@ impl WorkerSession {
                 .expect("spawn worker demux reader");
         }
         let mut body = Vec::new();
-        Hello { token: token.to_string(), device }.encode(&mut body);
+        Hello { token: token.to_string(), device, peer_listen }.encode(&mut body);
         writer
             .lock()
             .unwrap()
@@ -391,6 +400,10 @@ struct Shared {
     driver: Mutex<Option<Sender<Wire>>>,
     writers: Mutex<Vec<SharedWriter>>,
     monitor: MonitorCfg,
+    /// Total `Packet` frame bytes (body + overhead) relayed through the
+    /// broker. The mesh data plane's win condition: ≈ 0 when packet
+    /// lanes travel worker↔worker.
+    relayed: AtomicU64,
 }
 
 impl Shared {
@@ -425,6 +438,12 @@ pub struct TcpPlane {
     /// device id -> connection index (most recent claim wins; a dead
     /// device's id can be reclaimed by a fresh connection — a rejoin).
     device_conn: BTreeMap<usize, usize>,
+    /// device id -> advertised mesh peer-listener address (from the most
+    /// recent Hello claiming the device; rejoins overwrite).
+    peer_addrs: BTreeMap<usize, String>,
+    /// Monotonic mesh-generation counter (stamped into `StageAssign`s so
+    /// peer listeners can drop stale dials).
+    mesh_gen: u64,
     local_addr: SocketAddr,
 }
 
@@ -467,6 +486,7 @@ impl TcpPlane {
             driver: Mutex::new(None),
             writers: Mutex::new(Vec::new()),
             monitor,
+            relayed: AtomicU64::new(0),
         });
         let mut plane = TcpPlane {
             shared,
@@ -478,6 +498,8 @@ impl TcpPlane {
             peers: Vec::new(),
             pending_hellos: Vec::new(),
             device_conn: BTreeMap::new(),
+            peer_addrs: BTreeMap::new(),
+            mesh_gen: 0,
             local_addr,
         };
         let t0 = Instant::now();
@@ -564,7 +586,35 @@ impl TcpPlane {
             // Previous worker for this device is gone: reclaim (rejoin).
         }
         self.device_conn.insert(dev, conn);
+        // The mesh route table always reflects the device's *current*
+        // worker: a rejoin overwrites, a relay-only claim clears.
+        match hello.peer_listen {
+            Some(addr) => {
+                self.peer_addrs.insert(dev, addr);
+            }
+            None => {
+                self.peer_addrs.remove(&dev);
+            }
+        }
         Some(dev)
+    }
+
+    /// The mesh peer-listener address device `dev`'s worker advertised in
+    /// its Hello (None = relay-only worker).
+    pub fn peer_addr(&self, dev: usize) -> Option<String> {
+        self.peer_addrs.get(&dev).cloned()
+    }
+
+    /// Next mesh generation id (monotonic per broker run).
+    pub fn next_mesh_gen(&mut self) -> u64 {
+        self.mesh_gen += 1;
+        self.mesh_gen
+    }
+
+    /// Total `Packet` bytes (frame overhead included) the broker has
+    /// relayed between worker connections so far.
+    pub fn relayed_packet_bytes(&self) -> u64 {
+        self.shared.relayed.load(Ordering::Relaxed)
     }
 
     /// Accept and authenticate any workers that connected after the pool
@@ -1051,6 +1101,9 @@ fn relay(conn: usize, dir: i64, f: Frame, shared: &Arc<Shared>, pool: &PacketPoo
         }
     };
     if let Some(dst) = dst {
+        shared
+            .relayed
+            .fetch_add((f.body.len() + FRAME_OVERHEAD) as u64, Ordering::Relaxed);
         if let Some(w) = shared.writer(dst) {
             // A failed write is the destination's problem; its own reader
             // declares the death.

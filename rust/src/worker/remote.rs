@@ -16,6 +16,7 @@ use super::RunOutcome;
 use crate::runtime::{Manifest, ModelCfg};
 use crate::transport::chan;
 use crate::transport::frame::Lane;
+use crate::transport::mesh::PeerNode;
 use crate::transport::tcp::{StageAssign, WorkerCtl, WorkerSession};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -35,21 +36,34 @@ pub struct WorkerOpts {
     /// How long to keep retrying the initial connect (the broker may
     /// start after the workers).
     pub retry: Duration,
+    /// Mesh data plane: bind a peer listener on this address and
+    /// advertise it to the broker (None = relay-only worker; a broker
+    /// running `--data-plane mesh` will refuse to place stages on it).
+    pub peer_listen: Option<String>,
 }
 
 /// Run the worker process until the broker exits (or the connection is
 /// lost). Returns Ok on a clean broker-initiated Exit.
 pub fn run_worker(opts: &WorkerOpts) -> anyhow::Result<()> {
+    // The peer listener outlives generations: neighbors dial it afresh
+    // each time a route table arrives, and generation ids in the peer
+    // hello keep stale dials from crossing a replan boundary.
+    let node = match &opts.peer_listen {
+        Some(spec) => Some(PeerNode::bind(spec, &opts.token)?),
+        None => None,
+    };
     let session = WorkerSession::connect(
         &opts.connect,
         &opts.token,
         opts.device,
+        node.as_ref().map(|p| p.advert().to_string()),
         opts.retry,
     )?;
     eprintln!(
-        "worker: connected to broker {} (requested device: {})",
+        "worker: connected to broker {} (requested device: {}, peer listener: {})",
         session.peer(),
-        opts.device.map(|d| d.to_string()).unwrap_or_else(|| "any".into())
+        opts.device.map(|d| d.to_string()).unwrap_or_else(|| "any".into()),
+        node.as_ref().map(|p| p.advert().to_string()).unwrap_or_else(|| "off".into())
     );
     loop {
         match session.ctl().recv() {
@@ -68,7 +82,7 @@ pub fn run_worker(opts: &WorkerOpts) -> anyhow::Result<()> {
                     a.iter0,
                     a.iter0 as usize + a.iters
                 );
-                if !serve_assignment(&session, *a, &opts.artifacts)? {
+                if !serve_assignment(&session, node.as_ref(), *a, &opts.artifacts)? {
                     // Churn injector fired: vanish like a kill -9 (the
                     // socket closes when `session` drops).
                     return Ok(());
@@ -82,6 +96,7 @@ pub fn run_worker(opts: &WorkerOpts) -> anyhow::Result<()> {
 /// disappear (fault-injection kill).
 fn serve_assignment(
     session: &WorkerSession,
+    node: Option<&PeerNode>,
     a: StageAssign,
     artifacts: &Path,
 ) -> anyhow::Result<bool> {
@@ -99,10 +114,34 @@ fn serve_assignment(
     let (bwd_tx, bwd_rx) = mpsc::channel::<Wire>();
     let (lbl_tx, lbl_rx) = mpsc::channel::<Wire>();
     session.install_lanes(
-        fwd_tx,
-        (!is_head).then_some(bwd_tx),
+        fwd_tx.clone(),
+        (!is_head).then(|| bwd_tx.clone()),
         is_head.then_some(lbl_tx),
     );
+
+    // Mesh data plane: a non-empty route table means this generation's
+    // packet lanes run on direct peer connections. Incoming peer packets
+    // land in the same fwd/bwd queues the broker demux feeds, so the
+    // interpreter below is untouched; it must be up before the ready
+    // barrier — the broker only starts the generation once every stage
+    // has its peer links (dials can't miss: listeners bind at startup).
+    let mesh = if a.peers.is_empty() {
+        None
+    } else {
+        let node = node.ok_or_else(|| {
+            anyhow::anyhow!(
+                "broker issued a mesh route table but this worker has no --peer-listen"
+            )
+        })?;
+        Some(node.establish(
+            &a,
+            fwd_tx,
+            (!is_head).then_some(bwd_tx),
+            session.rx_pool(),
+            fwd_pool.clone(),
+            bwd_pool.clone(),
+        )?)
+    };
 
     let ctx = StageCtx {
         stage: a.stage,
@@ -128,8 +167,14 @@ fn serve_assignment(
         kill_at_iter: a.kill_at_iter,
         rx_fwd: chan::endpoint(fwd_rx),
         rx_bwd: (!is_head).then(|| chan::endpoint(bwd_rx)),
-        tx_fwd: (!is_head).then(|| session.link(Lane::Fwd, fwd_pool)),
-        tx_bwd: (a.stage > 0).then(|| session.link(Lane::Bwd, bwd_pool)),
+        tx_fwd: match &mesh {
+            Some(m) => m.fwd_link(),
+            None => (!is_head).then(|| session.link(Lane::Fwd, fwd_pool)),
+        },
+        tx_bwd: match &mesh {
+            Some(m) => m.bwd_link(),
+            None => (a.stage > 0).then(|| session.link(Lane::Bwd, bwd_pool)),
+        },
         rx_labels: is_head.then(|| chan::endpoint(lbl_rx)),
         tx_driver: session.link(Lane::Driver, None),
         // Incoming packet bodies come from the demux reader's pool;
@@ -143,6 +188,10 @@ fn serve_assignment(
     session.send_ready(stage)?;
     let outcome = stage::run_stage(ctx);
     session.clear_lanes();
+    // Tear the generation's peer links down *after* the interpreter has
+    // fully quiesced: windows close, sockets shut, threads join. The
+    // next Assign re-establishes with a fresh generation id.
+    drop(mesh);
     match outcome {
         Ok(RunOutcome::Killed) => {
             eprintln!("worker: fault injector fired — vanishing (simulated kill -9)");

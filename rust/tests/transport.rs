@@ -16,7 +16,7 @@ use fusionllm::broker::{self, Job};
 use fusionllm::checkpoint::fnv1a64;
 use fusionllm::scheduler::replan::ReplanMode;
 use fusionllm::transport::frame::{encode_frame, FrameKind, Framer, Lane, FRAME_VERSION};
-use fusionllm::transport::TransportKind;
+use fusionllm::transport::{DataPlane, TransportKind};
 use fusionllm::util::rng::Rng;
 use fusionllm::worker::{run_worker, BackendKind, WorkerOpts};
 use std::net::TcpListener;
@@ -56,7 +56,14 @@ fn null_job(tag: &str) -> Job {
 /// Run `job` over loopback TCP: bind port 0, run one worker session per
 /// entry of `devices` on its own thread (the same code path the
 /// `fusionllm worker` process runs), and drive the broker to completion.
-fn run_tcp(job: &Job, devices: &[usize]) -> anyhow::Result<fusionllm::trainer::TrainReport> {
+/// `data_plane` selects broker-relayed packet lanes (relay) or direct
+/// worker↔worker peer connections (mesh — every worker binds a loopback
+/// peer listener on an ephemeral port).
+fn run_remote(
+    job: &Job,
+    devices: &[usize],
+    data_plane: DataPlane,
+) -> anyhow::Result<fusionllm::trainer::TrainReport> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     let mut workers = Vec::new();
@@ -67,6 +74,7 @@ fn run_tcp(job: &Job, devices: &[usize]) -> anyhow::Result<fusionllm::trainer::T
             device: Some(d),
             artifacts: PathBuf::from("<unused-null-backend>"),
             retry: Duration::from_secs(10),
+            peer_listen: (data_plane == DataPlane::Mesh).then(|| "127.0.0.1:0".into()),
         };
         workers.push(
             std::thread::Builder::new()
@@ -77,6 +85,7 @@ fn run_tcp(job: &Job, devices: &[usize]) -> anyhow::Result<fusionllm::trainer::T
     }
     let job = Job {
         transport: TransportKind::Tcp,
+        data_plane,
         workers: Some(devices.len()),
         ..job.clone()
     };
@@ -87,6 +96,14 @@ fn run_tcp(job: &Job, devices: &[usize]) -> anyhow::Result<fusionllm::trainer::T
             .expect("worker session failed");
     }
     report
+}
+
+fn run_tcp(job: &Job, devices: &[usize]) -> anyhow::Result<fusionllm::trainer::TrainReport> {
+    run_remote(job, devices, DataPlane::Relay)
+}
+
+fn run_mesh(job: &Job, devices: &[usize]) -> anyhow::Result<fusionllm::trainer::TrainReport> {
+    run_remote(job, devices, DataPlane::Mesh)
 }
 
 fn assert_bitwise_equal_losses(a: &[f32], b: &[f32]) {
@@ -169,6 +186,84 @@ fn tcp_killed_worker_recovers_and_matches_chan() {
         r.to
     );
     assert_bitwise_equal_losses(&clean.losses, &churn.losses);
+}
+
+// ---- mesh data plane ---------------------------------------------------
+
+#[test]
+fn mesh_loopback_matches_chan_bitwise() {
+    // Same job again, but the packet lanes run on direct worker↔worker
+    // peer connections while the broker keeps control only. The losses
+    // must still match chan bit-for-bit, and the byte accounting must
+    // show the broker relayed nothing while peer links carried the
+    // activation/gradient traffic.
+    let base = null_job("mesh-clean");
+    let chan = broker::run(&base).unwrap();
+    let mesh = run_mesh(&base, &[0, 1, 2, 3]).unwrap();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+
+    assert_bitwise_equal_losses(&chan.losses, &mesh.losses);
+    assert!(mesh.recoveries.is_empty() && mesh.replans.is_empty());
+    assert_eq!(
+        mesh.relayed_packet_bytes, 0.0,
+        "mesh run relayed packet bytes through the broker"
+    );
+    assert!(
+        mesh.peer_packet_bytes > 0.0,
+        "mesh run reported no peer-direct traffic"
+    );
+}
+
+#[test]
+fn mesh_killed_worker_recovers_and_matches_chan() {
+    // Satellite: peer-link death must flow into the *existing* recovery
+    // machinery. Device 1's worker vanishes at iteration 3 — its peer
+    // sockets die along with its broker connection. The broker (the one
+    // death authority) declares the stage dead exactly once, re-plans
+    // onto the survivors + spare, re-issues the mesh route table with a
+    // fresh generation id, and the run finishes bitwise-equal to chan.
+    let base = Job {
+        checkpoint_every: 2,
+        replan: ReplanMode::Auto,
+        ..null_job("mesh-churn")
+    };
+    let clean = broker::run(&Job {
+        checkpoint_every: 0,
+        replan: ReplanMode::Off,
+        ..base.clone()
+    })
+    .unwrap();
+    let churn = run_mesh(
+        &Job {
+            kill_device: Some(1),
+            kill_at_iter: 3,
+            ..base.clone()
+        },
+        &[0, 1, 2, 3, 4],
+    )
+    .unwrap();
+    let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
+
+    assert_eq!(churn.losses.len(), 6, "all iterations must complete");
+    assert_eq!(churn.recoveries.len(), 1, "{:?}", churn.recoveries);
+    let r = &churn.recoveries[0];
+    assert_eq!((r.stage, r.device, r.died_iter), (1, 1, 3));
+    assert!(!r.to.contains(&1), "dead device still placed: {:?}", r.to);
+    assert_eq!(
+        churn.relayed_packet_bytes, 0.0,
+        "recovery must re-issue mesh routes, not fall back to broker relay"
+    );
+    assert_bitwise_equal_losses(&clean.losses, &churn.losses);
+}
+
+#[test]
+fn mesh_requires_tcp_transport() {
+    let job = Job {
+        data_plane: DataPlane::Mesh,
+        ..null_job("mesh-chan")
+    };
+    let err = broker::run(&job).unwrap_err().to_string();
+    assert!(err.contains("mesh"), "unexpected error: {err}");
 }
 
 #[test]
@@ -261,6 +356,68 @@ fn corrupted_streams_error_cleanly_never_panic() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn peer_stream_with_credits_survives_chunking_and_corruption() {
+    // What a mesh peer connection actually carries: interleaved Packet
+    // frames on both packet lanes plus 4-byte Credit returns, decoded
+    // through arbitrary partial reads. The framer must reproduce the
+    // exact frame sequence (any desync would stall or corrupt the credit
+    // window), and a flipped byte must surface as a clean error — the
+    // mesh drops the connection, it never resynchronizes silently.
+    let mut rng = Rng::new(0x3E5CED17);
+    for round in 0..60 {
+        let mut stream = Vec::new();
+        let mut want = Vec::new();
+        let mut buf = Vec::new();
+        for _ in 0..(2 + round % 6) {
+            let (lane, kind, body) = match rng.below(4) {
+                0 => (Lane::Fwd, FrameKind::Packet, {
+                    let len = 1 + rng.below(400) as usize;
+                    (0..len).map(|_| rng.below(256) as u8).collect::<Vec<u8>>()
+                }),
+                1 => (Lane::Bwd, FrameKind::Packet, {
+                    let len = 1 + rng.below(400) as usize;
+                    (0..len).map(|_| rng.below(256) as u8).collect::<Vec<u8>>()
+                }),
+                2 => (Lane::Fwd, FrameKind::Credit, 1u32.to_le_bytes().to_vec()),
+                _ => (Lane::Bwd, FrameKind::Credit, (rng.below(8) as u32).to_le_bytes().to_vec()),
+            };
+            encode_frame(lane, kind, &body, &mut buf);
+            stream.extend_from_slice(&buf);
+            want.push((lane, kind, body));
+        }
+
+        // Clean pass under adversarial chunking: byte-exact reproduction.
+        let mut fr = Framer::new();
+        let mut got = Vec::new();
+        let mut pos = 0usize;
+        while pos < stream.len() {
+            let end = (pos + 1 + rng.below(61) as usize).min(stream.len());
+            fr.push(&stream[pos..end]);
+            pos = end;
+            while let Some(f) = fr.next().expect("clean peer stream must decode") {
+                got.push((f.lane, f.kind, f.body));
+            }
+        }
+        assert_eq!(got, want, "round {round}: peer stream desynced");
+
+        // Corrupted pass: one flipped byte errors cleanly, never panics.
+        let i = rng.below(stream.len() as u64) as usize;
+        stream[i] ^= 1 << rng.below(8);
+        let mut fr = Framer::new();
+        fr.push(&stream);
+        let mut decoded = 0usize;
+        loop {
+            match fr.next() {
+                Ok(Some(_)) => decoded += 1,
+                Ok(None) => break,
+                Err(_) => break,
+            }
+        }
+        assert!(decoded <= want.len(), "corruption invented frames");
     }
 }
 
