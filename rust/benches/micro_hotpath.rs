@@ -20,7 +20,7 @@ use fusionllm::compress::{
 };
 use fusionllm::cluster::testbed;
 use fusionllm::opdag::builders::{transformer_chain, TransformerSpec};
-use fusionllm::opdag::data::{OpData, OpDataKind, OpDataView};
+use fusionllm::opdag::data::{CompressCfg, OpData, OpDataKind, OpDataView};
 use fusionllm::pipeline::{PipelineSchedule, ScheduleKind};
 use fusionllm::scheduler::{self, Scheduler};
 use fusionllm::simnet::{simulate_iteration, StagePlan};
@@ -30,7 +30,9 @@ use fusionllm::util::benchkit::{bench, BenchResult};
 use fusionllm::util::json::{n, obj, Json};
 use fusionllm::util::math::compress_threads;
 use fusionllm::util::rng::Rng;
-use fusionllm::worker::{run_schedule, LinkEncoder, NullBackend, StageCodec, StageLinks, Wire};
+use fusionllm::worker::{
+    run_schedule_with, LinkEncoder, NullBackend, RunOpts, StageCodec, StageLinks, Wire,
+};
 use std::sync::mpsc::channel;
 
 fn main() {
@@ -130,6 +132,30 @@ fn main() {
     });
     run(r, msg_bytes);
 
+    // u24 delta-coded sparse indices (`--wire-codec int8-u24`): the same
+    // sparse message with the index region packed first-absolute +
+    // u24 deltas — 3 B/index on the wire instead of 4, unpacked on the
+    // fly by the zero-copy view.
+    let mut idx24 = c.indices.clone();
+    idx24.sort_unstable();
+    let mut od24 = OpData::dense(0, 1, OpDataKind::Activation, 0, 0, c.values.clone());
+    od24.indices = idx24;
+    od24.compress = CompressCfg::QSparseRowsDelta {
+        ratio: 100.0,
+        total_len: act.len() as u32,
+        chunk: 1600,
+    };
+    let msg24_bytes = (od24.payload.len() * 4 + od24.indices.len() * 3 + 64) as f64;
+    let r = bench("u24 delta index encode (sparse)", 2, 20, || od24.encode());
+    run(r, msg24_bytes);
+
+    let buf24 = od24.encode();
+    let r = bench("u24 delta index decode (view iter)", 2, 20, || {
+        let v = OpDataView::parse(&buf24).unwrap();
+        v.indices_iter().map(|i| i as u64).sum::<u64>()
+    });
+    run(r, msg24_bytes);
+
     // Socket frame codec (tcp transport): checksum + header around a
     // 64 KiB Packet body, encoded and incrementally re-decoded. This is
     // the per-message overhead the transport adds on top of the OP-Data
@@ -171,7 +197,16 @@ fn main() {
     // dominates — the steady-state loop the worker refactor must not slow.
     let disp_sched = PipelineSchedule::new(ScheduleKind::GPipe, 3, 8);
     let r = bench("interpreter dispatch (17 tasks, n=16)", 10, 200, || {
-        interpreter_dispatch_once(&disp_sched)
+        interpreter_dispatch_once(&disp_sched, false)
+    });
+    run(r, 0.0);
+
+    // Same row with the overlapped wire pipeline ON: adds two sender
+    // threads + two prefetch threads per run, every packet crossing the
+    // bounded handoff queues. The delta vs the row above is the overlap
+    // machinery's fixed cost (spawn + queue + flush) at zero payload.
+    let r = bench("overlap queue handoff (17 tasks, n=16)", 10, 200, || {
+        interpreter_dispatch_once(&disp_sched, true)
     });
     run(r, 0.0);
 
@@ -182,7 +217,7 @@ fn main() {
 /// One full schedule-row execution of a middle (body) stage on the
 /// production interpreter: channels preloaded with encoded packets in
 /// schedule order, sends drained into held receivers.
-fn interpreter_dispatch_once(sched: &PipelineSchedule) -> u32 {
+fn interpreter_dispatch_once(sched: &PipelineSchedule, overlap: bool) -> u32 {
     let n = 16usize;
     let n_micro = sched.n_micro;
     let plan = CompressPlan::dense(3);
@@ -216,7 +251,8 @@ fn interpreter_dispatch_once(sched: &PipelineSchedule) -> u32 {
         bwd_return: Some(enc.pool()),
     };
     let mut backend = NullBackend::new(n, n_micro, false);
-    run_schedule(&mut links, &mut backend, &sched.tasks[1], 0, 1).unwrap();
+    let opts = RunOpts { overlap, ..RunOpts::default() };
+    run_schedule_with(&mut links, &mut backend, &sched.tasks[1], 0, 1, opts).unwrap();
     // Receivers must outlive the run (sends would error otherwise).
     drop((fwd_out_rx, bwd_out_rx, rx_driver));
     backend.updates

@@ -86,6 +86,18 @@ pub struct Job {
     /// Artificial seconds per Null forward (`--pace`): paces otherwise
     /// instant Null runs for multi-process demos and the CI kill smoke.
     pub pace_s: f64,
+    /// Overlapped wire pipeline in the schedule interpreter
+    /// (`--overlap on|off`, default on): per-link encoder/sender threads
+    /// + inbound decode prefetchers. Losses are bitwise identical either
+    /// way; off is the blocking differential oracle.
+    pub overlap: bool,
+    /// Injected per-packet link delay in seconds (`--link-delay`): the
+    /// sending side sleeps this long before each packet goes out,
+    /// modelling wire transfer time (paced overlap smokes). 0 = off.
+    pub link_delay_s: f64,
+    /// Mesh data plane: max in-flight packets per peer link before
+    /// credit-based backpressure blocks the sender (`--mesh-window`).
+    pub mesh_window: usize,
     /// Persist a checkpoint every N iterations (0 = disabled).
     pub checkpoint_every: usize,
     pub checkpoint_dir: PathBuf,
@@ -137,6 +149,9 @@ impl Default for Job {
             token: "fusionllm".into(),
             workers: None,
             pace_s: 0.0,
+            overlap: true,
+            link_delay_s: 0.0,
+            mesh_window: crate::transport::mesh::MESH_WINDOW,
             checkpoint_every: 0,
             checkpoint_dir: PathBuf::from("checkpoints"),
             keep_checkpoints: 3,
@@ -203,6 +218,13 @@ impl Job {
                 s.parse().expect("--workers expects a count")
             }),
             pace_s: args.f64("pace", d.pace_s).max(0.0),
+            overlap: match args.str("overlap", "on").as_str() {
+                "on" => true,
+                "off" => false,
+                other => anyhow::bail!("unknown --overlap `{other}` (on|off)"),
+            },
+            link_delay_s: args.f64("link-delay", d.link_delay_s).max(0.0),
+            mesh_window: args.usize("mesh-window", d.mesh_window).max(1),
             checkpoint_every: args.usize("checkpoint-every", d.checkpoint_every),
             checkpoint_dir: args
                 .opt_str("checkpoint-dir")
@@ -264,6 +286,12 @@ mod tests {
             ["--compress", "adatopk", "--wire-codec", "int8"].iter().map(|s| s.to_string()),
         );
         assert_eq!(Job::from_args(&args).unwrap().value_codec, ValueCodec::Int8);
+        let args = Args::parse(
+            ["--compress", "adatopk", "--wire-codec", "int8-u24"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(Job::from_args(&args).unwrap().value_codec, ValueCodec::Int8Delta);
         let bad = Args::parse(["--wire-codec", "fp8"].iter().map(|s| s.to_string()));
         assert!(Job::from_args(&bad).is_err());
     }
@@ -346,6 +374,32 @@ mod tests {
         let bad = Args::parse(["--transport", "udp"].iter().map(|s| s.to_string()));
         assert!(Job::from_args(&bad).is_err());
         let bad = Args::parse(["--data-plane", "ring"].iter().map(|s| s.to_string()));
+        assert!(Job::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn overlap_flags_parse() {
+        let j = Job::from_args(&Args::parse(std::iter::empty::<String>())).unwrap();
+        assert!(j.overlap, "overlap defaults to on");
+        assert_eq!(j.link_delay_s, 0.0);
+        assert_eq!(j.mesh_window, crate::transport::mesh::MESH_WINDOW);
+        let args = Args::parse(
+            "train --overlap off --link-delay 0.02 --mesh-window 16"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let j = Job::from_args(&args).unwrap();
+        assert!(!j.overlap);
+        assert_eq!(j.link_delay_s, 0.02);
+        assert_eq!(j.mesh_window, 16);
+        // Negative delays clamp, zero windows clamp to 1.
+        let args = Args::parse(
+            "train --link-delay -1 --mesh-window 0".split_whitespace().map(String::from),
+        );
+        let j = Job::from_args(&args).unwrap();
+        assert_eq!(j.link_delay_s, 0.0);
+        assert_eq!(j.mesh_window, 1);
+        let bad = Args::parse(["--overlap", "maybe"].iter().map(|s| s.to_string()));
         assert!(Job::from_args(&bad).is_err());
     }
 

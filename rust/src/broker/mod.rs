@@ -379,6 +379,8 @@ fn spawn_generation(
             backend: job.backend,
             heartbeat,
             kill_at_iter: p.kill_at_iter,
+            overlap: job.overlap,
+            link_delay_s: job.link_delay_s,
             rx_fwd: chan::endpoint(fwd_rx[s].take().unwrap()),
             rx_bwd: if s + 1 < s_n {
                 bwd_rx[s].take().map(chan::endpoint)
@@ -486,6 +488,9 @@ fn assign_generation(
             init_state: init[s].take(),
             mesh_gen,
             peers: peers.clone(),
+            overlap: job.overlap,
+            link_delay_s: job.link_delay_s,
+            mesh_window: job.mesh_window,
         });
     }
     let ready_timeout = (deadline * job.heartbeat_grace.max(1)).max(Duration::from_secs(5));
@@ -1068,7 +1073,7 @@ pub fn run_with_listener(
         scheduler: job.scheduler.clone(),
         compressor: match job.value_codec {
             crate::compress::ValueCodec::F32 => job.compress.name().to_string(),
-            crate::compress::ValueCodec::Int8 => format!("{}+int8", job.compress.name()),
+            codec => format!("{}+{}", job.compress.name(), codec.name()),
         },
         pipeline: job.pipeline.name().to_string(),
         ratio: job.ratio,

@@ -9,7 +9,7 @@ use crate::cost::ProfileStore;
 use crate::opdag::builders::{transformer_chain, TransformerSpec};
 use crate::pipeline::{PipelineSchedule, ScheduleKind};
 use crate::scheduler::replan::{ReplanInput, ReplanMode, Replanner};
-use crate::simnet::{simulate_iteration, StagePlan};
+use crate::simnet::{simulate_iteration, simulate_iteration_with, SimOpts, StagePlan};
 use crate::trainer::TrainReport;
 use crate::transport::{DataPlane, TransportKind};
 use crate::util::cli::Args;
@@ -160,20 +160,38 @@ pub fn simulate(args: &Args) -> Result<()> {
     let stage_plan = StagePlan::from_partition(&dag, &part, &tb);
     let pipe_kind = ScheduleKind::parse(&args.str("pipeline", "gpipe"))?;
     let sched = PipelineSchedule::new(pipe_kind, stage_plan.n_stages(), n_micro);
-    let sim = simulate_iteration(&stage_plan, &tb, &sched, &plan);
+    let overlap = match args.str("overlap", "on").as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--overlap expects on|off, got `{other}`"),
+    };
+    let opts = if overlap { SimOpts::overlapped() } else { SimOpts::blocking() };
+    let sim = simulate_iteration_with(&stage_plan, &tb, &sched, &plan, opts);
     println!(
         "testbed={} scheduler={sched_name} compress={} ratio={ratio} wire-codec={} \
-         pipeline={} n_micro={n_micro}",
+         pipeline={} n_micro={n_micro} overlap={}",
         tb.name,
         kind.name(),
         codec.name(),
-        pipe_kind.name()
+        pipe_kind.name(),
+        if overlap { "on" } else { "off" }
     );
     println!(
         "iteration latency = {}   wire = {}   bubble = {:.1}%",
         fmt_secs(sim.iter_s),
         fmt_bytes(sim.wire_bytes),
         100.0 * sim.bubble_frac
+    );
+    // Predicted win from the overlapped wire pipeline on this plan.
+    let blocking =
+        simulate_iteration_with(&stage_plan, &tb, &sched, &plan, SimOpts::blocking());
+    let overlapped =
+        simulate_iteration_with(&stage_plan, &tb, &sched, &plan, SimOpts::overlapped());
+    println!(
+        "overlap model: blocking = {}   overlapped = {}   predicted speedup = {:.2}x",
+        fmt_secs(blocking.iter_s),
+        fmt_secs(overlapped.iter_s),
+        blocking.iter_s / overlapped.iter_s.max(1e-12)
     );
 
     // ---- straggler scenario + re-planning smoke -----------------------

@@ -183,20 +183,28 @@ impl CompressPlan {
     pub fn scale_bytes(&self, dst: usize, bytes: f64) -> f64 {
         let r = self.ratio_for(dst);
         match self.kind {
-            // A dense plan under the int8 codec still quantizes (1 B/value).
+            // A dense plan under the int8 codecs still quantizes (1 B/value).
             CompressKind::None => match self.value_codec {
                 ValueCodec::F32 => bytes,
-                ValueCodec::Int8 => bytes / 4.0 + 4.0,
+                ValueCodec::Int8 | ValueCodec::Int8Delta => bytes / 4.0 + 4.0,
             },
             CompressKind::Int8 => bytes / 4.0 + 4.0,
             CompressKind::TopK | CompressKind::AdaTopK | CompressKind::RandomK => {
                 if r <= 1.0 {
                     match self.value_codec {
                         ValueCodec::F32 => bytes,
-                        ValueCodec::Int8 => bytes / 4.0 + 4.0,
+                        ValueCodec::Int8 | ValueCodec::Int8Delta => bytes / 4.0 + 4.0,
                     }
                 } else {
-                    self.value_codec.sparse_bytes_per_value() / 4.0 * bytes / r
+                    // Random-K support is unsorted, so the u24 delta index
+                    // packing never applies there: it pays the plain int8
+                    // 5 B/value, keeping this model equal to the measured
+                    // wire bytes.
+                    let bpv = match (self.kind, self.value_codec) {
+                        (CompressKind::RandomK, ValueCodec::Int8Delta) => 5.0,
+                        _ => self.value_codec.sparse_bytes_per_value(),
+                    };
+                    bpv / 4.0 * bytes / r
                 }
             }
         }
@@ -329,6 +337,18 @@ mod tests {
         let dense_q = CompressPlan::dense(2).with_value_codec(ValueCodec::Int8);
         assert!((dense_q.scale_bytes(0, 1e6) - 250004.0).abs() < 1.0);
         assert_eq!(CompressPlan::dense(2).scale_bytes(0, 1e6), 1e6);
+    }
+
+    #[test]
+    fn scale_bytes_u24_delta_codec() {
+        // 4 B/value instead of 5: 1.0 * 1e6 / 100 on Top-K links.
+        let plan = CompressPlan::uniform(CompressKind::TopK, 100.0, 4)
+            .with_value_codec(ValueCodec::Int8Delta);
+        assert!((plan.scale_bytes(0, 1e6) - 1.0e4).abs() < 1.0);
+        // Random-K support is unsorted: no delta packing, plain 5 B/value.
+        let rk = CompressPlan::uniform(CompressKind::RandomK, 100.0, 4)
+            .with_value_codec(ValueCodec::Int8Delta);
+        assert!((rk.scale_bytes(0, 1e6) - 1.25e4).abs() < 1.0);
     }
 
     #[test]

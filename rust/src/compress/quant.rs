@@ -30,6 +30,11 @@ pub enum ValueCodec {
     F32,
     /// Values travel as int8 codes + f32 scale(s).
     Int8,
+    /// Int8 codes with delta-coded u24 sparse indices (`QSparseRowsDelta`):
+    /// 3 B/index instead of 4 for payloads under 16M elements, falling
+    /// back to the plain int8 layout when the payload is too large or the
+    /// support is not ascending (Random-K).
+    Int8Delta,
 }
 
 impl ValueCodec {
@@ -37,7 +42,8 @@ impl ValueCodec {
         Ok(match s {
             "f32" | "fp32" => ValueCodec::F32,
             "int8" | "q8" => ValueCodec::Int8,
-            other => anyhow::bail!("unknown wire codec `{other}` (f32|int8)"),
+            "int8-u24" | "q8u24" => ValueCodec::Int8Delta,
+            other => anyhow::bail!("unknown wire codec `{other}` (f32|int8|int8-u24)"),
         })
     }
 
@@ -45,18 +51,21 @@ impl ValueCodec {
         match self {
             ValueCodec::F32 => "f32",
             ValueCodec::Int8 => "int8",
+            ValueCodec::Int8Delta => "int8-u24",
         }
     }
 
     /// Wire bytes per *kept sparse* element (value + index). f32 keeps the
     /// paper's Fig. 6 accounting (f32 value + int64 index = 12 B); int8 is
     /// the actual packed layout (1 B code + u32 index = 5 B, per-message
-    /// scale amortized away). Feeds Eq. 7 and the cost model, so the
-    /// scheduler sees the real link cost of each encoding.
+    /// scale amortized away); int8-u24 packs delta-coded u24 indices
+    /// (1 B code + 3 B index = 4 B). Feeds Eq. 7 and the cost model, so
+    /// the scheduler sees the real link cost of each encoding.
     pub fn sparse_bytes_per_value(self) -> f64 {
         match self {
             ValueCodec::F32 => 12.0,
             ValueCodec::Int8 => 5.0,
+            ValueCodec::Int8Delta => 4.0,
         }
     }
 
@@ -64,7 +73,7 @@ impl ValueCodec {
     pub fn dense_bytes_per_value(self) -> f64 {
         match self {
             ValueCodec::F32 => 4.0,
-            ValueCodec::Int8 => 1.0,
+            ValueCodec::Int8 | ValueCodec::Int8Delta => 1.0,
         }
     }
 }
@@ -114,7 +123,8 @@ impl<C: Compressor> Compressor for Quantized<C> {
                     out[i as usize] = (b as i8) as f32 * scale;
                 }
             }
-            CompressCfg::QSparseRows { chunk, .. } => {
+            CompressCfg::QSparseRows { chunk, .. }
+            | CompressCfg::QSparseRowsDelta { chunk, .. } => {
                 out.fill(0.0);
                 let chunk = (*chunk as usize).max(1);
                 for (&i, &b) in c.indices.iter().zip(&c.bytes) {
@@ -174,7 +184,7 @@ pub(crate) fn quantize_compressed(
         }
         CompressCfg::TopK { ratio, total_len } => (ratio, total_len),
         CompressCfg::RandomK { ratio, total_len, .. } => (ratio, total_len),
-        // Int8 / QSparse / QSparseRows: already quantized.
+        // Int8 / QSparse / QSparseRows(Delta): already quantized.
         _ => return,
     };
     match row {

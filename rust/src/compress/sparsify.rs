@@ -47,6 +47,12 @@ impl Compressed {
                     + 4.0 * self.indices.len() as f64
                     + 4.0 * self.values.len() as f64
             }
+            // Delta-coded u24 indices: 3 B each on the wire.
+            CompressCfg::QSparseRowsDelta { .. } => {
+                self.bytes.len() as f64
+                    + 3.0 * self.indices.len() as f64
+                    + 4.0 * self.values.len() as f64
+            }
         }
     }
 

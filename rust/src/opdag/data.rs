@@ -38,6 +38,12 @@ pub enum CompressCfg {
     /// f32 payload region carries `ceil(total_len / chunk)` per-row scales;
     /// the entry at dense index i decodes as `code · scale[i / chunk]`.
     QSparseRows { ratio: f64, total_len: u32, chunk: u32 },
+    /// `QSparseRows` with delta-coded u24 indices: the wire index region
+    /// packs 3 bytes per entry — the first entry is the absolute index,
+    /// every later one the (positive) delta to its predecessor. Valid only
+    /// for strictly ascending support with `total_len < 2^24`; the encoder
+    /// falls back to `QSparseRows` otherwise. 4 B/kept value vs 5.
+    QSparseRowsDelta { ratio: f64, total_len: u32, chunk: u32 },
 }
 
 /// Header fields of one OP-Data message (everything but the payload).
@@ -143,6 +149,11 @@ impl OpData {
                     + 4.0 * self.indices.len() as f64
                     + 4.0 * self.payload.len() as f64
             }
+            CompressCfg::QSparseRowsDelta { .. } => {
+                self.bytes_payload.len() as f64
+                    + 3.0 * self.indices.len() as f64
+                    + 4.0 * self.payload.len() as f64
+            }
         };
         WIRE_HEADER_BYTES + body
     }
@@ -229,11 +240,21 @@ pub fn encode_parts_into(
             out.extend_from_slice(&total_len.to_le_bytes());
             out.extend_from_slice(&chunk.to_le_bytes());
         }
+        CompressCfg::QSparseRowsDelta { ratio, total_len, chunk } => {
+            out.push(6);
+            out.extend_from_slice(&ratio.to_le_bytes());
+            out.extend_from_slice(&total_len.to_le_bytes());
+            out.extend_from_slice(&chunk.to_le_bytes());
+        }
     }
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     extend_f32_le(out, payload);
     out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
-    extend_u32_le(out, indices);
+    if matches!(compress, CompressCfg::QSparseRowsDelta { .. }) {
+        extend_u24_delta(out, indices);
+    } else {
+        extend_u32_le(out, indices);
+    }
     out.extend_from_slice(&(bytes_payload.len() as u32).to_le_bytes());
     out.extend_from_slice(bytes_payload);
 }
@@ -257,6 +278,22 @@ fn extend_f32_le(out: &mut Vec<u8>, xs: &[f32]) {
         for (c, v) in out[start..].chunks_exact_mut(4).zip(xs) {
             c.copy_from_slice(&v.to_le_bytes());
         }
+    }
+}
+
+/// Delta-coded u24 index append (`QSparseRowsDelta`): 3 LE bytes per
+/// entry — the first is the absolute index, each later one the delta to
+/// its predecessor. The caller (the link encoder) guarantees strictly
+/// ascending indices below 2^24; values are truncated to 24 bits, so a
+/// violated contract degrades to a decode-side mismatch, never UB.
+fn extend_u24_delta(out: &mut Vec<u8>, xs: &[u32]) {
+    let start = out.len();
+    out.resize(start + xs.len() * 3, 0);
+    let mut prev = 0u32;
+    for (c, &i) in out[start..].chunks_exact_mut(3).zip(xs) {
+        let d = i.wrapping_sub(prev);
+        c.copy_from_slice(&d.to_le_bytes()[..3]);
+        prev = i;
     }
 }
 
@@ -328,15 +365,25 @@ impl<'a> OpDataView<'a> {
                 total_len: r.u32()?,
                 chunk: r.u32()?,
             },
+            6 => CompressCfg::QSparseRowsDelta {
+                ratio: r.f64()?,
+                total_len: r.u32()?,
+                chunk: r.u32()?,
+            },
             c => anyhow::bail!("bad compress tag {c}"),
         };
         let np = r.u32()? as usize;
         let payload = r.bytes(
             np.checked_mul(4).ok_or_else(|| anyhow::anyhow!("short OpData buffer"))?,
         )?;
+        // Delta-coded indices travel packed at 3 B each; everything else
+        // is 4 B little-endian u32s.
+        let idx_width =
+            if matches!(compress, CompressCfg::QSparseRowsDelta { .. }) { 3 } else { 4 };
         let ni = r.u32()? as usize;
         let indices = r.bytes(
-            ni.checked_mul(4).ok_or_else(|| anyhow::anyhow!("short OpData buffer"))?,
+            ni.checked_mul(idx_width)
+                .ok_or_else(|| anyhow::anyhow!("short OpData buffer"))?,
         )?;
         let nb = r.u32()? as usize;
         let bytes_payload = r.bytes(nb)?;
@@ -364,7 +411,16 @@ impl<'a> OpDataView<'a> {
     }
 
     pub fn indices_len(&self) -> usize {
-        self.indices.len() / 4
+        self.indices.len() / self.index_width()
+    }
+
+    /// Wire bytes per index entry (3 for delta-coded u24, else 4).
+    fn index_width(&self) -> usize {
+        if matches!(self.compress, CompressCfg::QSparseRowsDelta { .. }) {
+            3
+        } else {
+            4
+        }
     }
 
     /// Borrowed little-endian payload bytes (alignment-free).
@@ -389,9 +445,22 @@ impl<'a> OpDataView<'a> {
         self.payload.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap()))
     }
 
-    /// Iterate sparse indices without materializing a `Vec`.
+    /// Iterate sparse indices without materializing a `Vec`. Delta-coded
+    /// u24 regions are unpacked back to absolute u32 indices on the fly,
+    /// so every consumer sees the same absolute-index stream regardless
+    /// of the wire packing.
     pub fn indices_iter(&self) -> impl Iterator<Item = u32> + 'a {
-        self.indices.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        let delta = self.index_width() == 3;
+        let mut acc = 0u32;
+        self.indices.chunks_exact(self.index_width()).map(move |c| {
+            if delta {
+                let d = u32::from_le_bytes([c[0], c[1], c[2], 0]);
+                acc = acc.wrapping_add(d);
+                acc
+            } else {
+                u32::from_le_bytes(c.try_into().unwrap())
+            }
+        })
     }
 
     /// Materialize an owned `OpData` (the compat/decode path).
@@ -500,6 +569,44 @@ mod tests {
         let v = OpDataView::parse(&d.encode()).unwrap();
         assert_eq!(v.compress, d.compress);
         assert_eq!(v.payload_iter().collect::<Vec<_>>(), d.payload);
+    }
+
+    #[test]
+    fn roundtrip_qsparse_rows_delta_unpacks_absolute_indices() {
+        let mut d = OpData::dense(2, 3, OpDataKind::Gradient, 4, 1, vec![]);
+        d.indices = vec![5, 6, 1700, 3200, 3201];
+        d.bytes_payload = vec![127, 129, 0, 7, 255];
+        d.payload = vec![0.5, 0.25, 2.0];
+        d.compress =
+            CompressCfg::QSparseRowsDelta { ratio: 100.0, total_len: 4800, chunk: 1600 };
+        let enc = d.encode();
+        let back = OpData::decode(&enc).unwrap();
+        assert_eq!(back.compress, d.compress);
+        assert_eq!(back.indices, d.indices, "absolute indices survive delta packing");
+        assert_eq!(back.bytes_payload, d.bytes_payload);
+        assert_eq!(back.payload, d.payload);
+        let v = OpDataView::parse(&enc).unwrap();
+        assert_eq!(v.indices_len(), 5);
+        assert_eq!(v.indices_iter().collect::<Vec<_>>(), d.indices);
+        // 3 wire bytes per index: the delta encoding is 1 B/index smaller
+        // than the identical payload under plain QSparseRows.
+        let mut plain = d.clone();
+        plain.compress =
+            CompressCfg::QSparseRows { ratio: 100.0, total_len: 4800, chunk: 1600 };
+        assert_eq!(enc.len() + d.indices.len(), plain.encode().len());
+        // Truncations still error cleanly.
+        assert!(OpData::decode(&enc[..enc.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn qsparse_rows_delta_accounting_is_four_bytes_per_value() {
+        let mut d = OpData::dense(0, 1, OpDataKind::Activation, 0, 0, vec![]);
+        d.indices = (0..100u32).map(|i| i * 7).collect();
+        d.bytes_payload = vec![0; 100];
+        d.payload = vec![1.0; 10];
+        d.compress = CompressCfg::QSparseRowsDelta { ratio: 10.0, total_len: 1000, chunk: 100 };
+        // 100 values at 3 B index + 1 B code, + 10 row scales + header.
+        assert_eq!(d.wire_bytes() as u64, 48 + 400 + 40);
     }
 
     #[test]

@@ -9,5 +9,8 @@
 pub mod sim;
 pub mod stageplan;
 
-pub use sim::{simulate_iteration, simulate_iteration_faulty, FaultModel, SimResult};
+pub use sim::{
+    simulate_iteration, simulate_iteration_faulty, simulate_iteration_with, FaultModel,
+    SimOpts, SimResult,
+};
 pub use stageplan::StagePlan;

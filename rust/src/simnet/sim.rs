@@ -42,7 +42,29 @@ pub struct SimResult {
     pub bubble_frac: f64,
 }
 
-/// Simulate one training iteration (no network faults).
+/// Execution-model knobs for one simulated iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOpts {
+    /// Overlapped wire pipeline (the interpreter's default): a sender's
+    /// device clock is NOT advanced by its transfers — encode/send run on
+    /// a dedicated thread, so each stage pays `max(compute, comm)` per
+    /// link instead of the sum. `false` models `--overlap off`: the
+    /// device blocks until the transfer drains (inline encode+send).
+    pub overlap: bool,
+    pub faults: FaultModel,
+}
+
+impl SimOpts {
+    pub fn overlapped() -> SimOpts {
+        SimOpts { overlap: true, faults: FaultModel::none() }
+    }
+
+    pub fn blocking() -> SimOpts {
+        SimOpts { overlap: false, faults: FaultModel::none() }
+    }
+}
+
+/// Simulate one training iteration (no network faults, overlapped sends).
 pub fn simulate_iteration(
     plan: &StagePlan,
     testbed: &Testbed,
@@ -52,7 +74,8 @@ pub fn simulate_iteration(
     simulate_iteration_faulty(plan, testbed, schedule, compress, FaultModel::none())
 }
 
-/// Simulate one training iteration under the given fault model.
+/// Simulate one training iteration under the given fault model
+/// (overlapped sends — the interpreter's default wire pipeline).
 pub fn simulate_iteration_faulty(
     plan: &StagePlan,
     testbed: &Testbed,
@@ -60,6 +83,18 @@ pub fn simulate_iteration_faulty(
     compress: &CompressPlan,
     faults: FaultModel,
 ) -> SimResult {
+    simulate_iteration_with(plan, testbed, schedule, compress, SimOpts { overlap: true, faults })
+}
+
+/// Simulate one training iteration under explicit execution-model options.
+pub fn simulate_iteration_with(
+    plan: &StagePlan,
+    testbed: &Testbed,
+    schedule: &PipelineSchedule,
+    compress: &CompressPlan,
+    opts: SimOpts,
+) -> SimResult {
+    let faults = opts.faults;
     let mut frng = Rng::new(faults.seed ^ 0xFA17);
     // Retransmission overhead for one logical transfer of base time `t`:
     // lost tries each cost a full timeout + resend.
@@ -154,6 +189,12 @@ pub fn simulate_iteration_faulty(
                             link_free_fwd[s] = xfer_end;
                             arrival_f[s + 1][t.micro] = xfer_end;
                             wire_bytes += eff;
+                            if !opts.overlap {
+                                // Inline encode+send: the device blocks
+                                // until the wire drains.
+                                stall[s] += xfer_end - end;
+                                dev_time[s] = xfer_end;
+                            }
                         }
                     }
                     TaskKind::Backward => {
@@ -169,6 +210,10 @@ pub fn simulate_iteration_faulty(
                             link_free_bwd[s - 1] = xfer_end;
                             arrival_b[s - 1][t.micro] = xfer_end;
                             wire_bytes += eff;
+                            if !opts.overlap {
+                                stall[s] += xfer_end - end;
+                                dev_time[s] = xfer_end;
+                            }
                         }
                     }
                     TaskKind::Update => {}
@@ -313,6 +358,48 @@ mod tests {
         .iter_s;
         // 1F1B should be within a whisker (it mainly saves memory).
         assert!(to <= tg * 1.25, "1f1b={to} gpipe={tg}");
+    }
+
+    #[test]
+    fn blocking_sends_never_beat_overlapped() {
+        // `--overlap off` only adds constraints (the sender's clock also
+        // pays the transfer), so blocking must be >= overlapped, and on a
+        // comm-heavy dense cross-cluster plan strictly slower.
+        let (_, tb, plan) = setup();
+        let sched = PipelineSchedule::new(ScheduleKind::GPipe, plan.n_stages(), 4);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let ov =
+            simulate_iteration_with(&plan, &tb, &sched, &dense, SimOpts::overlapped());
+        let bl =
+            simulate_iteration_with(&plan, &tb, &sched, &dense, SimOpts::blocking());
+        assert!(bl.iter_s > ov.iter_s, "blocking {} !> overlapped {}", bl.iter_s, ov.iter_s);
+        // Same traffic either way; only the timing differs.
+        assert_eq!(bl.wire_bytes, ov.wire_bytes);
+        // The overlapped entry points are unchanged behavior.
+        let def = simulate_iteration(&plan, &tb, &sched, &dense);
+        assert_eq!(def.iter_s, ov.iter_s);
+    }
+
+    #[test]
+    fn blocking_equals_overlapped_without_comm() {
+        // With a single stage there are no transfers, so the execution
+        // models coincide exactly.
+        let tb = testbed1(1);
+        let plan = StagePlan {
+            devices: vec![0],
+            fwd_s: vec![0.5],
+            bwd_s: vec![1.0],
+            update_s: vec![0.1],
+            act_bytes: vec![],
+        };
+        let sched = PipelineSchedule::new(ScheduleKind::GPipe, 1, 3);
+        let dense = CompressPlan::dense(tb.nodes.len());
+        let ov =
+            simulate_iteration_with(&plan, &tb, &sched, &dense, SimOpts::overlapped());
+        let bl =
+            simulate_iteration_with(&plan, &tb, &sched, &dense, SimOpts::blocking());
+        assert_eq!(ov.iter_s, bl.iter_s);
+        assert!((ov.iter_s - (3.0 * 1.5 + 0.1)).abs() < 1e-9);
     }
 
     #[test]

@@ -180,6 +180,7 @@ fn value_codec_u8(c: ValueCodec) -> u8 {
     match c {
         ValueCodec::F32 => 0,
         ValueCodec::Int8 => 1,
+        ValueCodec::Int8Delta => 2,
     }
 }
 
@@ -187,6 +188,7 @@ fn value_codec_from(b: u8) -> anyhow::Result<ValueCodec> {
     Ok(match b {
         0 => ValueCodec::F32,
         1 => ValueCodec::Int8,
+        2 => ValueCodec::Int8Delta,
         other => anyhow::bail!("unknown value codec tag {other}"),
     })
 }
@@ -482,6 +484,14 @@ pub struct StageAssign {
     /// stage of this generation. Empty = relay data plane (all packets
     /// through the broker, the pre-mesh wire behavior).
     pub peers: Vec<(usize, String)>,
+    /// Overlapped wire pipeline: encode/send on dedicated threads and
+    /// prefetch inbound activations while the backend runs.
+    pub overlap: bool,
+    /// Artificial per-send delay (seconds) modelling a slow link; used by
+    /// the paced overlap smoke so the hidden latency is measurable.
+    pub link_delay_s: f64,
+    /// Mesh credit window depth (in-flight packets per directed peer link).
+    pub mesh_window: usize,
 }
 
 fn put_link_spec(out: &mut Vec<u8>, spec: &Option<LinkSpec>) {
@@ -550,6 +560,9 @@ impl StageAssign {
             put_usize(out, *stage);
             put_str(out, addr);
         }
+        put_u8(out, self.overlap as u8);
+        put_f64(out, self.link_delay_s);
+        put_usize(out, self.mesh_window);
     }
 
     pub fn decode(body: &[u8]) -> anyhow::Result<StageAssign> {
@@ -611,6 +624,13 @@ impl StageAssign {
                 }
                 peers
             },
+            overlap: match rd.u8()? {
+                0 => false,
+                1 => true,
+                other => anyhow::bail!("bad overlap flag {other}"),
+            },
+            link_delay_s: rd.f64()?,
+            mesh_window: rd.usize()?,
         };
         rd.finish()?;
         Ok(a)
@@ -721,7 +741,11 @@ mod tests {
                 ratio: 50.0,
                 codec: ValueCodec::Int8,
             }),
-            bwd: None,
+            bwd: Some(LinkSpec {
+                kind: CompressKind::TopK,
+                ratio: 20.0,
+                codec: ValueCodec::Int8Delta,
+            }),
             tasks: vec![
                 Task { stage: 1, micro: 0, kind: TaskKind::Forward },
                 Task { stage: 1, micro: 0, kind: TaskKind::Backward },
@@ -744,6 +768,9 @@ mod tests {
             }),
             mesh_gen: 9,
             peers: vec![(0, "10.0.0.1:4501".into()), (1, "10.0.0.2:4501".into())],
+            overlap: false,
+            link_delay_s: 0.015,
+            mesh_window: 16,
         };
         let mut body = Vec::new();
         a.encode(&mut body);

@@ -52,10 +52,23 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Per-lane in-flight packet cap on a peer connection. Small enough to
-/// bound memory on both ends, large enough to keep the pipe busy while
-/// credits are in flight.
+/// Default per-lane in-flight packet cap on a peer connection (override
+/// with `--mesh-window N`). Small enough to bound memory on both ends,
+/// large enough to keep the pipe busy while credits are in flight.
 pub const MESH_WINDOW: usize = 8;
+
+/// Credits are returned in batches of `window / CREDIT_BATCH_DIV`
+/// (minimum 1): the reader withholds at most one partial batch, so the
+/// effective window never drops below `window - batch + 1 >= 1` and the
+/// reverse path carries one Credit frame per batch instead of one per
+/// packet. Any partial batch is flushed before the reader blocks on the
+/// socket, so credits are never withheld across an idle period.
+const CREDIT_BATCH_DIV: usize = 4;
+
+/// Batch size for credit returns on a window of depth `window`.
+pub(crate) fn credit_batch(window: usize) -> usize {
+    (window / CREDIT_BATCH_DIV).max(1)
+}
 
 /// How long a dialer retries connecting to a neighbor's peer listener
 /// (the listener is bound at worker startup, so this only covers slow
@@ -213,12 +226,14 @@ fn peer_writer(
 }
 
 /// Reader half: incoming packets on `in_lane` land in `sink` (the same
-/// per-generation stage queue the broker demux feeds) and a credit goes
-/// straight back; incoming credits on `out_lane` release the local send
-/// window. Exits on EOF, socket error, or stream corruption — closing
-/// the send window, but *not* tearing down `sink`: the broker session
-/// holds the other sender, and death authority stays with the broker's
-/// deadline monitor.
+/// per-generation stage queue the broker demux feeds) and credits go
+/// back in batches of `credit_batch(window)` — any partial batch is
+/// flushed before the reader blocks, so the sender's effective window
+/// only ever shrinks by the in-progress batch. Incoming credits on
+/// `out_lane` release the local send window. Exits on EOF, socket
+/// error, or stream corruption — closing the send window, but *not*
+/// tearing down `sink`: the broker session holds the other sender, and
+/// death authority stays with the broker's deadline monitor.
 #[allow(clippy::too_many_arguments)]
 fn peer_reader(
     mut stream: TcpStream,
@@ -229,8 +244,10 @@ fn peer_reader(
     out_lane: Lane,
     sink: Sender<Wire>,
     pool: PacketPool,
+    batch: u32,
 ) {
     let mut chunk = vec![0u8; 64 * 1024];
+    let mut pending: u32 = 0;
     loop {
         // Drain buffered frames first: the accept-side framer may hold
         // bytes that arrived with the hello.
@@ -248,9 +265,13 @@ fn peer_reader(
                     // Zero-copy handoff; the interpreter recycles the
                     // body into `pool` after decoding.
                     let _ = sink.send(Wire::Packet(f.body));
-                    if q.send(PeerOut::Credit(in_lane, 1)).is_err() {
-                        window.close();
-                        return;
+                    pending += 1;
+                    if pending >= batch {
+                        if q.send(PeerOut::Credit(in_lane, pending)).is_err() {
+                            window.close();
+                            return;
+                        }
+                        pending = 0;
                     }
                 }
                 (lane, FrameKind::Credit) if lane == out_lane => {
@@ -267,6 +288,15 @@ fn peer_reader(
                     return;
                 }
             }
+        }
+        // About to block: flush the partial batch so an idle producer
+        // gets its credits back promptly.
+        if pending > 0 {
+            if q.send(PeerOut::Credit(in_lane, pending)).is_err() {
+                window.close();
+                return;
+            }
+            pending = 0;
         }
         match stream.read(&mut chunk) {
             Ok(0) | Err(_) => {
@@ -297,10 +327,12 @@ impl PeerConn {
         sink: Sender<Wire>,
         rx_pool: PacketPool,
         give_pool: Option<PacketPool>,
+        win: usize,
         label: &str,
     ) -> anyhow::Result<PeerConn> {
         let (q_tx, q_rx) = mpsc::channel();
-        let window = CreditWindow::new(MESH_WINDOW);
+        let window = CreditWindow::new(win);
+        let batch = credit_batch(win.max(1)) as u32;
         let writer = ConnWriter::new(stream.try_clone()?);
         let reader_stream = stream.try_clone()?;
         let mut threads = Vec::with_capacity(2);
@@ -328,6 +360,7 @@ impl PeerConn {
                             out_lane,
                             sink,
                             rx_pool,
+                            batch,
                         )
                     })?,
             );
@@ -448,6 +481,7 @@ impl PeerNode {
                 sink,
                 rx_pool.clone(),
                 fwd_give,
+                a.mesh_window.max(1),
                 &format!("next{}", a.stage + 1),
             )?)
         } else {
@@ -463,6 +497,7 @@ impl PeerNode {
                 fwd_sink,
                 rx_pool,
                 bwd_give,
+                a.mesh_window.max(1),
                 &format!("prev{}", a.stage - 1),
             )?)
         } else {
@@ -616,6 +651,14 @@ mod tests {
     }
 
     #[test]
+    fn credit_batch_floors_at_one_and_scales_with_window() {
+        assert_eq!(credit_batch(1), 1);
+        assert_eq!(credit_batch(3), 1);
+        assert_eq!(credit_batch(8), 2);
+        assert_eq!(credit_batch(32), 8);
+    }
+
+    #[test]
     fn credit_release_clamps_at_cap() {
         let w = CreditWindow::new(3);
         w.release(100);
@@ -645,6 +688,7 @@ mod tests {
             bwd_tx,
             PacketPool::new(),
             None,
+            MESH_WINDOW,
             "t-dial",
         )
         .unwrap();
@@ -656,6 +700,7 @@ mod tests {
             fwd_tx,
             PacketPool::new(),
             None,
+            MESH_WINDOW,
             "t-accept",
         )
         .unwrap();
@@ -700,6 +745,7 @@ mod tests {
             bwd_tx,
             PacketPool::new(),
             None,
+            MESH_WINDOW,
             "t-death",
         )
         .unwrap();

@@ -15,13 +15,35 @@
 //! (backends stash per-micro parameter gradients and sum them in
 //! ascending micro order at Update), so GPipe and 1F1B produce bitwise
 //! identical loss trajectories.
+//!
+//! Overlapped wire pipeline (`RunOpts::overlap`, on by default): each
+//! outgoing link gets a dedicated encoder/sender thread fed by a bounded
+//! (`OVERLAP_DEPTH`) queue of raw activations/gradients, so compression,
+//! `OpData` encode and the transport send of micro *i* overlap the
+//! compute of micro *i+1*; each incoming packet lane gets a prefetch
+//! thread that receives *and decodes* up to `OVERLAP_DEPTH` messages
+//! ahead, so the task loop's receive is a slot take. Determinism is
+//! preserved because each link's codec state advances in strict
+//! micro-order FIFO on exactly one thread — the bytes on the wire (and
+//! therefore the losses) are bitwise identical to the blocking mode,
+//! which `--overlap off` keeps available as a differential oracle.
 
-use super::messages::{decode_payload_into, StageCodec, StageState, Wire, WorkerStats};
+use super::messages::{
+    decode_payload_into, LinkEncoder, StageCodec, StageState, Wire, WorkerStats,
+};
 use crate::opdag::data::OpDataKind;
 use crate::pipeline::{Task, TaskKind};
 use crate::transport::{Endpoint, Link, PacketPool, RecvError};
 use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Bounded depth of every overlap queue: a sender thread runs at most
+/// this many micro-batches behind the task loop, and a prefetch thread
+/// holds at most this many received-and-decoded messages ahead of it.
+/// Depth 2 is double buffering — enough to hide one link transfer behind
+/// one compute step without ballooning buffered activations.
+pub const OVERLAP_DEPTH: usize = 2;
 
 /// Transport + codec endpoints for one stage: everything the interpreter
 /// needs to talk to its pipeline neighbors and the driver. The lanes are
@@ -113,9 +135,11 @@ pub enum RunOutcome {
     Killed,
 }
 
-/// Fault-tolerance knobs for a schedule run. `Default` reproduces the
-/// PR 3 behavior exactly: blocking receives, no beacons, no injector.
-#[derive(Debug, Clone, Copy, Default)]
+/// Fault-tolerance + overlap knobs for a schedule run. `Default` keeps
+/// the PR 3 fault semantics (blocking receives, no beacons, no injector)
+/// with the overlapped wire pipeline ON — the overlapped and blocking
+/// paths are bitwise identical, so defaulting to fast is safe.
+#[derive(Debug, Clone, Copy)]
 pub struct RunOpts {
     /// Send `Wire::Heartbeat` at most once per this interval — while
     /// blocked on a channel and between tasks — so the broker's deadline
@@ -126,6 +150,298 @@ pub struct RunOpts {
     /// Churn injector: exit silently (no Stats, no Snapshot) at the top
     /// of this global iteration, simulating a device that disappears.
     pub kill_at_iter: Option<u32>,
+    /// Overlapped wire pipeline: per-link encoder/sender threads plus
+    /// inbound decode prefetchers (`--overlap off` disables both and
+    /// restores the fully inline blocking path).
+    pub overlap: bool,
+    /// Injected per-packet transport delay in seconds (`--link-delay`):
+    /// the sender sleeps this long after each packet leaves, modelling a
+    /// slow link's occupancy. Inline mode pays it in the task loop;
+    /// overlap mode hides it behind compute. Never touches the math, so
+    /// the loss trajectory is delay-independent.
+    pub link_delay_s: f64,
+}
+
+impl Default for RunOpts {
+    fn default() -> RunOpts {
+        RunOpts { heartbeat: None, kill_at_iter: None, overlap: true, link_delay_s: 0.0 }
+    }
+}
+
+/// Shared dense-buffer free list: the task loop, the prefetch threads and
+/// the sender threads all draw decode/compute buffers from (and return
+/// them to) one pool, so the steady state allocates nothing even though
+/// buffers cross threads.
+type BufPool = Arc<Mutex<Vec<Vec<f32>>>>;
+
+fn pool_take(pool: &BufPool, n: usize) -> Vec<f32> {
+    let mut b = pool.lock().unwrap().pop().unwrap_or_default();
+    b.resize(n, 0.0);
+    b
+}
+
+fn pool_give(pool: &BufPool, b: Vec<f32>) {
+    pool.lock().unwrap().push(b);
+}
+
+/// Placeholder endpoint left behind when a lane is moved into a prefetch
+/// thread (`StageLinks` keeps its shape; the vacated slot reads closed).
+struct ClosedEndpoint;
+
+impl Endpoint for ClosedEndpoint {
+    fn recv(&self) -> Result<Wire, RecvError> {
+        Err(RecvError::Closed)
+    }
+    fn recv_deadline(&self, _d: Duration) -> Result<Wire, RecvError> {
+        Err(RecvError::Closed)
+    }
+    fn try_recv(&self) -> Result<Wire, RecvError> {
+        Err(RecvError::Closed)
+    }
+}
+
+/// One message off an inbound lane as the task loop sees it. Under
+/// overlap, packets arrive pre-decoded (`Act`); in blocking mode (and for
+/// non-packet traffic) the raw `Wire` passes through.
+#[derive(Debug)]
+enum LaneMsg {
+    Wire(Wire),
+    /// A packet the prefetch thread already decoded into a dense buffer.
+    Act { micro: u32, data: Vec<f32> },
+    /// The prefetch thread hit a decode error; the lane is poisoned.
+    Failed(String),
+}
+
+/// An inbound lane: the raw endpoint (blocking mode) or the bounded
+/// channel out of a prefetch thread that receives and decodes up to
+/// `OVERLAP_DEPTH` messages ahead of the task loop.
+enum InLane {
+    Direct(Box<dyn Endpoint>),
+    Pre(mpsc::Receiver<LaneMsg>),
+}
+
+impl InLane {
+    /// Spawn the lookahead thread for one packet lane. It owns the
+    /// endpoint, decodes each `Wire::Packet` into a dense buffer from the
+    /// shared pool (recycling the packet buffer to `ret`), and forwards
+    /// everything else untouched — in arrival order, so the control
+    /// stream (Stop/Checkpoint) is never reordered against data.
+    ///
+    /// Deliberately detached: the thread is usually parked inside
+    /// `recv()` and only unblocks when the upstream closes at generation
+    /// teardown; joining here would deadlock a mid-run Stop.
+    fn prefetch(
+        rx: Box<dyn Endpoint>,
+        act_n: usize,
+        ret: Option<PacketPool>,
+        pool: BufPool,
+        name: String,
+    ) -> InLane {
+        let (tx, out) = mpsc::sync_channel::<LaneMsg>(OVERLAP_DEPTH);
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(move || loop {
+                match rx.recv() {
+                    Err(_) => break,
+                    Ok(Wire::Packet(buf)) => {
+                        let mut x = pool_take(&pool, act_n);
+                        let msg = match decode_payload_into(&buf, &mut x) {
+                            Ok(hdr) => {
+                                if let Some(p) = &ret {
+                                    p.give(buf);
+                                }
+                                LaneMsg::Act { micro: hdr.micro_batch, data: x }
+                            }
+                            Err(e) => {
+                                pool_give(&pool, x);
+                                LaneMsg::Failed(format!("{e:#}"))
+                            }
+                        };
+                        if tx.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(w) => {
+                        if tx.send(LaneMsg::Wire(w)).is_err() {
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn lane prefetcher");
+        InLane::Pre(out)
+    }
+
+    fn recv(&self) -> Result<LaneMsg, RecvError> {
+        match self {
+            InLane::Direct(rx) => rx.recv().map(LaneMsg::Wire),
+            InLane::Pre(rx) => rx.recv().map_err(|_| RecvError::Closed),
+        }
+    }
+
+    fn recv_deadline(&self, d: Duration) -> Result<LaneMsg, RecvError> {
+        match self {
+            InLane::Direct(rx) => rx.recv_deadline(d).map(LaneMsg::Wire),
+            InLane::Pre(rx) => rx.recv_timeout(d).map_err(|e| match e {
+                mpsc::RecvTimeoutError::Timeout => RecvError::Timeout,
+                mpsc::RecvTimeoutError::Disconnected => RecvError::Closed,
+            }),
+        }
+    }
+
+    fn try_recv(&self) -> Result<LaneMsg, RecvError> {
+        match self {
+            InLane::Direct(rx) => rx.try_recv().map(LaneMsg::Wire),
+            InLane::Pre(rx) => rx.try_recv().map_err(|e| match e {
+                mpsc::TryRecvError::Empty => RecvError::Timeout,
+                mpsc::TryRecvError::Disconnected => RecvError::Closed,
+            }),
+        }
+    }
+}
+
+/// One job for a link's encoder/sender thread: a raw dense payload to
+/// compress, encode and put on the wire.
+struct SendJob {
+    iter: u32,
+    micro: u32,
+    data: Vec<f32>,
+}
+
+#[derive(Default)]
+struct SenderState {
+    /// Jobs enqueued but not yet fully sent + accounted.
+    inflight: usize,
+    /// Wire/dense/message accounting since the last `flush`.
+    wire: f64,
+    dense: f64,
+    msgs: u64,
+    /// A transport send failed — the neighbor is gone. Later jobs are
+    /// drained without sending so the task loop can never block forever.
+    failed: bool,
+}
+
+#[derive(Default)]
+struct SenderShared {
+    state: Mutex<SenderState>,
+    cv: Condvar,
+}
+
+/// The outbound half of the overlap pipeline for one link: a dedicated
+/// thread owning the link's `LinkEncoder` (compression scratch, packet
+/// pool, any error-feedback residual) and a clone of the transport link,
+/// fed through a bounded queue. Jobs are processed in strict FIFO order,
+/// so per-message codec state advances exactly as it would inline — the
+/// byte stream is bitwise identical to the blocking path.
+struct OverlapSender {
+    tx: Option<mpsc::SyncSender<SendJob>>,
+    shared: Arc<SenderShared>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl OverlapSender {
+    #[allow(clippy::too_many_arguments)]
+    fn spawn(
+        mut enc: LinkEncoder,
+        link: Box<dyn Link>,
+        src: usize,
+        dst: usize,
+        kind: OpDataKind,
+        link_delay_s: f64,
+        pool: BufPool,
+        name: String,
+    ) -> OverlapSender {
+        let (tx, rx) = mpsc::sync_channel::<SendJob>(OVERLAP_DEPTH);
+        let shared = Arc::new(SenderShared::default());
+        let sh = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let failed = sh.state.lock().unwrap().failed;
+                    let mut sent = None;
+                    if !failed {
+                        let (buf, wire) =
+                            enc.encode(src, dst, kind, job.iter, job.micro, &job.data);
+                        let dense = 4.0 * job.data.len() as f64;
+                        // Pace BEFORE the send: the delay models wire
+                        // transfer time, so the receiver must not see the
+                        // packet early. The sleep runs on this thread, so
+                        // compute on the task thread still overlaps it.
+                        if link_delay_s > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(link_delay_s));
+                        }
+                        if link.send(Wire::Packet(buf)).is_ok() {
+                            sent = Some((wire, dense));
+                        }
+                    }
+                    pool_give(&pool, job.data);
+                    let mut st = sh.state.lock().unwrap();
+                    match sent {
+                        Some((wire, dense)) => {
+                            st.wire += wire;
+                            st.dense += dense;
+                            st.msgs += 1;
+                        }
+                        None => st.failed = true,
+                    }
+                    st.inflight -= 1;
+                    drop(st);
+                    sh.cv.notify_all();
+                }
+            })
+            .expect("spawn link sender");
+        OverlapSender { tx: Some(tx), shared, handle: Some(handle) }
+    }
+
+    /// Enqueue one payload (blocks when the queue holds `OVERLAP_DEPTH`
+    /// jobs — bounded lookahead is the backpressure). Returns false when
+    /// the sender thread has seen a transport failure.
+    fn send(&self, iter: u32, micro: u32, data: Vec<f32>) -> bool {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.failed {
+                return false;
+            }
+            st.inflight += 1;
+        }
+        if self.tx.as_ref().unwrap().send(SendJob { iter, micro, data }).is_err() {
+            let mut st = self.shared.state.lock().unwrap();
+            st.inflight -= 1;
+            st.failed = true;
+            return false;
+        }
+        true
+    }
+
+    /// Wait until every enqueued job is on the wire, then take the
+    /// accounting deltas (wire bytes, dense bytes, messages) accumulated
+    /// since the previous flush. None = a send failed (neighbor gone).
+    fn flush(&self) -> Option<(f64, f64, u64)> {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.inflight > 0 {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        if st.failed {
+            return None;
+        }
+        let out = (st.wire, st.dense, st.msgs);
+        st.wire = 0.0;
+        st.dense = 0.0;
+        st.msgs = 0;
+        Some(out)
+    }
+}
+
+impl Drop for OverlapSender {
+    fn drop(&mut self) {
+        // Closing the queue lets the thread drain remaining jobs and
+        // exit; then join so the encoder state dies with the generation.
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 /// Heartbeat if the interval elapsed since the last beacon.
@@ -145,22 +461,22 @@ fn beat(
 }
 
 /// Receive the next message from `rx`, heartbeating on every timeout
-/// tick. When `fwd_ctl` is given (`rx` is NOT the forward link), the
-/// forward link is polled for control messages (Stop / Checkpoint) on
+/// tick. When `fwd_ctl` is given (`rx` is NOT the forward lane), the
+/// forward lane is polled for control messages (Stop / Checkpoint) on
 /// each tick — they are returned as if they arrived on `rx`, and any
 /// early data messages found on the way are stashed into `pending` for
 /// the next forward receive. Returns None when `rx` disconnected.
 #[allow(clippy::too_many_arguments)]
-fn recv_msg(
-    rx: &dyn Endpoint,
-    fwd_ctl: Option<&dyn Endpoint>,
-    pending: &mut VecDeque<Wire>,
+fn recv_lane(
+    rx: &InLane,
+    fwd_ctl: Option<&InLane>,
+    pending: &mut VecDeque<LaneMsg>,
     tx_driver: &dyn Link,
     stage: usize,
     iter: u32,
     hb: Option<Duration>,
     last_beat: &mut Instant,
-) -> anyhow::Result<Option<Wire>> {
+) -> anyhow::Result<Option<LaneMsg>> {
     let Some(int) = hb else {
         return Ok(rx.recv().ok());
     };
@@ -174,7 +490,7 @@ fn recv_msg(
                 if let Some(f) = fwd_ctl {
                     loop {
                         match f.try_recv() {
-                            Ok(m @ (Wire::Stop | Wire::Checkpoint { .. })) => {
+                            Ok(m @ LaneMsg::Wire(Wire::Stop | Wire::Checkpoint { .. })) => {
                                 return Ok(Some(m))
                             }
                             Ok(other) => pending.push_back(other),
@@ -200,13 +516,15 @@ fn checkpoint_reply<B: StageBackend>(links: &StageLinks, backend: &B) {
 /// closed). Park: keep heartbeating, answer boundary Checkpoints, drop
 /// stale data, and exit cleanly (snapshot + stats) on the driver's Stop.
 /// Without heartbeats there is no way to poll, so fail hard as before.
+#[allow(clippy::too_many_arguments)]
 fn quiesce<B: StageBackend>(
     links: &StageLinks,
+    fwd_lane: &InLane,
     backend: &B,
     stats: WorkerStats,
     hb: Option<Duration>,
     iter: u32,
-    pending: &mut VecDeque<Wire>,
+    pending: &mut VecDeque<LaneMsg>,
 ) -> anyhow::Result<RunOutcome> {
     let Some(int) = hb else {
         anyhow::bail!("stage {}: pipeline neighbor vanished mid-run", links.stage)
@@ -214,7 +532,7 @@ fn quiesce<B: StageBackend>(
     loop {
         let msg = match pending.pop_front() {
             Some(m) => Some(m),
-            None => match links.rx_fwd.recv_deadline(int) {
+            None => match fwd_lane.recv_deadline(int) {
                 Ok(m) => Some(m),
                 Err(RecvError::Timeout) => None,
                 Err(RecvError::Closed) => {
@@ -223,8 +541,8 @@ fn quiesce<B: StageBackend>(
             },
         };
         match msg {
-            Some(Wire::Stop) => return stop(links, backend, stats),
-            Some(Wire::Checkpoint { .. }) => checkpoint_reply(links, backend),
+            Some(LaneMsg::Wire(Wire::Stop)) => return stop(links, backend, stats),
+            Some(LaneMsg::Wire(Wire::Checkpoint { .. })) => checkpoint_reply(links, backend),
             Some(_) => {} // data for the broken pipeline — drop
             None => {
                 let _ = links
@@ -248,8 +566,8 @@ pub fn run_schedule<B: StageBackend>(
     run_schedule_with(links, backend, tasks, iter0, iters, RunOpts::default())
 }
 
-/// `run_schedule` with fault-tolerance options (heartbeats + the churn
-/// fault injector). The schedule/compute semantics are identical.
+/// `run_schedule` with fault-tolerance + overlap options. The
+/// schedule/compute semantics are identical in every mode.
 pub fn run_schedule_with<B: StageBackend>(
     links: &mut StageLinks,
     backend: &mut B,
@@ -264,9 +582,81 @@ pub fn run_schedule_with<B: StageBackend>(
         ..Default::default()
     };
     let act_n = backend.act_elems();
-    // Decode-buffer pool: buffers cycle recv -> backend stash -> backward
-    // free -> pool, so the steady state allocates nothing on this side.
-    let mut recycle: Vec<Vec<f32>> = Vec::new();
+    // Dense-buffer pool: buffers cycle recv -> backend stash -> backward
+    // free -> pool (crossing the prefetch/sender threads under overlap),
+    // so the steady state allocates nothing on this side.
+    let pool: BufPool = Arc::new(Mutex::new(Vec::new()));
+    let overlap = opts.overlap;
+
+    // Inbound lanes. Under overlap the packet lanes move into prefetch
+    // threads (a `ClosedEndpoint` placeholder keeps `StageLinks`' shape);
+    // the label lane stays direct — label decode is trivial and the
+    // driver sends them eagerly anyway.
+    let fwd_lane = {
+        let rx = std::mem::replace(&mut links.rx_fwd, Box::new(ClosedEndpoint));
+        if overlap {
+            InLane::prefetch(
+                rx,
+                act_n,
+                links.fwd_return.take(),
+                Arc::clone(&pool),
+                format!("prefetch-f{}", links.stage),
+            )
+        } else {
+            InLane::Direct(rx)
+        }
+    };
+    let bwd_lane = links.rx_bwd.take().map(|rx| {
+        if overlap {
+            InLane::prefetch(
+                rx,
+                act_n,
+                links.bwd_return.take(),
+                Arc::clone(&pool),
+                format!("prefetch-b{}", links.stage),
+            )
+        } else {
+            InLane::Direct(rx)
+        }
+    });
+    let labels_lane = links.rx_labels.take().map(InLane::Direct);
+
+    // Outbound: one encoder/sender thread per link. The `LinkEncoder`
+    // moves into the thread wholesale, so all per-message compression
+    // state stays on exactly one thread, in FIFO micro order.
+    let fwd_sender = if overlap && links.tx_fwd.is_some() {
+        links.codec.fwd.take().map(|enc| {
+            OverlapSender::spawn(
+                enc,
+                links.tx_fwd.as_ref().unwrap().clone_link(),
+                links.stage,
+                links.stage + 1,
+                OpDataKind::Activation,
+                opts.link_delay_s,
+                Arc::clone(&pool),
+                format!("send-f{}", links.stage),
+            )
+        })
+    } else {
+        None
+    };
+    let bwd_sender = if overlap && links.tx_bwd.is_some() {
+        links.codec.bwd.take().map(|enc| {
+            OverlapSender::spawn(
+                enc,
+                links.tx_bwd.as_ref().unwrap().clone_link(),
+                links.stage,
+                links.stage - 1,
+                OpDataKind::Gradient,
+                opts.link_delay_s,
+                Arc::clone(&pool),
+                format!("send-b{}", links.stage),
+            )
+        })
+    } else {
+        None
+    };
+
     let mut grad_buf = vec![0.0f32; act_n];
     let hb = opts.heartbeat;
     let mut last_beat = Instant::now();
@@ -275,9 +665,9 @@ pub fn run_schedule_with<B: StageBackend>(
     if hb.is_some() {
         let _ = links.tx_driver.send(Wire::Heartbeat { stage: links.stage, iter: iter0 });
     }
-    // Forward-link messages popped early while scanning for control
+    // Forward-lane messages popped early while scanning for control
     // messages during a blocked backward/label receive.
-    let mut pending: VecDeque<Wire> = VecDeque::new();
+    let mut pending: VecDeque<LaneMsg> = VecDeque::new();
 
     for iter in iter0..iter0 + iters as u32 {
         if opts.kill_at_iter == Some(iter) {
@@ -294,13 +684,13 @@ pub fn run_schedule_with<B: StageBackend>(
                 TaskKind::Forward => {
                     // Labels first on the head (the driver sends them
                     // eagerly, in ascending micro order).
-                    let labels = match &links.rx_labels {
+                    let labels = match &labels_lane {
                         Some(rx) => {
                             let t_wait = Instant::now();
                             let msg = loop {
-                                match recv_msg(
-                                    rx.as_ref(),
-                                    Some(links.rx_fwd.as_ref()),
+                                match recv_lane(
+                                    rx,
+                                    Some(&fwd_lane),
                                     &mut pending,
                                     links.tx_driver.as_ref(),
                                     links.stage,
@@ -313,7 +703,7 @@ pub fn run_schedule_with<B: StageBackend>(
                                         "stage {}: driver went away mid-run",
                                         links.stage
                                     ),
-                                    Some(Wire::Checkpoint { .. }) => {
+                                    Some(LaneMsg::Wire(Wire::Checkpoint { .. })) => {
                                         checkpoint_reply(links, backend)
                                     }
                                     Some(m) => break m,
@@ -321,7 +711,7 @@ pub fn run_schedule_with<B: StageBackend>(
                             };
                             stats.wait_s += t_wait.elapsed().as_secs_f64();
                             match msg {
-                                Wire::Labels { micro, targets, .. } => {
+                                LaneMsg::Wire(Wire::Labels { micro, targets, .. }) => {
                                     anyhow::ensure!(
                                         micro as usize == t.micro,
                                         "stage {}: labels for micro {micro}, schedule expects {}",
@@ -330,7 +720,7 @@ pub fn run_schedule_with<B: StageBackend>(
                                     );
                                     Some(targets)
                                 }
-                                Wire::Stop => return stop(links, backend, stats),
+                                LaneMsg::Wire(Wire::Stop) => return stop(links, backend, stats),
                                 other => anyhow::bail!(
                                     "stage {}: unexpected {other:?} on label link",
                                     links.stage
@@ -343,8 +733,8 @@ pub fn run_schedule_with<B: StageBackend>(
                     let input = loop {
                         let msg = match pending.pop_front() {
                             Some(m) => Some(m),
-                            None => recv_msg(
-                                links.rx_fwd.as_ref(),
+                            None => recv_lane(
+                                &fwd_lane,
                                 None,
                                 &mut pending,
                                 links.tx_driver.as_ref(),
@@ -361,8 +751,10 @@ pub fn run_schedule_with<B: StageBackend>(
                                 "stage {}: forward link closed (driver went away)",
                                 links.stage
                             ),
-                            Some(Wire::Checkpoint { .. }) => checkpoint_reply(links, backend),
-                            Some(Wire::Data { micro, tokens, .. }) => {
+                            Some(LaneMsg::Wire(Wire::Checkpoint { .. })) => {
+                                checkpoint_reply(links, backend)
+                            }
+                            Some(LaneMsg::Wire(Wire::Data { micro, tokens, .. })) => {
                                 anyhow::ensure!(
                                     micro as usize == t.micro,
                                     "stage {}: data for micro {micro}, schedule expects {}",
@@ -371,9 +763,9 @@ pub fn run_schedule_with<B: StageBackend>(
                                 );
                                 break FwdInput::Tokens(tokens);
                             }
-                            Some(Wire::Packet(buf)) => {
-                                let mut x = recycle.pop().unwrap_or_default();
-                                x.resize(act_n, 0.0);
+                            // Blocking mode: packets decode inline here.
+                            Some(LaneMsg::Wire(Wire::Packet(buf))) => {
+                                let mut x = pool_take(&pool, act_n);
                                 let hdr = decode_payload_into(&buf, &mut x)?;
                                 // Drained packet buffer returns to the
                                 // sender's free-list (zero-alloc sends).
@@ -390,7 +782,22 @@ pub fn run_schedule_with<B: StageBackend>(
                                 );
                                 break FwdInput::Act(x);
                             }
-                            Some(Wire::Stop) => {
+                            // Overlap mode: the prefetcher already decoded.
+                            Some(LaneMsg::Act { micro, data }) => {
+                                anyhow::ensure!(
+                                    micro as usize == t.micro,
+                                    "stage {}: activation for micro {micro}, schedule expects {} \
+                                     (cross-stage schedule orders disagree)",
+                                    links.stage,
+                                    t.micro
+                                );
+                                break FwdInput::Act(data);
+                            }
+                            Some(LaneMsg::Failed(e)) => anyhow::bail!(
+                                "stage {}: forward packet decode failed: {e}",
+                                links.stage
+                            ),
+                            Some(LaneMsg::Wire(Wire::Stop)) => {
                                 stats.wait_s += t_wait.elapsed().as_secs_f64();
                                 return stop(links, backend, stats);
                             }
@@ -408,7 +815,16 @@ pub fn run_schedule_with<B: StageBackend>(
                     p_fwd += dt;
                     match out {
                         FwdOut::Act(y) => {
-                            if let (Some(tx), Some(enc)) =
+                            if let Some(snd) = &fwd_sender {
+                                // Hand off to the encoder/sender thread;
+                                // compression + send overlap the next task.
+                                if !snd.send(iter, t.micro as u32, y) {
+                                    // Downstream vanished: park for Stop.
+                                    return quiesce(
+                                        links, &fwd_lane, backend, stats, hb, iter, &mut pending,
+                                    );
+                                }
+                            } else if let (Some(tx), Some(enc)) =
                                 (&links.tx_fwd, links.codec.fwd.as_mut())
                             {
                                 let (buf, wire) = enc.encode(
@@ -419,10 +835,15 @@ pub fn run_schedule_with<B: StageBackend>(
                                     t.micro as u32,
                                     &y,
                                 );
+                                if opts.link_delay_s > 0.0 {
+                                    std::thread::sleep(Duration::from_secs_f64(
+                                        opts.link_delay_s,
+                                    ));
+                                }
                                 if tx.send(Wire::Packet(buf)).is_err() {
                                     // Downstream vanished: park for Stop.
                                     return quiesce(
-                                        links, backend, stats, hb, iter, &mut pending,
+                                        links, &fwd_lane, backend, stats, hb, iter, &mut pending,
                                     );
                                 }
                                 stats.bytes_sent += wire;
@@ -430,12 +851,14 @@ pub fn run_schedule_with<B: StageBackend>(
                                 stats.msgs_sent += 1;
                                 p_bytes += wire;
                                 p_msgs += 1;
+                                pool_give(&pool, y);
+                            } else {
+                                pool_give(&pool, y);
                             }
-                            recycle.push(y);
                         }
                         FwdOut::Loss { loss, free } => {
                             if let Some(b) = free {
-                                recycle.push(b);
+                                pool_give(&pool, b);
                             }
                             links.tx_driver.send(Wire::Loss {
                                 iter,
@@ -446,13 +869,14 @@ pub fn run_schedule_with<B: StageBackend>(
                     }
                 }
                 TaskKind::Backward => {
-                    let grad: Option<&[f32]> = match &links.rx_bwd {
+                    let mut grad_owned: Option<Vec<f32>> = None;
+                    let grad: Option<&[f32]> = match &bwd_lane {
                         Some(rx) => {
                             let t_wait = Instant::now();
                             let msg = loop {
-                                match recv_msg(
-                                    rx.as_ref(),
-                                    Some(links.rx_fwd.as_ref()),
+                                match recv_lane(
+                                    rx,
+                                    Some(&fwd_lane),
                                     &mut pending,
                                     links.tx_driver.as_ref(),
                                     links.stage,
@@ -465,10 +889,11 @@ pub fn run_schedule_with<B: StageBackend>(
                                     None => {
                                         stats.wait_s += t_wait.elapsed().as_secs_f64();
                                         return quiesce(
-                                            links, backend, stats, hb, iter, &mut pending,
+                                            links, &fwd_lane, backend, stats, hb, iter,
+                                            &mut pending,
                                         );
                                     }
-                                    Some(Wire::Checkpoint { .. }) => {
+                                    Some(LaneMsg::Wire(Wire::Checkpoint { .. })) => {
                                         checkpoint_reply(links, backend)
                                     }
                                     Some(m) => break m,
@@ -476,7 +901,7 @@ pub fn run_schedule_with<B: StageBackend>(
                             };
                             stats.wait_s += t_wait.elapsed().as_secs_f64();
                             match msg {
-                                Wire::Packet(buf) => {
+                                LaneMsg::Wire(Wire::Packet(buf)) => {
                                     let hdr = decode_payload_into(&buf, &mut grad_buf)?;
                                     if let Some(p) = &links.bwd_return {
                                         p.give(buf);
@@ -491,7 +916,24 @@ pub fn run_schedule_with<B: StageBackend>(
                                     );
                                     Some(&grad_buf[..])
                                 }
-                                Wire::Stop => return stop(links, backend, stats),
+                                LaneMsg::Act { micro, data } => {
+                                    anyhow::ensure!(
+                                        micro as usize == t.micro,
+                                        "stage {}: gradient for micro {micro}, schedule expects {} \
+                                         (cross-stage schedule orders disagree)",
+                                        links.stage,
+                                        t.micro
+                                    );
+                                    grad_owned = Some(data);
+                                    grad_owned.as_deref()
+                                }
+                                LaneMsg::Failed(e) => anyhow::bail!(
+                                    "stage {}: gradient packet decode failed: {e}",
+                                    links.stage
+                                ),
+                                LaneMsg::Wire(Wire::Stop) => {
+                                    return stop(links, backend, stats)
+                                }
                                 other => anyhow::bail!(
                                     "stage {}: unexpected {other:?} on backward link",
                                     links.stage
@@ -505,8 +947,19 @@ pub fn run_schedule_with<B: StageBackend>(
                     let dt = t0.elapsed().as_secs_f64();
                     stats.bwd_s += dt;
                     p_bwd += dt;
+                    if let Some(b) = grad_owned.take() {
+                        pool_give(&pool, b);
+                    }
                     if let Some(dx) = out.dx {
-                        if let (Some(tx), Some(enc)) = (&links.tx_bwd, links.codec.bwd.as_mut())
+                        if let Some(snd) = &bwd_sender {
+                            if !snd.send(iter, t.micro as u32, dx) {
+                                // Upstream vanished: park for Stop.
+                                return quiesce(
+                                    links, &fwd_lane, backend, stats, hb, iter, &mut pending,
+                                );
+                            }
+                        } else if let (Some(tx), Some(enc)) =
+                            (&links.tx_bwd, links.codec.bwd.as_mut())
                         {
                             let (buf, wire) = enc.encode(
                                 links.stage,
@@ -516,20 +969,27 @@ pub fn run_schedule_with<B: StageBackend>(
                                 t.micro as u32,
                                 &dx,
                             );
+                            if opts.link_delay_s > 0.0 {
+                                std::thread::sleep(Duration::from_secs_f64(opts.link_delay_s));
+                            }
                             if tx.send(Wire::Packet(buf)).is_err() {
                                 // Upstream vanished: park for Stop.
-                                return quiesce(links, backend, stats, hb, iter, &mut pending);
+                                return quiesce(
+                                    links, &fwd_lane, backend, stats, hb, iter, &mut pending,
+                                );
                             }
                             stats.bytes_sent += wire;
                             stats.dense_bytes += 4.0 * dx.len() as f64;
                             stats.msgs_sent += 1;
                             p_bytes += wire;
                             p_msgs += 1;
+                            pool_give(&pool, dx);
+                        } else {
+                            pool_give(&pool, dx);
                         }
-                        recycle.push(dx);
                     }
                     if let Some(b) = out.free {
-                        recycle.push(b);
+                        pool_give(&pool, b);
                     }
                 }
                 TaskKind::Update => {
@@ -538,6 +998,32 @@ pub fn run_schedule_with<B: StageBackend>(
                     let dt = t0.elapsed().as_secs_f64();
                     stats.update_s += dt;
                     p_upd += dt;
+                    // Drain the overlapped senders: every packet this
+                    // iteration emitted is on the wire *and accounted*
+                    // before the profile goes out, so the per-iteration
+                    // byte/msg numbers the broker relays are identical to
+                    // the blocking mode (the wire counts are integers, so
+                    // the f64 sums are exact in any order).
+                    let t_flush = Instant::now();
+                    for snd in [fwd_sender.as_ref(), bwd_sender.as_ref()].into_iter().flatten()
+                    {
+                        match snd.flush() {
+                            Some((wire, dense, msgs)) => {
+                                stats.bytes_sent += wire;
+                                stats.dense_bytes += dense;
+                                stats.msgs_sent += msgs;
+                                p_bytes += wire;
+                                p_msgs += msgs;
+                            }
+                            None => {
+                                // A sender thread hit a dead neighbor.
+                                return quiesce(
+                                    links, &fwd_lane, backend, stats, hb, iter, &mut pending,
+                                );
+                            }
+                        }
+                    }
+                    stats.wait_s += t_flush.elapsed().as_secs_f64();
                     links.tx_driver.send(Wire::IterProfile {
                         stage: links.stage,
                         iter,

@@ -168,15 +168,17 @@ impl LinkEncoder {
             (CompressKind::None, ValueCodec::F32) => {
                 NoCompress.compress_with(dense, comp, scratch)
             }
-            // Dense fallback under the int8 codec: 4 -> ~1 B/value.
-            (CompressKind::None, ValueCodec::Int8) | (CompressKind::Int8, _) => {
-                Int8Quantizer.compress_with(dense, comp, scratch)
-            }
+            // Dense fallback under the int8 codecs: 4 -> ~1 B/value.
+            (CompressKind::None, ValueCodec::Int8 | ValueCodec::Int8Delta)
+            | (CompressKind::Int8, _) => Int8Quantizer.compress_with(dense, comp, scratch),
             (CompressKind::TopK | CompressKind::AdaTopK, ValueCodec::F32) => {
                 ChunkedTopK { ratio: self.ratio, chunk: self.chunk }
                     .compress_with(dense, comp, scratch)
             }
-            (CompressKind::TopK | CompressKind::AdaTopK, ValueCodec::Int8) => {
+            (
+                CompressKind::TopK | CompressKind::AdaTopK,
+                ValueCodec::Int8 | ValueCodec::Int8Delta,
+            ) => {
                 Quantized::per_row(
                     ChunkedTopK { ratio: self.ratio, chunk: self.chunk },
                     self.chunk,
@@ -190,9 +192,25 @@ impl LinkEncoder {
                 };
                 match codec {
                     ValueCodec::F32 => rk.compress_with(dense, comp, scratch),
-                    ValueCodec::Int8 => {
+                    // Random-K support is unsorted, so the delta index
+                    // packing never applies — both int8 codecs share the
+                    // per-message QSparse layout here.
+                    ValueCodec::Int8 | ValueCodec::Int8Delta => {
                         Quantized::per_message(rk).compress_with(dense, comp, scratch)
                     }
+                }
+            }
+        }
+        // The u24 negotiation: re-tag a row-quantized payload to the
+        // delta-index layout when it qualifies (ChunkedTopK emits strictly
+        // ascending indices; the length gate covers the u24 range).
+        if self.codec == ValueCodec::Int8Delta {
+            if let CompressCfg::QSparseRows { ratio, total_len, chunk } = self.comp.cfg {
+                if total_len < (1 << 24)
+                    && self.comp.indices.windows(2).all(|w| w[0] < w[1])
+                {
+                    self.comp.cfg =
+                        CompressCfg::QSparseRowsDelta { ratio, total_len, chunk };
                 }
             }
         }
@@ -302,17 +320,17 @@ pub fn compressor_for_codec(
     let chunk = chunk.max(1);
     match (kind, codec) {
         (CompressKind::None, ValueCodec::F32) => Box::new(NoCompress),
-        (CompressKind::None, ValueCodec::Int8) | (CompressKind::Int8, _) => {
-            Box::new(Int8Quantizer)
-        }
+        (CompressKind::None, ValueCodec::Int8 | ValueCodec::Int8Delta)
+        | (CompressKind::Int8, _) => Box::new(Int8Quantizer),
         (CompressKind::TopK | CompressKind::AdaTopK, ValueCodec::F32) => {
             Box::new(ChunkedTopK { ratio, chunk })
         }
-        (CompressKind::TopK | CompressKind::AdaTopK, ValueCodec::Int8) => {
-            Box::new(Quantized::per_row(ChunkedTopK { ratio, chunk }, chunk))
-        }
+        (
+            CompressKind::TopK | CompressKind::AdaTopK,
+            ValueCodec::Int8 | ValueCodec::Int8Delta,
+        ) => Box::new(Quantized::per_row(ChunkedTopK { ratio, chunk }, chunk)),
         (CompressKind::RandomK, ValueCodec::F32) => Box::new(RandomK { ratio, seed }),
-        (CompressKind::RandomK, ValueCodec::Int8) => {
+        (CompressKind::RandomK, ValueCodec::Int8 | ValueCodec::Int8Delta) => {
             Box::new(Quantized::per_message(RandomK { ratio, seed }))
         }
     }
@@ -400,7 +418,8 @@ fn scatter_view(v: &OpDataView, dense: &mut [f32]) -> anyhow::Result<()> {
                 dense[i as usize] = (b as i8) as f32 * scale;
             }
         }
-        CompressCfg::QSparseRows { chunk, total_len, .. } => {
+        CompressCfg::QSparseRows { chunk, total_len, .. }
+        | CompressCfg::QSparseRowsDelta { chunk, total_len, .. } => {
             anyhow::ensure!(*total_len as usize == n, "qsparse length mismatch");
             anyhow::ensure!(
                 v.indices_len() == v.bytes_payload().len(),
@@ -584,6 +603,70 @@ mod tests {
         let mut direct = vec![f32::NAN; n];
         decode_payload_into(&buf_q, &mut direct).unwrap();
         assert_eq!(direct, got);
+    }
+
+    #[test]
+    fn u24_delta_codec_shrinks_indices_and_decodes_identically() {
+        let mut rng = Rng::new(48);
+        let chunk = 128usize;
+        let n = 64 * chunk;
+        let dense: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let enc = |codec| {
+            encode_payload_with(
+                codec,
+                CompressKind::TopK,
+                16.0,
+                chunk,
+                0,
+                1,
+                OpDataKind::Activation,
+                0,
+                0,
+                &dense,
+            )
+        };
+        let (buf_q, wire_q) = enc(ValueCodec::Int8);
+        let (buf_d, wire_d) = enc(ValueCodec::Int8Delta);
+        let (od_q, want) = decode_payload(&buf_q, n).unwrap();
+        let (od_d, got) = decode_payload(&buf_d, n).unwrap();
+        // Same codes and support, one byte per index cheaper on the wire.
+        assert!(matches!(od_q.compress, CompressCfg::QSparseRows { .. }));
+        assert!(matches!(od_d.compress, CompressCfg::QSparseRowsDelta { .. }));
+        assert_eq!(od_d.indices, od_q.indices);
+        assert_eq!(od_d.bytes_payload, od_q.bytes_payload);
+        let k = od_q.indices.len();
+        assert_eq!(buf_q.len(), buf_d.len() + k);
+        assert!((wire_q - wire_d - k as f64).abs() < 1e-9);
+        // Bitwise-identical dense reconstruction.
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Zero-copy decode agrees too.
+        let mut direct = vec![f32::NAN; n];
+        decode_payload_into(&buf_d, &mut direct).unwrap();
+        assert_eq!(direct, got);
+    }
+
+    #[test]
+    fn u24_delta_codec_dense_fallback_matches_int8() {
+        let dense: Vec<f32> = (0..500).map(|i| (i as f32).cos()).collect();
+        let enc = |codec| {
+            encode_payload_with(
+                codec,
+                CompressKind::None,
+                1.0,
+                64,
+                0,
+                1,
+                OpDataKind::Gradient,
+                0,
+                0,
+                &dense,
+            )
+        };
+        let (buf_q, _) = enc(ValueCodec::Int8);
+        let (buf_d, _) = enc(ValueCodec::Int8Delta);
+        assert_eq!(buf_q, buf_d, "dense fallback is codec-identical");
     }
 
     #[test]

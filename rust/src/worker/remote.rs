@@ -165,6 +165,8 @@ fn serve_assignment(
         backend: a.backend,
         heartbeat: (a.heartbeat_s > 0.0).then(|| Duration::from_secs_f64(a.heartbeat_s)),
         kill_at_iter: a.kill_at_iter,
+        overlap: a.overlap,
+        link_delay_s: a.link_delay_s,
         rx_fwd: chan::endpoint(fwd_rx),
         rx_bwd: (!is_head).then(|| chan::endpoint(bwd_rx)),
         tx_fwd: match &mesh {

@@ -93,6 +93,13 @@ pub struct StageCtx {
     /// iteration (set by the broker when this stage's device matches
     /// `--kill-node` and the generation covers `--kill-at-iter`).
     pub kill_at_iter: Option<u32>,
+    /// Overlapped wire pipeline (`--overlap`, on by default): per-link
+    /// encoder/sender threads + inbound decode prefetchers in the
+    /// schedule interpreter. Bitwise-identical losses either way.
+    pub overlap: bool,
+    /// Injected per-packet link delay in seconds (`--link-delay`): models
+    /// slow-link occupancy for the overlap smoke. 0 = off.
+    pub link_delay_s: f64,
     /// Forward input (Data from the driver for stage 0, Packets after).
     pub rx_fwd: Box<dyn Endpoint>,
     /// Backward gradient input (None for head).
@@ -420,7 +427,12 @@ pub fn run_stage(ctx: StageCtx) -> anyhow::Result<RunOutcome> {
     let kind = ctx.backend;
     let tasks = ctx.tasks.clone();
     let (iter0, iters) = (ctx.iter0, ctx.iters);
-    let opts = RunOpts { heartbeat: ctx.heartbeat, kill_at_iter: ctx.kill_at_iter };
+    let opts = RunOpts {
+        heartbeat: ctx.heartbeat,
+        kill_at_iter: ctx.kill_at_iter,
+        overlap: ctx.overlap,
+        link_delay_s: ctx.link_delay_s,
+    };
     match kind {
         BackendKind::Pjrt => {
             let mut backend = PjrtBackend::new(&ctx)?;

@@ -314,7 +314,7 @@ fn link_encoder_steady_state_equals_oneshot_wrappers() {
         (CompressKind::Int8, 4.0),
         (CompressKind::None, 1.0),
     ];
-    for codec in [ValueCodec::F32, ValueCodec::Int8] {
+    for codec in [ValueCodec::F32, ValueCodec::Int8, ValueCodec::Int8Delta] {
         for (kind, ratio) in kinds {
             let mut enc = LinkEncoder::with_codec(kind, ratio, 1600, codec);
             for iter in 0..20u32 {
