@@ -103,6 +103,10 @@ pub struct Job {
     pub checkpoint_dir: PathBuf,
     /// Checkpoint versions retained on disk.
     pub keep_checkpoints: usize,
+    /// Force every Nth saved version to a full base layer, so a delta
+    /// reconstruction chain holds at most N-1 links
+    /// (`--checkpoint-rebase-every`, 0 = never force a re-base).
+    pub checkpoint_rebase_every: usize,
     /// Churn injector: the worker on this device vanishes silently at the
     /// top of `kill_at_iter` (heartbeats stop; the deadline monitor must
     /// notice and — under `--replan auto` — recover).
@@ -155,6 +159,7 @@ impl Default for Job {
             checkpoint_every: 0,
             checkpoint_dir: PathBuf::from("checkpoints"),
             keep_checkpoints: 3,
+            checkpoint_rebase_every: 8,
             kill_device: None,
             kill_at_iter: 0,
             churn: None,
@@ -231,6 +236,8 @@ impl Job {
                 .map(PathBuf::from)
                 .unwrap_or(d.checkpoint_dir),
             keep_checkpoints: args.usize("keep-checkpoints", d.keep_checkpoints).max(1),
+            checkpoint_rebase_every: args
+                .usize("checkpoint-rebase-every", d.checkpoint_rebase_every),
             kill_device: args
                 .opt_str("kill-node")
                 .map(|s| s.parse().expect("--kill-node expects a device id")),
@@ -326,11 +333,12 @@ mod tests {
         assert_eq!(j.heartbeat_s, 0.25);
         assert_eq!(j.heartbeat_timeout, 40);
         assert_eq!(j.checkpoint_every, 0);
+        assert_eq!(j.checkpoint_rebase_every, 8);
         assert_eq!(j.kill_device, None);
         let args = Args::parse(
             "train --backend null --heartbeat-interval 0.05 --heartbeat-timeout 4 \
              --checkpoint-every 2 --checkpoint-dir /tmp/ck --keep-checkpoints 5 \
-             --kill-node 1 --kill-at-iter 3"
+             --checkpoint-rebase-every 4 --kill-node 1 --kill-at-iter 3"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -341,6 +349,7 @@ mod tests {
         assert_eq!(j.checkpoint_every, 2);
         assert_eq!(j.checkpoint_dir, PathBuf::from("/tmp/ck"));
         assert_eq!(j.keep_checkpoints, 5);
+        assert_eq!(j.checkpoint_rebase_every, 4);
         assert_eq!(j.kill_device, Some(1));
         assert_eq!(j.kill_at_iter, 3);
         let bad = Args::parse(["--backend", "tpu"].iter().map(|s| s.to_string()));

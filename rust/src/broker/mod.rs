@@ -126,6 +126,7 @@ impl Generation {
             Wire::Loss { .. } => Some(s_n - 1),
             Wire::IterProfile { stage, .. }
             | Wire::Snapshot { stage, .. }
+            | Wire::SnapshotDelta { stage, .. }
             | Wire::Heartbeat { stage, .. }
             | Wire::Fatal { stage, .. } => Some(*stage),
             Wire::Stats(st) => Some(st.stage),
@@ -776,15 +777,25 @@ fn collect_iteration(
 
 /// Broadcast `Wire::Checkpoint` at an iteration boundary and collect one
 /// snapshot per stage (workers reply and keep running).
+///
+/// `base` is the broker's last saved, fully materialized version. Its
+/// iteration rides in the broadcast as the acknowledged base: a worker
+/// whose retained shadow matches it answers with `Wire::SnapshotDelta`
+/// (only changed values on the wire), which is materialized here against
+/// the base copy so the returned states are always full. Workers without
+/// a matching shadow (fresh or respawned generations) answer with full
+/// `Wire::Snapshot`s exactly as before.
 fn collect_checkpoint_states(
     gen: &mut Generation,
     iter: u32,
     s_n: usize,
+    base: Option<(u32, &[StageState])>,
     deadline: Option<Duration>,
     all_stats: &mut Vec<WorkerStats>,
 ) -> anyhow::Result<SnapOutcome> {
+    let base_iter = base.map(|(b, _)| b);
     for tx in &gen.fwd_tx {
-        let _ = tx.send(Wire::Checkpoint { iter });
+        let _ = tx.send(Wire::Checkpoint { iter, base: base_iter });
     }
     let mut states: Vec<Option<StageState>> = (0..s_n).map(|_| None).collect();
     let mut got = 0usize;
@@ -796,6 +807,23 @@ fn collect_checkpoint_states(
                     got += 1;
                 }
                 states[stage] = Some(state);
+            }
+            Event::Msg(Wire::SnapshotDelta { stage, base_iter: b, blob }) => {
+                let Some((ack, base_states)) = base else {
+                    anyhow::bail!(
+                        "checkpoint: stage {stage} sent a delta but no base was offered"
+                    )
+                };
+                anyhow::ensure!(
+                    b == ack && base_states.len() == s_n,
+                    "checkpoint: stage {stage} delta against version {b}, base is {ack}"
+                );
+                let full =
+                    checkpoint::apply_stage_delta(stage, iter, &base_states[stage], &blob)?;
+                if states[stage].is_none() {
+                    got += 1;
+                }
+                states[stage] = Some(full);
             }
             Event::Msg(Wire::Stats(st)) => {
                 all_stats.push(st);
@@ -1084,6 +1112,13 @@ pub fn run_with_listener(
 
     let mut it = 0usize;
     let mut last_ckpt: Option<usize> = None;
+    // Incremental checkpoints: the last saved version, kept materialized
+    // so worker deltas can be applied against it and the next on-disk
+    // layer diffed from it. None = the next save writes a base layer.
+    let mut ckpt_base: Option<(u32, Vec<StageState>)> = None;
+    // Delta layers chained since the last base (--checkpoint-rebase-every
+    // forces a fresh base once this count would reach N - 1).
+    let mut deltas_since_base = 0usize;
     while it < job.iters {
         let iter = it as u32;
         let mut death: Option<(usize, String)> = None;
@@ -1222,21 +1257,46 @@ pub fn run_with_listener(
             && last_ckpt != Some(it)
         {
             let g = gen.as_mut().expect("generation live");
-            match collect_checkpoint_states(g, iter, s_n, deadline, &mut all_stats)? {
+            let offered = ckpt_base.as_ref().map(|(b, st)| (*b, st.as_slice()));
+            match collect_checkpoint_states(g, iter, s_n, offered, deadline, &mut all_stats)? {
                 SnapOutcome::Died { stage, cause } => death = Some((stage, cause)),
                 SnapOutcome::Done(states) => {
-                    checkpoint::save(
+                    // Periodic re-basing bounds the reconstruction chain:
+                    // every `checkpoint_rebase_every`-th version is forced
+                    // to a full base layer (0 = never force).
+                    let rebase_due = job.checkpoint_rebase_every > 0
+                        && deltas_since_base + 1 >= job.checkpoint_rebase_every;
+                    let ckpt = Checkpoint {
+                        iter,
+                        corpus_batches: corpus.batches_drawn(),
+                        seed: job.seed,
+                        config: cfg.name.clone(),
+                        placement: devices.clone(),
+                        states,
+                    };
+                    let parent = if rebase_due {
+                        None
+                    } else {
+                        ckpt_base.as_ref().map(|(b, st)| (*b, st.as_slice()))
+                    };
+                    let info = checkpoint::save(
                         &job.checkpoint_dir,
-                        &Checkpoint {
-                            iter,
-                            corpus_batches: corpus.batches_drawn(),
-                            seed: job.seed,
-                            config: cfg.name.clone(),
-                            placement: devices.clone(),
-                            states,
-                        },
+                        &ckpt,
+                        parent,
                         job.keep_checkpoints,
                     )?;
+                    match info.kind {
+                        checkpoint::LayerKind::Base => deltas_since_base = 0,
+                        checkpoint::LayerKind::Delta { .. } => {
+                            deltas_since_base += 1;
+                            // Steady-state shrink accounting: what this
+                            // version cost on disk vs what a full snapshot
+                            // of the same states would have cost.
+                            report.checkpoint_bytes_delta += info.bytes_written as f64;
+                            report.checkpoint_bytes_full += info.bytes_full as f64;
+                        }
+                    }
+                    ckpt_base = Some((iter, ckpt.states));
                     last_ckpt = Some(it);
                 }
             }
@@ -1579,6 +1639,13 @@ pub fn run_with_listener(
                         ck.states.len() == s_n && (ck.iter as usize) <= it,
                         "checkpoint shape/iteration mismatch"
                     );
+                    // The restored version becomes the acknowledged base:
+                    // respawned workers hold no shadow and will answer the
+                    // next broadcast with full snapshots, but the broker
+                    // can still persist that version as a delta layer
+                    // against this materialized copy.
+                    ckpt_base = Some((ck.iter, ck.states.clone()));
+                    deltas_since_base = 0;
                     for (s, st) in ck.states.into_iter().enumerate() {
                         if !st.params.is_empty() {
                             init[s] = Some(st);
@@ -1586,7 +1653,11 @@ pub fn run_with_listener(
                     }
                     (ck.iter as usize, ck.corpus_batches)
                 }
-                None => (0, 0),
+                None => {
+                    ckpt_base = None;
+                    deltas_since_base = 0;
+                    (0, 0)
+                }
             }
         } else {
             (0, 0)

@@ -1,25 +1,42 @@
 //! Broker-side versioned checkpoints (fault tolerance, churn recovery).
 //!
 //! Every `--checkpoint-every` iterations the broker broadcasts
-//! `Wire::Checkpoint` at an iteration boundary, collects one `StageState`
-//! snapshot per stage, and persists them here: one directory per version
-//! (`ckpt-<iter>`), written to a dot-tmp path and atomically renamed into
-//! place, carrying a `manifest.json` with FNV-1a-64 checksums over every
-//! stage file. Tensor payloads travel through the same `OpData` codec as
-//! the wire hot path — checkpoints exercise the tested encode/decode path
-//! instead of inventing a second serializer.
+//! `Wire::Checkpoint` at an iteration boundary, collects one snapshot per
+//! stage (full, or a delta against the last saved version), and persists
+//! them here: one directory per version (`ckpt-<iter>`), written to a
+//! dot-tmp path and atomically renamed into place, carrying a
+//! `manifest.json` with FNV-1a-64 checksums over every stage file.
 //!
-//! `load_latest` walks versions newest-first and falls back past any
-//! version that fails integrity (truncated file, flipped byte, bad
-//! manifest), so a crash mid-write can never leave the run unrecoverable
-//! as long as one older version survives.
+//! Format 2 makes versions incremental: a version is either a **base**
+//! layer (self-contained dense tensors, exactly like format 1) or a
+//! **delta** layer whose manifest names a `parent` version and whose
+//! stage files store, per tensor, either a sparse lossless diff (changed
+//! indices + exact new f32 values, scattered onto the parent on load) or
+//! a dense replacement when more than half the elements changed. Tensor
+//! payloads travel through the same `OpData` codec as the wire hot path —
+//! checkpoints exercise the tested encode/decode path instead of
+//! inventing a second serializer (`CompressCfg::None` for dense layers,
+//! `CompressCfg::TopK` for the sparse diffs).
+//!
+//! `load_latest` walks versions newest-first, replays each candidate's
+//! delta chain down to its base, and falls back past any version whose
+//! chain fails integrity (truncated file, flipped byte, bad manifest,
+//! missing parent), so a crash mid-write or a corrupt middle layer can
+//! never leave the run unrecoverable as long as one older valid chain
+//! survives. `prune` reasons about chains, not directories: a base is
+//! never deleted while a retained delta still depends on it.
 
 use crate::opdag::data::{
     encode_parts_into, CompressCfg, OpData, OpDataHeader, OpDataKind,
 };
 use crate::util::json::{arr, n, ni, obj, s, Json};
 use crate::worker::StageState;
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
+
+/// Hard bound on delta-chain length walked at load/prune time: guards
+/// against manifest cycles or garbage parents in a corrupted directory.
+const MAX_CHAIN: usize = 512;
 
 /// Everything needed to resume a run: model state per stage plus the
 /// data-loader cursor and the RNG seed that reproduces the stream.
@@ -38,8 +55,33 @@ pub struct Checkpoint {
     /// Stage -> device placement when the checkpoint was taken
     /// (informational; recovery re-plans placement anyway).
     pub placement: Vec<usize>,
-    /// Per-stage params + optimizer moments, stage order.
+    /// Per-stage params + optimizer moments, stage order. Always the
+    /// fully materialized state — `save` does any delta encoding.
     pub states: Vec<StageState>,
+}
+
+/// How one on-disk version stores its stage tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Self-contained dense layer.
+    Base,
+    /// Stores only changes since the `parent` version; loading replays
+    /// the chain parent-first.
+    Delta { parent: u32 },
+}
+
+/// Outcome of one `save`: where the version landed, which layer kind was
+/// written, and the byte accounting the broker reports
+/// (`TrainReport.checkpoint_bytes_{full,delta}`).
+#[derive(Debug, Clone)]
+pub struct SaveInfo {
+    pub path: PathBuf,
+    pub kind: LayerKind,
+    /// Stage-file bytes actually written for this version.
+    pub bytes_written: u64,
+    /// Stage-file bytes a dense full snapshot of the same states would
+    /// have occupied (equals `bytes_written` for base layers).
+    pub bytes_full: u64,
 }
 
 /// FNV-1a 64 over a byte stream (no crypto needed — this guards against
@@ -57,49 +99,136 @@ fn version_dir(dir: &Path, iter: u32) -> PathBuf {
     dir.join(format!("ckpt-{iter:08}"))
 }
 
-/// Encode one stage: params / momentum / second as three length-prefixed
-/// `OpData` messages (dense f32, micro_batch = tensor index). Encoded
-/// from borrowed slices — no tensor copies on the way to disk.
-fn encode_stage(stage: usize, iter: u32, st: &StageState) -> Vec<u8> {
+fn tensor_hdr(stage: usize, iter: u32, idx: u32) -> OpDataHeader {
+    OpDataHeader {
+        src_op: stage,
+        dst_op: stage,
+        actual_user: stage,
+        kind: OpDataKind::Activation,
+        is_loss: false,
+        require_grad: false,
+        local_iter: iter,
+        micro_batch: idx,
+    }
+}
+
+/// Encode one stage as a self-contained base layer: params / momentum /
+/// second as three length-prefixed `OpData` messages (dense f32,
+/// micro_batch = tensor index). Encoded from borrowed slices — no tensor
+/// copies on the way to disk.
+pub fn encode_stage_full(stage: usize, iter: u32, st: &StageState) -> Vec<u8> {
     let mut out = Vec::new();
     let mut blob = Vec::new();
     for (idx, tensor) in [&st.params, &st.momentum, &st.second].into_iter().enumerate() {
-        let hdr = OpDataHeader {
-            src_op: stage,
-            dst_op: stage,
-            actual_user: stage,
-            kind: OpDataKind::Activation,
-            is_loss: false,
-            require_grad: false,
-            local_iter: iter,
-            micro_batch: idx as u32,
-        };
         blob.clear();
-        encode_parts_into(&hdr, &CompressCfg::None, tensor, &[], &[], &mut blob);
+        encode_parts_into(
+            &tensor_hdr(stage, iter, idx as u32),
+            &CompressCfg::None,
+            tensor,
+            &[],
+            &[],
+            &mut blob,
+        );
         out.extend_from_slice(&(blob.len() as u64).to_le_bytes());
         out.extend_from_slice(&blob);
     }
     out
 }
 
+/// Exact size `encode_stage_full` produces, without encoding: three
+/// 8-byte length prefixes, 48 B of `OpData` header/region framing per
+/// tensor, 4 B per element (kept honest by a unit test against the real
+/// encoder). This is the "what a full snapshot would have cost" side of
+/// the delta accounting.
+pub fn full_stage_bytes(st: &StageState) -> u64 {
+    let elems = (st.params.len() + st.momentum.len() + st.second.len()) as u64;
+    3 * (8 + 48) + 4 * elems
+}
+
+/// Encode one stage as a delta layer against `base`. Per tensor: a
+/// sparse lossless diff (`CompressCfg::TopK`, changed indices + the exact
+/// new f32 bit patterns) when strictly less than half the elements
+/// changed, otherwise — or when the tensor was resized — a dense
+/// replacement (`CompressCfg::None`). Bitwise-lossless either way, so
+/// restore determinism is identical to a full snapshot. Also the wire
+/// body of `Wire::SnapshotDelta`: workers diff against their retained
+/// shadow with this exact encoding and the broker persists/applies it.
+pub fn encode_stage_delta(
+    stage: usize,
+    iter: u32,
+    base: &StageState,
+    new: &StageState,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut blob = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    let mut idx: Vec<u32> = Vec::new();
+    let pairs = [
+        (&base.params, &new.params),
+        (&base.momentum, &new.momentum),
+        (&base.second, &new.second),
+    ];
+    for (ti, (b, t)) in pairs.into_iter().enumerate() {
+        let hdr = tensor_hdr(stage, iter, ti as u32);
+        blob.clear();
+        let mut sparse = b.len() == t.len();
+        if sparse {
+            vals.clear();
+            idx.clear();
+            for (i, (bv, nv)) in b.iter().zip(t.iter()).enumerate() {
+                if bv.to_bits() != nv.to_bits() {
+                    idx.push(i as u32);
+                    vals.push(*nv);
+                }
+            }
+            // 8 B per sparse entry (index + value) vs 4 B per dense
+            // element: sparse only pays off below half the tensor.
+            sparse = idx.len() * 2 < t.len();
+        }
+        if sparse {
+            let cfg = CompressCfg::TopK { ratio: 0.0, total_len: t.len() as u32 };
+            encode_parts_into(&hdr, &cfg, &vals, &idx, &[], &mut blob);
+        } else {
+            encode_parts_into(&hdr, &CompressCfg::None, t, &[], &[], &mut blob);
+        }
+        out.extend_from_slice(&(blob.len() as u64).to_le_bytes());
+        out.extend_from_slice(&blob);
+    }
+    out
+}
+
+/// Split one length-prefixed blob off the front of `buf`.
+fn split_blob<'a>(stage: usize, buf: &mut &'a [u8]) -> anyhow::Result<&'a [u8]> {
+    anyhow::ensure!(buf.len() >= 8, "stage {stage}: truncated checkpoint blob");
+    let len = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
+    *buf = &buf[8..];
+    anyhow::ensure!(buf.len() >= len, "stage {stage}: truncated checkpoint blob");
+    let (head, rest) = buf.split_at(len);
+    *buf = rest;
+    Ok(head)
+}
+
+fn check_ownership(stage: usize, iter: u32, idx: u32, msg: &OpData) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        msg.src_op == stage && msg.local_iter == iter && msg.micro_batch == idx,
+        "stage {stage}: checkpoint blob belongs elsewhere (op {}, iter {}, tensor {})",
+        msg.src_op,
+        msg.local_iter,
+        msg.micro_batch
+    );
+    Ok(())
+}
+
 fn decode_stage(stage: usize, iter: u32, mut buf: &[u8]) -> anyhow::Result<StageState> {
     let mut tensors: Vec<Vec<f32>> = Vec::with_capacity(3);
     for idx in 0..3u32 {
-        anyhow::ensure!(buf.len() >= 8, "stage {stage}: truncated checkpoint blob");
-        let len = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
-        buf = &buf[8..];
-        anyhow::ensure!(buf.len() >= len, "stage {stage}: truncated checkpoint blob");
-        let msg = OpData::decode(&buf[..len])?;
+        let msg = OpData::decode(split_blob(stage, &mut buf)?)?;
+        check_ownership(stage, iter, idx, &msg)?;
         anyhow::ensure!(
-            msg.src_op == stage && msg.local_iter == iter && msg.micro_batch == idx,
-            "stage {stage}: checkpoint blob belongs elsewhere \
-             (op {}, iter {}, tensor {})",
-            msg.src_op,
-            msg.local_iter,
-            msg.micro_batch
+            msg.compress == CompressCfg::None,
+            "stage {stage}: base layer tensor is not dense"
         );
         tensors.push(msg.payload);
-        buf = &buf[len..];
     }
     anyhow::ensure!(buf.is_empty(), "stage {stage}: trailing checkpoint bytes");
     let mut it = tensors.into_iter();
@@ -110,31 +239,135 @@ fn decode_stage(stage: usize, iter: u32, mut buf: &[u8]) -> anyhow::Result<Stage
     })
 }
 
-/// Persist a checkpoint version. Stage files + manifest are written into
-/// a dot-tmp directory first and atomically renamed into `ckpt-<iter>`,
-/// then versions beyond the newest `keep` are pruned. Returns the final
-/// version path.
-pub fn save(dir: &Path, ckpt: &Checkpoint, keep: usize) -> anyhow::Result<PathBuf> {
+/// Reconstruct one stage from a delta blob and the state it was diffed
+/// against: dense tensors replace, sparse tensors scatter the exact new
+/// values onto a clone of the base. Validates ownership, index bounds and
+/// ascending order, so a mismatched or corrupt layer fails loudly instead
+/// of silently blending states.
+pub fn apply_stage_delta(
+    stage: usize,
+    iter: u32,
+    base: &StageState,
+    mut buf: &[u8],
+) -> anyhow::Result<StageState> {
+    let base_tensors = [&base.params, &base.momentum, &base.second];
+    let mut tensors: Vec<Vec<f32>> = Vec::with_capacity(3);
+    for (idx, bt) in base_tensors.into_iter().enumerate() {
+        let msg = OpData::decode(split_blob(stage, &mut buf)?)?;
+        check_ownership(stage, iter, idx as u32, &msg)?;
+        match msg.compress {
+            CompressCfg::None => tensors.push(msg.payload),
+            CompressCfg::TopK { total_len, .. } => {
+                anyhow::ensure!(
+                    total_len as usize == bt.len(),
+                    "stage {stage}: delta expects base of {total_len} elements, \
+                     parent has {}",
+                    bt.len()
+                );
+                anyhow::ensure!(
+                    msg.indices.len() == msg.payload.len(),
+                    "stage {stage}: delta index/value count mismatch"
+                );
+                let mut t = bt.clone();
+                let mut prev: Option<u32> = None;
+                for (&i, &v) in msg.indices.iter().zip(&msg.payload) {
+                    anyhow::ensure!(
+                        (i as usize) < t.len() && prev.map_or(true, |p| i > p),
+                        "stage {stage}: bad delta index {i}"
+                    );
+                    t[i as usize] = v;
+                    prev = Some(i);
+                }
+                tensors.push(t);
+            }
+            other => anyhow::bail!("stage {stage}: unexpected delta encoding {other:?}"),
+        }
+    }
+    anyhow::ensure!(buf.is_empty(), "stage {stage}: trailing checkpoint bytes");
+    let mut it = tensors.into_iter();
+    Ok(StageState {
+        params: it.next().unwrap(),
+        momentum: it.next().unwrap(),
+        second: it.next().unwrap(),
+    })
+}
+
+/// Persist a checkpoint version. When `parent` names the previously saved
+/// version and its materialized states, the version is written as a delta
+/// layer storing only what changed since it (falling back to a base when
+/// the parent is missing on disk, the stage count changed, or the delta
+/// would not actually be smaller). Stage files + manifest are written
+/// into a dot-tmp directory first and atomically renamed into
+/// `ckpt-<iter>`, then versions beyond the newest `keep` are pruned
+/// (chain-aware). The manifest is written last: a version without one is
+/// never considered valid.
+pub fn save(
+    dir: &Path,
+    ckpt: &Checkpoint,
+    parent: Option<(u32, &[StageState])>,
+    keep: usize,
+) -> anyhow::Result<SaveInfo> {
     std::fs::create_dir_all(dir)?;
+    let bytes_full: u64 = ckpt.states.iter().map(full_stage_bytes).sum();
+    let full_blobs = |c: &Checkpoint| -> Vec<Vec<u8>> {
+        c.states
+            .iter()
+            .enumerate()
+            .map(|(stage, st)| encode_stage_full(stage, c.iter, st))
+            .collect()
+    };
+    let (kind, blobs) = match parent {
+        Some((pit, pstates))
+            if pstates.len() == ckpt.states.len()
+                && pit < ckpt.iter
+                && version_dir(dir, pit).exists() =>
+        {
+            let blobs: Vec<Vec<u8>> = ckpt
+                .states
+                .iter()
+                .zip(pstates)
+                .enumerate()
+                .map(|(stage, (st, base))| {
+                    encode_stage_delta(stage, ckpt.iter, base, st)
+                })
+                .collect();
+            let delta_bytes: u64 = blobs.iter().map(|b| b.len() as u64).sum();
+            if delta_bytes < bytes_full {
+                (LayerKind::Delta { parent: pit }, blobs)
+            } else {
+                (LayerKind::Base, full_blobs(ckpt))
+            }
+        }
+        _ => (LayerKind::Base, full_blobs(ckpt)),
+    };
+
     let tmp = dir.join(format!(".tmp-ckpt-{:08}", ckpt.iter));
     if tmp.exists() {
         std::fs::remove_dir_all(&tmp)?;
     }
     std::fs::create_dir_all(&tmp)?;
 
+    let mut bytes_written = 0u64;
     let mut stage_entries: Vec<Json> = Vec::new();
-    for (stage, st) in ckpt.states.iter().enumerate() {
-        let bytes = encode_stage(stage, ckpt.iter, st);
+    for (stage, bytes) in blobs.iter().enumerate() {
         let file = format!("stage-{stage}.bin");
-        std::fs::write(tmp.join(&file), &bytes)?;
+        std::fs::write(tmp.join(&file), bytes)?;
+        bytes_written += bytes.len() as u64;
         stage_entries.push(obj(vec![
             ("file", s(&file)),
             ("bytes", ni(bytes.len())),
-            ("fnv64", s(&format!("{:016x}", fnv1a64(&bytes)))),
+            ("fnv64", s(&format!("{:016x}", fnv1a64(bytes)))),
         ]));
     }
-    let manifest = obj(vec![
-        ("format", ni(1)),
+    let mut fields = vec![
+        ("format", ni(2)),
+        (
+            "kind",
+            s(match kind {
+                LayerKind::Base => "base",
+                LayerKind::Delta { .. } => "delta",
+            }),
+        ),
         ("iter", ni(ckpt.iter as usize)),
         ("corpus_batches", ni(ckpt.corpus_batches as usize)),
         ("seed", s(&format!("{:016x}", ckpt.seed))),
@@ -145,9 +378,11 @@ pub fn save(dir: &Path, ckpt: &Checkpoint, keep: usize) -> anyhow::Result<PathBu
         ),
         ("stages", arr(stage_entries)),
         ("n_stages", n(ckpt.states.len() as f64)),
-    ]);
-    // Manifest last: a version without one is never considered valid.
-    std::fs::write(tmp.join("manifest.json"), manifest.dump_pretty() + "\n")?;
+    ];
+    if let LayerKind::Delta { parent } = kind {
+        fields.push(("parent", ni(parent as usize)));
+    }
+    std::fs::write(tmp.join("manifest.json"), obj(fields).dump_pretty() + "\n")?;
 
     let fin = version_dir(dir, ckpt.iter);
     if fin.exists() {
@@ -155,7 +390,7 @@ pub fn save(dir: &Path, ckpt: &Checkpoint, keep: usize) -> anyhow::Result<PathBu
     }
     std::fs::rename(&tmp, &fin)?;
     prune(dir, keep)?;
-    Ok(fin)
+    Ok(SaveInfo { path: fin, kind, bytes_written, bytes_full })
 }
 
 /// Version iterations present on disk, oldest first (whether valid or not).
@@ -176,24 +411,73 @@ pub fn versions(dir: &Path) -> Vec<u32> {
     v
 }
 
-/// Drop all but the newest `keep` versions (0 = keep everything).
+/// Parent iteration a version's manifest declares, if it is a delta layer
+/// (None for base layers and unreadable manifests).
+fn layer_parent(dir: &Path, iter: u32) -> Option<u32> {
+    let m = Json::parse_file(&version_dir(dir, iter).join("manifest.json")).ok()?;
+    if m.get("kind").as_str() != Some("delta") {
+        return None;
+    }
+    m.get("parent").as_usize().map(|p| p as u32)
+}
+
+/// Drop old versions, keeping the newest `keep` (0 = keep everything)
+/// **plus every chain ancestor a retained delta layer still depends on**:
+/// retention counts versions, reachability decides deletion, so a base is
+/// never removed while a kept delta needs it for reconstruction.
 pub fn prune(dir: &Path, keep: usize) -> anyhow::Result<()> {
     if keep == 0 {
         return Ok(());
     }
     let vs = versions(dir);
-    for &iter in vs.iter().rev().skip(keep) {
-        let _ = std::fs::remove_dir_all(version_dir(dir, iter));
+    if vs.len() <= keep {
+        return Ok(());
+    }
+    let mut marked: BTreeSet<u32> = vs.iter().rev().take(keep).copied().collect();
+    for &v in vs.iter().rev().take(keep) {
+        let mut cur = v;
+        for _ in 0..MAX_CHAIN {
+            match layer_parent(dir, cur) {
+                Some(p) if marked.insert(p) => cur = p,
+                _ => break,
+            }
+        }
+    }
+    for &iter in &vs {
+        if !marked.contains(&iter) {
+            let _ = std::fs::remove_dir_all(version_dir(dir, iter));
+        }
     }
     Ok(())
 }
 
-/// Validate + load one version directory.
-fn load_version(dir: &Path, iter: u32) -> anyhow::Result<Checkpoint> {
+/// One manifest-validated on-disk layer: metadata plus checksummed stage
+/// blobs, not yet decoded.
+struct Layer {
+    iter: u32,
+    kind: LayerKind,
+    corpus_batches: u64,
+    seed: u64,
+    config: String,
+    placement: Vec<usize>,
+    stage_blobs: Vec<Vec<u8>>,
+}
+
+fn read_layer(dir: &Path, iter: u32) -> anyhow::Result<Layer> {
     let vdir = version_dir(dir, iter);
     let m = Json::parse_file(&vdir.join("manifest.json"))?;
-    anyhow::ensure!(m.req_usize("format")? == 1, "unsupported checkpoint format");
+    let format = m.req_usize("format")?;
+    anyhow::ensure!(
+        format == 1 || format == 2,
+        "unsupported checkpoint format {format}"
+    );
     anyhow::ensure!(m.req_usize("iter")? as u32 == iter, "manifest iter mismatch");
+    // Format 1 predates layer kinds: every version was a base.
+    let kind = match if format == 1 { "base" } else { m.req_str("kind")? } {
+        "base" => LayerKind::Base,
+        "delta" => LayerKind::Delta { parent: m.req_usize("parent")? as u32 },
+        k => anyhow::bail!("unknown layer kind `{k}`"),
+    };
     let corpus_batches = m.req_usize("corpus_batches")? as u64;
     let seed = u64::from_str_radix(m.req_str("seed")?, 16)
         .map_err(|_| anyhow::anyhow!("bad seed field"))?;
@@ -203,7 +487,7 @@ fn load_version(dir: &Path, iter: u32) -> anyhow::Result<Checkpoint> {
         .iter()
         .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad placement entry")))
         .collect::<anyhow::Result<Vec<usize>>>()?;
-    let mut states = Vec::new();
+    let mut stage_blobs = Vec::new();
     for (stage, entry) in m.req_arr("stages")?.iter().enumerate() {
         let file = entry.req_str("file")?;
         let want_bytes = entry.req_usize("bytes")?;
@@ -219,10 +503,70 @@ fn load_version(dir: &Path, iter: u32) -> anyhow::Result<Checkpoint> {
             got == want_fnv,
             "stage {stage}: checksum mismatch ({got} != {want_fnv})"
         );
-        states.push(decode_stage(stage, iter, &bytes)?);
+        stage_blobs.push(bytes);
     }
-    anyhow::ensure!(!states.is_empty(), "checkpoint has no stages");
-    Ok(Checkpoint { iter, corpus_batches, seed, config, placement, states })
+    anyhow::ensure!(!stage_blobs.is_empty(), "checkpoint has no stages");
+    Ok(Layer { iter, kind, corpus_batches, seed, config, placement, stage_blobs })
+}
+
+/// Validate + load one version, replaying its delta chain parent-first
+/// from the base layer. Any missing or corrupt layer on the chain fails
+/// the whole version (the caller falls back to an older one).
+fn load_version(dir: &Path, iter: u32) -> anyhow::Result<Checkpoint> {
+    // Collect the leaf-to-base chain of validated layers.
+    let mut chain: Vec<Layer> = Vec::new();
+    let mut cur = iter;
+    loop {
+        let layer = read_layer(dir, cur)?;
+        let kind = layer.kind;
+        chain.push(layer);
+        match kind {
+            LayerKind::Base => break,
+            LayerKind::Delta { parent } => {
+                anyhow::ensure!(
+                    parent < cur,
+                    "ckpt-{cur:08}: delta parent {parent} is not older"
+                );
+                anyhow::ensure!(
+                    chain.len() < MAX_CHAIN,
+                    "ckpt-{iter:08}: delta chain too long"
+                );
+                cur = parent;
+            }
+        }
+    }
+    let base = chain.pop().unwrap();
+    let mut states = base
+        .stage_blobs
+        .iter()
+        .enumerate()
+        .map(|(stage, b)| decode_stage(stage, base.iter, b))
+        .collect::<anyhow::Result<Vec<StageState>>>()?;
+    // Replay deltas oldest-first (chain is leaf..=child-of-base).
+    for layer in chain.iter().rev() {
+        anyhow::ensure!(
+            layer.stage_blobs.len() == states.len(),
+            "ckpt-{:08}: stage count changed mid-chain",
+            layer.iter
+        );
+        let mut next = Vec::with_capacity(states.len());
+        for (stage, (blob, base_st)) in
+            layer.stage_blobs.iter().zip(&states).enumerate()
+        {
+            next.push(apply_stage_delta(stage, layer.iter, base_st, blob)?);
+        }
+        states = next;
+    }
+    // Run metadata (loader cursor, placement) comes from the leaf.
+    let leaf = chain.first().unwrap_or(&base);
+    Ok(Checkpoint {
+        iter,
+        corpus_batches: leaf.corpus_batches,
+        seed: leaf.seed,
+        config: leaf.config.clone(),
+        placement: leaf.placement.clone(),
+        states,
+    })
 }
 
 /// Load the newest *valid* checkpoint, walking past corrupt versions
@@ -276,12 +620,38 @@ mod tests {
             placement: vec![0, 1, 2, 3],
             states: (0..4)
                 .map(|st| StageState {
-                    params: (0..16).map(|i| scale * (st as f32 + i as f32)).collect(),
-                    momentum: vec![0.5 * scale; 16],
-                    second: if st == 0 { Vec::new() } else { vec![scale; 16] },
+                    params: (0..128).map(|i| scale * (st as f32 + i as f32)).collect(),
+                    momentum: vec![0.5 * scale; 128],
+                    second: if st == 0 { Vec::new() } else { vec![scale; 128] },
                 })
                 .collect(),
         }
+    }
+
+    /// `base` advanced to `iter` with `touched` params changed per stage.
+    fn bump(base: &Checkpoint, iter: u32, touched: usize) -> Checkpoint {
+        let mut c = base.clone();
+        c.iter = iter;
+        c.corpus_batches = iter as u64 * 2;
+        for st in &mut c.states {
+            for v in st.params.iter_mut().take(touched) {
+                *v += 0.125 * iter as f32;
+            }
+        }
+        c
+    }
+
+    fn save_chain(dir: &Path, keep: usize) -> Vec<Checkpoint> {
+        // base 2, deltas 4 and 6 each chained on the previous version.
+        let c2 = ckpt(2, 1.0);
+        let c4 = bump(&c2, 4, 3);
+        let c6 = bump(&c4, 6, 3);
+        save(dir, &c2, None, keep).unwrap();
+        let i4 = save(dir, &c4, Some((2, &c2.states)), keep).unwrap();
+        let i6 = save(dir, &c6, Some((4, &c4.states)), keep).unwrap();
+        assert_eq!(i4.kind, LayerKind::Delta { parent: 2 });
+        assert_eq!(i6.kind, LayerKind::Delta { parent: 4 });
+        vec![c2, c4, c6]
     }
 
     #[test]
@@ -292,11 +662,25 @@ mod tests {
     }
 
     #[test]
+    fn full_stage_bytes_matches_encoder() {
+        let c = ckpt(3, 1.0);
+        for (stage, st) in c.states.iter().enumerate() {
+            assert_eq!(
+                encode_stage_full(stage, 3, st).len() as u64,
+                full_stage_bytes(st),
+                "size formula drifted from the encoder (stage {stage})"
+            );
+        }
+    }
+
+    #[test]
     fn save_load_roundtrip_exact() {
         let dir = tmpdir("roundtrip");
         let c = ckpt(4, 1.25);
-        let path = save(&dir, &c, 3).unwrap();
-        assert!(path.ends_with("ckpt-00000004"));
+        let info = save(&dir, &c, None, 3).unwrap();
+        assert!(info.path.ends_with("ckpt-00000004"));
+        assert_eq!(info.kind, LayerKind::Base);
+        assert_eq!(info.bytes_written, info.bytes_full);
         let back = load_latest(&dir).unwrap().expect("checkpoint present");
         assert_eq!(back.iter, 4);
         assert_eq!(back.corpus_batches, 8);
@@ -313,10 +697,84 @@ mod tests {
     }
 
     #[test]
+    fn delta_roundtrip_is_bitwise_and_small() {
+        let dir = tmpdir("delta");
+        let cs = save_chain(&dir, 0);
+        let info = save(&dir, &bump(&cs[2], 8, 3), Some((6, &cs[2].states)), 0).unwrap();
+        // Sparse deltas: a 3-of-16-params change costs far less than the
+        // dense snapshot (the ≥4× acceptance bar, with margin).
+        assert!(
+            info.bytes_written * 4 < info.bytes_full,
+            "{} written vs {} full",
+            info.bytes_written,
+            info.bytes_full
+        );
+        // Chain replay reconstructs the exact bit patterns.
+        let want = bump(&cs[2], 8, 3);
+        let back = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(back.iter, 8);
+        assert_eq!(back.corpus_batches, 16);
+        for (a, b) in want.states.iter().zip(&back.states) {
+            assert_eq!(a, b, "delta restore must be bitwise-equal");
+        }
+        // Every intermediate version is loadable too.
+        assert_eq!(
+            load_latest_at_or_before(&dir, 6).unwrap().unwrap().states,
+            cs[2].states
+        );
+        assert_eq!(
+            load_latest_at_or_before(&dir, 4).unwrap().unwrap().states,
+            cs[1].states
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dense_rewrite_degrades_to_base_layer() {
+        let dir = tmpdir("dense");
+        let c2 = ckpt(2, 1.0);
+        save(&dir, &c2, None, 0).unwrap();
+        // Every element changes: a delta would not be smaller, so save
+        // writes a self-contained base instead of a pointless chain link.
+        let c4 = ckpt(4, 2.0);
+        let info = save(&dir, &c4, Some((2, &c2.states)), 0).unwrap();
+        assert_eq!(info.kind, LayerKind::Base);
+        assert_eq!(load_latest(&dir).unwrap().unwrap().states, c4.states);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_parent_on_disk_forces_base() {
+        let dir = tmpdir("noparent");
+        let c2 = ckpt(2, 1.0);
+        // Parent states offered but ckpt-2 was never written.
+        let info = save(&dir, &bump(&c2, 4, 2), Some((2, &c2.states)), 0).unwrap();
+        assert_eq!(info.kind, LayerKind::Base);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_middle_delta_falls_back_to_chain_prefix() {
+        let dir = tmpdir("middelta");
+        let cs = save_chain(&dir, 0);
+        // Flip a byte in the *middle* delta layer: versions 6 (whose chain
+        // crosses it) and 4 (itself) are dead; the base at 2 must load.
+        let victim = version_dir(&dir, 4).join("stage-1.bin");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+        let back = load_latest(&dir).unwrap().expect("base chain prefix survives");
+        assert_eq!(back.iter, 2);
+        assert_eq!(back.states, cs[0].states);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn corrupt_latest_falls_back_to_previous() {
         let dir = tmpdir("fallback");
-        save(&dir, &ckpt(2, 1.0), 3).unwrap();
-        save(&dir, &ckpt(4, 2.0), 3).unwrap();
+        save(&dir, &ckpt(2, 1.0), None, 3).unwrap();
+        save(&dir, &ckpt(4, 2.0), None, 3).unwrap();
         assert_eq!(load_latest(&dir).unwrap().unwrap().iter, 4);
         // Flip one byte in the newest version's last stage file.
         let victim = version_dir(&dir, 4).join("stage-3.bin");
@@ -338,8 +796,8 @@ mod tests {
         // A stale ckpt-6 from a previous completed run must not shadow
         // the restorable ckpt-2 when the current run is only at iter 3.
         let dir = tmpdir("stale");
-        save(&dir, &ckpt(2, 1.0), 3).unwrap();
-        save(&dir, &ckpt(6, 3.0), 3).unwrap();
+        save(&dir, &ckpt(2, 1.0), None, 3).unwrap();
+        save(&dir, &ckpt(6, 3.0), None, 3).unwrap();
         assert_eq!(load_latest(&dir).unwrap().unwrap().iter, 6);
         let back = load_latest_at_or_before(&dir, 3).unwrap().unwrap();
         assert_eq!(back.iter, 2);
@@ -350,7 +808,7 @@ mod tests {
     #[test]
     fn truncated_stage_file_is_rejected() {
         let dir = tmpdir("trunc");
-        save(&dir, &ckpt(1, 1.0), 3).unwrap();
+        save(&dir, &ckpt(1, 1.0), None, 3).unwrap();
         let victim = version_dir(&dir, 1).join("stage-0.bin");
         let bytes = std::fs::read(&victim).unwrap();
         std::fs::write(&victim, &bytes[..bytes.len() - 5]).unwrap();
@@ -362,12 +820,70 @@ mod tests {
     fn prune_keeps_newest_versions() {
         let dir = tmpdir("prune");
         for it in [2u32, 4, 6, 8] {
-            save(&dir, &ckpt(it, it as f32), 3).unwrap();
+            save(&dir, &ckpt(it, it as f32), None, 3).unwrap();
         }
         assert_eq!(versions(&dir), vec![4, 6, 8], "keep=3 prunes the oldest");
-        save(&dir, &ckpt(10, 1.0), 2).unwrap();
+        save(&dir, &ckpt(10, 1.0), None, 2).unwrap();
         assert_eq!(versions(&dir), vec![8, 10]);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_never_drops_a_base_a_kept_delta_needs() {
+        let dir = tmpdir("prunechain");
+        let cs = save_chain(&dir, 0); // base 2 <- delta 4 <- delta 6
+        // keep=1 retains only version 6 by count, but its whole ancestry
+        // must survive or 6 is unloadable.
+        prune(&dir, 1).unwrap();
+        assert_eq!(versions(&dir), vec![2, 4, 6], "chain ancestors are pinned");
+        assert_eq!(load_latest(&dir).unwrap().unwrap().states, cs[2].states);
+        // A new base at 8 releases the old chain: keep=1 now really
+        // drops 2/4/6.
+        save(&dir, &ckpt(8, 9.0), None, 0).unwrap();
+        prune(&dir, 1).unwrap();
+        assert_eq!(versions(&dir), vec![8]);
+        assert_eq!(load_latest(&dir).unwrap().unwrap().iter, 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn long_chain_replays_and_rebase_unpins_it() {
+        let dir = tmpdir("longchain");
+        let mut prev = ckpt(1, 1.0);
+        save(&dir, &prev, None, 0).unwrap();
+        for it in 2..=7u32 {
+            let next = bump(&prev, it, 2);
+            let info = save(&dir, &next, Some((prev.iter, &prev.states)), 0).unwrap();
+            assert_eq!(info.kind, LayerKind::Delta { parent: prev.iter });
+            prev = next;
+        }
+        let back = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(back.iter, 7);
+        assert_eq!(back.states, prev.states);
+        // A rebase (forced base layer) caps the chain: pruning afterwards
+        // keeps only the new self-contained version.
+        let rebased = bump(&prev, 8, 2);
+        let info = save(&dir, &rebased, None, 0).unwrap();
+        assert_eq!(info.kind, LayerKind::Base);
+        prune(&dir, 1).unwrap();
+        assert_eq!(versions(&dir), vec![8]);
+        assert_eq!(load_latest(&dir).unwrap().unwrap().states, rebased.states);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn apply_stage_delta_validates() {
+        let a = StageState { params: vec![1.0; 8], momentum: vec![], second: vec![] };
+        let mut b = a.clone();
+        b.params[3] = 9.0;
+        let blob = encode_stage_delta(0, 5, &a, &b);
+        assert_eq!(apply_stage_delta(0, 5, &a, &blob).unwrap(), b);
+        // Wrong stage, wrong iter, wrong base shape all fail loudly.
+        assert!(apply_stage_delta(1, 5, &a, &blob).is_err());
+        assert!(apply_stage_delta(0, 6, &a, &blob).is_err());
+        let short = StageState { params: vec![1.0; 2], momentum: vec![], second: vec![] };
+        assert!(apply_stage_delta(0, 5, &short, &blob).is_err());
+        assert!(apply_stage_delta(0, 5, &a, &blob[..blob.len() - 3]).is_err());
     }
 
     #[test]

@@ -303,8 +303,8 @@ pub fn simulate(args: &Args) -> Result<()> {
 }
 
 /// `fusionllm simulate --kill-node N [--kill-at-iter K] [--steps I]
-///  [--replan auto] [--checkpoint-every E] [--loss-tol T]` — the churn
-/// smoke / CI gate.
+///  [--replan auto] [--checkpoint-every E] [--checkpoint-rebase-every R]
+///  [--min-ckpt-shrink X] [--loss-tol T]` — the churn smoke / CI gate.
 ///
 /// Runs two artifact-free (Null-backend) training jobs through the real
 /// broker: an uninterrupted reference, and one where device N's worker
@@ -312,7 +312,12 @@ pub fn simulate(args: &Args) -> Result<()> {
 /// requested iterations, (b) record exactly one recovery, and (c) end
 /// with a loss trajectory within `--loss-tol` of the reference — the
 /// checkpoint restore + data-loader rewind make the re-run deterministic.
-/// Nonzero exit on any violation.
+/// With `--min-ckpt-shrink X` the run additionally gates the incremental
+/// checkpoint pipeline: at least one delta layer must have been persisted
+/// and the cumulative counterfactual full-snapshot bytes must be ≥ X× the
+/// delta bytes actually written (read from
+/// `TrainReport.checkpoint_bytes_{full,delta}`). Nonzero exit on any
+/// violation.
 fn simulate_churn(args: &Args) -> Result<()> {
     let kill_dev: usize = args
         .opt_str("kill-node")
@@ -377,6 +382,7 @@ fn simulate_churn(args: &Args) -> Result<()> {
         pace_s: parsed.pace_s,
         data_plane: parsed.data_plane,
         checkpoint_every: args.usize("checkpoint-every", 2),
+        checkpoint_rebase_every: parsed.checkpoint_rebase_every,
         checkpoint_dir: ckpt_dir.clone(),
         ..Job::default()
     };
@@ -443,6 +449,39 @@ fn simulate_churn(args: &Args) -> Result<()> {
         fmt_secs(r.replan_s),
         fmt_secs(r.restore_s)
     );
+    if churn.checkpoint_bytes_delta > 0.0 {
+        println!(
+            "incremental checkpoints: {} delta bytes vs {} counterfactual full bytes \
+             ({:.1}x shrink)",
+            fmt_bytes(churn.checkpoint_bytes_delta),
+            fmt_bytes(churn.checkpoint_bytes_full),
+            churn.checkpoint_bytes_full / churn.checkpoint_bytes_delta
+        );
+    }
+    // Incremental-checkpoint gate: the report counters accumulate only
+    // over versions persisted as delta layers, so any nonzero delta count
+    // proves the wire/disk delta path actually ran. The checkpoint dir is
+    // already deleted above — gate on the report, never the filesystem.
+    let min_shrink = args.f64("min-ckpt-shrink", 0.0);
+    if min_shrink > 0.0 {
+        anyhow::ensure!(
+            churn.checkpoint_bytes_delta > 0.0,
+            "checkpoint gate: no delta layers were persisted \
+             (checkpoint_bytes_delta = 0)"
+        );
+        anyhow::ensure!(
+            churn.checkpoint_bytes_delta < churn.checkpoint_bytes_full,
+            "checkpoint gate: delta bytes {:.0} not smaller than full bytes {:.0}",
+            churn.checkpoint_bytes_delta,
+            churn.checkpoint_bytes_full
+        );
+        let shrink = churn.checkpoint_bytes_full / churn.checkpoint_bytes_delta;
+        anyhow::ensure!(
+            shrink >= min_shrink,
+            "checkpoint gate: delta shrink {shrink:.2}x < required {min_shrink}x"
+        );
+        println!("checkpoint gate OK ({shrink:.2}x >= {min_shrink}x)");
+    }
     Ok(())
 }
 
@@ -516,6 +555,7 @@ fn simulate_churn_trace(args: &Args) -> Result<()> {
         pace_s: parsed.pace_s,
         data_plane: parsed.data_plane,
         checkpoint_every: args.usize("checkpoint-every", 2),
+        checkpoint_rebase_every: parsed.checkpoint_rebase_every,
         checkpoint_dir: ckpt_dir.clone(),
         ..Job::default()
     };

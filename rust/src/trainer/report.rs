@@ -157,6 +157,14 @@ pub struct TrainReport {
     /// Stage payload bytes that traveled direct worker↔worker peer links
     /// (non-zero only under `--data-plane mesh`).
     pub peer_packet_bytes: f64,
+    /// Incremental checkpointing: cumulative bytes a full (dense) snapshot
+    /// of each delta-persisted version would have cost on disk. Base
+    /// layers are excluded from both counters, so full/delta is the
+    /// steady-state shrink of the delta encoding itself.
+    pub checkpoint_bytes_full: f64,
+    /// Cumulative bytes actually written for those delta-persisted
+    /// versions (stage delta layers; always < `checkpoint_bytes_full`).
+    pub checkpoint_bytes_delta: f64,
     /// Stage -> device placement used (final placement after any replans).
     pub placement: Vec<usize>,
     /// Straggler-driven re-partitionings, in iteration order.
@@ -198,6 +206,8 @@ impl TrainReport {
             ("wire_shrink", n(self.wire_shrink)),
             ("relayed_packet_bytes", n(self.relayed_packet_bytes)),
             ("peer_packet_bytes", n(self.peer_packet_bytes)),
+            ("checkpoint_bytes_full", n(self.checkpoint_bytes_full)),
+            ("checkpoint_bytes_delta", n(self.checkpoint_bytes_delta)),
             (
                 "placement",
                 arr(self.placement.iter().map(|&p| ni(p)).collect()),
@@ -254,6 +264,8 @@ mod tests {
             wire_shrink: 33.3,
             relayed_packet_bytes: 0.0,
             peer_packet_bytes: 4096.0,
+            checkpoint_bytes_full: 17072.0,
+            checkpoint_bytes_delta: 768.0,
             placement: vec![0, 1, 2, 3],
             replans: vec![ReplanEvent {
                 iter: 2,
@@ -299,6 +311,8 @@ mod tests {
         assert_eq!(j.get("losses").as_arr().unwrap().len(), 3);
         assert_eq!(j.get("relayed_packet_bytes").as_f64().unwrap(), 0.0);
         assert_eq!(j.get("peer_packet_bytes").as_f64().unwrap(), 4096.0);
+        assert_eq!(j.get("checkpoint_bytes_full").as_f64().unwrap(), 17072.0);
+        assert_eq!(j.get("checkpoint_bytes_delta").as_f64().unwrap(), 768.0);
         let reps = j.get("replans").as_arr().unwrap();
         assert_eq!(reps.len(), 1);
         assert_eq!(reps[0].get("origin").as_str().unwrap(), "swap");

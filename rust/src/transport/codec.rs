@@ -285,9 +285,17 @@ pub fn encode_wire(w: &Wire, out: &mut Vec<u8>) -> FrameKind {
             put_u32(out, *iter);
             FrameKind::Heartbeat
         }
-        Wire::Checkpoint { iter } => {
+        Wire::Checkpoint { iter, base } => {
             put_u32(out, *iter);
+            put_opt_usize(out, base.map(|b| b as usize));
             FrameKind::Checkpoint
+        }
+        Wire::SnapshotDelta { stage, base_iter, blob } => {
+            put_usize(out, *stage);
+            put_u32(out, *base_iter);
+            put_u64(out, blob.len() as u64);
+            out.extend_from_slice(blob);
+            FrameKind::SnapshotDelta
         }
         Wire::Stats(st) => {
             put_usize(out, st.stage);
@@ -348,7 +356,18 @@ pub fn decode_wire(kind: FrameKind, body: &[u8]) -> anyhow::Result<Wire> {
             state: read_state(&mut rd)?,
         },
         FrameKind::Heartbeat => Wire::Heartbeat { stage: rd.usize()?, iter: rd.u32()? },
-        FrameKind::Checkpoint => Wire::Checkpoint { iter: rd.u32()? },
+        FrameKind::Checkpoint => Wire::Checkpoint {
+            iter: rd.u32()?,
+            base: rd.opt_usize()?.map(|b| b as u32),
+        },
+        FrameKind::SnapshotDelta => Wire::SnapshotDelta {
+            stage: rd.usize()?,
+            base_iter: rd.u32()?,
+            blob: {
+                let n = rd.u64()? as usize;
+                rd.take(n)?.to_vec()
+            },
+        },
         FrameKind::Stats => Wire::Stats(WorkerStats {
             stage: rd.usize()?,
             device: rd.usize()?,
@@ -679,7 +698,9 @@ mod tests {
                 },
             },
             Wire::Heartbeat { stage: 3, iter: 11 },
-            Wire::Checkpoint { iter: 4 },
+            Wire::Checkpoint { iter: 4, base: None },
+            Wire::Checkpoint { iter: 6, base: Some(4) },
+            Wire::SnapshotDelta { stage: 2, base_iter: 4, blob: vec![0x5A; 23] },
             Wire::Stats(WorkerStats {
                 stage: 1,
                 device: 9,

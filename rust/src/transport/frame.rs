@@ -96,6 +96,9 @@ pub enum FrameKind {
     /// frame's lane (body = u32 LE count). Never crosses the broker and
     /// never surfaces as a `Wire` message — the mesh demux consumes it.
     Credit,
+    /// Incremental checkpoint reply: a stage's lossless delta against the
+    /// last acknowledged checkpoint version instead of a full `Snapshot`.
+    SnapshotDelta,
 }
 
 impl FrameKind {
@@ -117,6 +120,7 @@ impl FrameKind {
             FrameKind::Fatal => 14,
             FrameKind::Stop => 15,
             FrameKind::Credit => 16,
+            FrameKind::SnapshotDelta => 17,
         }
     }
 
@@ -138,6 +142,7 @@ impl FrameKind {
             14 => FrameKind::Fatal,
             15 => FrameKind::Stop,
             16 => FrameKind::Credit,
+            17 => FrameKind::SnapshotDelta,
             other => anyhow::bail!("unknown frame kind {other}"),
         })
     }

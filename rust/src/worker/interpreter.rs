@@ -505,11 +505,40 @@ fn recv_lane(
 
 /// Answer a broadcast `Wire::Checkpoint` with this stage's state (empty
 /// for backends without portable state) and keep running.
-fn checkpoint_reply<B: StageBackend>(links: &StageLinks, backend: &B) {
+///
+/// Incremental path: when the broker's acknowledged base (`base`) matches
+/// the version of the locally retained shadow copy, only the lossless
+/// delta against that shadow goes on the wire (`Wire::SnapshotDelta`,
+/// the exact `checkpoint::encode_stage_delta` stage-layer encoding).
+/// Any mismatch — first checkpoint, respawned worker with no shadow, or
+/// a broker that re-based — falls back to a full `Wire::Snapshot`.
+/// Either way the shadow advances to this version afterwards.
+fn checkpoint_reply<B: StageBackend>(
+    links: &StageLinks,
+    backend: &B,
+    iter: u32,
+    base: Option<u32>,
+    shadow: &mut Option<(u32, StageState)>,
+) {
     let state = backend.snapshot().unwrap_or_default();
-    let _ = links
-        .tx_driver
-        .send(Wire::Snapshot { stage: links.stage, state });
+    let delta = match (base, shadow.as_ref()) {
+        (Some(b), Some((shadow_iter, shadow_state))) if *shadow_iter == b => {
+            Some(Wire::SnapshotDelta {
+                stage: links.stage,
+                base_iter: b,
+                blob: crate::checkpoint::encode_stage_delta(
+                    links.stage,
+                    iter,
+                    shadow_state,
+                    &state,
+                ),
+            })
+        }
+        _ => None,
+    };
+    let msg = delta.unwrap_or_else(|| Wire::Snapshot { stage: links.stage, state: state.clone() });
+    let _ = links.tx_driver.send(msg);
+    *shadow = Some((iter, state));
 }
 
 /// A pipeline neighbor vanished mid-run (send failed or its channel
@@ -525,6 +554,7 @@ fn quiesce<B: StageBackend>(
     hb: Option<Duration>,
     iter: u32,
     pending: &mut VecDeque<LaneMsg>,
+    shadow: &mut Option<(u32, StageState)>,
 ) -> anyhow::Result<RunOutcome> {
     let Some(int) = hb else {
         anyhow::bail!("stage {}: pipeline neighbor vanished mid-run", links.stage)
@@ -542,7 +572,9 @@ fn quiesce<B: StageBackend>(
         };
         match msg {
             Some(LaneMsg::Wire(Wire::Stop)) => return stop(links, backend, stats),
-            Some(LaneMsg::Wire(Wire::Checkpoint { .. })) => checkpoint_reply(links, backend),
+            Some(LaneMsg::Wire(Wire::Checkpoint { iter: ckpt_iter, base })) => {
+                checkpoint_reply(links, backend, ckpt_iter, base, shadow)
+            }
             Some(_) => {} // data for the broken pipeline — drop
             None => {
                 let _ = links
@@ -668,6 +700,11 @@ pub fn run_schedule_with<B: StageBackend>(
     // Forward-lane messages popped early while scanning for control
     // messages during a blocked backward/label receive.
     let mut pending: VecDeque<LaneMsg> = VecDeque::new();
+    // Shadow copy of the last checkpointed state: (version, state). While
+    // the broker acknowledges this version as its base, checkpoint replies
+    // ship only the delta against it. A fresh generation starts with no
+    // shadow, so its first reply is always a full snapshot.
+    let mut shadow: Option<(u32, StageState)> = None;
 
     for iter in iter0..iter0 + iters as u32 {
         if opts.kill_at_iter == Some(iter) {
@@ -703,8 +740,11 @@ pub fn run_schedule_with<B: StageBackend>(
                                         "stage {}: driver went away mid-run",
                                         links.stage
                                     ),
-                                    Some(LaneMsg::Wire(Wire::Checkpoint { .. })) => {
-                                        checkpoint_reply(links, backend)
+                                    Some(LaneMsg::Wire(Wire::Checkpoint {
+                                        iter: ckpt_iter,
+                                        base,
+                                    })) => {
+                                        checkpoint_reply(links, backend, ckpt_iter, base, &mut shadow)
                                     }
                                     Some(m) => break m,
                                 }
@@ -751,8 +791,8 @@ pub fn run_schedule_with<B: StageBackend>(
                                 "stage {}: forward link closed (driver went away)",
                                 links.stage
                             ),
-                            Some(LaneMsg::Wire(Wire::Checkpoint { .. })) => {
-                                checkpoint_reply(links, backend)
+                            Some(LaneMsg::Wire(Wire::Checkpoint { iter: ckpt_iter, base })) => {
+                                checkpoint_reply(links, backend, ckpt_iter, base, &mut shadow)
                             }
                             Some(LaneMsg::Wire(Wire::Data { micro, tokens, .. })) => {
                                 anyhow::ensure!(
@@ -821,7 +861,7 @@ pub fn run_schedule_with<B: StageBackend>(
                                 if !snd.send(iter, t.micro as u32, y) {
                                     // Downstream vanished: park for Stop.
                                     return quiesce(
-                                        links, &fwd_lane, backend, stats, hb, iter, &mut pending,
+                                        links, &fwd_lane, backend, stats, hb, iter, &mut pending, &mut shadow,
                                     );
                                 }
                             } else if let (Some(tx), Some(enc)) =
@@ -843,7 +883,7 @@ pub fn run_schedule_with<B: StageBackend>(
                                 if tx.send(Wire::Packet(buf)).is_err() {
                                     // Downstream vanished: park for Stop.
                                     return quiesce(
-                                        links, &fwd_lane, backend, stats, hb, iter, &mut pending,
+                                        links, &fwd_lane, backend, stats, hb, iter, &mut pending, &mut shadow,
                                     );
                                 }
                                 stats.bytes_sent += wire;
@@ -890,11 +930,14 @@ pub fn run_schedule_with<B: StageBackend>(
                                         stats.wait_s += t_wait.elapsed().as_secs_f64();
                                         return quiesce(
                                             links, &fwd_lane, backend, stats, hb, iter,
-                                            &mut pending,
+                                            &mut pending, &mut shadow,
                                         );
                                     }
-                                    Some(LaneMsg::Wire(Wire::Checkpoint { .. })) => {
-                                        checkpoint_reply(links, backend)
+                                    Some(LaneMsg::Wire(Wire::Checkpoint {
+                                        iter: ckpt_iter,
+                                        base,
+                                    })) => {
+                                        checkpoint_reply(links, backend, ckpt_iter, base, &mut shadow)
                                     }
                                     Some(m) => break m,
                                 }
@@ -955,7 +998,7 @@ pub fn run_schedule_with<B: StageBackend>(
                             if !snd.send(iter, t.micro as u32, dx) {
                                 // Upstream vanished: park for Stop.
                                 return quiesce(
-                                    links, &fwd_lane, backend, stats, hb, iter, &mut pending,
+                                    links, &fwd_lane, backend, stats, hb, iter, &mut pending, &mut shadow,
                                 );
                             }
                         } else if let (Some(tx), Some(enc)) =
@@ -975,7 +1018,7 @@ pub fn run_schedule_with<B: StageBackend>(
                             if tx.send(Wire::Packet(buf)).is_err() {
                                 // Upstream vanished: park for Stop.
                                 return quiesce(
-                                    links, &fwd_lane, backend, stats, hb, iter, &mut pending,
+                                    links, &fwd_lane, backend, stats, hb, iter, &mut pending, &mut shadow,
                                 );
                             }
                             stats.bytes_sent += wire;
@@ -1018,7 +1061,7 @@ pub fn run_schedule_with<B: StageBackend>(
                             None => {
                                 // A sender thread hit a dead neighbor.
                                 return quiesce(
-                                    links, &fwd_lane, backend, stats, hb, iter, &mut pending,
+                                    links, &fwd_lane, backend, stats, hb, iter, &mut pending, &mut shadow,
                                 );
                             }
                         }
@@ -1083,6 +1126,11 @@ pub struct NullBackend {
     /// instant Null runs a real duration so multi-process demos and the
     /// CI `kill -9` smoke can hit a *running* job. Never affects math.
     pub pace_s: f64,
+    /// Auxiliary deterministic weight block (see `seed_bulk`): snapshots
+    /// export it after the scalar param and each optimizer step perturbs
+    /// exactly one slot, so checkpoints have a realistic size with a tiny
+    /// steady-state delta. Never read by forward/backward/loss math.
+    bulk: Vec<f32>,
 }
 
 impl NullBackend {
@@ -1098,6 +1146,7 @@ impl NullBackend {
             updates: 0,
             stateful: false,
             pace_s: 0.0,
+            bulk: Vec::new(),
         }
     }
 
@@ -1107,10 +1156,31 @@ impl NullBackend {
         NullBackend { stateful: true, ..NullBackend::new(n, n_micro, is_head) }
     }
 
+    /// Attach a deterministic auxiliary weight block of `n` slots, seeded
+    /// from `seed` with a fixed LCG. `update` then perturbs exactly one
+    /// slot per optimizer step, so consecutive snapshots differ in only a
+    /// handful of the `1 + n` exported values — the workload the
+    /// incremental-checkpoint gates measure. The block never feeds the
+    /// forward/backward math, so loss trajectories are unchanged.
+    pub fn seed_bulk(&mut self, seed: u64, n: usize) {
+        let mut s = seed | 1;
+        self.bulk = (0..n)
+            .map(|_| {
+                s = s
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                ((s >> 40) as u32 as f32) / (1u64 << 24) as f32
+            })
+            .collect();
+    }
+
     /// Restore a `snapshot` taken from another stateful instance.
     pub fn restore(&mut self, state: &StageState) {
         if let Some(&p) = state.params.first() {
             self.param = p;
+        }
+        if !self.bulk.is_empty() && state.params.len() == 1 + self.bulk.len() {
+            self.bulk.copy_from_slice(&state.params[1..]);
         }
     }
 }
@@ -1178,6 +1248,14 @@ impl StageBackend for NullBackend {
                 .ok_or_else(|| anyhow::anyhow!("update before backward of micro {m}"))?;
         }
         self.param -= 0.01 * acc / self.n_micro as f32;
+        if !self.bulk.is_empty() {
+            // One touched slot per step keeps consecutive snapshots
+            // almost identical — the steady state delta checkpoints
+            // compress. Bulk is write-only for the math, so this cannot
+            // perturb the loss trajectory.
+            let slot = self.updates as usize % self.bulk.len();
+            self.bulk[slot] += 0.001;
+        }
         self.updates += 1;
         Ok(())
     }
@@ -1186,8 +1264,11 @@ impl StageBackend for NullBackend {
         if !self.stateful {
             return None;
         }
+        let mut params = Vec::with_capacity(1 + self.bulk.len());
+        params.push(self.param);
+        params.extend_from_slice(&self.bulk);
         Some(StageState {
-            params: vec![self.param],
+            params,
             momentum: Vec::new(),
             second: Vec::new(),
         })

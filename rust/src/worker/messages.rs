@@ -50,15 +50,26 @@ pub enum Wire {
     /// the broker can re-init the stage on a different device (live
     /// migration at an iteration boundary).
     Snapshot { stage: usize, state: StageState },
+    /// Worker -> driver checkpoint reply when the broker's acknowledged
+    /// base version matches the worker's retained shadow copy: `blob` is
+    /// the stage's lossless delta against that base, in the exact
+    /// `checkpoint::encode_stage_delta` stage-layer encoding (per tensor:
+    /// sparse changed-index/exact-value `OpData`, or a dense replacement).
+    /// The broker materializes it with `checkpoint::apply_stage_delta`.
+    SnapshotDelta { stage: usize, base_iter: u32, blob: Vec<u8> },
     /// Worker -> driver: liveness beacon, sent at most once per heartbeat
     /// interval (while blocked on a channel or between tasks). The
     /// broker's deadline monitor declares a stage dead when its beacons —
     /// and all other traffic — go stale.
     Heartbeat { stage: usize, iter: u32 },
     /// Driver -> workers (broadcast at an iteration boundary): reply with
-    /// a `Snapshot` of the current training state, then keep running. The
-    /// broker persists the collected snapshots as a versioned checkpoint.
-    Checkpoint { iter: u32 },
+    /// the current training state, then keep running. `base` is the last
+    /// checkpoint version the broker saved and still holds materialized;
+    /// a worker whose retained shadow matches it replies with the cheap
+    /// `SnapshotDelta`, anyone else (fresh generation, missed collection)
+    /// replies with a full `Snapshot`. The broker persists the collected
+    /// states as a versioned checkpoint (base or delta layer on disk).
+    Checkpoint { iter: u32, base: Option<u32> },
     /// Worker -> driver on shutdown: accumulated statistics.
     Stats(WorkerStats),
     /// Worker -> driver: unrecoverable error (driver aborts the job, or —

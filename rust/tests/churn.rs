@@ -301,6 +301,15 @@ fn on_disk_checkpoints_version_and_fall_back_when_corrupted() {
     let report = broker::run(&base).unwrap();
     assert_eq!(report.losses.len(), 8);
     assert!(report.recoveries.is_empty());
+    // Versions after the first ride the incremental path: the report's
+    // delta accounting must show real savings over full snapshots.
+    assert!(
+        report.checkpoint_bytes_delta > 0.0
+            && report.checkpoint_bytes_delta < report.checkpoint_bytes_full,
+        "delta {} vs full {}",
+        report.checkpoint_bytes_delta,
+        report.checkpoint_bytes_full
+    );
     let vs = checkpoint::versions(&base.checkpoint_dir);
     assert_eq!(vs, vec![2, 4, 6], "boundary checkpoints at 2/4/6: {vs:?}");
     assert_eq!(
@@ -320,8 +329,10 @@ fn on_disk_checkpoints_version_and_fall_back_when_corrupted() {
     assert_eq!(ck.config, "churn-test");
     assert_eq!(ck.placement, vec![0, 1, 2, 3]);
     assert_eq!(ck.states.len(), 4);
-    // Null stages snapshot a single scalar parameter.
-    assert!(ck.states.iter().all(|s| s.params.len() == 1));
+    // Null stages snapshot the scalar parameter plus the 1024-slot bulk
+    // block (the realistic-sized state that makes delta layers earn their
+    // keep).
+    assert!(ck.states.iter().all(|s| s.params.len() == 1025));
     assert_eq!(ck.corpus_batches, 8, "4 iterations x 2 microbatches fed");
     let _ = std::fs::remove_dir_all(&base.checkpoint_dir);
 }
