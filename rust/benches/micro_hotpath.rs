@@ -27,7 +27,9 @@ use fusionllm::simnet::{simulate_iteration, StagePlan};
 use fusionllm::transport::frame::{encode_frame, FrameKind, Framer, Lane};
 use fusionllm::transport::{chan, PacketPool};
 use fusionllm::util::benchkit::{bench, BenchResult};
+use fusionllm::util::fnv;
 use fusionllm::util::json::{n, obj, Json};
+use fusionllm::util::simd;
 use fusionllm::util::math::compress_threads;
 use fusionllm::util::rng::Rng;
 use fusionllm::worker::{
@@ -173,6 +175,102 @@ fn main() {
         n
     });
     run(r, frame_body.len() as f64);
+
+    // SIMD wire kernels (util::simd / util::fnv): the scalar reference vs
+    // the runtime-dispatched form for each per-message hot loop, as row
+    // pairs so bench-diff tracks the vector speedup — and a regression in
+    // either path — kernel by kernel.
+    println!("\nsimd dispatch level: {}\n", simd::level().name());
+
+    let r = bench("fnv1a64 64KiB (scalar)", 4, 50, || fnv::fnv1a64_scalar(&frame_body));
+    run(r, frame_body.len() as f64);
+    let r = bench("fnv1a64 64KiB (dispatched)", 4, 50, || fnv::fnv1a64(&frame_body));
+    run(r, frame_body.len() as f64);
+
+    let r = bench("absmax 19.66MB (scalar)", 2, 10, || simd::max_abs_scalar(&act));
+    run(r, act_bytes);
+    let r = bench("absmax 19.66MB (dispatched)", 2, 10, || simd::max_abs(&act));
+    run(r, act_bytes);
+
+    let mut bits = vec![0u32; act.len()];
+    let r = bench("abs-bits 19.66MB (scalar)", 2, 10, || {
+        simd::abs_bits_scalar(&act, &mut bits);
+        bits[0]
+    });
+    run(r, act_bytes);
+    let r = bench("abs-bits 19.66MB (dispatched)", 2, 10, || {
+        simd::abs_bits(&act, &mut bits);
+        bits[0]
+    });
+    run(r, act_bytes);
+
+    let scale = simd::max_abs(&act) / 127.0;
+    let mut codes = Vec::new();
+    let r = bench("int8 quantize codes (scalar)", 2, 10, || {
+        codes.clear();
+        simd::quantize_codes_scalar(&act, scale, &mut codes);
+        codes.len()
+    });
+    run(r, act_bytes);
+    let r = bench("int8 quantize codes (dispatched)", 2, 10, || {
+        codes.clear();
+        simd::quantize_codes(&act, scale, &mut codes);
+        codes.len()
+    });
+    run(r, act_bytes);
+
+    let r = bench("int8 dequant codes (scalar)", 2, 10, || {
+        simd::dequant_into_scalar(&codes, scale, &mut dense);
+        dense[0]
+    });
+    run(r, act_bytes);
+    let r = bench("int8 dequant codes (dispatched)", 2, 10, || {
+        simd::dequant_into(&codes, scale, &mut dense);
+        dense[0]
+    });
+    run(r, act_bytes);
+
+    // Sparse gather/scatter over the Top-K support computed above
+    // (~196k kept values at ratio 100).
+    let sparse_bytes = c.indices.len() as f64 * 4.0;
+    let mut gath = Vec::new();
+    let r = bench("sparse gather 196k (scalar)", 2, 20, || {
+        gath.clear();
+        simd::gather_f32_scalar(&act, &c.indices, &mut gath);
+        gath.len()
+    });
+    run(r, sparse_bytes);
+    let r = bench("sparse gather 196k (dispatched)", 2, 20, || {
+        gath.clear();
+        simd::gather_f32(&act, &c.indices, &mut gath);
+        gath.len()
+    });
+    run(r, sparse_bytes);
+
+    let r = bench("sparse scatter 196k (scalar)", 2, 20, || {
+        simd::scatter_f32_mem_scalar(&c.indices, &c.values, &mut dense);
+        dense[0]
+    });
+    run(r, sparse_bytes);
+    let r = bench("sparse scatter 196k (dispatched)", 2, 20, || {
+        simd::scatter_f32(&c.indices, &c.values, &mut dense);
+        dense[0]
+    });
+    run(r, sparse_bytes);
+
+    let mut lebuf = Vec::new();
+    let r = bench("f32 LE encode 19.66MB (scalar)", 2, 10, || {
+        lebuf.clear();
+        simd::extend_f32_le_scalar(&mut lebuf, &act);
+        lebuf.len()
+    });
+    run(r, act_bytes);
+    let r = bench("f32 LE encode 19.66MB (dispatched)", 2, 10, || {
+        lebuf.clear();
+        simd::extend_f32_le(&mut lebuf, &act);
+        lebuf.len()
+    });
+    run(r, act_bytes);
 
     let tb = testbed::testbed2(1);
     let dag = transformer_chain(&TransformerSpec::gpt2_xl());

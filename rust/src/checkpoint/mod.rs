@@ -84,16 +84,10 @@ pub struct SaveInfo {
     pub bytes_full: u64,
 }
 
-/// FNV-1a 64 over a byte stream (no crypto needed — this guards against
-/// torn writes and bit rot, not adversaries).
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
+// FNV-1a 64 now lives in `util::fnv` (shared with the frame codec and
+// dispatched through `util::simd`); re-exported here so existing callers
+// and tests keep working.
+pub use crate::util::fnv::fnv1a64;
 
 fn version_dir(dir: &Path, iter: u32) -> PathBuf {
     dir.join(format!("ckpt-{iter:08}"))

@@ -19,6 +19,7 @@
 
 use super::sparsify::{Compressed, CompressScratch, Compressor};
 use crate::opdag::data::CompressCfg;
+use crate::util::simd;
 
 /// Per-value wire representation for compressed payloads, negotiated per
 /// link by the broker (`CompressPlan::codec_for_kind`). This is the
@@ -113,24 +114,17 @@ impl<C: Compressor> Compressor for Quantized<C> {
         match &c.cfg {
             CompressCfg::Int8 { scale, .. } => {
                 out.fill(0.0);
-                for (o, &b) in out.iter_mut().zip(&c.bytes) {
-                    *o = (b as i8) as f32 * scale;
-                }
+                simd::dequant_into(&c.bytes, *scale, out);
             }
             CompressCfg::QSparse { scale, .. } => {
                 out.fill(0.0);
-                for (&i, &b) in c.indices.iter().zip(&c.bytes) {
-                    out[i as usize] = (b as i8) as f32 * scale;
-                }
+                simd::scatter_int8(&c.indices, &c.bytes, *scale, out);
             }
             CompressCfg::QSparseRows { chunk, .. }
             | CompressCfg::QSparseRowsDelta { chunk, .. } => {
                 out.fill(0.0);
                 let chunk = (*chunk as usize).max(1);
-                for (&i, &b) in c.indices.iter().zip(&c.bytes) {
-                    let scale = c.values[i as usize / chunk];
-                    out[i as usize] = (b as i8) as f32 * scale;
-                }
+                simd::scatter_int8_rows(&c.indices, &c.bytes, &c.values, chunk, out);
             }
             // An unquantized payload (shouldn't occur on this path, but the
             // trait allows mixing): defer to the inner decoder.
@@ -148,7 +142,7 @@ impl<C: Compressor> Compressor for Quantized<C> {
 /// — `Int8Quantizer` and every `Quantized` encoding share these two
 /// helpers so the dense and sparse int8 wire formats cannot drift apart.
 pub(crate) fn absmax_scale(values: &[f32]) -> f32 {
-    let absmax = values.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let absmax = simd::max_abs(values);
     if absmax > 0.0 {
         // The max() guards subnormal absmax (÷127 could underflow to 0 and
         // poison every code with v/0 = inf); normal payloads never hit it.
@@ -161,7 +155,7 @@ pub(crate) fn absmax_scale(values: &[f32]) -> f32 {
 /// Encode one value against a scale (round-to-nearest, saturating ±127).
 #[inline]
 pub(crate) fn code(v: f32, scale: f32) -> u8 {
-    (v / scale).round().clamp(-127.0, 127.0) as i8 as u8
+    simd::quant_code(v, scale)
 }
 
 /// Quantize a compressed payload in place: `values` → int8 `bytes` (+ scale
@@ -177,7 +171,7 @@ pub(crate) fn quantize_compressed(
         CompressCfg::None => {
             let scale = absmax_scale(&out.values);
             out.bytes.clear();
-            out.bytes.extend(out.values.iter().map(|&v| code(v, scale)));
+            simd::quantize_codes(&out.values, scale, &mut out.bytes);
             out.cfg = CompressCfg::Int8 { scale, total_len: out.values.len() as u32 };
             out.values.clear();
             return;
@@ -191,7 +185,7 @@ pub(crate) fn quantize_compressed(
         None => {
             let scale = absmax_scale(&out.values);
             out.bytes.clear();
-            out.bytes.extend(out.values.iter().map(|&v| code(v, scale)));
+            simd::quantize_codes(&out.values, scale, &mut out.bytes);
             out.cfg = CompressCfg::QSparse { ratio, total_len, scale };
             out.values.clear();
         }
@@ -209,12 +203,24 @@ pub(crate) fn quantize_compressed(
                 *s = if *s > 0.0 { (*s / 127.0).max(f32::MIN_POSITIVE) } else { 1.0 };
             }
             out.bytes.clear();
-            out.bytes.extend(
-                out.indices
-                    .iter()
-                    .zip(&out.values)
-                    .map(|(&i, &v)| code(v, scales[i as usize / chunk])),
-            );
+            out.bytes.reserve(out.values.len());
+            {
+                // Quantize runs of same-row elements SIMD-wide with their
+                // scale splatted; codes append in input order, so the
+                // byte stream is identical to the per-element map.
+                let (indices, values, bytes) = (&out.indices, &out.values, &mut out.bytes);
+                let n = indices.len().min(values.len());
+                let mut s = 0usize;
+                while s < n {
+                    let row = indices[s] as usize / chunk;
+                    let mut e = s + 1;
+                    while e < n && indices[e] as usize / chunk == row {
+                        e += 1;
+                    }
+                    simd::quantize_codes(&values[s..e], scales[row], bytes);
+                    s = e;
+                }
+            }
             // Row scales ride in `values` (f32 region of the wire format).
             out.values.clear();
             out.values.extend_from_slice(scales);

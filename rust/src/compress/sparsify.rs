@@ -15,6 +15,7 @@
 use crate::opdag::data::CompressCfg;
 use crate::util::math::{compress_threads, kth_largest_abs_with, SelectScratch, PAR_MIN};
 use crate::util::rng::Rng;
+use crate::util::simd;
 use std::collections::HashSet;
 
 /// A sparse/quantized wire message.
@@ -195,9 +196,7 @@ impl Compressor for TopK {
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
         out.fill(0.0);
-        for (&i, &v) in c.indices.iter().zip(&c.values) {
-            out[i as usize] = v;
-        }
+        simd::scatter_f32(&c.indices, &c.values, out);
     }
 
     fn name(&self) -> &'static str {
@@ -397,9 +396,7 @@ impl Compressor for ChunkedTopK {
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
         out.fill(0.0);
-        for (&i, &v) in c.indices.iter().zip(&c.values) {
-            out[i as usize] = v;
-        }
+        simd::scatter_f32(&c.indices, &c.values, out);
     }
 
     fn name(&self) -> &'static str {
@@ -472,14 +469,12 @@ impl Compressor for RandomK {
             out.indices.sort_unstable();
         }
         let (values, indices) = (&mut out.values, &out.indices);
-        values.extend(indices.iter().map(|&i| data[i as usize]));
+        simd::gather_f32(data, indices, values);
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
         out.fill(0.0);
-        for (&i, &v) in c.indices.iter().zip(&c.values) {
-            out[i as usize] = v;
-        }
+        simd::scatter_f32(&c.indices, &c.values, out);
     }
 
     fn name(&self) -> &'static str {
@@ -496,7 +491,7 @@ impl Compressor for Int8Quantizer {
         // Shared formula with the sparse int8 encodings (compress::quant).
         let scale = crate::compress::quant::absmax_scale(data);
         out.reset(CompressCfg::Int8 { scale, total_len: data.len() as u32 });
-        out.bytes.extend(data.iter().map(|&v| crate::compress::quant::code(v, scale)));
+        simd::quantize_codes(data, scale, &mut out.bytes);
     }
 
     fn decompress(&self, c: &Compressed, out: &mut [f32]) {
@@ -504,9 +499,7 @@ impl Compressor for Int8Quantizer {
             CompressCfg::Int8 { scale, .. } => scale,
             _ => panic!("int8 decompress on non-int8 payload"),
         };
-        for (o, &b) in out.iter_mut().zip(&c.bytes) {
-            *o = (b as i8) as f32 * scale;
-        }
+        simd::dequant_into(&c.bytes, scale, out);
     }
 
     fn name(&self) -> &'static str {

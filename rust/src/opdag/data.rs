@@ -259,26 +259,11 @@ pub fn encode_parts_into(
     out.extend_from_slice(bytes_payload);
 }
 
-/// Bulk little-endian f32 append: on LE targets the in-memory layout IS the
-/// wire layout, so this is a single memcpy; elsewhere a vectorizable
-/// 4-byte-chunk loop.
+/// Bulk little-endian f32 append — the dispatched `util::simd` kernel
+/// (one memcpy on LE targets, a 4-byte-chunk loop under forced scalar or
+/// big-endian).
 fn extend_f32_le(out: &mut Vec<u8>, xs: &[f32]) {
-    #[cfg(target_endian = "little")]
-    {
-        // SAFETY: f32 has no padding and every bit pattern is valid to read
-        // as bytes; u8 has alignment 1; the slice lifetime is bounded by xs.
-        let bytes =
-            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
-        out.extend_from_slice(bytes);
-    }
-    #[cfg(not(target_endian = "little"))]
-    {
-        let start = out.len();
-        out.resize(start + xs.len() * 4, 0);
-        for (c, v) in out[start..].chunks_exact_mut(4).zip(xs) {
-            c.copy_from_slice(&v.to_le_bytes());
-        }
-    }
+    crate::util::simd::extend_f32_le(out, xs);
 }
 
 /// Delta-coded u24 index append (`QSparseRowsDelta`): 3 LE bytes per
@@ -299,21 +284,7 @@ fn extend_u24_delta(out: &mut Vec<u8>, xs: &[u32]) {
 
 /// Bulk little-endian u32 append (see `extend_f32_le`).
 fn extend_u32_le(out: &mut Vec<u8>, xs: &[u32]) {
-    #[cfg(target_endian = "little")]
-    {
-        // SAFETY: as `extend_f32_le`.
-        let bytes =
-            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
-        out.extend_from_slice(bytes);
-    }
-    #[cfg(not(target_endian = "little"))]
-    {
-        let start = out.len();
-        out.resize(start + xs.len() * 4, 0);
-        for (c, v) in out[start..].chunks_exact_mut(4).zip(xs) {
-            c.copy_from_slice(&v.to_le_bytes());
-        }
-    }
+    crate::util::simd::extend_u32_le(out, xs);
 }
 
 /// Zero-copy view of an encoded OP-Data buffer: the header is parsed, the

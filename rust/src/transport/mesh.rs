@@ -55,19 +55,39 @@ use std::time::{Duration, Instant};
 /// Default per-lane in-flight packet cap on a peer connection (override
 /// with `--mesh-window N`). Small enough to bound memory on both ends,
 /// large enough to keep the pipe busy while credits are in flight.
-pub const MESH_WINDOW: usize = 8;
+/// Raised 8 → 16 with the vectored send path: cheaper per-frame sends
+/// drain the window faster, and at depth 8 the overlap smokes showed the
+/// sender parking on `acquire` while credits were still on the reverse
+/// path (EXPERIMENTS §Mesh sweep — 16 keeps the pipe busy at the same
+/// worst-case buffering, 16 × one packet per lane, on localhost and adds
+/// nothing past 16).
+pub const MESH_WINDOW: usize = 16;
 
 /// Credits are returned in batches of `window / CREDIT_BATCH_DIV`
 /// (minimum 1): the reader withholds at most one partial batch, so the
 /// effective window never drops below `window - batch + 1 >= 1` and the
 /// reverse path carries one Credit frame per batch instead of one per
 /// packet. Any partial batch is flushed before the reader blocks on the
-/// socket, so credits are never withheld across an idle period.
+/// socket, so credits are never withheld across an idle period. Divisor
+/// 4 held up in the sweep (2 halves credit traffic again but widens the
+/// withheld band to window/2; 8 doubles credit frames for no measured
+/// gain) — `FUSIONLLM_CREDIT_DIV` overrides it for sweep runs.
 const CREDIT_BATCH_DIV: usize = 4;
+
+fn credit_div() -> usize {
+    static D: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *D.get_or_init(|| {
+        std::env::var("FUSIONLLM_CREDIT_DIV")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&d| d >= 1)
+            .unwrap_or(CREDIT_BATCH_DIV)
+    })
+}
 
 /// Batch size for credit returns on a window of depth `window`.
 pub(crate) fn credit_batch(window: usize) -> usize {
-    (window / CREDIT_BATCH_DIV).max(1)
+    (window / credit_div()).max(1)
 }
 
 /// How long a dialer retries connecting to a neighbor's peer listener

@@ -24,12 +24,13 @@
 
 use crate::transport::codec::{self, Hello, StageAssign};
 use crate::transport::frame::{
-    encode_frame, Frame, FrameKind, Framer, Lane, FRAME_MAGIC, FRAME_OVERHEAD, FRAME_VERSION,
+    encode_frame_header, write_all_vectored, write_frame_to, Frame, FrameKind, Framer, Lane,
+    FRAME_OVERHEAD,
 };
 use crate::transport::{Link, LinkClosed, PacketPool};
 use crate::worker::messages::Wire;
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -43,11 +44,13 @@ const READ_TICK: Duration = Duration::from_millis(50);
 
 // ---- shared write half -------------------------------------------------
 
-/// Serialized write half of one connection: owns the frame/body staging
-/// buffers so steady-state sends reuse their capacity.
+/// Serialized write half of one connection. Frames go out with
+/// `write_vectored` (header / body / checksum as one iovec batch), so
+/// there is no frame staging buffer and a packet's pooled body is never
+/// memcpy'd on the send path; `body` only stages the compact encodings
+/// of non-`Packet` control messages.
 pub(crate) struct ConnWriter {
     stream: TcpStream,
-    frame: Vec<u8>,
     body: Vec<u8>,
 }
 
@@ -67,7 +70,7 @@ fn check_body(len: usize) -> std::io::Result<()> {
 
 impl ConnWriter {
     pub(crate) fn new(stream: TcpStream) -> ConnWriter {
-        ConnWriter { stream, frame: Vec::new(), body: Vec::new() }
+        ConnWriter { stream, body: Vec::new() }
     }
 
     pub(crate) fn write_frame(
@@ -77,37 +80,33 @@ impl ConnWriter {
         body: &[u8],
     ) -> std::io::Result<()> {
         check_body(body.len())?;
-        encode_frame(lane, kind, body, &mut self.frame);
-        self.stream.write_all(&self.frame)
+        write_frame_to(&mut self.stream, lane, kind, body)
     }
 
     pub(crate) fn write_wire(&mut self, lane: Lane, w: &Wire) -> std::io::Result<()> {
+        // Packet bodies are already wire bytes: frame them straight from
+        // the caller's (pooled) buffer — `codec::encode_wire` would only
+        // memcpy them into the staging vec.
+        if let Wire::Packet(buf) = w {
+            return self.write_frame(lane, FrameKind::Packet, buf);
+        }
         self.body.clear();
         let kind = codec::encode_wire(w, &mut self.body);
         check_body(self.body.len())?;
-        // Split-borrow: stage the frame locally, then write.
-        let Self { stream, frame, body } = self;
-        encode_frame(lane, kind, body, frame);
-        stream.write_all(frame)
+        let Self { stream, body } = self;
+        write_frame_to(stream, lane, kind, body)
     }
 
     /// Forward a validated frame unchanged, reusing its checksum: the
     /// header this rebuilds is byte-identical to the one the checksum
     /// already covers, so the relay path skips the FNV pass over the
-    /// (potentially multi-MiB) body.
+    /// (potentially multi-MiB) body — and the vectored write skips the
+    /// body copy too.
     fn relay_frame(&mut self, f: &Frame) -> std::io::Result<()> {
         check_body(f.body.len())?;
-        let out = &mut self.frame;
-        out.clear();
-        out.reserve(FRAME_OVERHEAD + f.body.len());
-        out.push(FRAME_MAGIC);
-        out.push(FRAME_VERSION);
-        out.push(f.lane.to_u8());
-        out.push(f.kind.to_u8());
-        out.extend_from_slice(&(f.body.len() as u32).to_le_bytes());
-        out.extend_from_slice(&f.body);
-        out.extend_from_slice(&f.sum.to_le_bytes());
-        self.stream.write_all(&self.frame)
+        let head = encode_frame_header(f.lane, f.kind, f.body.len());
+        let sum = f.sum.to_le_bytes();
+        write_all_vectored(&mut self.stream, [&head, &f.body, &sum])
     }
 }
 
@@ -1111,4 +1110,68 @@ fn relay(conn: usize, dir: i64, f: Frame, shared: &Arc<Shared>, pool: &PacketPoo
         }
     }
     pool.give(f.body);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{encode_frame, frame_checksum};
+
+    /// Loopback capture: the vectored `ConnWriter` paths (direct frame,
+    /// Packet fast path, control-message staging, relay) must put bytes
+    /// on a real socket identical to the old encode-into-a-staging-buffer
+    /// + `write_all` path.
+    #[test]
+    fn conn_writer_bytes_match_copy_path() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let capture = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            s.read_to_end(&mut buf).unwrap();
+            buf
+        });
+
+        let body: Vec<u8> = (0..1000u32).map(|i| (i.wrapping_mul(13)) as u8).collect();
+        let mut w = ConnWriter::new(TcpStream::connect(addr).unwrap());
+        w.write_frame(Lane::Fwd, FrameKind::Packet, &body).unwrap();
+        w.write_wire(Lane::Bwd, &Wire::Packet(body.clone())).unwrap();
+        w.write_wire(Lane::Fwd, &Wire::Stop).unwrap();
+        let head = encode_frame_header(Lane::Bwd, FrameKind::Packet, body.len());
+        let relay = Frame {
+            lane: Lane::Bwd,
+            kind: FrameKind::Packet,
+            body: body.clone(),
+            sum: frame_checksum(&head, &body),
+        };
+        w.relay_frame(&relay).unwrap();
+        drop(w); // closes the socket; capture thread sees EOF
+
+        let got = capture.join().unwrap();
+        let mut want = Vec::new();
+        let mut tmp = Vec::new();
+        encode_frame(Lane::Fwd, FrameKind::Packet, &body, &mut tmp);
+        want.extend_from_slice(&tmp);
+        encode_frame(Lane::Bwd, FrameKind::Packet, &body, &mut tmp);
+        want.extend_from_slice(&tmp);
+        let mut stop = Vec::new();
+        let kind = codec::encode_wire(&Wire::Stop, &mut stop);
+        encode_frame(Lane::Fwd, kind, &stop, &mut tmp);
+        want.extend_from_slice(&tmp);
+        encode_frame(Lane::Bwd, FrameKind::Packet, &body, &mut tmp);
+        want.extend_from_slice(&tmp);
+        assert_eq!(got, want);
+
+        // And the byte stream decodes back into the four frames.
+        let mut fr = Framer::new();
+        fr.push(&got);
+        let mut n = 0;
+        while let Some(f) = fr.next().unwrap() {
+            n += 1;
+            if f.kind == FrameKind::Packet {
+                assert_eq!(f.body, body);
+            }
+        }
+        assert_eq!(n, 4);
+    }
 }

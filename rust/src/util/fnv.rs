@@ -1,0 +1,138 @@
+//! FNV-1a 64 — the one checksum of the codebase (socket frames, checkpoint
+//! manifests). No crypto needed: it guards against torn writes, bit rot and
+//! stream desync, not adversaries.
+//!
+//! This module is the canonical home (previously `checkpoint::fnv1a64`,
+//! which `transport::frame` reached *up* into — the dependency now points
+//! the right way, and `checkpoint` re-exports for compatibility).
+//!
+//! FNV-1a's hash chain is sequentially dependent (each byte's multiply
+//! feeds the next xor), so true SIMD lanes cannot apply; the dispatched
+//! form is an 8-way unrolled scalar pipeline instead — same chain, more
+//! instruction-level parallelism, bitwise identical by construction. The
+//! `util::simd` dispatch level still gates it so `FUSIONLLM_FORCE_SCALAR`
+//! pins the byte-at-a-time reference.
+
+use crate::util::simd::{self, Level};
+
+/// FNV-1a 64 offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64 prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over a byte stream (no crypto needed — this guards against
+/// torn writes and bit rot, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    chunk(FNV_OFFSET, bytes, simd::level())
+}
+
+/// Byte-at-a-time reference implementation (the forced-scalar path and the
+/// differential-test oracle).
+pub fn fnv1a64_scalar(bytes: &[u8]) -> u64 {
+    chunk_scalar(FNV_OFFSET, bytes)
+}
+
+/// `fnv1a64` pinned to an explicit dispatch level (differential tests).
+pub fn fnv1a64_at(level: Level, bytes: &[u8]) -> u64 {
+    chunk(FNV_OFFSET, bytes, level)
+}
+
+/// Streaming FNV-1a 64: feed disjoint byte regions with `update`, read the
+/// digest with `finish`. `Fnv::new().update(a).update(b)` over split
+/// regions equals `fnv1a64` over their concatenation — the vectored frame
+/// writer checksums header and body without staging them contiguously.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Fnv {
+        Fnv::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(FNV_OFFSET)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) -> &mut Fnv {
+        self.0 = chunk(self.0, bytes, simd::level());
+        self
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn chunk(h: u64, bytes: &[u8], level: Level) -> u64 {
+    match level {
+        Level::Scalar => chunk_scalar(h, bytes),
+        _ => chunk_unrolled(h, bytes),
+    }
+}
+
+fn chunk_scalar(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn chunk_unrolled(mut h: u64, bytes: &[u8]) -> u64 {
+    let mut it = bytes.chunks_exact(8);
+    for c in &mut it {
+        h = (h ^ c[0] as u64).wrapping_mul(FNV_PRIME);
+        h = (h ^ c[1] as u64).wrapping_mul(FNV_PRIME);
+        h = (h ^ c[2] as u64).wrapping_mul(FNV_PRIME);
+        h = (h ^ c[3] as u64).wrapping_mul(FNV_PRIME);
+        h = (h ^ c[4] as u64).wrapping_mul(FNV_PRIME);
+        h = (h ^ c[5] as u64).wrapping_mul(FNV_PRIME);
+        h = (h ^ c[6] as u64).wrapping_mul(FNV_PRIME);
+        h = (h ^ c[7] as u64).wrapping_mul(FNV_PRIME);
+    }
+    chunk_scalar(h, it.remainder())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Official FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64_scalar(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64_scalar(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn unrolled_matches_scalar_on_ragged_lengths() {
+        let data: Vec<u8> = (0..1024u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect();
+        for n in [0, 1, 3, 7, 8, 9, 15, 16, 17, 63, 64, 65, 255, 1000, 1024] {
+            assert_eq!(
+                chunk_unrolled(FNV_OFFSET, &data[..n]),
+                chunk_scalar(FNV_OFFSET, &data[..n]),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_splits_match_oneshot() {
+        let data: Vec<u8> = (0..777u32).map(|i| (i.wrapping_mul(0x9E3779B9) >> 11) as u8).collect();
+        let want = fnv1a64(&data);
+        for split in [0, 1, 7, 8, 100, 776, 777] {
+            let mut f = Fnv::new();
+            f.update(&data[..split]).update(&data[split..]);
+            assert_eq!(f.finish(), want, "split={split}");
+        }
+        // Three-way split (the frame writer's header/body/etc. shape).
+        let mut f = Fnv::new();
+        f.update(&data[..8]);
+        f.update(&data[8..512]);
+        f.update(&data[512..]);
+        assert_eq!(f.finish(), want);
+    }
+}

@@ -1,6 +1,7 @@
 //! Numeric helpers shared across the coordinator: radix/quick-select for
 //! Top-K thresholds, stable statistics, and unit formatting.
 
+use crate::util::simd;
 use std::sync::OnceLock;
 
 /// IEEE-754 f32 magnitude mask: |x| is monotone in `bits & ABS_MASK`.
@@ -78,7 +79,8 @@ pub fn kth_largest_abs_with(
     if xs.len() <= 512 {
         let v = &mut scratch.cand;
         v.clear();
-        v.extend(xs.iter().map(|x| x.to_bits() & ABS_MASK));
+        v.resize(xs.len(), 0);
+        simd::abs_bits(xs, v);
         v.sort_unstable();
         return f32::from_bits(v[v.len() - k]);
     }
@@ -137,13 +139,24 @@ fn take_bucket(hist: &[usize; 256], remaining: &mut usize) -> usize {
     }
 }
 
+/// One thread's f32 histogram pass: the magnitude-bit extraction runs
+/// through the SIMD `abs_bits` kernel 512 elements at a time (stack
+/// buffer), the bucket counting stays scalar (data-dependent stores).
+fn hist_slice_f32(xs: &[f32], shift: u32, hist: &mut [usize; 256]) {
+    let mut bits = [0u32; 512];
+    for c in xs.chunks(512) {
+        let b = &mut bits[..c.len()];
+        simd::abs_bits(c, b);
+        for &v in b.iter() {
+            hist[((v >> shift) & 0xFF) as usize] += 1;
+        }
+    }
+}
+
 fn hist_f32(xs: &[f32], shift: u32, threads: usize, hists: &mut Vec<[usize; 256]>) -> [usize; 256] {
     let mut hist = [0usize; 256];
     if threads <= 1 || xs.len() < PAR_MIN {
-        for x in xs {
-            let b = x.to_bits() & ABS_MASK;
-            hist[((b >> shift) & 0xFF) as usize] += 1;
-        }
+        hist_slice_f32(xs, shift, &mut hist);
         return hist;
     }
     let chunk = (xs.len() + threads - 1) / threads;
@@ -155,10 +168,7 @@ fn hist_f32(xs: &[f32], shift: u32, threads: usize, hists: &mut Vec<[usize; 256]
         for (slice, h) in xs.chunks(chunk).zip(hists.iter_mut()) {
             s.spawn(move || {
                 h.fill(0);
-                for x in slice {
-                    let b = x.to_bits() & ABS_MASK;
-                    h[((b >> shift) & 0xFF) as usize] += 1;
-                }
+                hist_slice_f32(slice, shift, h);
             });
         }
     });

@@ -4,7 +4,9 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod fnv;
 pub mod json;
 pub mod math;
 pub mod rng;
+pub mod simd;
 pub mod table;

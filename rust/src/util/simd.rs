@@ -1,0 +1,996 @@
+//! Runtime-dispatched SIMD kernels for the per-message wire hot path:
+//! int8 quantize/dequantize, sparse gather/scatter, the abs-bits pass
+//! feeding the radix Top-K select, absmax reduction, and bulk
+//! little-endian moves.
+//!
+//! # Dispatch
+//!
+//! Every kernel has three entry points: the plain name (dispatched on the
+//! process-wide [`level()`]), a `_scalar` reference, and an `_at` form
+//! pinned to an explicit [`Level`] (differential tests iterate
+//! [`Level::supported()`] so the SSE2 path is exercised even on AVX2
+//! hosts). The level is detected once: AVX2 → SSE2 (the x86_64 baseline)
+//! → portable scalar, overridable with `FUSIONLLM_FORCE_SCALAR=1` or the
+//! `force-scalar` cargo feature.
+//!
+//! # Bitwise contract
+//!
+//! The chan-vs-tcp-vs-mesh and overlap-on/off differential gates pin
+//! *bitwise* losses, so every SIMD path here must produce byte-identical
+//! results to its scalar reference — not merely close ones. The hard case
+//! is int8 quantization: `f32::round` is round-half-away-from-zero while
+//! the SSE/AVX rounding ops are round-half-even, so the vector paths
+//! reconstruct the scalar rounding exactly (truncate, exact fractional
+//! remainder, ±1 fix-up when |frac| ≥ 0.5) and handle the |x| ≥ 2^31 /
+//! NaN saturation cases of Rust's `as` casts explicitly. Reductions
+//! (absmax) are order-independent over magnitudes, so lane-parallel max
+//! is exact; NaN inputs are outside the contract there (the trainer never
+//! produces them — scalar `fold(max)` would itself be order-sensitive).
+
+use std::sync::OnceLock;
+
+/// IEEE-754 f32 magnitude mask: |x| is monotone in `bits & ABS_MASK`.
+const ABS_MASK: u32 = 0x7FFF_FFFF;
+
+/// Index block size for the scatter/gather kernels: bounds checks hoist
+/// to one compare per block, value dequantization runs SIMD-wide into a
+/// stack buffer, stores stay in input order (duplicate index = last
+/// write wins, exactly like the scalar loop).
+const BLOCK: usize = 64;
+
+/// Dispatch level for every kernel in this module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Portable reference path (also the non-x86 and forced-scalar path).
+    Scalar,
+    /// 128-bit vectors; baseline on x86_64, never runtime-gated.
+    Sse2,
+    /// 256-bit vectors, runtime-detected.
+    Avx2,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Sse2 => "sse2",
+            Level::Avx2 => "avx2",
+        }
+    }
+
+    /// Every level this machine can execute, scalar first. Differential
+    /// tests compare each against `Scalar`; `_at` callers must pass a
+    /// level from this list (or `Scalar`, which is always valid).
+    pub fn supported() -> Vec<Level> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let mut v = vec![Level::Scalar, Level::Sse2];
+            if is_x86_feature_detected!("avx2") {
+                v.push(Level::Avx2);
+            }
+            v
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            vec![Level::Scalar]
+        }
+    }
+}
+
+/// The process-wide dispatch level, detected once. `FUSIONLLM_FORCE_SCALAR`
+/// (1/true/yes) or the `force-scalar` cargo feature pin it to `Scalar` —
+/// the escape hatch if a platform's vector path ever misbehaves, and the
+/// lever the forced-scalar CI job uses to keep the fallback green.
+pub fn level() -> Level {
+    static L: OnceLock<Level> = OnceLock::new();
+    *L.get_or_init(detect)
+}
+
+fn detect() -> Level {
+    if cfg!(feature = "force-scalar") || force_scalar_env() {
+        return Level::Scalar;
+    }
+    arch_level()
+}
+
+fn force_scalar_env() -> bool {
+    match std::env::var("FUSIONLLM_FORCE_SCALAR") {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false")
+        }
+        Err(_) => false,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn arch_level() -> Level {
+    if is_x86_feature_detected!("avx2") {
+        Level::Avx2
+    } else {
+        Level::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn arch_level() -> Level {
+    Level::Scalar
+}
+
+// ---- absmax reduction --------------------------------------------------
+
+/// `fold(0.0, |a, v| a.max(v.abs()))` — the absmax pass feeding the int8
+/// scale. Max over magnitudes is order-independent, so the lane-parallel
+/// reduction is bitwise identical to the sequential fold for every finite
+/// input (NaNs are outside the contract: the trainer never produces them,
+/// and the scalar fold is itself order-sensitive under NaN).
+pub fn max_abs(xs: &[f32]) -> f32 {
+    max_abs_at(level(), xs)
+}
+
+pub fn max_abs_scalar(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &v| a.max(v.abs()))
+}
+
+pub fn max_abs_at(level: Level, xs: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    match level {
+        Level::Avx2 => return unsafe { max_abs_avx2(xs) },
+        Level::Sse2 => return max_abs_sse2(xs),
+        Level::Scalar => {}
+    }
+    let _ = level;
+    max_abs_scalar(xs)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn max_abs_sse2(xs: &[f32]) -> f32 {
+    // SAFETY: SSE2 is part of the x86_64 baseline ABI.
+    unsafe {
+        use std::arch::x86_64::*;
+        let mask = _mm_castsi128_ps(_mm_set1_epi32(ABS_MASK as i32));
+        let mut acc = _mm_setzero_ps();
+        let mut chunks = xs.chunks_exact(4);
+        for c in &mut chunks {
+            let v = _mm_loadu_ps(c.as_ptr());
+            acc = _mm_max_ps(acc, _mm_and_ps(v, mask));
+        }
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut m = lanes.iter().fold(0.0f32, |a, &l| a.max(l));
+        for &v in chunks.remainder() {
+            m = m.max(v.abs());
+        }
+        m
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn max_abs_avx2(xs: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let mask = _mm256_castsi256_ps(_mm256_set1_epi32(ABS_MASK as i32));
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = xs.chunks_exact(8);
+    for c in &mut chunks {
+        let v = _mm256_loadu_ps(c.as_ptr());
+        acc = _mm256_max_ps(acc, _mm256_and_ps(v, mask));
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut m = lanes.iter().fold(0.0f32, |a, &l| a.max(l));
+    for &v in chunks.remainder() {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+// ---- abs-bits pass -----------------------------------------------------
+
+/// `out[i] = xs[i].to_bits() & 0x7FFF_FFFF` — the magnitude-bit-pattern
+/// pass the radix Top-K select runs over every candidate. Pure integer
+/// masking, so bitwise identity across levels is structural.
+///
+/// Panics if the slices differ in length.
+pub fn abs_bits(xs: &[f32], out: &mut [u32]) {
+    abs_bits_at(level(), xs, out)
+}
+
+pub fn abs_bits_scalar(xs: &[f32], out: &mut [u32]) {
+    assert_eq!(xs.len(), out.len());
+    for (o, x) in out.iter_mut().zip(xs) {
+        *o = x.to_bits() & ABS_MASK;
+    }
+}
+
+pub fn abs_bits_at(level: Level, xs: &[f32], out: &mut [u32]) {
+    assert_eq!(xs.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    match level {
+        Level::Avx2 => return unsafe { abs_bits_avx2(xs, out) },
+        Level::Sse2 => return abs_bits_sse2(xs, out),
+        Level::Scalar => {}
+    }
+    let _ = level;
+    abs_bits_scalar(xs, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn abs_bits_sse2(xs: &[f32], out: &mut [u32]) {
+    // SAFETY: SSE2 is part of the x86_64 baseline ABI; unaligned
+    // loads/stores are used throughout.
+    unsafe {
+        use std::arch::x86_64::*;
+        let mask = _mm_set1_epi32(ABS_MASK as i32);
+        let mut xi = xs.chunks_exact(4);
+        let mut oi = out.chunks_exact_mut(4);
+        for (c, o) in (&mut xi).zip(&mut oi) {
+            let v = _mm_loadu_si128(c.as_ptr() as *const __m128i);
+            _mm_storeu_si128(o.as_mut_ptr() as *mut __m128i, _mm_and_si128(v, mask));
+        }
+        for (o, x) in oi.into_remainder().iter_mut().zip(xi.remainder()) {
+            *o = x.to_bits() & ABS_MASK;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn abs_bits_avx2(xs: &[f32], out: &mut [u32]) {
+    use std::arch::x86_64::*;
+    let mask = _mm256_set1_epi32(ABS_MASK as i32);
+    let mut xi = xs.chunks_exact(8);
+    let mut oi = out.chunks_exact_mut(8);
+    for (c, o) in (&mut xi).zip(&mut oi) {
+        let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+        _mm256_storeu_si256(o.as_mut_ptr() as *mut __m256i, _mm256_and_si256(v, mask));
+    }
+    for (o, x) in oi.into_remainder().iter_mut().zip(xi.remainder()) {
+        *o = x.to_bits() & ABS_MASK;
+    }
+}
+
+// ---- int8 quantize -----------------------------------------------------
+
+/// THE int8 code formula (round-to-nearest-half-away, saturating ±127;
+/// `as i8 as u8` keeps the two's-complement byte). `compress::quant::code`
+/// delegates here so the dense and sparse int8 wire formats cannot drift
+/// from the SIMD paths.
+#[inline]
+pub fn quant_code(v: f32, scale: f32) -> u8 {
+    (v / scale).round().clamp(-127.0, 127.0) as i8 as u8
+}
+
+/// Append `quant_code(v, scale)` for every `v` — the int8 quantize pass.
+/// Bitwise identical to the scalar form for *every* f32 input including
+/// half-ulp rounding boundaries, |v/scale| ≥ 2^31, infinities and NaN
+/// (which saturate/zero exactly like Rust `as i8`).
+pub fn quantize_codes(values: &[f32], scale: f32, out: &mut Vec<u8>) {
+    quantize_codes_at(level(), values, scale, out)
+}
+
+pub fn quantize_codes_scalar(values: &[f32], scale: f32, out: &mut Vec<u8>) {
+    out.reserve(values.len());
+    out.extend(values.iter().map(|&v| quant_code(v, scale)));
+}
+
+pub fn quantize_codes_at(level: Level, values: &[f32], scale: f32, out: &mut Vec<u8>) {
+    #[cfg(target_arch = "x86_64")]
+    match level {
+        Level::Avx2 => {
+            out.reserve(values.len());
+            return unsafe { quantize_codes_avx2(values, scale, out) };
+        }
+        Level::Sse2 => {
+            out.reserve(values.len());
+            return quantize_codes_sse2(values, scale, out);
+        }
+        Level::Scalar => {}
+    }
+    let _ = level;
+    quantize_codes_scalar(values, scale, out)
+}
+
+// Both vector paths reconstruct `f32::round` (half away from zero) from
+// truncation:
+//   x = v / scale                      (true IEEE divide, never reciprocal)
+//   t = cvtepi32_ps(cvttps_epi32(x))   (trunc; exact for |x| < 2^31 —
+//                                       above 2^23 every f32 is integral,
+//                                       so the i32 round-trips exactly)
+//   f = x - t                          (exact: multiple of ulp(x), < 2^24 ulps)
+//   r = t + copysign(1, x) · [|f| ≥ 0.5]
+// |f| ≥ 0.5 compares magnitude *bit patterns* against bits(0.5) so no
+// float compare semantics leak in; lanes with |x| ≥ 2^31 (where cvttps is
+// garbage) are overridden with the saturated ±127 Rust's `as` would
+// produce, and NaN lanes are zeroed last (Rust saturating cast: NaN → 0).
+
+#[cfg(target_arch = "x86_64")]
+fn quantize_codes_sse2(values: &[f32], scale: f32, out: &mut Vec<u8>) {
+    // SAFETY: SSE2 is part of the x86_64 baseline ABI.
+    unsafe {
+        use std::arch::x86_64::*;
+        let s = _mm_set1_ps(scale);
+        let abs_mask = _mm_set1_epi32(ABS_MASK as i32);
+        let half_m1 = _mm_set1_epi32(0x3EFF_FFFF); // bits(0.5) - 1
+        let big_m1 = _mm_set1_epi32(0x4EFF_FFFF); // bits(2^31) - 1
+        let nan_min = _mm_set1_epi32(0x7F80_0000); // bits(+inf)
+        let one = _mm_set1_ps(1.0);
+        let sign_mask = _mm_set1_epi32(i32::MIN);
+        let lo = _mm_set1_ps(-127.0);
+        let hi = _mm_set1_ps(127.0);
+        let zero = _mm_setzero_si128();
+        let p127 = _mm_set1_epi32(127);
+        let n127 = _mm_set1_epi32(-127);
+        let mut chunks = values.chunks_exact(4);
+        let mut lanes = [0i32; 4];
+        for c in &mut chunks {
+            let v = _mm_loadu_ps(c.as_ptr());
+            let x = _mm_div_ps(v, s);
+            let xb = _mm_castps_si128(x);
+            let x_abs = _mm_and_si128(xb, abs_mask);
+            let t = _mm_cvtepi32_ps(_mm_cvttps_epi32(x));
+            let f = _mm_sub_ps(x, t);
+            let f_abs = _mm_and_si128(_mm_castps_si128(f), abs_mask);
+            let ge_half = _mm_cmpgt_epi32(f_abs, half_m1);
+            let sone = _mm_or_ps(one, _mm_castsi128_ps(_mm_and_si128(xb, sign_mask)));
+            let fix = _mm_and_ps(_mm_castsi128_ps(ge_half), sone);
+            let r = _mm_min_ps(_mm_max_ps(_mm_add_ps(t, fix), lo), hi);
+            let mut code = _mm_cvttps_epi32(r);
+            let big = _mm_cmpgt_epi32(x_abs, big_m1);
+            let neg = _mm_cmpgt_epi32(zero, xb);
+            let sat = _mm_or_si128(_mm_and_si128(neg, n127), _mm_andnot_si128(neg, p127));
+            code = _mm_or_si128(_mm_and_si128(big, sat), _mm_andnot_si128(big, code));
+            let is_nan = _mm_cmpgt_epi32(x_abs, nan_min);
+            code = _mm_andnot_si128(is_nan, code);
+            _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, code);
+            out.extend_from_slice(&[
+                lanes[0] as u8,
+                lanes[1] as u8,
+                lanes[2] as u8,
+                lanes[3] as u8,
+            ]);
+        }
+        for &v in chunks.remainder() {
+            out.push(quant_code(v, scale));
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn quantize_codes_avx2(values: &[f32], scale: f32, out: &mut Vec<u8>) {
+    use std::arch::x86_64::*;
+    let s = _mm256_set1_ps(scale);
+    let abs_mask = _mm256_set1_epi32(ABS_MASK as i32);
+    let half_m1 = _mm256_set1_epi32(0x3EFF_FFFF);
+    let big_m1 = _mm256_set1_epi32(0x4EFF_FFFF);
+    let nan_min = _mm256_set1_epi32(0x7F80_0000);
+    let one = _mm256_set1_ps(1.0);
+    let sign_mask = _mm256_set1_epi32(i32::MIN);
+    let lo = _mm256_set1_ps(-127.0);
+    let hi = _mm256_set1_ps(127.0);
+    let zero = _mm256_setzero_si256();
+    let p127 = _mm256_set1_epi32(127);
+    let n127 = _mm256_set1_epi32(-127);
+    let mut chunks = values.chunks_exact(8);
+    let mut lanes = [0i32; 8];
+    for c in &mut chunks {
+        let v = _mm256_loadu_ps(c.as_ptr());
+        let x = _mm256_div_ps(v, s);
+        let xb = _mm256_castps_si256(x);
+        let x_abs = _mm256_and_si256(xb, abs_mask);
+        let t = _mm256_cvtepi32_ps(_mm256_cvttps_epi32(x));
+        let f = _mm256_sub_ps(x, t);
+        let f_abs = _mm256_and_si256(_mm256_castps_si256(f), abs_mask);
+        let ge_half = _mm256_cmpgt_epi32(f_abs, half_m1);
+        let sone = _mm256_or_ps(one, _mm256_castsi256_ps(_mm256_and_si256(xb, sign_mask)));
+        let fix = _mm256_and_ps(_mm256_castsi256_ps(ge_half), sone);
+        let r = _mm256_min_ps(_mm256_max_ps(_mm256_add_ps(t, fix), lo), hi);
+        let mut code = _mm256_cvttps_epi32(r);
+        let big = _mm256_cmpgt_epi32(x_abs, big_m1);
+        let neg = _mm256_cmpgt_epi32(zero, xb);
+        let sat = _mm256_or_si256(_mm256_and_si256(neg, n127), _mm256_andnot_si256(neg, p127));
+        code = _mm256_or_si256(_mm256_and_si256(big, sat), _mm256_andnot_si256(big, code));
+        let is_nan = _mm256_cmpgt_epi32(x_abs, nan_min);
+        code = _mm256_andnot_si256(is_nan, code);
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, code);
+        out.extend_from_slice(&[
+            lanes[0] as u8,
+            lanes[1] as u8,
+            lanes[2] as u8,
+            lanes[3] as u8,
+            lanes[4] as u8,
+            lanes[5] as u8,
+            lanes[6] as u8,
+            lanes[7] as u8,
+        ]);
+    }
+    for &v in chunks.remainder() {
+        out.push(quant_code(v, scale));
+    }
+}
+
+// ---- int8 dequantize ---------------------------------------------------
+
+/// `out[i] = (codes[i] as i8 as f32) * scale` over the zipped length
+/// (`min(codes.len(), out.len())` — excess on either side is untouched,
+/// mirroring the scalar `zip` loops). Exact across levels: i8 → f32 is
+/// exact and the scale multiply is the same IEEE op lane-wise or not.
+pub fn dequant_into(codes: &[u8], scale: f32, out: &mut [f32]) {
+    dequant_into_at(level(), codes, scale, out)
+}
+
+pub fn dequant_into_scalar(codes: &[u8], scale: f32, out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(codes) {
+        *o = (b as i8) as f32 * scale;
+    }
+}
+
+pub fn dequant_into_at(level: Level, codes: &[u8], scale: f32, out: &mut [f32]) {
+    let n = codes.len().min(out.len());
+    let (codes, out) = (&codes[..n], &mut out[..n]);
+    #[cfg(target_arch = "x86_64")]
+    match level {
+        Level::Avx2 => return unsafe { dequant_avx2(codes, scale, out) },
+        Level::Sse2 => return dequant_sse2(codes, scale, out),
+        Level::Scalar => {}
+    }
+    let _ = level;
+    dequant_into_scalar(codes, scale, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dequant_sse2(codes: &[u8], scale: f32, out: &mut [f32]) {
+    // SAFETY: SSE2 is part of the x86_64 baseline ABI.
+    unsafe {
+        use std::arch::x86_64::*;
+        let s = _mm_set1_ps(scale);
+        let zero = _mm_setzero_si128();
+        let mut ci = codes.chunks_exact(4);
+        let mut oi = out.chunks_exact_mut(4);
+        for (c, o) in (&mut ci).zip(&mut oi) {
+            let raw = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            let x = _mm_cvtsi32_si128(raw);
+            // Sign-extend i8 → i32 with compares + unpacks (no imm-shift
+            // intrinsics needed): the compare mask IS the sign byte/word.
+            let s8 = _mm_cmpgt_epi8(zero, x);
+            let w16 = _mm_unpacklo_epi8(x, s8);
+            let s16 = _mm_cmpgt_epi16(zero, w16);
+            let d32 = _mm_unpacklo_epi16(w16, s16);
+            let v = _mm_mul_ps(_mm_cvtepi32_ps(d32), s);
+            _mm_storeu_ps(o.as_mut_ptr(), v);
+        }
+        for (o, &b) in oi.into_remainder().iter_mut().zip(ci.remainder()) {
+            *o = (b as i8) as f32 * scale;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_avx2(codes: &[u8], scale: f32, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let s = _mm256_set1_ps(scale);
+    let mut ci = codes.chunks_exact(8);
+    let mut oi = out.chunks_exact_mut(8);
+    for (c, o) in (&mut ci).zip(&mut oi) {
+        let b = _mm_loadl_epi64(c.as_ptr() as *const __m128i);
+        let d32 = _mm256_cvtepi8_epi32(b);
+        let v = _mm256_mul_ps(_mm256_cvtepi32_ps(d32), s);
+        _mm256_storeu_ps(o.as_mut_ptr(), v);
+    }
+    for (o, &b) in oi.into_remainder().iter_mut().zip(ci.remainder()) {
+        *o = (b as i8) as f32 * scale;
+    }
+}
+
+// ---- sparse gather -----------------------------------------------------
+
+/// `out.extend(indices.iter().map(|&i| src[i as usize]))` — the
+/// values-at-indices gather of the Random-K path. The non-scalar form
+/// hoists the bounds check to one vectorized max-prescan over the index
+/// block and loads unchecked; an out-of-range index panics either way
+/// (it is an internal invariant violation, not wire input).
+pub fn gather_f32(src: &[f32], indices: &[u32], out: &mut Vec<f32>) {
+    gather_f32_at(level(), src, indices, out)
+}
+
+pub fn gather_f32_scalar(src: &[f32], indices: &[u32], out: &mut Vec<f32>) {
+    out.extend(indices.iter().map(|&i| src[i as usize]));
+}
+
+pub fn gather_f32_at(level: Level, src: &[f32], indices: &[u32], out: &mut Vec<f32>) {
+    if level == Level::Scalar || indices.is_empty() {
+        return gather_f32_scalar(src, indices, out);
+    }
+    let max = max_u32_at(level, indices);
+    assert!(
+        (max as usize) < src.len(),
+        "gather index {max} out of range (len {})",
+        src.len()
+    );
+    // SAFETY: every index is ≤ max < src.len() by the prescan above.
+    out.extend(indices.iter().map(|&i| unsafe { *src.get_unchecked(i as usize) }));
+}
+
+fn max_u32_at(level: Level, xs: &[u32]) -> u32 {
+    #[cfg(target_arch = "x86_64")]
+    if level == Level::Avx2 {
+        return unsafe { max_u32_avx2(xs) };
+    }
+    let _ = level;
+    xs.iter().fold(0u32, |a, &i| a.max(i))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn max_u32_avx2(xs: &[u32]) -> u32 {
+    use std::arch::x86_64::*;
+    let mut acc = _mm256_setzero_si256();
+    let mut chunks = xs.chunks_exact(8);
+    for c in &mut chunks {
+        let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+        acc = _mm256_max_epu32(acc, v);
+    }
+    let mut lanes = [0u32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut m = lanes.iter().fold(0u32, |a, &l| a.max(l));
+    for &v in chunks.remainder() {
+        m = m.max(v);
+    }
+    m
+}
+
+// ---- bulk little-endian moves ------------------------------------------
+
+/// Bulk little-endian f32 append: on LE targets the in-memory layout IS
+/// the wire layout, so the dispatched form is a single memcpy; the scalar
+/// reference (and any BE target) writes per-element `to_le_bytes`.
+pub fn extend_f32_le(out: &mut Vec<u8>, xs: &[f32]) {
+    extend_f32_le_at(level(), out, xs)
+}
+
+pub fn extend_f32_le_scalar(out: &mut Vec<u8>, xs: &[f32]) {
+    let start = out.len();
+    out.resize(start + xs.len() * 4, 0);
+    for (c, v) in out[start..].chunks_exact_mut(4).zip(xs) {
+        c.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn extend_f32_le_at(level: Level, out: &mut Vec<u8>, xs: &[f32]) {
+    if level != Level::Scalar && cfg!(target_endian = "little") {
+        // SAFETY: f32 has no padding and every bit pattern is valid to
+        // read as bytes; u8 has alignment 1; lifetime bounded by xs.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+        out.extend_from_slice(bytes);
+    } else {
+        extend_f32_le_scalar(out, xs);
+    }
+}
+
+/// Bulk little-endian u32 append (see `extend_f32_le`).
+pub fn extend_u32_le(out: &mut Vec<u8>, xs: &[u32]) {
+    extend_u32_le_at(level(), out, xs)
+}
+
+pub fn extend_u32_le_scalar(out: &mut Vec<u8>, xs: &[u32]) {
+    let start = out.len();
+    out.resize(start + xs.len() * 4, 0);
+    for (c, v) in out[start..].chunks_exact_mut(4).zip(xs) {
+        c.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn extend_u32_le_at(level: Level, out: &mut Vec<u8>, xs: &[u32]) {
+    if level != Level::Scalar && cfg!(target_endian = "little") {
+        // SAFETY: as `extend_f32_le_at`.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+        out.extend_from_slice(bytes);
+    } else {
+        extend_u32_le_scalar(out, xs);
+    }
+}
+
+/// Little-endian bytes → f32, `min(dst.len(), src.len() / 4)` elements
+/// (the dense decode path; excess on either side is untouched).
+pub fn f32_from_le(src: &[u8], dst: &mut [f32]) {
+    f32_from_le_at(level(), src, dst)
+}
+
+pub fn f32_from_le_scalar(src: &[u8], dst: &mut [f32]) {
+    for (d, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+        *d = f32::from_le_bytes(c.try_into().unwrap());
+    }
+}
+
+pub fn f32_from_le_at(level: Level, src: &[u8], dst: &mut [f32]) {
+    let n = dst.len().min(src.len() / 4);
+    if level != Level::Scalar && cfg!(target_endian = "little") {
+        // SAFETY: writing n*4 bytes into an f32 slice of length ≥ n; u8
+        // reads are alignment-free and every bit pattern is a valid f32.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), dst.as_mut_ptr() as *mut u8, n * 4);
+        }
+    } else {
+        f32_from_le_scalar(&src[..n * 4], &mut dst[..n]);
+    }
+}
+
+// ---- sparse scatter decode ---------------------------------------------
+
+/// A scatter decode rejected its (untrusted, wire-originated) input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScatterError {
+    /// A sparse index points past the dense buffer.
+    Index,
+    /// A per-row scale offset points past the scales region.
+    Scale,
+}
+
+// The `_view` kernels decode straight from borrowed little-endian wire
+// bytes (the zero-copy OpDataView regions) and return `ScatterError` on
+// corrupt input; the slice kernels serve the in-memory `decompress` paths
+// and panic on violated internal invariants, exactly like the scalar
+// indexing loops they replace. All of them process `BLOCK` indices at a
+// time: one hoisted bounds check per block, SIMD value dequantization
+// into a stack buffer, then in-order stores (duplicate index = last
+// write wins, identical to the scalar loops). On the error path the
+// scalar reference stops mid-element and the block kernels stop at a
+// block boundary — both leave the dense buffer partially written, and
+// every caller discards it on error.
+
+/// Scatter f32 wire values at u32 wire indices into `dense`
+/// (`dense[idx[k]] = vals[k]` over `min` pairs like the scalar zip).
+pub fn scatter_f32_view(
+    idx_le: &[u8],
+    vals_le: &[u8],
+    dense: &mut [f32],
+) -> Result<(), ScatterError> {
+    scatter_f32_view_at(level(), idx_le, vals_le, dense)
+}
+
+pub fn scatter_f32_view_scalar(
+    idx_le: &[u8],
+    vals_le: &[u8],
+    dense: &mut [f32],
+) -> Result<(), ScatterError> {
+    let n = dense.len();
+    for (ic, vc) in idx_le.chunks_exact(4).zip(vals_le.chunks_exact(4)) {
+        let i = u32::from_le_bytes(ic.try_into().unwrap()) as usize;
+        if i >= n {
+            return Err(ScatterError::Index);
+        }
+        dense[i] = f32::from_le_bytes(vc.try_into().unwrap());
+    }
+    Ok(())
+}
+
+pub fn scatter_f32_view_at(
+    level: Level,
+    idx_le: &[u8],
+    vals_le: &[u8],
+    dense: &mut [f32],
+) -> Result<(), ScatterError> {
+    if level == Level::Scalar {
+        return scatter_f32_view_scalar(idx_le, vals_le, dense);
+    }
+    let n = dense.len();
+    let pairs = (idx_le.len() / 4).min(vals_le.len() / 4);
+    let mut idx = [0u32; BLOCK];
+    let mut vals = [0.0f32; BLOCK];
+    let mut done = 0usize;
+    while done < pairs {
+        let m = BLOCK.min(pairs - done);
+        read_idx_block(&idx_le[done * 4..(done + m) * 4], &mut idx[..m]);
+        if (block_max(level, &idx[..m]) as usize) >= n {
+            return Err(ScatterError::Index);
+        }
+        f32_from_le_at(level, &vals_le[done * 4..(done + m) * 4], &mut vals[..m]);
+        // SAFETY: every index in this block was just checked < n.
+        for (&i, &x) in idx[..m].iter().zip(&vals[..m]) {
+            unsafe { *dense.get_unchecked_mut(i as usize) = x };
+        }
+        done += m;
+    }
+    Ok(())
+}
+
+/// Scatter int8 codes at u32 wire indices with one per-message scale
+/// (`dense[idx[k]] = (codes[k] as i8 as f32) * scale` over `min` pairs).
+pub fn scatter_int8_view(
+    idx_le: &[u8],
+    codes: &[u8],
+    scale: f32,
+    dense: &mut [f32],
+) -> Result<(), ScatterError> {
+    scatter_int8_view_at(level(), idx_le, codes, scale, dense)
+}
+
+pub fn scatter_int8_view_scalar(
+    idx_le: &[u8],
+    codes: &[u8],
+    scale: f32,
+    dense: &mut [f32],
+) -> Result<(), ScatterError> {
+    let n = dense.len();
+    for (ic, &b) in idx_le.chunks_exact(4).zip(codes) {
+        let i = u32::from_le_bytes(ic.try_into().unwrap()) as usize;
+        if i >= n {
+            return Err(ScatterError::Index);
+        }
+        dense[i] = (b as i8) as f32 * scale;
+    }
+    Ok(())
+}
+
+pub fn scatter_int8_view_at(
+    level: Level,
+    idx_le: &[u8],
+    codes: &[u8],
+    scale: f32,
+    dense: &mut [f32],
+) -> Result<(), ScatterError> {
+    if level == Level::Scalar {
+        return scatter_int8_view_scalar(idx_le, codes, scale, dense);
+    }
+    let n = dense.len();
+    let pairs = (idx_le.len() / 4).min(codes.len());
+    let mut idx = [0u32; BLOCK];
+    let mut vals = [0.0f32; BLOCK];
+    let mut done = 0usize;
+    while done < pairs {
+        let m = BLOCK.min(pairs - done);
+        read_idx_block(&idx_le[done * 4..(done + m) * 4], &mut idx[..m]);
+        if (block_max(level, &idx[..m]) as usize) >= n {
+            return Err(ScatterError::Index);
+        }
+        dequant_into_at(level, &codes[done..done + m], scale, &mut vals[..m]);
+        // SAFETY: every index in this block was just checked < n.
+        for (&i, &x) in idx[..m].iter().zip(&vals[..m]) {
+            unsafe { *dense.get_unchecked_mut(i as usize) = x };
+        }
+        done += m;
+    }
+    Ok(())
+}
+
+/// Scatter int8 codes at u32 wire indices with per-row scales read from
+/// the little-endian scales region (`scale = scales_le[(i / chunk) * 4..]`).
+pub fn scatter_int8_rows_view(
+    idx_le: &[u8],
+    codes: &[u8],
+    scales_le: &[u8],
+    chunk: usize,
+    dense: &mut [f32],
+) -> Result<(), ScatterError> {
+    scatter_int8_rows_view_at(level(), idx_le, codes, scales_le, chunk, dense)
+}
+
+pub fn scatter_int8_rows_view_scalar(
+    idx_le: &[u8],
+    codes: &[u8],
+    scales_le: &[u8],
+    chunk: usize,
+    dense: &mut [f32],
+) -> Result<(), ScatterError> {
+    let n = dense.len();
+    let chunk = chunk.max(1);
+    for (ic, &b) in idx_le.chunks_exact(4).zip(codes) {
+        let i = u32::from_le_bytes(ic.try_into().unwrap()) as usize;
+        if i >= n {
+            return Err(ScatterError::Index);
+        }
+        let off = (i / chunk) * 4;
+        let s = scales_le.get(off..off + 4).ok_or(ScatterError::Scale)?;
+        dense[i] = (b as i8) as f32 * f32::from_le_bytes(s.try_into().unwrap());
+    }
+    Ok(())
+}
+
+pub fn scatter_int8_rows_view_at(
+    level: Level,
+    idx_le: &[u8],
+    codes: &[u8],
+    scales_le: &[u8],
+    chunk: usize,
+    dense: &mut [f32],
+) -> Result<(), ScatterError> {
+    if level == Level::Scalar {
+        return scatter_int8_rows_view_scalar(idx_le, codes, scales_le, chunk, dense);
+    }
+    let n = dense.len();
+    let chunk = chunk.max(1);
+    let pairs = (idx_le.len() / 4).min(codes.len());
+    let mut idx = [0u32; BLOCK];
+    let mut vals = [0.0f32; BLOCK];
+    let mut done = 0usize;
+    while done < pairs {
+        let m = BLOCK.min(pairs - done);
+        read_idx_block(&idx_le[done * 4..(done + m) * 4], &mut idx[..m]);
+        if (block_max(level, &idx[..m]) as usize) >= n {
+            return Err(ScatterError::Index);
+        }
+        // Dequantize runs of same-row indices with their scale splatted
+        // (Top-K support is index-sorted, so runs span whole rows; the
+        // run loop is still correct for arbitrary index order).
+        let mut s = 0usize;
+        while s < m {
+            let row = idx[s] as usize / chunk;
+            let mut e = s + 1;
+            while e < m && idx[e] as usize / chunk == row {
+                e += 1;
+            }
+            let off = row * 4;
+            let sb = scales_le.get(off..off + 4).ok_or(ScatterError::Scale)?;
+            let scale = f32::from_le_bytes(sb.try_into().unwrap());
+            dequant_into_at(level, &codes[done + s..done + e], scale, &mut vals[..e - s]);
+            // SAFETY: every index in this block was checked < n above.
+            for (&i, &x) in idx[s..e].iter().zip(&vals[..e - s]) {
+                unsafe { *dense.get_unchecked_mut(i as usize) = x };
+            }
+            s = e;
+        }
+        done += m;
+    }
+    Ok(())
+}
+
+/// In-memory f32 scatter (`dense[idx[k]] = vals[k]` over `min` pairs) —
+/// the `decompress` hot loop. Panics on an out-of-range index like the
+/// scalar indexing loop it replaces.
+pub fn scatter_f32(indices: &[u32], vals: &[f32], dense: &mut [f32]) {
+    scatter_f32_mem_at(level(), indices, vals, dense)
+}
+
+pub fn scatter_f32_mem_scalar(indices: &[u32], vals: &[f32], dense: &mut [f32]) {
+    for (&i, &v) in indices.iter().zip(vals) {
+        dense[i as usize] = v;
+    }
+}
+
+pub fn scatter_f32_mem_at(level: Level, indices: &[u32], vals: &[f32], dense: &mut [f32]) {
+    if level == Level::Scalar {
+        return scatter_f32_mem_scalar(indices, vals, dense);
+    }
+    let n = dense.len();
+    let pairs = indices.len().min(vals.len());
+    let mut done = 0usize;
+    while done < pairs {
+        let m = BLOCK.min(pairs - done);
+        let idx = &indices[done..done + m];
+        let max = block_max(level, idx);
+        assert!((max as usize) < n, "scatter index {max} out of range (len {n})");
+        // SAFETY: every index in this block was just checked < n.
+        for (&i, &x) in idx.iter().zip(&vals[done..done + m]) {
+            unsafe { *dense.get_unchecked_mut(i as usize) = x };
+        }
+        done += m;
+    }
+}
+
+/// In-memory int8 scatter with one scale (the `QSparse` decompress).
+pub fn scatter_int8(indices: &[u32], codes: &[u8], scale: f32, dense: &mut [f32]) {
+    scatter_int8_mem_at(level(), indices, codes, scale, dense)
+}
+
+pub fn scatter_int8_mem_scalar(indices: &[u32], codes: &[u8], scale: f32, dense: &mut [f32]) {
+    for (&i, &b) in indices.iter().zip(codes) {
+        dense[i as usize] = (b as i8) as f32 * scale;
+    }
+}
+
+pub fn scatter_int8_mem_at(
+    level: Level,
+    indices: &[u32],
+    codes: &[u8],
+    scale: f32,
+    dense: &mut [f32],
+) {
+    if level == Level::Scalar {
+        return scatter_int8_mem_scalar(indices, codes, scale, dense);
+    }
+    let n = dense.len();
+    let pairs = indices.len().min(codes.len());
+    let mut vals = [0.0f32; BLOCK];
+    let mut done = 0usize;
+    while done < pairs {
+        let m = BLOCK.min(pairs - done);
+        let idx = &indices[done..done + m];
+        let max = block_max(level, idx);
+        assert!((max as usize) < n, "scatter index {max} out of range (len {n})");
+        dequant_into_at(level, &codes[done..done + m], scale, &mut vals[..m]);
+        // SAFETY: every index in this block was just checked < n.
+        for (&i, &x) in idx.iter().zip(&vals[..m]) {
+            unsafe { *dense.get_unchecked_mut(i as usize) = x };
+        }
+        done += m;
+    }
+}
+
+/// In-memory int8 scatter with per-row scales (the `QSparseRows`
+/// decompress; `scales[i / chunk]` panics when missing, like the scalar
+/// indexing loop).
+pub fn scatter_int8_rows(
+    indices: &[u32],
+    codes: &[u8],
+    scales: &[f32],
+    chunk: usize,
+    dense: &mut [f32],
+) {
+    scatter_int8_rows_mem_at(level(), indices, codes, scales, chunk, dense)
+}
+
+pub fn scatter_int8_rows_mem_scalar(
+    indices: &[u32],
+    codes: &[u8],
+    scales: &[f32],
+    chunk: usize,
+    dense: &mut [f32],
+) {
+    let chunk = chunk.max(1);
+    for (&i, &b) in indices.iter().zip(codes) {
+        dense[i as usize] = (b as i8) as f32 * scales[i as usize / chunk];
+    }
+}
+
+pub fn scatter_int8_rows_mem_at(
+    level: Level,
+    indices: &[u32],
+    codes: &[u8],
+    scales: &[f32],
+    chunk: usize,
+    dense: &mut [f32],
+) {
+    if level == Level::Scalar {
+        return scatter_int8_rows_mem_scalar(indices, codes, scales, chunk, dense);
+    }
+    let n = dense.len();
+    let chunk = chunk.max(1);
+    let pairs = indices.len().min(codes.len());
+    let mut vals = [0.0f32; BLOCK];
+    let mut done = 0usize;
+    while done < pairs {
+        let m = BLOCK.min(pairs - done);
+        let idx = &indices[done..done + m];
+        let max = block_max(level, idx);
+        assert!((max as usize) < n, "scatter index {max} out of range (len {n})");
+        let mut s = 0usize;
+        while s < m {
+            let row = idx[s] as usize / chunk;
+            let mut e = s + 1;
+            while e < m && idx[e] as usize / chunk == row {
+                e += 1;
+            }
+            dequant_into_at(level, &codes[done + s..done + e], scales[row], &mut vals[..e - s]);
+            // SAFETY: every index in this block was checked < n above.
+            for (&i, &x) in idx[s..e].iter().zip(&vals[..e - s]) {
+                unsafe { *dense.get_unchecked_mut(i as usize) = x };
+            }
+            s = e;
+        }
+        done += m;
+    }
+}
+
+/// Decode a block of little-endian u32 indices (`src.len() == buf.len()*4`).
+fn read_idx_block(src: &[u8], buf: &mut [u32]) {
+    if cfg!(target_endian = "little") {
+        // SAFETY: copying src.len() bytes into a u32 buffer of length
+        // src.len()/4; unaligned source reads via byte copy.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), buf.as_mut_ptr() as *mut u8, src.len());
+        }
+    } else {
+        for (b, c) in buf.iter_mut().zip(src.chunks_exact(4)) {
+            *b = u32::from_le_bytes(c.try_into().unwrap());
+        }
+    }
+}
+
+/// Max over a (≤ BLOCK) index block — the hoisted bounds check.
+fn block_max(level: Level, idx: &[u32]) -> u32 {
+    max_u32_at(level, idx)
+}

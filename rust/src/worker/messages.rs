@@ -393,29 +393,32 @@ pub fn decode_payload_into(buf: &[u8], dense: &mut [f32]) -> anyhow::Result<OpDa
 }
 
 /// Scatter a parsed view into the dense buffer per its compression cfg.
+/// The width-4 index layouts decode through the dispatched `util::simd`
+/// kernels straight from the borrowed little-endian regions; the
+/// delta-coded u24 layout keeps the sequential unpack (each index depends
+/// on the previous one).
 fn scatter_view(v: &OpDataView, dense: &mut [f32]) -> anyhow::Result<()> {
+    use crate::util::simd::{self, ScatterError};
     let n = dense.len();
+    let scatter_err = |e: ScatterError| match e {
+        ScatterError::Index => anyhow::anyhow!("index out of range"),
+        ScatterError::Scale => anyhow::anyhow!("row scale out of range"),
+    };
     match &v.compress {
         CompressCfg::None => {
             anyhow::ensure!(v.payload_len() == n, "dense length mismatch");
-            for (d, x) in dense.iter_mut().zip(v.payload_iter()) {
-                *d = x;
-            }
+            simd::f32_from_le(v.payload_le_bytes(), dense);
         }
         CompressCfg::TopK { total_len, .. } | CompressCfg::RandomK { total_len, .. } => {
             anyhow::ensure!(*total_len as usize == n, "sparse length mismatch");
             dense.fill(0.0);
-            for (i, x) in v.indices_iter().zip(v.payload_iter()) {
-                anyhow::ensure!((i as usize) < n, "index out of range");
-                dense[i as usize] = x;
-            }
+            simd::scatter_f32_view(v.indices_le_bytes(), v.payload_le_bytes(), dense)
+                .map_err(scatter_err)?;
         }
         CompressCfg::Int8 { scale, total_len } => {
             anyhow::ensure!(*total_len as usize == n, "int8 length mismatch");
             dense.fill(0.0);
-            for (d, &b) in dense.iter_mut().zip(v.bytes_payload()) {
-                *d = (b as i8) as f32 * scale;
-            }
+            simd::dequant_into(v.bytes_payload(), *scale, dense);
         }
         CompressCfg::QSparse { scale, total_len, .. } => {
             anyhow::ensure!(*total_len as usize == n, "qsparse length mismatch");
@@ -424,13 +427,27 @@ fn scatter_view(v: &OpDataView, dense: &mut [f32]) -> anyhow::Result<()> {
                 "qsparse codes/indices mismatch"
             );
             dense.fill(0.0);
-            for (i, &b) in v.indices_iter().zip(v.bytes_payload()) {
-                anyhow::ensure!((i as usize) < n, "index out of range");
-                dense[i as usize] = (b as i8) as f32 * scale;
-            }
+            simd::scatter_int8_view(v.indices_le_bytes(), v.bytes_payload(), *scale, dense)
+                .map_err(scatter_err)?;
         }
-        CompressCfg::QSparseRows { chunk, total_len, .. }
-        | CompressCfg::QSparseRowsDelta { chunk, total_len, .. } => {
+        CompressCfg::QSparseRows { chunk, total_len, .. } => {
+            anyhow::ensure!(*total_len as usize == n, "qsparse length mismatch");
+            anyhow::ensure!(
+                v.indices_len() == v.bytes_payload().len(),
+                "qsparse codes/indices mismatch"
+            );
+            let chunk = (*chunk as usize).max(1);
+            dense.fill(0.0);
+            simd::scatter_int8_rows_view(
+                v.indices_le_bytes(),
+                v.bytes_payload(),
+                v.payload_le_bytes(),
+                chunk,
+                dense,
+            )
+            .map_err(scatter_err)?;
+        }
+        CompressCfg::QSparseRowsDelta { chunk, total_len, .. } => {
             anyhow::ensure!(*total_len as usize == n, "qsparse length mismatch");
             anyhow::ensure!(
                 v.indices_len() == v.bytes_payload().len(),

@@ -1,0 +1,423 @@
+//! SIMD-vs-scalar differential gates for every `util::simd` wire kernel.
+//!
+//! The transport/overlap/mesh suites pin *bitwise* losses across paths, so
+//! the vector kernels must be bit-identical to their scalar references —
+//! these tests enforce that over randomized lengths (including every
+//! ragged tail around the 4/8-lane widths), adversarial float values
+//! (half-ulp rounding boundaries, subnormals, |x| ≥ 2^31, infinities,
+//! NaN) and duplicate/out-of-range scatter indices, at every dispatch
+//! level the host supports (`Level::supported()` — SSE2 is exercised even
+//! on AVX2 machines).
+
+use fusionllm::util::fnv;
+use fusionllm::util::rng::Rng;
+use fusionllm::util::simd::{self, Level, ScatterError};
+
+/// Ragged tails around the 4-lane (SSE2) and 8-lane (AVX2) widths, plus
+/// block-boundary cases around the 64-index scatter blocks.
+const LENS: [usize; 25] = [
+    0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129, 255, 256,
+    1000, 4097,
+];
+
+fn rand_values(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n)
+        .map(|_| (rng.f32() - 0.5) * 10f32.powi(rng.range(-3, 4) as i32))
+        .collect()
+}
+
+/// Every adversarial f32 the quantizer contract must cover bit-exactly.
+fn nasty_values() -> Vec<f32> {
+    let mut v = vec![
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1e-41, // subnormal
+        f32::MAX,
+        f32::MIN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        8_388_608.0,      // 2^23
+        16_777_216.0,     // 2^24
+        2_147_483_520.0,  // largest f32 < 2^31
+        2_147_483_648.0,  // 2^31
+        -2_147_483_648.0,
+        8.4e9,
+        0.5,
+        -0.5,
+        1.5,
+        2.5,
+        -2.5,
+        126.5,
+        127.4,
+        127.5,
+        -127.5,
+        200.0,
+        -200.0,
+    ];
+    // Exact half-way rounding boundaries: with scale 0.5, k·0.25 puts
+    // every other value exactly on a .5 code boundary.
+    for k in -600i32..=600 {
+        v.push(k as f32 * 0.25);
+    }
+    v
+}
+
+#[test]
+fn supported_levels_start_with_scalar() {
+    let levels = Level::supported();
+    assert_eq!(levels[0], Level::Scalar);
+    // level() returns something the machine supports.
+    assert!(levels.contains(&simd::level()) || simd::level() == Level::Scalar);
+}
+
+#[test]
+fn quantize_codes_bitwise_identical() {
+    let mut rng = Rng::new(0xC0DE);
+    let scales = [1.0f32, 0.5, 0.031_25, 7.3e-3, 1e-30, f32::MIN_POSITIVE];
+    for lv in Level::supported() {
+        for &n in &LENS {
+            let xs = rand_values(n, &mut rng);
+            for &scale in &scales {
+                let mut want = Vec::new();
+                simd::quantize_codes_scalar(&xs, scale, &mut want);
+                let mut got = Vec::new();
+                simd::quantize_codes_at(lv, &xs, scale, &mut got);
+                assert_eq!(got, want, "level={} n={n} scale={scale}", lv.name());
+            }
+        }
+        // Adversarial values, every scale.
+        let xs = nasty_values();
+        for &scale in &scales {
+            let mut want = Vec::new();
+            simd::quantize_codes_scalar(&xs, scale, &mut want);
+            let mut got = Vec::new();
+            simd::quantize_codes_at(lv, &xs, scale, &mut got);
+            assert_eq!(got, want, "nasty level={} scale={scale}", lv.name());
+        }
+    }
+}
+
+#[test]
+fn dequant_bitwise_identical() {
+    let mut rng = Rng::new(0xDEC0);
+    for lv in Level::supported() {
+        for &n in &LENS {
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            for scale in [1.0f32, 0.25, 3.7e-5] {
+                let mut want = vec![9.0f32; n];
+                simd::dequant_into_scalar(&codes, scale, &mut want);
+                let mut got = vec![9.0f32; n];
+                simd::dequant_into_at(lv, &codes, scale, &mut got);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "level={} n={n} scale={scale}", lv.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn dequant_zip_length_semantics() {
+    // Excess on either side stays untouched, like the scalar zip loops.
+    let codes = vec![0x81u8; 10]; // -127
+    for lv in Level::supported() {
+        let mut out = vec![5.0f32; 16];
+        simd::dequant_into_at(lv, &codes, 1.0, &mut out);
+        assert!(out[..10].iter().all(|&v| v == -127.0), "level={}", lv.name());
+        assert!(out[10..].iter().all(|&v| v == 5.0), "level={}", lv.name());
+        let mut short = vec![5.0f32; 4];
+        simd::dequant_into_at(lv, &codes, 1.0, &mut short);
+        assert!(short.iter().all(|&v| v == -127.0));
+    }
+}
+
+#[test]
+fn max_abs_bitwise_identical() {
+    let mut rng = Rng::new(0xAB5);
+    for lv in Level::supported() {
+        for &n in &LENS {
+            let mut xs = rand_values(n, &mut rng);
+            if n > 2 {
+                xs[n / 2] = f32::INFINITY;
+                xs[n - 1] = -0.0;
+            }
+            let want = simd::max_abs_scalar(&xs);
+            let got = simd::max_abs_at(lv, &xs);
+            assert_eq!(got.to_bits(), want.to_bits(), "level={} n={n}", lv.name());
+        }
+    }
+}
+
+#[test]
+fn abs_bits_bitwise_identical() {
+    let mut rng = Rng::new(0xB175);
+    for lv in Level::supported() {
+        for &n in &LENS {
+            let mut xs = rand_values(n, &mut rng);
+            if n > 1 {
+                xs[0] = f32::NAN; // pure bit op: NaN is in-contract here
+                xs[n - 1] = -0.0;
+            }
+            let mut want = vec![0u32; n];
+            simd::abs_bits_scalar(&xs, &mut want);
+            let mut got = vec![1u32; n];
+            simd::abs_bits_at(lv, &xs, &mut got);
+            assert_eq!(got, want, "level={} n={n}", lv.name());
+        }
+    }
+}
+
+#[test]
+fn gather_bitwise_identical() {
+    let mut rng = Rng::new(0x6A7);
+    let src = rand_values(5000, &mut rng);
+    for lv in Level::supported() {
+        for &n in &LENS {
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(src.len() as u64) as u32).collect();
+            let mut want = vec![7.0f32];
+            simd::gather_f32_scalar(&src, &idx, &mut want);
+            let mut got = vec![7.0f32];
+            simd::gather_f32_at(lv, &src, &idx, &mut got);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "level={} n={n}", lv.name());
+        }
+    }
+}
+
+#[test]
+fn le_moves_bitwise_identical() {
+    let mut rng = Rng::new(0x1E1E);
+    for lv in Level::supported() {
+        for &n in &LENS {
+            let xs = rand_values(n, &mut rng);
+            let mut want = vec![0xAAu8];
+            simd::extend_f32_le_scalar(&mut want, &xs);
+            let mut got = vec![0xAAu8];
+            simd::extend_f32_le_at(lv, &mut got, &xs);
+            assert_eq!(got, want, "f32 level={} n={n}", lv.name());
+
+            let us: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(0x9E37_79B9)).collect();
+            let mut want = Vec::new();
+            simd::extend_u32_le_scalar(&mut want, &us);
+            let mut got = Vec::new();
+            simd::extend_u32_le_at(lv, &mut got, &us);
+            assert_eq!(got, want, "u32 level={} n={n}", lv.name());
+
+            // Round-trip decode, including a ragged trailing byte.
+            let mut bytes = Vec::new();
+            simd::extend_f32_le_scalar(&mut bytes, &xs);
+            bytes.push(0xEE);
+            let mut dst = vec![3.0f32; n];
+            simd::f32_from_le_at(lv, &bytes, &mut dst);
+            let db: Vec<u32> = dst.iter().map(|v| v.to_bits()).collect();
+            let xb: Vec<u32> = xs.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(db, xb, "from_le level={} n={n}", lv.name());
+        }
+    }
+}
+
+fn idx_bytes(idx: &[u32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    simd::extend_u32_le_scalar(&mut out, idx);
+    out
+}
+
+fn f32_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    simd::extend_f32_le_scalar(&mut out, xs);
+    out
+}
+
+#[test]
+fn scatter_f32_view_matches_scalar_with_duplicates() {
+    let mut rng = Rng::new(0x5CA7);
+    for lv in Level::supported() {
+        for &n in &LENS {
+            let dense_len = (n * 2).max(8);
+            // Duplicate-heavy index stream: last write must win, in order.
+            let idx: Vec<u32> =
+                (0..n).map(|_| rng.below(dense_len as u64 / 2) as u32).collect();
+            let vals = rand_values(n, &mut rng);
+            let (ib, vb) = (idx_bytes(&idx), f32_bytes(&vals));
+            let mut want = vec![0.0f32; dense_len];
+            simd::scatter_f32_view_scalar(&ib, &vb, &mut want).unwrap();
+            let mut got = vec![0.0f32; dense_len];
+            simd::scatter_f32_view_at(lv, &ib, &vb, &mut got).unwrap();
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "level={} n={n}", lv.name());
+        }
+    }
+}
+
+#[test]
+fn scatter_view_rejects_out_of_range_index() {
+    for lv in Level::supported() {
+        let idx = [3u32, 1, 99, 0]; // 99 is out of range for dense_len 8
+        let vals = [1.0f32, 2.0, 3.0, 4.0];
+        let (ib, vb) = (idx_bytes(&idx), f32_bytes(&vals));
+        let mut dense = vec![0.0f32; 8];
+        assert_eq!(
+            simd::scatter_f32_view_at(lv, &ib, &vb, &mut dense),
+            Err(ScatterError::Index),
+            "level={}",
+            lv.name()
+        );
+        let codes = [1u8, 2, 3, 4];
+        assert_eq!(
+            simd::scatter_int8_view_at(lv, &ib, &codes, 1.0, &mut dense),
+            Err(ScatterError::Index),
+            "level={}",
+            lv.name()
+        );
+        let scales = f32_bytes(&[1.0; 16]);
+        assert_eq!(
+            simd::scatter_int8_rows_view_at(lv, &ib, &codes, &scales, 8, &mut dense),
+            Err(ScatterError::Index),
+            "level={}",
+            lv.name()
+        );
+    }
+}
+
+#[test]
+fn scatter_int8_view_matches_scalar() {
+    let mut rng = Rng::new(0x1278);
+    for lv in Level::supported() {
+        for &n in &LENS {
+            let dense_len = (n * 2).max(8);
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(dense_len as u64) as u32).collect();
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let ib = idx_bytes(&idx);
+            for scale in [1.0f32, 0.03] {
+                let mut want = vec![0.0f32; dense_len];
+                simd::scatter_int8_view_scalar(&ib, &codes, scale, &mut want).unwrap();
+                let mut got = vec![0.0f32; dense_len];
+                simd::scatter_int8_view_at(lv, &ib, &codes, scale, &mut got).unwrap();
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "level={} n={n} scale={scale}", lv.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn scatter_int8_rows_view_matches_scalar() {
+    let mut rng = Rng::new(0x2055);
+    for lv in Level::supported() {
+        for &n in &LENS {
+            for chunk in [1usize, 3, 8, 64] {
+                let dense_len = (n * 2).max(8);
+                // Index-sorted support (the Top-K shape: runs share rows).
+                let mut idx: Vec<u32> =
+                    (0..n).map(|_| rng.below(dense_len as u64) as u32).collect();
+                idx.sort_unstable();
+                let codes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                let n_rows = (dense_len + chunk - 1) / chunk;
+                let scales: Vec<f32> = (0..n_rows).map(|_| rng.f32() + 0.01).collect();
+                let (ib, sb) = (idx_bytes(&idx), f32_bytes(&scales));
+                let mut want = vec![0.0f32; dense_len];
+                simd::scatter_int8_rows_view_scalar(&ib, &codes, &sb, chunk, &mut want)
+                    .unwrap();
+                let mut got = vec![0.0f32; dense_len];
+                simd::scatter_int8_rows_view_at(lv, &ib, &codes, &sb, chunk, &mut got)
+                    .unwrap();
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "level={} n={n} chunk={chunk}", lv.name());
+
+                // In-memory variant against the same reference.
+                let mut mem = vec![0.0f32; dense_len];
+                simd::scatter_int8_rows_mem_at(lv, &idx, &codes, &scales, chunk, &mut mem);
+                let mb: Vec<u32> = mem.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(mb, wb, "mem level={} n={n} chunk={chunk}", lv.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn scatter_rows_view_rejects_short_scales() {
+    for lv in Level::supported() {
+        let idx = [0u32, 9]; // row 9/chunk=1 → needs scales[9], region has 2
+        let codes = [5u8, 6];
+        let scales = f32_bytes(&[1.0, 1.0]);
+        let mut dense = vec![0.0f32; 16];
+        assert_eq!(
+            simd::scatter_int8_rows_view_at(lv, &idx_bytes(&idx), &codes, &scales, 1, &mut dense),
+            Err(ScatterError::Scale),
+            "level={}",
+            lv.name()
+        );
+    }
+}
+
+#[test]
+fn mem_scatters_match_scalar() {
+    let mut rng = Rng::new(0x3E3A);
+    for lv in Level::supported() {
+        for &n in &LENS {
+            let dense_len = (n * 2).max(8);
+            let idx: Vec<u32> =
+                (0..n).map(|_| rng.below(dense_len as u64 / 2) as u32).collect();
+            let vals = rand_values(n, &mut rng);
+            let mut want = vec![0.0f32; dense_len];
+            simd::scatter_f32_mem_scalar(&idx, &vals, &mut want);
+            let mut got = vec![0.0f32; dense_len];
+            simd::scatter_f32_mem_at(lv, &idx, &vals, &mut got);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "f32 level={} n={n}", lv.name());
+
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let mut want = vec![0.0f32; dense_len];
+            simd::scatter_int8_mem_scalar(&idx, &codes, 0.5, &mut want);
+            let mut got = vec![0.0f32; dense_len];
+            simd::scatter_int8_mem_at(lv, &idx, &codes, 0.5, &mut got);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "int8 level={} n={n}", lv.name());
+        }
+    }
+}
+
+#[test]
+fn fnv_levels_match_scalar() {
+    let mut rng = Rng::new(0xF2F);
+    for &n in &LENS {
+        let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let want = fnv::fnv1a64_scalar(&data);
+        for lv in Level::supported() {
+            assert_eq!(fnv::fnv1a64_at(lv, &data), want, "level={} n={n}", lv.name());
+        }
+        assert_eq!(fnv::fnv1a64(&data), want, "dispatched n={n}");
+    }
+}
+
+/// End-to-end: the whole compress → encode → decode pipeline must be
+/// bitwise identical between the dispatched kernels and a forced-scalar
+/// decode of the same wire bytes (the wire-path differential the CI
+/// forced-scalar job re-runs with `FUSIONLLM_FORCE_SCALAR=1`).
+#[test]
+fn wire_roundtrip_same_bytes_for_all_levels() {
+    use fusionllm::compress::sparsify::{Compressor, Int8Quantizer, TopK};
+    let mut rng = Rng::new(0xE2E);
+    let xs = rand_values(3000, &mut rng);
+    for comp in [&TopK { ratio: 20.0 } as &dyn Compressor, &Int8Quantizer] {
+        let c = comp.compress(&xs);
+        let mut out = vec![0.0f32; xs.len()];
+        comp.decompress(&c, &mut out);
+        // Kept values survive exactly (TopK) / within quant error (int8),
+        // and a second decompress is bit-identical (determinism).
+        let mut again = vec![0.0f32; xs.len()];
+        comp.decompress(&c, &mut again);
+        let a: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = again.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "{}", comp.name());
+    }
+}

@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# Mesh flow-control sweep: --mesh-window x FUSIONLLM_CREDIT_DIV.
+#
+# Runs the 4-stage Null-backend mesh demo (broker + 4 worker processes
+# on localhost) over every (window, credit divisor) pair and reports
+# per-run wall time, so MESH_WINDOW and CREDIT_BATCH_DIV defaults in
+# rust/src/transport/mesh.rs are tuned from measurements instead of
+# folklore. Results feed the sweep table in EXPERIMENTS.md §Mesh data
+# plane — re-run after transport changes (e.g. the vectored frame
+# writer) and update the table if the optimum moves.
+#
+# Usage:
+#   scripts/mesh_sweep.sh [steps]
+#
+# Requires a rust toolchain (cargo). The CI container currently ships
+# none — run this on a dev machine.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found -- this sweep needs a rust toolchain" >&2
+    exit 1
+fi
+
+STEPS="${1:-30}"
+WINDOWS=(4 8 16 32 64)
+DIVS=(2 4 8)
+PORT=4971
+TOKEN=sweep
+
+cargo build --release --quiet
+BIN=target/release/fusionllm
+
+run_one() {
+    local window=$1 div=$2
+    local pids=()
+    FUSIONLLM_CREDIT_DIV="$div" "$BIN" train \
+        --backend null --transport tcp --data-plane mesh \
+        --listen "127.0.0.1:$PORT" --token "$TOKEN" \
+        --workers 4 --placement 0,1,2,3 --micro 8 \
+        --mesh-window "$window" --steps "$STEPS" >/dev/null &
+    local broker=$!
+    sleep 0.3
+    for d in 0 1 2 3; do
+        FUSIONLLM_CREDIT_DIV="$div" "$BIN" worker \
+            --connect "127.0.0.1:$PORT" --token "$TOKEN" --device "$d" \
+            --peer-listen 127.0.0.1:0 >/dev/null &
+        pids+=($!)
+    done
+    wait "$broker"
+    wait "${pids[@]}" 2>/dev/null || true
+}
+
+printf '%-8s %-6s %-10s\n' window div wall_s
+for w in "${WINDOWS[@]}"; do
+    for d in "${DIVS[@]}"; do
+        t0=$(date +%s.%N)
+        run_one "$w" "$d"
+        t1=$(date +%s.%N)
+        printf '%-8s %-6s %-10s\n' "$w" "$d" \
+            "$(awk -v a="$t1" -v b="$t0" 'BEGIN{printf "%.3f", a-b}')"
+        PORT=$((PORT + 1))
+    done
+done
